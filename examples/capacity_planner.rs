@@ -1,0 +1,99 @@
+//! Capacity planner: profile → regress → solve (Figures 1/2 interactively).
+//!
+//! ```bash
+//! cargo run --release --example capacity_planner
+//! ```
+//!
+//! Prints (a) the predicted sustained-throughput table for every variant at
+//! 8/14/20 cores (the paper's Figure 1 axes), (b) the ILP decision for a
+//! grid of workloads and budgets with the variant mix it selects, and (c)
+//! the InfAdapter-vs-MS+ accuracy-loss comparison at 75 rps (Figure 2).
+
+use anyhow::Result;
+use infadapter::config::ObjectiveWeights;
+use infadapter::experiment::load_or_default_profiles;
+use infadapter::runtime::artifacts_dir;
+use infadapter::solver::{BruteForceSolver, Problem, Solver};
+use std::collections::BTreeMap;
+
+fn main() -> Result<()> {
+    let profiles = load_or_default_profiles(&artifacts_dir());
+    let weights = ObjectiveWeights::default();
+
+    println!("== predicted sustained throughput th_m(n), rps (Figure 1 axes) ==");
+    println!("{:<12} {:>8} {:>8} {:>8}", "variant", "8 cores", "14 cores", "20 cores");
+    for p in profiles.by_accuracy() {
+        println!(
+            "{:<12} {:>8.1} {:>8.1} {:>8.1}",
+            p.name,
+            p.throughput(8),
+            p.throughput(14),
+            p.throughput(20)
+        );
+    }
+
+    println!("\n== ILP decisions across workloads and budgets (β = 0.05) ==");
+    println!(
+        "{:>6} {:>7} | {:<40} {:>8} {:>6}",
+        "λ rps", "budget", "selected set (cores)", "AA %", "RC"
+    );
+    for &lambda in &[25.0, 50.0, 75.0, 100.0] {
+        for &budget in &[8usize, 14, 20] {
+            let problem = Problem::from_profiles(
+                &profiles, lambda, 0.75, budget, weights, &BTreeMap::new(),
+            );
+            let alloc = BruteForceSolver.solve(&problem).expect("solvable");
+            let set: Vec<String> = alloc
+                .assignments
+                .iter()
+                .filter(|(_, &(c, _))| c > 0)
+                .map(|(v, &(c, _))| format!("{}x{}", v.trim_start_matches("resnet"), c))
+                .collect();
+            println!(
+                "{:>6.0} {:>7} | {:<40} {:>8.2} {:>6} {}",
+                lambda,
+                budget,
+                set.join(" + "),
+                alloc.average_accuracy,
+                alloc.resource_cost,
+                if alloc.feasible { "" } else { "(infeasible!)" }
+            );
+        }
+    }
+
+    println!("\n== InfAdapter vs MS+ at 75 rps (Figure 2) ==");
+    let top = profiles
+        .profiles
+        .iter()
+        .map(|p| p.accuracy)
+        .fold(0.0, f64::max);
+    println!(
+        "{:>7} | {:>18} {:>18}",
+        "budget", "InfAdapter loss", "single-variant loss"
+    );
+    for &budget in &[8usize, 14, 20] {
+        let problem =
+            Problem::from_profiles(&profiles, 75.0, 0.75, budget, weights, &BTreeMap::new());
+        let inf = BruteForceSolver.solve(&problem).expect("solvable");
+        // MS: best single variant covering the load
+        let mut best_single: Option<f64> = None;
+        for p in &profiles.profiles {
+            for n in 1..=budget {
+                if p.throughput(n) >= 75.0 {
+                    best_single = Some(best_single.map_or(p.accuracy, |b: f64| b.max(p.accuracy)));
+                    break;
+                }
+            }
+        }
+        println!(
+            "{:>7} | {:>18.3} {:>18}",
+            budget,
+            top - inf.average_accuracy,
+            best_single
+                .map(|a| format!("{:.3}", top - a))
+                .unwrap_or_else(|| "infeasible".into()),
+        );
+    }
+    println!("\ncapacity_planner OK");
+    Ok(())
+}

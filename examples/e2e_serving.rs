@@ -1,0 +1,119 @@
+//! End-to-end validation: the full system on a live workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end: every layer
+//! composes, with Python absent at runtime —
+//!   * Layer 1/2 — the AOT ResNet variants (Pallas GEMM inside) execute on
+//!     the CPU PJRT client for **every single request**;
+//!   * Layer 3 — the InfAdapter policy (LSTM forecast → exact ILP solve →
+//!     create-before-remove pool swaps → smooth-WRR dispatch) drives the
+//!     live engine on a host-scaled bursty trace.
+//!
+//! The trace is scaled to the 1-core host (DESIGN.md §4): base 3 rps with
+//! a 2.5x spike, 90 s.  Figure-scale experiments (20-min traces, 20-core
+//! budgets) run on the calibrated virtual-time engine — see `cargo bench`.
+
+use anyhow::Result;
+use infadapter::config::Config;
+use infadapter::experiment::{PolicyKind, Scenario};
+use infadapter::metrics::rows_to_csv;
+use infadapter::profiler::ProfileSet;
+use infadapter::runtime::artifacts_dir;
+use infadapter::serving::real::{RealConfig, RealEngine};
+use infadapter::workload::Trace;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let seconds = std::env::var("E2E_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(90usize);
+    let base = std::env::var("E2E_BASE_RPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3.0f64);
+
+    // Host-scaled budget: this machine has ONE physical core, so scale-out
+    // is not a real lever here — budget = 1 puts the system in the paper's
+    // model-switching regime, where adaptation means *changing the variant*
+    // (the ILP's other axis).  The 750 ms P99 SLO itself carries over
+    // (variants are 25-120 ms on this host).  Figure-scale multi-core
+    // behaviour runs on the calibrated simulator (cargo bench).
+    let mut config = Config::default();
+    config.cluster.budget = 1;
+    config.adapter.interval_s = 15.0;
+
+    // Profiles: prefer measured ones (make profile), else measure now.
+    let profiles_path = dir.join("profiles.json");
+    let profiles = if profiles_path.exists() {
+        ProfileSet::load(&profiles_path)?
+    } else {
+        eprintln!("(no profiles.json; measuring — run `make profile` to persist)");
+        let manifest = infadapter::runtime::Manifest::load(&dir)?;
+        let set = infadapter::profiler::measure_real(&dir, &manifest, 6, None)?;
+        set.save(&profiles_path).ok();
+        set
+    };
+    println!("variant service times on this host:");
+    for p in &profiles.profiles {
+        println!(
+            "  {:<12} {:>6.1} ms/request, readiness {:>5.2} s",
+            p.name,
+            p.service_time_s * 1000.0,
+            p.readiness_s
+        );
+    }
+
+    let trace = Trace::bursty(base, base * 2.5, seconds, config.seed);
+    println!(
+        "\nserving bursty trace: {} s, base {:.1} rps, peak {:.1} rps (live PJRT)",
+        seconds,
+        base,
+        base * 2.5
+    );
+
+    let scenario = Scenario::new("e2e", trace.clone(), config.clone(), profiles);
+    let mut policy = scenario.build_policy(&PolicyKind::InfAdapter, &dir);
+    let engine = RealEngine::new(
+        dir.clone(),
+        RealConfig {
+            slo_s: config.slo.latency_ms / 1000.0,
+            adapter_interval_s: config.adapter.interval_s,
+            batch: 1,
+            seed: config.seed,
+            max_workers_per_variant: 1,
+        },
+    )?;
+
+    let t0 = std::time::Instant::now();
+    let metrics = engine.serve(policy.as_mut(), &trace)?;
+    let wall = t0.elapsed();
+
+    let summary = metrics.summary("InfAdapter(e2e)", seconds as f64);
+    let rows = metrics.rows(seconds as f64);
+    println!("\nper-10s timeline:");
+    print!("{}", rows_to_csv(&rows));
+    println!("\n== end-to-end summary ==");
+    println!("wall time            : {wall:?}");
+    println!("requests served      : {}", summary.total_requests);
+    println!("dropped              : {}", summary.dropped);
+    println!(
+        "throughput           : {:.1} rps",
+        summary.total_requests as f64 / seconds as f64
+    );
+    println!("P50 latency          : {:.1} ms", summary.p50_latency_s * 1000.0);
+    println!("P99 latency          : {:.1} ms", summary.p99_latency_s * 1000.0);
+    println!(
+        "SLO violations (750ms): {:.2}%",
+        summary.slo_violation_rate * 100.0
+    );
+    println!("avg served accuracy  : {:.2}%", summary.avg_accuracy);
+    println!("avg accuracy loss    : {:.2} pts", summary.avg_accuracy_loss);
+    println!("avg cost             : {:.2} workers", summary.avg_cost_cores);
+    anyhow::ensure!(summary.total_requests > 0, "no requests served");
+    println!("\ne2e_serving OK");
+    Ok(())
+}

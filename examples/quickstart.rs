@@ -1,0 +1,59 @@
+//! Quickstart: load an AOT-compiled variant and run live inferences.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the minimal three-layer path: the ResNet was authored in
+//! JAX (Layer 2) on a Pallas GEMM kernel (Layer 1), exported once to HLO
+//! text, and is loaded + executed here through PJRT with no Python.
+
+use anyhow::Result;
+use infadapter::runtime::{artifacts_dir, Manifest, WorkerPool};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!("loaded manifest: {} variants", manifest.variants.len());
+
+    let meta = manifest.variant("resnet18")?;
+    println!(
+        "spawning 1-worker pool for {} ({} params, {:.1} MFLOPs, top-1 {:.2}%)",
+        meta.name,
+        meta.params,
+        meta.flops as f64 / 1e6,
+        meta.accuracy
+    );
+    let t0 = Instant::now();
+    let pool = WorkerPool::spawn(&dir, &manifest, meta, 1, 1)?;
+    println!(
+        "pool ready in {:?} (this is the paper's readiness time rt_m)",
+        t0.elapsed()
+    );
+
+    // A synthetic image batch (the serving layers never inspect content).
+    let image = Arc::new(vec![0.5f32; manifest.input_shape(1).iter().product()]);
+
+    // Warmup + timed inferences.
+    let logits = pool.infer_blocking(image.clone())?;
+    println!("logits[..4] = {:?}", &logits[..4.min(logits.len())]);
+    assert_eq!(logits.len(), manifest.num_classes);
+
+    let n = 20;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        pool.infer_blocking(image.clone())?;
+    }
+    let per = t0.elapsed() / n;
+    println!(
+        "{} inferences: {:?} avg -> ~{:.1} rps/worker",
+        n,
+        per,
+        1.0 / per.as_secs_f64()
+    );
+    pool.shutdown();
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Trace explorer: generate workloads and compare forecasters on them.
+//!
+//! ```bash
+//! cargo run --release --example trace_explorer [seconds]
+//! ```
+//!
+//! Renders ASCII sparklines of the three built-in trace families and
+//! scores every forecaster (LSTM if artifacts exist, plus the classical
+//! baselines) by mean absolute error against the true next-30s max.
+
+use anyhow::Result;
+use infadapter::forecaster::{self, Forecaster};
+use infadapter::runtime::artifacts_dir;
+use infadapter::workload::{RateSeries, Trace};
+
+fn sparkline(series: &RateSeries, width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = series.max().max(1e-9);
+    let chunk = (series.rates.len() / width).max(1);
+    series
+        .rates
+        .chunks(chunk)
+        .take(width)
+        .map(|c| {
+            let v = c.iter().sum::<f64>() / c.len() as f64;
+            BARS[((v / max * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+/// Walk the trace, asking for a prediction every `interval`; score MAE
+/// against the realized max of the next `horizon` seconds.
+fn score(f: &mut dyn Forecaster, series: &RateSeries, interval: usize, horizon: usize) -> f64 {
+    let mut errs = Vec::new();
+    let rates = &series.rates;
+    let mut t = 0usize;
+    while t + horizon < rates.len() {
+        for &r in &rates[t..(t + interval).min(rates.len())] {
+            f.observe(r);
+        }
+        t += interval;
+        if t + horizon > rates.len() {
+            break;
+        }
+        let pred = f.predict_max();
+        let truth = rates[t..t + horizon].iter().cloned().fold(0.0, f64::max);
+        errs.push((pred - truth).abs());
+    }
+    errs.iter().sum::<f64>() / errs.len().max(1) as f64
+}
+
+fn main() -> Result<()> {
+    let seconds: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1200);
+    let dir = artifacts_dir();
+
+    let traces = vec![
+        Trace::bursty(40.0, 100.0, seconds, 7),
+        Trace::non_bursty(20.0, 60.0, seconds, 7),
+        Trace::twitter_like(40.0, seconds, 7),
+    ];
+    println!("== trace families ({seconds} s) ==");
+    for t in &traces {
+        println!(
+            "{:<22} mean {:>6.1}  max {:>6.1}  |{}|",
+            t.name,
+            t.mean(),
+            t.max(),
+            sparkline(t, 64)
+        );
+    }
+
+    println!("\n== forecaster MAE vs true next-30s max (lower is better) ==");
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10}",
+        "trace", "lstm", "last_max", "mov_avg", "holt"
+    );
+    for t in &traces {
+        let mut row = format!("{:<22}", t.name);
+        for kind in ["lstm", "last_max", "moving_average", "holt"] {
+            let mut f = forecaster::build(kind, &dir, 30.0);
+            let mae = score(f.as_mut(), t, 30, 30);
+            row.push_str(&format!(" {mae:>10.2}"));
+        }
+        println!("{row}");
+    }
+    println!("\ntrace_explorer OK");
+    Ok(())
+}

@@ -1,0 +1,152 @@
+"""AOT compile path: lower every model variant + the forecaster to HLO text.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged).  Python
+never runs after this; the Rust coordinator loads the artifacts through the
+PJRT C API.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Outputs (in ``artifacts/``):
+  <variant>.b<batch>.hlo.txt   one executable per (variant, batch size)
+  <variant>.weights.npz        flat ordered weights (zero-padded index keys)
+  forecaster.hlo.txt           trained LSTM, weights baked as constants
+  manifest.json                everything the Rust side needs to load them
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import lstm, model, tracegen
+
+# Batch sizes: b=1 is the serving path (the paper disables batching on CPU —
+# Figure 4); the extra resnet50 batches regenerate the Figure 4 sweep.
+SERVING_BATCH = 1
+FIG4_VARIANT = "resnet50"
+FIG4_BATCHES = (2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(spec: model.VariantSpec, batch: int) -> str:
+    """HLO text of ``forward(spec, params, x)`` with params as arguments."""
+    x_spec = jax.ShapeDtypeStruct((batch, spec.input_hw, spec.input_hw, 3),
+                                  jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(shape, jnp.float32)
+               for _name, shape in model.param_manifest(spec)]
+
+    def fn(x, params):
+        return (model.forward(spec, params, x),)
+
+    lowered = jax.jit(fn).lower(x_spec, p_specs)
+    return to_hlo_text(lowered)
+
+
+def save_weights(path: pathlib.Path, params) -> None:
+    """Uncompressed npz with zero-padded index keys (order-recoverable)."""
+    arrays = {f"p{i:04d}": np.asarray(p, np.float32)
+              for i, p in enumerate(params)}
+    np.savez(path, **arrays)
+
+
+def lower_forecaster(train_steps: int) -> tuple[str, list[float]]:
+    params, curve = lstm.train(steps=train_steps)
+    fn = lstm.export_fn(params)
+    w_spec = jax.ShapeDtypeStruct((lstm.WINDOW, 1), jnp.float32)
+    lowered = jax.jit(fn).lower(w_spec)
+    return to_hlo_text(lowered), curve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--variants", default="",
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--skip-fig4", action="store_true")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    only = set(args.variants.split(",")) if args.variants else None
+
+    manifest = {
+        "input_hw": model.INPUT_HW,
+        "num_classes": model.NUM_CLASSES,
+        "rps_scale": tracegen.RPS_SCALE,
+        "variants": [],
+        "forecaster": None,
+    }
+
+    for spec in model.VARIANTS:
+        if only and spec.name not in only:
+            continue
+        t0 = time.time()
+        params = model.init_params(spec, seed=0)
+        wpath = out / f"{spec.name}.weights.npz"
+        save_weights(wpath, params)
+
+        batches = [SERVING_BATCH]
+        if spec.name == FIG4_VARIANT and not args.skip_fig4:
+            batches += list(FIG4_BATCHES)
+        artifacts = {}
+        for b in batches:
+            text = lower_variant(spec, b)
+            hpath = out / f"{spec.name}.b{b}.hlo.txt"
+            hpath.write_text(text)
+            artifacts[str(b)] = hpath.name
+        manifest["variants"].append({
+            "name": spec.name,
+            "accuracy": spec.accuracy,
+            "block": spec.block,
+            "depths": list(spec.depths),
+            "params": model.num_params(spec),
+            "flops": model.flops(spec),
+            "weights": wpath.name,
+            "hlo": artifacts,
+            "num_weight_arrays": len(params),
+        })
+        print(f"[aot] {spec.name}: batches={batches} "
+              f"({time.time() - t0:.1f}s)")
+
+    if not only:
+        t0 = time.time()
+        text, curve = lower_forecaster(args.train_steps)
+        fpath = out / "forecaster.hlo.txt"
+        fpath.write_text(text)
+        manifest["forecaster"] = {
+            "hlo": fpath.name,
+            "window": lstm.WINDOW,
+            "horizon": lstm.HORIZON,
+            "units": lstm.UNITS,
+            "rps_scale": tracegen.RPS_SCALE,
+            "final_train_loss": curve[-1],
+            "loss_curve": curve,
+        }
+        print(f"[aot] forecaster: loss {curve[0]:.5f} -> {curve[-1]:.5f} "
+              f"({time.time() - t0:.1f}s)")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

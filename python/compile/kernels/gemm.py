@@ -1,0 +1,196 @@
+"""Layer-1 Pallas kernel: tiled GEMM with fused bias + activation epilogue.
+
+This is the compute hot-spot of every model variant: all convolutions lower
+to im2col followed by this kernel, and the fully-connected head / LSTM gate
+projections call it directly.
+
+TPU mental model (see DESIGN.md §Hardware-Adaptation):
+  * the grid walks (M/bm, N/bn, K/bk) blocks; each (bm, bk) x (bk, bn)
+    partial product targets the MXU systolic array,
+  * BlockSpecs express the HBM->VMEM schedule (the role CUDA threadblock
+    tiling plays in the GPU papers),
+  * bias add + activation are fused into the epilogue on the last K step so
+    the f32 accumulator never round-trips to HBM.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (a while loop over grid
+steps) which XLA-CPU compiles natively.  Correctness is pinned against
+``ref.gemm_bias_act`` by ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes: multiples of the MXU-native (8, 128) f32 tile.
+# VMEM footprint per grid step (f32):
+#   bm*bk + bk*bn + bm*bn = 128*512 + 512*128 + 128*128 floats = 576 KiB
+# comfortably inside a 16 MiB VMEM budget, leaving room for double buffering.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+# Single-grid-step threshold: half of a 16 MiB VMEM, leaving double-buffer
+# headroom.  Problems whose full (aligned) x/w/out blocks fit under this run
+# untiled; larger ones use the default MXU-aligned tiles above.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+_ACTIVATIONS = ("none", "relu", "sigmoid", "tanh")
+
+
+def _epilogue(acc: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "relu":
+        return jnp.maximum(acc, 0.0)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(acc)
+    if activation == "tanh":
+        return jnp.tanh(acc)
+    return acc
+
+
+def _gemm_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str,
+                 k_steps: int):
+    """One grid step of the tiled GEMM.
+
+    Grid order is (m, n, k) with k innermost, so the (bm, bn) output block
+    stays VMEM-resident across all k steps of one (m, n) tile: it is zeroed
+    on k == 0, accumulated into, and flushed through the fused bias +
+    activation epilogue on the last k step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        acc = o_ref[...] + b_ref[...]
+        o_ref[...] = _epilogue(acc, activation).astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
+def gemm_bias_act(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    activation: str = "none",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``activation(x @ w + b)`` via the tiled Pallas kernel.
+
+    Args:
+      x: (M, K) f32.
+      w: (K, N) f32.
+      b: (N,) f32 bias, or None for zero bias.
+      activation: one of "none" | "relu" | "sigmoid" | "tanh".
+      bm/bn/bk: block shape overrides (testing / autotuning).
+      interpret: must stay True on the CPU PJRT plugin.
+
+    Returns: (M, N) array of x.dtype.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"bad gemm shapes {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    if b is None:
+        b = jnp.zeros((n,), x.dtype)
+    if b.shape != (n,):
+        raise ValueError(f"bad bias shape {b.shape}, want ({n},)")
+
+    # Don't tile more than necessary: when the whole (aligned) problem fits
+    # the VMEM budget, run a single grid step — the MXU sees one large
+    # matmul and the HBM<->VMEM schedule degenerates to one load/store.
+    # Only problems larger than the budget fall back to the default tiles.
+    # (On the CPU interpret path this also removes the grid-loop overhead:
+    # 3-8x per conv, see EXPERIMENTS.md §Perf.)
+    mp_a = ((m + 7) // 8) * 8
+    np_a = ((n + 127) // 128) * 128
+    kp_a = ((k + 127) // 128) * 128
+    if vmem_bytes(mp_a, np_a, kp_a) <= VMEM_BUDGET_BYTES:
+        bm_, bn_, bk_ = mp_a, np_a, kp_a
+    else:
+        bm_ = min(bm, mp_a)
+        bn_ = min(bn, np_a)
+        bk_ = min(bk, kp_a)
+
+    xp = _pad_to(_pad_to(x, 0, bm_), 1, bk_)
+    wp = _pad_to(_pad_to(w, 0, bk_), 1, bn_)
+    bp = _pad_to(b, 0, bn_)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _gemm_kernel, activation=activation, k_steps=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+               bk: int = DEFAULT_BK, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (x, w, acc, out blocks)."""
+    return dtype_bytes * (bm * bk + bk * bn + 2 * bm * bn)
+
+
+def is_single_step(m: int, k: int, n: int) -> bool:
+    """Whether an (m, k, n) GEMM runs as one grid step (perf reporting)."""
+    mp = ((m + 7) // 8) * 8
+    np_ = ((n + 127) // 128) * 128
+    kp = ((k + 127) // 128) * 128
+    return vmem_bytes(mp, np_, kp) <= VMEM_BUDGET_BYTES
+
+
+def mxu_utilization(m: int, k: int, n: int, bm: int = DEFAULT_BM,
+                    bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> float:
+    """Fraction of MXU work that is useful (non-padding) for an (m,k,n) GEMM.
+
+    The padded problem executes ceil() blocks in every dimension; utilization
+    is real FLOPs over padded FLOPs.  Used by DESIGN.md §Perf to estimate
+    real-TPU efficiency (interpret=True wallclock is not a TPU proxy).
+    """
+    bm_ = min(bm, ((m + 7) // 8) * 8)
+    bn_ = min(bn, ((n + 127) // 128) * 128)
+    bk_ = min(bk, ((k + 127) // 128) * 128)
+    ceil = lambda a, blk: -(-a // blk) * blk
+    padded = ceil(m, bm_) * ceil(k, bk_) * ceil(n, bn_)
+    return (m * k * n) / padded if padded else 0.0

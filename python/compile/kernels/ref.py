@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels and the model building blocks.
+
+Every Layer-1 kernel and Layer-2 composite has a reference implementation
+here; pytest pins the optimized paths against these with
+``assert_allclose``.  Nothing in this module is performance-sensitive.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_bias_act(x: jnp.ndarray, w: jnp.ndarray,
+                  b: Optional[jnp.ndarray] = None,
+                  activation: str = "none") -> jnp.ndarray:
+    """Reference ``activation(x @ w + b)``."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "sigmoid":
+        out = jax.nn.sigmoid(out)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(x.dtype)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray] = None,
+           stride: int = 1, activation: str = "none") -> jnp.ndarray:
+    """Reference SAME-padded NHWC conv via lax.conv_general_dilated.
+
+    Args:
+      x: (N, H, W, Cin) f32.
+      w: (KH, KW, Cin, Cout) f32.
+      b: (Cout,) bias or None.
+    """
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)
+
+
+def lstm_cell(x_t: jnp.ndarray, h: jnp.ndarray, c: jnp.ndarray,
+              w: jnp.ndarray, b: jnp.ndarray):
+    """Reference fused-gate LSTM cell (Keras gate order i, f, g, o).
+
+    Args:
+      x_t: (B, I) input at one step.
+      h, c: (B, U) hidden / cell state.
+      w: (I + U, 4U) stacked kernel [Wx; Wh].
+      b: (4U,) bias.
+    Returns: (h', c').
+    """
+    units = h.shape[-1]
+    z = jnp.dot(jnp.concatenate([x_t, h], axis=-1), w) + b
+    i = jax.nn.sigmoid(z[:, 0 * units:1 * units])
+    f = jax.nn.sigmoid(z[:, 1 * units:2 * units])
+    g = jnp.tanh(z[:, 2 * units:3 * units])
+    o = jax.nn.sigmoid(z[:, 3 * units:4 * units])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,139 @@
+"""Layer-2: the LSTM workload forecaster (paper §5, "Load forecaster").
+
+Architecture per the paper: a 25-unit LSTM layer followed by a 1-unit dense
+output, trained with Adam on MSE.  Input is the past ``WINDOW`` seconds of
+per-second request rate; output is the predicted *maximum* rate over the
+next ``HORIZON`` seconds (the paper predicts next-minute max from the past
+10 minutes; we use 120s -> 30s to match the 30s adaptation interval at our
+scaled trace lengths).
+
+Training runs at build time (``aot.py``) on the synthetic twitter-like
+series from ``tracegen``; the trained weights are baked into the exported
+HLO as constants (they are ~3 KB), so the Rust side loads a single
+self-contained artifact.
+
+The exported inference cell routes its gate projection through the Layer-1
+Pallas GEMM; training uses the pure-jnp reference cell (the two are pinned
+equal by ``tests/test_lstm.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gemm, ref
+from . import tracegen
+
+WINDOW = 120
+HORIZON = 30
+UNITS = 25
+
+
+def init_params(seed: int = 0, units: int = UNITS) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    isz = 1
+    glorot = lambda fi, fo: (rng.standard_normal((fi, fo))
+                             * np.sqrt(2.0 / (fi + fo))).astype(np.float32)
+    b = np.zeros((4 * units,), np.float32)
+    b[units:2 * units] = 1.0  # forget-gate bias init
+    return {
+        "w": jnp.asarray(np.concatenate([glorot(isz, 4 * units),
+                                         glorot(units, 4 * units)], axis=0)),
+        "b": jnp.asarray(b),
+        "wd": jnp.asarray(glorot(units, 1)),
+        "bd": jnp.asarray(np.zeros((1,), np.float32)),
+    }
+
+
+def _cell_pallas(x_t, h, c, w, b):
+    """LSTM cell with the gate projection on the Pallas GEMM (export path)."""
+    units = h.shape[-1]
+    z = gemm.gemm_bias_act(jnp.concatenate([x_t, h], axis=-1), w, b,
+                           activation="none")
+    i = jax.nn.sigmoid(z[:, 0 * units:1 * units])
+    f = jax.nn.sigmoid(z[:, 1 * units:2 * units])
+    g = jnp.tanh(z[:, 2 * units:3 * units])
+    o = jax.nn.sigmoid(z[:, 3 * units:4 * units])
+    c_new = f * c + i * g
+    return o * jnp.tanh(c_new), c_new
+
+
+def forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """Predicted next-horizon max rate (normalized units).
+
+    Args:
+      params: LSTM + dense parameters.
+      x: (B, WINDOW, 1) normalized rate windows.
+    Returns: (B,) predictions.
+    """
+    bsz = x.shape[0]
+    units = params["b"].shape[0] // 4
+    cell = _cell_pallas if use_pallas else ref.lstm_cell
+    h = jnp.zeros((bsz, units), x.dtype)
+    c = jnp.zeros((bsz, units), x.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = cell(x_t, h, c, params["w"], params["b"])
+        return (h, c), None
+
+    (h, _c), _ = jax.lax.scan(step, (h, c), jnp.transpose(x, (1, 0, 2)))
+    out = jnp.dot(h, params["wd"]) + params["bd"]
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Training (build-time only)
+# ---------------------------------------------------------------------------
+
+def _adam_update(g, m, v, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return -lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def train(steps: int = 400, batch: int = 128, seed: int = 0,
+          log_every: int = 100) -> Tuple[Dict[str, jnp.ndarray], List[float]]:
+    """Train the forecaster on synthetic twitter-like windows.
+
+    Returns the trained params and the loss curve (one entry per log point).
+    """
+    x, y = tracegen.make_training_set(WINDOW, HORIZON)
+    params = init_params(seed)
+    rng = np.random.default_rng(seed + 1)
+
+    def loss_fn(p, xb, yb):
+        pred = forward(p, xb)
+        return jnp.mean((pred - yb) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+    curve: List[float] = []
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, x.shape[0], batch)
+        loss, g = grad_fn(params, x[idx], y[idx])
+        for k in params:
+            upd, m[k], v[k] = _adam_update(g[k], m[k], v[k], t)
+            params[k] = params[k] + upd
+        if t % log_every == 0 or t == 1:
+            curve.append(float(loss))
+    return params, curve
+
+
+def export_fn(params: Dict[str, jnp.ndarray]):
+    """Closure (window -> (prediction,)) with weights baked as constants."""
+    frozen = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(window):
+        # window: (WINDOW, 1) normalized rates -> scalar prediction.
+        return (forward(frozen, window[None, ...], use_pallas=True)[0],)
+
+    return fn

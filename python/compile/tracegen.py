@@ -1,0 +1,65 @@
+"""Synthetic twitter-like workload generator (build-time twin).
+
+The paper trains its LSTM forecaster on two weeks of the archiveteam
+Twitter trace.  That trace is not available here, so we synthesize a
+statistically similar series: a diurnal + hourly seasonal baseline, AR(1)
+noise, and Poisson-arriving spikes with fast attack and exponential decay
+(the paper's bursty sample is exactly such a spike).
+
+``rust/src/workload/`` implements the same recipe for the serving-side
+experiments; the LSTM is trained here on the same family of series it will
+forecast at run time.  See DESIGN.md §4 Substitutions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Fixed normalization scale shared with the Rust side via manifest.json.
+RPS_SCALE = 200.0
+
+
+def twitter_like(seconds: int, seed: int = 0, base: float = 40.0,
+                 diurnal_amp: float = 0.35, hourly_amp: float = 0.10,
+                 noise_sigma: float = 0.03, noise_rho: float = 0.97,
+                 spike_rate: float = 1.0 / 1800.0, spike_mag: float = 1.2,
+                 spike_tau: float = 60.0, spike_attack: float = 8.0) -> np.ndarray:
+    """Per-second request rates for ``seconds`` seconds (>= 0, float64)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(seconds, dtype=np.float64)
+    seasonal = (1.0
+                + diurnal_amp * np.sin(2 * np.pi * t / 86400.0)
+                + hourly_amp * np.sin(2 * np.pi * t / 3600.0 + 1.3))
+    # AR(1) multiplicative noise.
+    eps = rng.standard_normal(seconds) * noise_sigma
+    ar = np.empty(seconds)
+    acc = 0.0
+    for i in range(seconds):
+        acc = noise_rho * acc + eps[i]
+        ar[i] = acc
+    rate = base * seasonal * (1.0 + ar)
+    # Spikes: Poisson arrivals, fast ramp, exponential decay.
+    n_spikes = rng.poisson(spike_rate * seconds)
+    for _ in range(n_spikes):
+        t0 = rng.uniform(0, seconds)
+        mag = base * spike_mag * rng.exponential(1.0)
+        dt = t - t0
+        shape = np.where(
+            dt < 0, 0.0,
+            (1.0 - np.exp(-np.maximum(dt, 0) / spike_attack))
+            * np.exp(-np.maximum(dt, 0) / spike_tau))
+        rate = rate + mag * shape
+    return np.maximum(rate, 0.0)
+
+
+def make_training_set(window: int, horizon: int, seconds: int = 14 * 86400,
+                      stride: int = 40, seed: int = 7):
+    """(X, y) windows: X (N, window, 1) normalized rates, y (N,) next-horizon max."""
+    series = twitter_like(seconds, seed=seed) / RPS_SCALE
+    xs, ys = [], []
+    for start in range(0, seconds - window - horizon, stride):
+        xs.append(series[start:start + window])
+        ys.append(series[start + window:start + window + horizon].max())
+    x = np.asarray(xs, np.float32)[..., None]
+    y = np.asarray(ys, np.float32)
+    return x, y

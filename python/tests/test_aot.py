@@ -1,0 +1,73 @@
+"""AOT export path tests: HLO text lowering and the manifest contract.
+
+Full-variant lowering is exercised by `make artifacts`; here we lower a
+small custom variant to keep the suite fast, and validate the HLO-text
+interchange invariants the Rust loader depends on.
+"""
+
+import json
+import pathlib
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+TINY = model.VariantSpec("tiny", "basic", (1, 1, 1, 1), 50.0,
+                         widths=(8, 8, 8, 8))
+
+
+def test_lower_variant_produces_hlo_text():
+    text = aot.lower_variant(TINY, batch=1)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # weights are arguments, not constants: one parameter per weight + image
+    # (count only the ENTRY computation; nested bodies have their own params)
+    entry = text[text.index("ENTRY"):]
+    entry_block = entry[:entry.index("\n}")]
+    n_params = entry_block.count("parameter(")
+    assert n_params == len(model.param_manifest(TINY)) + 1
+
+
+def test_lowered_hlo_has_no_serialized_proto_markers():
+    # interchange must be text (xla_extension 0.5.1 rejects jax>=0.5 protos)
+    text = aot.lower_variant(TINY, batch=1)
+    assert text.lstrip().startswith("HloModule")
+
+
+def test_batch_dimension_is_respected():
+    t1 = aot.lower_variant(TINY, batch=1)
+    t4 = aot.lower_variant(TINY, batch=4)
+    assert "f32[1,32,32,3]" in t1
+    assert "f32[4,32,32,3]" in t4
+
+
+def test_save_weights_roundtrip_order():
+    params = model.init_params(TINY, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        path = pathlib.Path(d) / "w.npz"
+        aot.save_weights(path, params)
+        loaded = np.load(path)
+        keys = sorted(loaded.keys())
+        assert keys == [f"p{i:04d}" for i in range(len(params))]
+        for i, p in enumerate(params):
+            np.testing.assert_array_equal(loaded[f"p{i:04d}"], p)
+
+
+@pytest.mark.skipif(
+    not (pathlib.Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_complete():
+    root = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    manifest = json.loads((root / "manifest.json").read_text())
+    names = {v["name"] for v in manifest["variants"]}
+    assert {"resnet18", "resnet34", "resnet50", "resnet101", "resnet152"} <= names
+    for v in manifest["variants"]:
+        assert (root / v["weights"]).exists(), v["weights"]
+        for f in v["hlo"].values():
+            assert (root / f).exists(), f
+    fc = manifest["forecaster"]
+    assert fc is not None and (root / fc["hlo"]).exists()
+    assert fc["final_train_loss"] < 0.01

@@ -1,0 +1,99 @@
+"""Layer-1 correctness: the Pallas GEMM against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and activations; tolerances scale with the
+reduction depth K (blocked accumulation reorders float sums).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gemm, ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _tol(k):
+    return max(2e-5 * k, 1e-4)
+
+
+def run_case(m, k, n, act, seed=0, **block_kw):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    got = gemm.gemm_bias_act(x, w, b, activation=act, **block_kw)
+    want = ref.gemm_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=_tol(k), atol=_tol(k))
+
+
+@hypothesis.given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 700),
+    n=st.integers(1, 160),
+    act=st.sampled_from(["none", "relu", "sigmoid", "tanh"]),
+)
+def test_gemm_matches_reference_random_shapes(m, k, n, act):
+    run_case(m, k, n, act)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),          # degenerate
+        (8, 128, 128),      # exactly one MXU tile
+        (128, 512, 128),    # exactly one default block
+        (129, 513, 129),    # one past a block in every dim
+        (1024, 27, 16),     # stem conv shape (im2col)
+        (16, 1152, 128),    # deep bottleneck 3x3 shape
+        (1, 146, 100),      # LSTM gate projection shape
+    ],
+)
+def test_gemm_matches_reference_model_shapes(m, k, n):
+    run_case(m, k, n, "relu", seed=1)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (32, 128, 256), (128, 128, 512)])
+def test_gemm_block_shape_invariance(bm, bn, bk):
+    """Different tilings must give the same numbers (up to f32 reassoc)."""
+    run_case(100, 300, 70, "relu", seed=2, bm=bm, bn=bn, bk=bk)
+
+
+def test_gemm_none_bias_defaults_to_zero():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((5, 7)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((7, 3)), jnp.float32)
+    got = gemm.gemm_bias_act(x, w, None)
+    want = ref.gemm_bias_act(x, w, None)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_rejects_bad_shapes():
+    x = jnp.zeros((4, 5), jnp.float32)
+    w = jnp.zeros((6, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        gemm.gemm_bias_act(x, w)
+    with pytest.raises(ValueError):
+        gemm.gemm_bias_act(x, jnp.zeros((5, 3), jnp.float32), jnp.zeros((4,), jnp.float32))
+    with pytest.raises(ValueError):
+        gemm.gemm_bias_act(x, jnp.zeros((5, 3), jnp.float32), activation="gelu")
+
+
+def test_vmem_estimate_is_within_budget():
+    # default blocks must fit a 16 MiB VMEM with double-buffering headroom
+    assert gemm.vmem_bytes() * 2 <= 16 * 1024 * 1024
+
+
+def test_mxu_utilization_reports_padding_waste():
+    # aligned shapes: no waste
+    assert gemm.mxu_utilization(128, 512, 128) == 1.0
+    # tiny K pads badly
+    assert gemm.mxu_utilization(1024, 27, 16) < 0.5
+    u = gemm.mxu_utilization(129, 513, 129)
+    assert 0.0 < u < 1.0

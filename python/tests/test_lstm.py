@@ -1,0 +1,66 @@
+"""Forecaster tests: cell equivalence, training convergence, export closure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import lstm, tracegen
+from compile.kernels import ref
+
+
+def test_pallas_cell_matches_reference_cell():
+    rng = np.random.default_rng(0)
+    units, isz, bsz = 25, 1, 3
+    x_t = jnp.asarray(rng.standard_normal((bsz, isz)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((bsz, units)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((bsz, units)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((isz + units, 4 * units)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4 * units,)) * 0.1, jnp.float32)
+    h_ref, c_ref = ref.lstm_cell(x_t, h, c, w, b)
+    h_pal, c_pal = lstm._cell_pallas(x_t, h, c, w, b)
+    np.testing.assert_allclose(h_pal, h_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(c_pal, c_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_paths_agree():
+    params = lstm.init_params(seed=1)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(0, 0.5, (2, lstm.WINDOW, 1)), jnp.float32)
+    y_ref = lstm.forward(params, x, use_pallas=False)
+    y_pal = lstm.forward(params, x, use_pallas=True)
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_training_reduces_loss():
+    params, curve = lstm.train(steps=120, batch=64, seed=0, log_every=40)
+    assert len(curve) >= 3
+    assert curve[-1] < curve[0], f"loss did not improve: {curve}"
+    assert np.isfinite(curve[-1])
+
+
+def test_trained_forecaster_tracks_window_scale():
+    """Prediction should be in the ballpark of the recent window max."""
+    params, _ = lstm.train(steps=150, batch=64, seed=0, log_every=50)
+    series = tracegen.twitter_like(lstm.WINDOW + 200, seed=99) / tracegen.RPS_SCALE
+    win = jnp.asarray(series[:lstm.WINDOW], jnp.float32)[None, :, None]
+    pred = float(lstm.forward(params, win)[0])
+    actual_max = float(series[lstm.WINDOW:lstm.WINDOW + lstm.HORIZON].max())
+    assert 0.0 <= pred < 1.5
+    assert abs(pred - actual_max) < 0.25, f"pred {pred} vs actual {actual_max}"
+
+
+def test_export_fn_lowers_and_runs():
+    params = lstm.init_params(seed=3)
+    fn = lstm.export_fn(params)
+    win = jnp.zeros((lstm.WINDOW, 1), jnp.float32)
+    out = jax.jit(fn)(win)
+    assert len(out) == 1
+    assert out[0].shape == ()
+
+
+def test_forget_gate_bias_initialized_to_one():
+    p = lstm.init_params(seed=0)
+    b = np.asarray(p["b"])
+    u = lstm.UNITS
+    np.testing.assert_array_equal(b[u:2 * u], 1.0)
+    np.testing.assert_array_equal(b[:u], 0.0)

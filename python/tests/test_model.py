@@ -1,0 +1,117 @@
+"""Layer-2 correctness: conv-on-Pallas vs lax reference, variant structure."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "model", deadline=None, max_examples=15,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("model")
+
+
+@hypothesis.given(
+    n=st.integers(1, 2),
+    hw=st.sampled_from([4, 8, 16]),
+    cin=st.sampled_from([3, 8, 16]),
+    cout=st.sampled_from([8, 16]),
+    kernel=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_conv2d_matches_lax_reference(n, hw, cin, cout, kernel, stride, act):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, hw, hw, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((kernel, kernel, cin, cout)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((cout,)) * 0.1, jnp.float32)
+    got = model.conv2d(x, w, b, stride=stride, activation=act)
+    want = ref.conv2d(x, w, b, stride=stride, activation=act)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_fold_bn_is_equivalent_to_separate_bn():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 8)) * 0.2, jnp.float32)
+    gamma = jnp.asarray(rng.uniform(0.5, 1.5, 8), jnp.float32)
+    beta = jnp.asarray(rng.uniform(-0.2, 0.2, 8), jnp.float32)
+    mean = jnp.asarray(rng.uniform(-0.3, 0.3, 8), jnp.float32)
+    var = jnp.asarray(rng.uniform(0.5, 2.0, 8), jnp.float32)
+    # unfolded: conv (no bias) then BN
+    y = ref.conv2d(x, w, None)
+    bn = gamma * (y - mean) / jnp.sqrt(var + 1e-5) + beta
+    # folded
+    wf, bf = model.fold_bn(w, jnp.zeros(8, jnp.float32), gamma, beta, mean, var)
+    folded = ref.conv2d(x, wf, bf)
+    np.testing.assert_allclose(folded, bn, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("spec", model.VARIANTS, ids=lambda s: s.name)
+def test_param_manifest_matches_init(spec):
+    params = model.init_params(spec, seed=0)
+    manifest = model.param_manifest(spec)
+    assert len(params) == len(manifest)
+    for p, (name, shape) in zip(params, manifest):
+        assert p.shape == tuple(shape), name
+        assert p.dtype == np.float32
+
+
+def test_variant_family_is_the_papers_ladder():
+    names = [v.name for v in model.VARIANTS]
+    assert names == ["resnet18", "resnet34", "resnet50", "resnet101", "resnet152"]
+    accs = [v.accuracy for v in model.VARIANTS]
+    assert accs == sorted(accs), "accuracy must increase with depth"
+    flops = [model.flops(v) for v in model.VARIANTS]
+    assert flops == sorted(flops), "compute must increase with depth"
+    # the ladder spread matches the real family's order of magnitude
+    assert 4 < flops[-1] / flops[0] < 10
+
+
+def test_depths_match_torchvision():
+    by = model.VARIANTS_BY_NAME
+    assert by["resnet18"].depths == (2, 2, 2, 2)
+    assert by["resnet34"].depths == (3, 4, 6, 3)
+    assert by["resnet50"].depths == (3, 4, 6, 3)
+    assert by["resnet101"].depths == (3, 4, 23, 3)
+    assert by["resnet152"].depths == (3, 8, 36, 3)
+    assert by["resnet18"].block == "basic"
+    assert by["resnet50"].block == "bottleneck"
+
+
+@pytest.mark.parametrize("spec", model.VARIANTS[:3], ids=lambda s: s.name)
+def test_forward_shapes_and_determinism(spec):
+    params = [jnp.asarray(p) for p in model.init_params(spec, seed=0)]
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 32, 32, 3)), jnp.float32)
+    f = jax.jit(lambda xx, pp: model.forward(spec, pp, xx))
+    y1 = f(x, params)
+    y2 = f(x, params)
+    assert y1.shape == (2, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(y1)))
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_forward_batch_consistency():
+    """Batched forward must equal per-image forward (no cross-batch mixing)."""
+    spec = model.VARIANTS_BY_NAME["resnet18"]
+    params = [jnp.asarray(p) for p in model.init_params(spec, seed=0)]
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 32, 32, 3)), jnp.float32)
+    batched = model.forward(spec, params, x)
+    single0 = model.forward(spec, params, x[:1])
+    single1 = model.forward(spec, params, x[1:])
+    np.testing.assert_allclose(batched[0], single0[0], rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(batched[1], single1[0], rtol=2e-3, atol=2e-3)
+
+
+def test_num_params_counts_flat_list():
+    for spec in model.VARIANTS[:2]:
+        params = model.init_params(spec, seed=0)
+        assert model.num_params(spec) == sum(int(np.prod(p.shape)) for p in params)

@@ -1,0 +1,36 @@
+"""Trace generator tests (the LSTM's training distribution)."""
+
+import numpy as np
+
+from compile import tracegen
+
+
+def test_twitter_like_deterministic_and_nonnegative():
+    a = tracegen.twitter_like(5000, seed=1)
+    b = tracegen.twitter_like(5000, seed=1)
+    np.testing.assert_array_equal(a, b)
+    assert (a >= 0).all()
+    c = tracegen.twitter_like(5000, seed=2)
+    assert not np.array_equal(a, c)
+
+
+def test_twitter_like_mean_near_base():
+    t = tracegen.twitter_like(20000, seed=3, base=40.0)
+    assert abs(t.mean() - 40.0) < 15.0
+
+
+def test_training_set_shapes_and_targets():
+    x, y = tracegen.make_training_set(window=60, horizon=10, seconds=2000, stride=50)
+    assert x.ndim == 3 and x.shape[1:] == (60, 1)
+    assert y.shape == (x.shape[0],)
+    assert x.dtype == np.float32 and y.dtype == np.float32
+    # target is the max over the horizon following the window
+    series = tracegen.twitter_like(2000, seed=7) / tracegen.RPS_SCALE
+    np.testing.assert_allclose(x[0, :, 0], series[:60].astype(np.float32), rtol=1e-6)
+    np.testing.assert_allclose(y[0], series[60:70].max(), rtol=1e-5)
+
+
+def test_normalization_scale_keeps_values_small():
+    x, y = tracegen.make_training_set(window=60, horizon=10, seconds=4000, stride=100)
+    assert x.max() < 2.0, "RPS_SCALE should keep inputs O(1)"
+    assert y.max() < 2.0

@@ -1,0 +1,48 @@
+//! Figure 1 — sustained throughput of ResNet variants under 8/14/20 CPU
+//! cores at the 750 ms P99 SLO.
+//!
+//! Regenerates the paper's bar chart rows by saturation-searching the
+//! calibrated queueing simulator per (variant, cores).  The paper's shape:
+//! near-linear growth in cores, with ~one accuracy-tier step per ~2.5x
+//! core budget (ResNet18@8 ≈ ResNet50@20, ResNet50@8 ≈ ResNet152@20).
+
+use infadapter::experiment::{find_saturation, load_or_default_profiles};
+use infadapter::runtime::artifacts_dir;
+
+fn main() {
+    let profiles = load_or_default_profiles(&artifacts_dir());
+    let variants = ["resnet18", "resnet50", "resnet152"];
+    let cores = [8usize, 14, 20];
+
+    println!("# Figure 1: sustained throughput (rps) under 750 ms P99 SLO");
+    println!("{:<12} {:>9} {:>9} {:>9}", "variant", "8 cores", "14 cores", "20 cores");
+    let mut table = vec![];
+    for v in variants {
+        let row: Vec<f64> = cores
+            .iter()
+            .map(|&c| find_saturation(&profiles, v, c, 0.75, 1))
+            .collect();
+        println!("{:<12} {:>9.1} {:>9.1} {:>9.1}", v, row[0], row[1], row[2]);
+        table.push((v, row));
+    }
+
+    // The paper's two motivating equivalences (Section 1 / Figure 1).
+    let th = |v: &str, c: usize| -> f64 {
+        let row = &table.iter().find(|(n, _)| *n == v).unwrap().1;
+        row[cores.iter().position(|&x| x == c).unwrap()]
+    };
+    println!("\n# paper's equivalence checks (ratios ~1.0 = reproduced)");
+    println!(
+        "resnet18@8 / resnet50@20  = {:.2}",
+        th("resnet18", 8) / th("resnet50", 20)
+    );
+    println!(
+        "resnet50@8 / resnet152@20 = {:.2}",
+        th("resnet50", 8) / th("resnet152", 20)
+    );
+    // near-linearity in cores
+    for (v, row) in &table {
+        let lin = row[2] / row[0];
+        println!("{v}: th(20)/th(8) = {lin:.2} (linear would be 2.50)");
+    }
+}

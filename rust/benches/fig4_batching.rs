@@ -1,0 +1,66 @@
+//! Figure 4 — throughput vs average latency for batch sizes and
+//! parallelism configurations (ResNet50, 8-core pod).
+//!
+//! The paper's finding on CPU: batching barely raises throughput but
+//! inflates latency, so InfAdapter disables it (batch=1) and sets
+//! inter-op parallelism = #cores, intra-op = 1.
+//!
+//! Part A measures the *real* AOT executables: `aot.py` exports ResNet50
+//! at batch {1,2,4,8}; each is timed on a 1-worker PJRT pool, giving true
+//! per-batch latency and implied throughput on this host.  Part B sweeps
+//! the parallelism axis (inter-op workers per pod) on the calibrated
+//! simulator at a fixed offered load.
+
+use infadapter::experiment::{find_saturation, load_or_default_profiles};
+use infadapter::runtime::{artifacts_dir, Manifest, WorkerPool};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let dir = artifacts_dir();
+
+    // --- Part A: real batched executables.
+    match Manifest::load(&dir) {
+        Ok(manifest) => {
+            let meta = manifest.variant("resnet50").expect("resnet50 in manifest");
+            println!("# Figure 4A: real PJRT latency vs batch (ResNet50, 1 worker)");
+            println!(
+                "{:>6} {:>14} {:>16} {:>18}",
+                "batch", "latency (ms)", "ms per image", "images/s (1 wkr)"
+            );
+            for &batch in &meta.batch_sizes() {
+                let pool = WorkerPool::spawn(&dir, &manifest, meta, batch, 1)
+                    .expect("spawn pool");
+                let image =
+                    Arc::new(vec![0.5f32; manifest.input_shape(batch).iter().product()]);
+                pool.infer_blocking(image.clone()).expect("warmup");
+                let iters = 10;
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    pool.infer_blocking(image.clone()).expect("infer");
+                }
+                let lat = t0.elapsed().as_secs_f64() / iters as f64;
+                println!(
+                    "{:>6} {:>14.1} {:>16.1} {:>18.1}",
+                    batch,
+                    lat * 1000.0,
+                    lat * 1000.0 / batch as f64,
+                    batch as f64 / lat
+                );
+                pool.shutdown();
+            }
+            println!("(paper's CPU finding: throughput gain < batch growth, latency rises)");
+        }
+        Err(e) => println!("# Figure 4A skipped (no artifacts: {e:#})"),
+    }
+
+    // --- Part B: parallelism configurations on the calibrated simulator.
+    let profiles = load_or_default_profiles(&dir);
+    println!("\n# Figure 4B: sustained throughput vs inter-op workers (ResNet50 pod)");
+    println!("{:>18} {:>18}", "inter-op workers", "sustained rps");
+    for workers in [1usize, 2, 4, 8] {
+        let th = find_saturation(&profiles, "resnet50", workers, 0.75, 4);
+        println!("{:>18} {:>18.1}", workers, th);
+    }
+    println!("(the starred config in the paper: batch=1, inter-op=#cores, intra-op=1)");
+}

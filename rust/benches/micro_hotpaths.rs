@@ -1,0 +1,109 @@
+//! Microbenchmarks for the Layer-3 hot paths + the solver ablation.
+//!
+//! * dispatcher route()        — per-request cost
+//! * P2 quantile record()      — per-sample monitoring cost
+//! * solvers at paper scale    — per-decision cost (30 s cadence)
+//! * solver ablation           — greedy's optimality gap vs exact
+//! * forecasters               — per-decision prediction cost
+//! * JSON parse                — manifest load path
+//! * sim engine                — virtual-time throughput (events/s)
+
+use infadapter::baselines::StaticPolicy;
+use infadapter::config::ObjectiveWeights;
+use infadapter::dispatcher::Dispatcher;
+use infadapter::forecaster::{Forecaster, HoltForecaster, LastMaxForecaster};
+use infadapter::monitoring::P2Quantile;
+use infadapter::profiler::ProfileSet;
+use infadapter::serving::sim::{SimConfig, SimEngine};
+use infadapter::solver::{BranchBoundSolver, BruteForceSolver, GreedySolver, Problem, Solver};
+use infadapter::util::benchkit::run_named;
+use infadapter::workload::Trace;
+use std::collections::BTreeMap;
+
+fn main() {
+    let profiles = ProfileSet::paper_like();
+    let problem = |lambda: f64, budget: usize| {
+        Problem::from_profiles(
+            &profiles, lambda, 0.75, budget,
+            ObjectiveWeights::default(), &BTreeMap::new(),
+        )
+    };
+
+    println!("== micro: hot paths ==");
+    let d = Dispatcher::new();
+    d.set_weights(&[
+        ("resnet50".into(), 30.0),
+        ("resnet101".into(), 25.0),
+        ("resnet152".into(), 45.0),
+    ]);
+    run_named("dispatcher.route (3 backends)", || {
+        std::hint::black_box(d.route());
+    });
+
+    let mut p2 = P2Quantile::new(0.99);
+    let mut x = 0.1f64;
+    run_named("p2_quantile.record", || {
+        x = (x * 1.37) % 1.0 + 0.01;
+        p2.record(x);
+    });
+
+    let p20 = problem(75.0, 20);
+    run_named("solver.brute_force (B=20, M=5)", || {
+        std::hint::black_box(BruteForceSolver.solve(&p20));
+    });
+    run_named("solver.branch_bound (B=20, M=5)", || {
+        std::hint::black_box(BranchBoundSolver.solve(&p20));
+    });
+    run_named("solver.greedy (B=20, M=5)", || {
+        std::hint::black_box(GreedySolver.solve(&p20));
+    });
+    let p64 = problem(300.0, 64);
+    run_named("solver.branch_bound (B=64, M=5)", || {
+        std::hint::black_box(BranchBoundSolver.solve(&p64));
+    });
+
+    let mut lm = LastMaxForecaster::new(120, 1.1);
+    let mut holt = HoltForecaster::new(0.3, 0.1, 30.0);
+    for i in 0..120 {
+        lm.observe(40.0 + (i % 7) as f64);
+        holt.observe(40.0 + (i % 7) as f64);
+    }
+    run_named("forecaster.last_max.predict", || {
+        std::hint::black_box(lm.predict_max());
+    });
+    run_named("forecaster.holt.predict", || {
+        std::hint::black_box(holt.predict_max());
+    });
+
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = manifest_text {
+        run_named("json.parse(manifest.json)", || {
+            std::hint::black_box(infadapter::util::json::parse(&text).unwrap());
+        });
+    }
+
+    println!("\n== sim engine throughput ==");
+    let trace = Trace::steady(80.0, 120);
+    let stats = run_named("sim: 120s @ 80rps static pod", || {
+        let sim = SimEngine::new(profiles.clone(), SimConfig::default());
+        let mut policy = StaticPolicy::new("resnet18", 6);
+        std::hint::black_box(sim.run(&mut policy, &trace));
+    });
+    let events = 80.0 * 120.0 * 2.0 + 120.0; // arrivals+completions+ticks
+    println!(
+        "  -> ~{:.0}k events/s simulated",
+        events / stats.mean.as_secs_f64() / 1000.0
+    );
+
+    println!("\n== solver ablation: greedy vs exact (objective gap) ==");
+    println!("{:>8} {:>8} {:>12} {:>12} {:>8}", "λ", "B", "exact obj", "greedy obj", "gap");
+    for (lambda, budget) in [(40.0, 14), (75.0, 14), (75.0, 20), (120.0, 24), (200.0, 32)] {
+        let p = problem(lambda, budget);
+        let e = BruteForceSolver.solve(&p).unwrap();
+        let g = GreedySolver.solve(&p).unwrap();
+        println!(
+            "{:>8.0} {:>8} {:>12.3} {:>12.3} {:>8.3}",
+            lambda, budget, e.objective, g.objective, e.objective - g.objective
+        );
+    }
+}

@@ -1,0 +1,209 @@
+//! The InfAdapter policy: forecast → solve → enforce (paper §4 "Adapter").
+//!
+//! Every adaptation interval the adapter (1) feeds the observed per-second
+//! arrival rates to the forecaster, (2) predicts the next-interval max
+//! workload λ̂, (3) solves the ILP of Eq. 1 for the best variant set + core
+//! allocation given the current cluster state (loading costs are relative
+//! to what is already loaded), and (4) emits the target allocation and the
+//! per-variant quotas λ_m for the dispatcher.
+
+use crate::config::ObjectiveWeights;
+use crate::forecaster::Forecaster;
+use crate::profiler::ProfileSet;
+use crate::serving::{Decision, Policy};
+use crate::solver::{Allocation, Problem, Solver};
+use std::collections::BTreeMap;
+
+/// The paper's system, as a [`Policy`].
+pub struct InfAdapterPolicy {
+    pub profiles: ProfileSet,
+    pub forecaster: Box<dyn Forecaster>,
+    pub solver: Box<dyn Solver + Send>,
+    pub weights: ObjectiveWeights,
+    pub slo_s: f64,
+    pub budget: usize,
+    /// Multiplicative headroom on λ̂ (absorbs forecast error).
+    pub headroom: f64,
+    /// Floor on λ̂ so the system never scales to zero capacity.
+    pub min_lambda: f64,
+    /// Hysteresis: keep the current allocation unless the newly solved
+    /// objective beats it by more than this (suppresses churn — every
+    /// reallocation pays a readiness window at reduced capacity).
+    pub hysteresis: f64,
+    last_allocation: Option<Allocation>,
+}
+
+impl InfAdapterPolicy {
+    pub fn new(
+        profiles: ProfileSet,
+        forecaster: Box<dyn Forecaster>,
+        solver: Box<dyn Solver + Send>,
+        weights: ObjectiveWeights,
+        slo_s: f64,
+        budget: usize,
+        headroom: f64,
+    ) -> Self {
+        Self {
+            profiles,
+            forecaster,
+            solver,
+            weights,
+            slo_s,
+            budget,
+            headroom,
+            min_lambda: 1.0,
+            hysteresis: 0.5,
+            last_allocation: None,
+        }
+    }
+
+    /// Last solved allocation (diagnostics / benches).
+    pub fn last_allocation(&self) -> Option<&Allocation> {
+        self.last_allocation.as_ref()
+    }
+}
+
+impl Policy for InfAdapterPolicy {
+    fn name(&self) -> String {
+        format!("infadapter[{}]", self.solver.name())
+    }
+
+    fn decide(
+        &mut self,
+        _now: f64,
+        rate_history: &[f64],
+        committed: &BTreeMap<String, usize>,
+    ) -> Decision {
+        for &r in rate_history {
+            self.forecaster.observe(r);
+        }
+        let lambda_hat = (self.forecaster.predict_max() * self.headroom).max(self.min_lambda);
+        let problem = Problem::from_profiles(
+            &self.profiles,
+            lambda_hat,
+            self.slo_s,
+            self.budget,
+            self.weights,
+            committed,
+        );
+        let mut allocation = self
+            .solver
+            .solve(&problem)
+            .expect("solver returned no allocation");
+        // Hysteresis: if what is already running is feasible for λ̂ and the
+        // solved optimum is only marginally better, keep the current
+        // allocation — a reallocation serves at reduced capacity for a full
+        // readiness window.
+        if !committed.is_empty() {
+            let current_cores: Vec<usize> = problem
+                .variants
+                .iter()
+                .map(|v| committed.get(&v.name).copied().unwrap_or(0))
+                .collect();
+            if current_cores.iter().sum::<usize>() <= problem.budget {
+                if let Some(current) = crate::solver::score(&problem, &current_cores) {
+                    if current.feasible
+                        && allocation.objective - current.objective < self.hysteresis
+                    {
+                        allocation = current;
+                    }
+                }
+            }
+        }
+        let target: BTreeMap<String, usize> = allocation
+            .assignments
+            .iter()
+            .filter(|(_, &(c, _))| c > 0)
+            .map(|(v, &(c, _))| (v.clone(), c))
+            .collect();
+        let quotas = allocation.quota_weights();
+        let decision = Decision {
+            target,
+            quotas,
+            predicted_lambda: lambda_hat,
+        };
+        self.last_allocation = Some(allocation);
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecaster::LastMaxForecaster;
+    use crate::solver::BruteForceSolver;
+
+    fn policy(beta: f64, budget: usize) -> InfAdapterPolicy {
+        InfAdapterPolicy::new(
+            ProfileSet::paper_like(),
+            Box::new(LastMaxForecaster::new(120, 1.0)),
+            Box::new(BruteForceSolver),
+            ObjectiveWeights {
+                alpha: 1.0,
+                beta,
+                gamma: 0.001,
+            },
+            0.75,
+            budget,
+            1.1,
+        )
+    }
+
+    #[test]
+    fn covers_predicted_load() {
+        let mut p = policy(0.05, 20);
+        let history = vec![70.0; 60];
+        let d = p.decide(0.0, &history, &BTreeMap::new());
+        assert!(d.predicted_lambda >= 70.0);
+        let alloc = p.last_allocation().unwrap();
+        assert!(alloc.feasible);
+        assert!(alloc.capacity >= d.predicted_lambda - 1e-9);
+        assert!(!d.quotas.is_empty());
+    }
+
+    #[test]
+    fn scales_down_after_a_spike_passes() {
+        let mut p = policy(0.05, 20);
+        let spike = vec![100.0; 60];
+        let d1 = p.decide(0.0, &spike, &BTreeMap::new());
+        let cores_spike: usize = d1.target.values().sum();
+        // 150 quiet seconds push the spike out of the 120s window
+        let committed = d1.target.clone();
+        let mut d2 = None;
+        for i in 0..3 {
+            d2 = Some(p.decide(
+                30.0 * (i + 1) as f64,
+                &vec![10.0; 60],
+                &committed,
+            ));
+        }
+        let cores_quiet: usize = d2.unwrap().target.values().sum();
+        assert!(
+            cores_quiet < cores_spike,
+            "quiet {cores_quiet} !< spike {cores_spike}"
+        );
+    }
+
+    #[test]
+    fn uses_multiple_variants_at_moderate_budget() {
+        // The paper's Figure 2 observation: a mixed set beats one variant.
+        let mut p = policy(0.05, 14);
+        let d = p.decide(0.0, &vec![75.0; 60], &BTreeMap::new());
+        // with 14 cores and 75 rps (plus headroom), a single top variant
+        // can't cover the load: the solver must mix
+        assert!(
+            d.target.len() >= 2,
+            "expected a variant set, got {:?}",
+            d.target
+        );
+    }
+
+    #[test]
+    fn never_returns_empty_capacity_under_load() {
+        let mut p = policy(0.2, 8);
+        let d = p.decide(0.0, &vec![5.0; 30], &BTreeMap::new());
+        assert!(!d.target.is_empty());
+        let total: usize = d.target.values().sum();
+        assert!(total >= 1);
+    }
+}

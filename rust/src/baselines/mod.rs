@@ -1,0 +1,53 @@
+//! Comparator policies from the paper's evaluation.
+//!
+//! * [`StaticPolicy`] — fixed variant + fixed cores (sanity baseline).
+//! * [`VpaPolicy`] — the paper's "VPA+": Kubernetes Vertical Pod Autoscaler
+//!   extended with create-before-remove and no lower-bound clamp, pinned to
+//!   one variant (the paper runs VPA-18 / VPA-50 / VPA-152).
+//! * [`MsPlusPolicy`] — Model-Switching+ (paper §5): exactly one active
+//!   variant, chosen with the *same* objective as InfAdapter but restricted
+//!   to singleton sets, with predictive allocation.
+
+mod ms;
+mod vpa;
+
+pub use ms::MsPlusPolicy;
+pub use vpa::VpaPolicy;
+
+use crate::serving::{Decision, Policy};
+use std::collections::BTreeMap;
+
+/// Fixed variant and allocation; never adapts.
+pub struct StaticPolicy {
+    variant: String,
+    cores: usize,
+}
+
+impl StaticPolicy {
+    pub fn new(variant: &str, cores: usize) -> Self {
+        Self {
+            variant: variant.to_string(),
+            cores,
+        }
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> String {
+        format!("static-{}x{}", self.variant, self.cores)
+    }
+
+    fn decide(
+        &mut self,
+        _now: f64,
+        rate_history: &[f64],
+        _committed: &BTreeMap<String, usize>,
+    ) -> Decision {
+        let observed = rate_history.iter().cloned().fold(0.0, f64::max);
+        Decision {
+            target: BTreeMap::from([(self.variant.clone(), self.cores)]),
+            quotas: vec![(self.variant.clone(), 1.0)],
+            predicted_lambda: observed,
+        }
+    }
+}

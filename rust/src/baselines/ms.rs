@@ -1,0 +1,148 @@
+//! Model-Switching+ (the paper's enhanced MS baseline).
+//!
+//! Original Model-Switching (Zhang et al., HotCloud'20) switches between
+//! variants on a *fixed* resource budget.  The paper's MS+ adds predictive
+//! allocation: at each step a *single* variant and its core count are
+//! chosen by maximizing the same objective as InfAdapter (Eq. 1) restricted
+//! to singleton variant sets — making MS+ the exact "one variant at a time"
+//! ablation of InfAdapter.
+
+use crate::config::ObjectiveWeights;
+use crate::forecaster::Forecaster;
+use crate::profiler::ProfileSet;
+use crate::serving::{Decision, Policy};
+use crate::solver::{score, Problem};
+use std::collections::BTreeMap;
+
+pub struct MsPlusPolicy {
+    profiles: ProfileSet,
+    forecaster: Box<dyn Forecaster>,
+    weights: ObjectiveWeights,
+    slo_s: f64,
+    budget: usize,
+    headroom: f64,
+}
+
+impl MsPlusPolicy {
+    pub fn new(
+        profiles: ProfileSet,
+        forecaster: Box<dyn Forecaster>,
+        weights: ObjectiveWeights,
+        slo_s: f64,
+        budget: usize,
+        headroom: f64,
+    ) -> Self {
+        Self {
+            profiles,
+            forecaster,
+            weights,
+            slo_s,
+            budget,
+            headroom,
+        }
+    }
+}
+
+impl Policy for MsPlusPolicy {
+    fn name(&self) -> String {
+        "ms+".to_string()
+    }
+
+    fn decide(
+        &mut self,
+        _now: f64,
+        rate_history: &[f64],
+        committed: &BTreeMap<String, usize>,
+    ) -> Decision {
+        for &r in rate_history {
+            self.forecaster.observe(r);
+        }
+        let lambda_hat = (self.forecaster.predict_max() * self.headroom).max(1.0);
+        let problem = Problem::from_profiles(
+            &self.profiles,
+            lambda_hat,
+            self.slo_s,
+            self.budget,
+            self.weights,
+            committed,
+        );
+        // Enumerate singleton allocations: one variant, 1..=B cores.
+        let m = problem.variants.len();
+        let mut best: Option<(usize, usize, f64)> = None; // (variant, cores, objective)
+        for i in 0..m {
+            for n in 1..=problem.budget {
+                let mut cores = vec![0usize; m];
+                cores[i] = n;
+                if let Some(alloc) = score(&problem, &cores) {
+                    if best.map_or(true, |(_, _, obj)| alloc.objective > obj) {
+                        best = Some((i, n, alloc.objective));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((i, n, _)) => {
+                let name = problem.variants[i].name.clone();
+                Decision {
+                    target: BTreeMap::from([(name.clone(), n)]),
+                    quotas: vec![(name, 1.0)],
+                    predicted_lambda: lambda_hat,
+                }
+            }
+            None => Decision {
+                target: BTreeMap::new(),
+                quotas: vec![],
+                predicted_lambda: lambda_hat,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecaster::LastMaxForecaster;
+
+    fn ms(budget: usize) -> MsPlusPolicy {
+        MsPlusPolicy::new(
+            ProfileSet::paper_like(),
+            Box::new(LastMaxForecaster::new(120, 1.0)),
+            ObjectiveWeights::default(),
+            0.75,
+            budget,
+            1.1,
+        )
+    }
+
+    #[test]
+    fn selects_exactly_one_variant() {
+        let mut p = ms(20);
+        let d = p.decide(0.0, &vec![75.0; 60], &BTreeMap::new());
+        assert_eq!(d.target.len(), 1);
+        assert_eq!(d.quotas.len(), 1);
+    }
+
+    #[test]
+    fn covers_load_when_budget_allows() {
+        let mut p = ms(20);
+        let d = p.decide(0.0, &vec![75.0; 60], &BTreeMap::new());
+        let (variant, cores) = d.target.iter().next().unwrap();
+        let profiles = ProfileSet::paper_like();
+        assert!(
+            profiles.get(variant).unwrap().throughput(*cores) >= d.predicted_lambda - 1e-9,
+            "{variant} x{cores} can't cover {}",
+            d.predicted_lambda
+        );
+    }
+
+    #[test]
+    fn downgrades_variant_under_tight_budget() {
+        // At B=8 and 75 rps the most accurate variants can't keep up: MS+
+        // must pick a cheaper variant (the paper's Figure 2 observation).
+        let mut tight = ms(8);
+        let d = tight.decide(0.0, &vec![75.0; 60], &BTreeMap::new());
+        let (variant, _) = d.target.iter().next().unwrap();
+        assert_ne!(variant, "resnet152");
+        assert_ne!(variant, "resnet101");
+    }
+}

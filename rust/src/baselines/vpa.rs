@@ -1,0 +1,134 @@
+//! VPA+ — the paper's extended Kubernetes Vertical Pod Autoscaler.
+//!
+//! The built-in VPA recommends per-container CPU from a decaying histogram
+//! of recent usage (Autopilot-style percentile targeting).  The paper's two
+//! fixes, both reproduced here: (1) create-before-remove (the cluster
+//! substrate implements it for every policy); (2) no lower-bound clamp so
+//! scale-up is immediate.  VPA is *variant-blind*: it is always paired with
+//! one fixed model (VPA-18 / VPA-50 / VPA-152 in the figures).
+
+use crate::profiler::ProfileSet;
+use crate::serving::{Decision, Policy};
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+pub struct VpaPolicy {
+    variant: String,
+    profiles: ProfileSet,
+    /// Target percentile of recent per-second usage (VPA default: P90).
+    percentile: f64,
+    /// Safety margin on the recommendation (VPA default: 15%).
+    margin: f64,
+    budget: usize,
+    window: VecDeque<f64>,
+    window_cap: usize,
+}
+
+impl VpaPolicy {
+    pub fn new(variant: &str, profiles: ProfileSet, budget: usize) -> Self {
+        Self {
+            variant: variant.to_string(),
+            profiles,
+            percentile: 0.90,
+            margin: 1.15,
+            budget,
+            window: VecDeque::new(),
+            window_cap: 300,
+        }
+    }
+
+    fn recommend_cores(&self) -> usize {
+        if self.window.is_empty() {
+            return 1;
+        }
+        let mut rates: Vec<f64> = self.window.iter().cloned().collect();
+        rates.sort_by(f64::total_cmp);
+        let rank =
+            ((self.percentile * rates.len() as f64).ceil() as usize).clamp(1, rates.len());
+        let demand_rps = rates[rank - 1] * self.margin;
+        // invert the linear throughput model: cores s.t. th(n) >= demand
+        let p = self.profiles.get(&self.variant).expect("known variant");
+        let mut n = 1;
+        while n < self.budget && p.throughput(n) < demand_rps {
+            n += 1;
+        }
+        n
+    }
+}
+
+impl Policy for VpaPolicy {
+    fn name(&self) -> String {
+        format!("vpa-{}", self.variant)
+    }
+
+    fn decide(
+        &mut self,
+        _now: f64,
+        rate_history: &[f64],
+        _committed: &BTreeMap<String, usize>,
+    ) -> Decision {
+        for &r in rate_history {
+            if self.window.len() == self.window_cap {
+                self.window.pop_front();
+            }
+            self.window.push_back(r);
+        }
+        let cores = self.recommend_cores();
+        Decision {
+            target: BTreeMap::from([(self.variant.clone(), cores)]),
+            quotas: vec![(self.variant.clone(), 1.0)],
+            predicted_lambda: self
+                .window
+                .iter()
+                .rev()
+                .take(60)
+                .cloned()
+                .fold(0.0, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vpa() -> VpaPolicy {
+        VpaPolicy::new("resnet50", ProfileSet::paper_like(), 32)
+    }
+
+    #[test]
+    fn recommends_enough_cores_for_p90_demand() {
+        let mut v = vpa();
+        let d = v.decide(0.0, &vec![60.0; 120], &BTreeMap::new());
+        let cores = d.target["resnet50"];
+        let p = ProfileSet::paper_like();
+        // must cover 60 rps * 1.15 margin
+        assert!(
+            p.get("resnet50").unwrap().throughput(cores) >= 60.0 * 1.15,
+            "cores {cores}"
+        );
+    }
+
+    #[test]
+    fn scales_down_when_load_drops() {
+        let mut v = vpa();
+        let d_high = v.decide(0.0, &vec![80.0; 300], &BTreeMap::new());
+        let d_low = v.decide(30.0, &vec![5.0; 300], &BTreeMap::new());
+        assert!(d_low.target["resnet50"] < d_high.target["resnet50"]);
+    }
+
+    #[test]
+    fn is_variant_blind() {
+        let mut v = vpa();
+        let d = v.decide(0.0, &vec![40.0; 60], &BTreeMap::new());
+        assert_eq!(d.target.len(), 1);
+        assert!(d.target.contains_key("resnet50"));
+    }
+
+    #[test]
+    fn cold_start_recommends_one_core() {
+        let mut v = vpa();
+        let d = v.decide(0.0, &[], &BTreeMap::new());
+        assert_eq!(d.target["resnet50"], 1);
+    }
+}

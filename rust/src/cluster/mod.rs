@@ -1,0 +1,331 @@
+//! Simulated Kubernetes substrate: nodes, pods, scheduling, readiness, and
+//! the create-before-remove update the paper adds to VPA.
+//!
+//! The paper prototypes on a 2-node Kubernetes cluster with TF-Serving
+//! containers.  The adaptation loop only relies on orchestration
+//! *semantics*: (1) allocation changes take effect after a readiness delay
+//! `rt_m`; (2) updates are non-disruptive — a new pod is created with the
+//! new allocation and the old one is removed only once the replacement is
+//! Ready (the paper's first VPA fix); (3) pods are placed on nodes with
+//! finite capacity.  [`Cluster`] implements exactly those semantics against
+//! a virtual or wall clock (the caller supplies `now`).
+
+use std::collections::BTreeMap;
+
+/// Pod lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PodState {
+    /// Created; becomes Ready at the stored time.
+    Pending { ready_at: f64 },
+    Ready,
+    /// Being removed; kept only until in-flight work drains.
+    Draining { since: f64 },
+}
+
+/// One backend container serving a single variant with a core allocation.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: u64,
+    pub variant: String,
+    pub cores: usize,
+    pub node: usize,
+    pub state: PodState,
+}
+
+impl Pod {
+    pub fn is_ready(&self) -> bool {
+        matches!(self.state, PodState::Ready)
+    }
+
+    /// Counts toward the resource bill (everything not yet fully removed).
+    pub fn is_billed(&self) -> bool {
+        !matches!(self.state, PodState::Draining { .. })
+    }
+}
+
+/// A node with finite core capacity.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub cores: usize,
+}
+
+/// Events surfaced to the serving engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    PodReady { pod_id: u64, variant: String },
+    PodRemoved { pod_id: u64, variant: String },
+}
+
+/// The cluster: nodes + pods + the reconciliation logic.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+    pods: Vec<Pod>,
+    next_pod_id: u64,
+    /// Seconds a draining pod lingers before removal (connection draining).
+    pub drain_grace_s: f64,
+}
+
+impl Cluster {
+    pub fn new(node_cores: &[usize]) -> Self {
+        Self {
+            nodes: node_cores.iter().map(|&c| Node { cores: c }).collect(),
+            pods: Vec::new(),
+            next_pod_id: 1,
+            drain_grace_s: 5.0,
+        }
+    }
+
+    /// Cores currently committed on a node (Pending + Ready + Draining all
+    /// hold their reservation, as in Kubernetes).
+    fn node_used(&self, node: usize) -> usize {
+        self.pods
+            .iter()
+            .filter(|p| p.node == node)
+            .map(|p| p.cores)
+            .sum()
+    }
+
+    /// First-fit placement. None if no node can host `cores`.
+    fn place(&self, cores: usize) -> Option<usize> {
+        (0..self.nodes.len()).find(|&n| self.node_used(n) + cores <= self.nodes[n].cores)
+    }
+
+    /// Reconcile toward `target` (variant -> cores) at time `now`.
+    ///
+    /// Create-before-remove: for each variant whose ready allocation differs
+    /// from the target, a new pod is created (Pending for `readiness(v)`
+    /// seconds); the old pod keeps serving and is drained by `tick` once the
+    /// replacement is Ready.  Returns ids of pods created.
+    pub fn apply(
+        &mut self,
+        target: &BTreeMap<String, usize>,
+        now: f64,
+        readiness: impl Fn(&str) -> f64,
+    ) -> Vec<u64> {
+        let mut created = Vec::new();
+        // 1. Variants that must shrink to zero: drain directly.
+        let targets_of = |v: &str| target.get(v).copied().unwrap_or(0);
+        for pod in self.pods.iter_mut() {
+            if matches!(pod.state, PodState::Draining { .. }) {
+                continue;
+            }
+            if targets_of(&pod.variant) == 0 {
+                pod.state = PodState::Draining { since: now };
+            }
+        }
+        // 2. Variants that need a different allocation: create replacements.
+        for (variant, &cores) in target {
+            if cores == 0 {
+                continue;
+            }
+            let current: Option<&Pod> = self
+                .pods
+                .iter()
+                .filter(|p| {
+                    &p.variant == variant && !matches!(p.state, PodState::Draining { .. })
+                })
+                .max_by_key(|p| p.id);
+            match current {
+                Some(p) if p.cores == cores => {} // converged (or converging)
+                _ => {
+                    if let Some(node) = self.place(cores) {
+                        let id = self.next_pod_id;
+                        self.next_pod_id += 1;
+                        self.pods.push(Pod {
+                            id,
+                            variant: variant.clone(),
+                            cores,
+                            node,
+                            state: PodState::Pending {
+                                ready_at: now + readiness(variant),
+                            },
+                        });
+                        created.push(id);
+                    } else {
+                        eprintln!("[cluster] no node capacity for {variant} x{cores}; keeping old allocation");
+                    }
+                }
+            }
+        }
+        created
+    }
+
+    /// Advance lifecycle state to `now`; returns events in order.
+    pub fn tick(&mut self, now: f64) -> Vec<ClusterEvent> {
+        let mut events = Vec::new();
+        // Promote pending pods whose readiness has elapsed.
+        let mut newly_ready: Vec<(u64, String)> = Vec::new();
+        for pod in self.pods.iter_mut() {
+            if let PodState::Pending { ready_at } = pod.state {
+                if now >= ready_at {
+                    pod.state = PodState::Ready;
+                    newly_ready.push((pod.id, pod.variant.clone()));
+                }
+            }
+        }
+        // Create-before-remove: a newly ready pod drains older same-variant
+        // pods.
+        for (id, variant) in &newly_ready {
+            for pod in self.pods.iter_mut() {
+                if &pod.variant == variant && pod.id != *id && pod.is_ready() {
+                    pod.state = PodState::Draining { since: now };
+                }
+            }
+            events.push(ClusterEvent::PodReady {
+                pod_id: *id,
+                variant: variant.clone(),
+            });
+        }
+        // Remove pods whose drain grace elapsed.
+        let grace = self.drain_grace_s;
+        let mut removed = Vec::new();
+        self.pods.retain(|p| match p.state {
+            PodState::Draining { since } if now - since >= grace => {
+                removed.push((p.id, p.variant.clone()));
+                false
+            }
+            _ => true,
+        });
+        for (pod_id, variant) in removed {
+            events.push(ClusterEvent::PodRemoved { pod_id, variant });
+        }
+        events
+    }
+
+    /// Ready cores per variant (what the dispatcher can use *now*).
+    pub fn ready_allocation(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for p in self.pods.iter().filter(|p| p.is_ready()) {
+            *out.entry(p.variant.clone()).or_insert(0) += p.cores;
+        }
+        out
+    }
+
+    /// Target-facing allocation (Ready + Pending; what the solver should
+    /// treat as "already loaded" for loading-cost purposes).
+    pub fn committed_allocation(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for p in self.pods.iter().filter(|p| p.is_billed()) {
+            *out.entry(p.variant.clone()).or_insert(0) += p.cores;
+        }
+        out
+    }
+
+    /// Total cores billed right now (the paper's cost metric integrates
+    /// this over time).
+    pub fn billed_cores(&self) -> usize {
+        self.pods.iter().filter(|p| p.is_billed()).map(|p| p.cores).sum()
+    }
+
+    pub fn pods(&self) -> &[Pod] {
+        &self.pods
+    }
+
+    pub fn ready_pods_of(&self, variant: &str) -> Vec<&Pod> {
+        self.pods
+            .iter()
+            .filter(|p| p.is_ready() && p.variant == variant)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target(pairs: &[(&str, usize)]) -> BTreeMap<String, usize> {
+        pairs.iter().map(|&(v, c)| (v.to_string(), c)).collect()
+    }
+
+    #[test]
+    fn pods_become_ready_after_readiness_delay() {
+        let mut c = Cluster::new(&[48]);
+        c.apply(&target(&[("resnet18", 4)]), 0.0, |_| 10.0);
+        assert!(c.ready_allocation().is_empty());
+        let ev = c.tick(9.9);
+        assert!(ev.is_empty());
+        let ev = c.tick(10.0);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(c.ready_allocation()["resnet18"], 4);
+    }
+
+    #[test]
+    fn create_before_remove_keeps_old_pod_serving() {
+        let mut c = Cluster::new(&[48]);
+        c.apply(&target(&[("resnet18", 4)]), 0.0, |_| 5.0);
+        c.tick(5.0);
+        // resize 4 -> 8
+        c.apply(&target(&[("resnet18", 8)]), 6.0, |_| 5.0);
+        // old pod still the only ready one during the transition
+        c.tick(8.0);
+        assert_eq!(c.ready_allocation()["resnet18"], 4);
+        // replacement becomes ready; old drains
+        c.tick(11.0);
+        assert_eq!(c.ready_allocation()["resnet18"], 8);
+        // old pod fully removed after grace
+        c.tick(11.0 + c.drain_grace_s);
+        assert_eq!(c.pods().len(), 1);
+        assert_eq!(c.pods()[0].cores, 8);
+    }
+
+    #[test]
+    fn transition_is_billed_for_both_pods() {
+        let mut c = Cluster::new(&[48]);
+        c.apply(&target(&[("resnet18", 4)]), 0.0, |_| 5.0);
+        c.tick(5.0);
+        c.apply(&target(&[("resnet18", 8)]), 6.0, |_| 5.0);
+        // during the overlap both allocations are committed
+        assert_eq!(c.billed_cores(), 12);
+        c.tick(11.0);
+        assert_eq!(c.billed_cores(), 8); // old is draining (not billed)
+    }
+
+    #[test]
+    fn scale_to_zero_drains_variant() {
+        let mut c = Cluster::new(&[48]);
+        c.apply(&target(&[("resnet50", 6)]), 0.0, |_| 2.0);
+        c.tick(2.0);
+        c.apply(&target(&[]), 10.0, |_| 2.0);
+        c.tick(10.0);
+        assert!(c.ready_allocation().is_empty() || !c.pods().iter().any(|p| p.is_ready()));
+        c.tick(10.0 + c.drain_grace_s);
+        assert!(c.pods().is_empty());
+    }
+
+    #[test]
+    fn placement_respects_node_capacity() {
+        let mut c = Cluster::new(&[8]);
+        c.apply(&target(&[("resnet18", 6)]), 0.0, |_| 1.0);
+        c.tick(1.0);
+        // resize to 7: replacement (7) doesn't fit next to old (6) on 8 cores
+        let created = c.apply(&target(&[("resnet18", 7)]), 2.0, |_| 1.0);
+        assert!(created.is_empty());
+        assert_eq!(c.ready_allocation()["resnet18"], 6); // old keeps serving
+    }
+
+    #[test]
+    fn multi_variant_allocation() {
+        let mut c = Cluster::new(&[48, 48]);
+        c.apply(
+            &target(&[("resnet50", 2), ("resnet101", 6), ("resnet152", 6)]),
+            0.0,
+            |_| 3.0,
+        );
+        c.tick(3.0);
+        let ready = c.ready_allocation();
+        assert_eq!(ready["resnet50"], 2);
+        assert_eq!(ready["resnet101"], 6);
+        assert_eq!(ready["resnet152"], 6);
+        assert_eq!(c.billed_cores(), 14);
+    }
+
+    #[test]
+    fn reapplying_same_target_is_idempotent() {
+        let mut c = Cluster::new(&[48]);
+        c.apply(&target(&[("resnet18", 4)]), 0.0, |_| 5.0);
+        let created = c.apply(&target(&[("resnet18", 4)]), 1.0, |_| 5.0);
+        assert!(created.is_empty(), "should not recreate a converging pod");
+        assert_eq!(c.pods().len(), 1);
+    }
+}

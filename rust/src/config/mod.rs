@@ -1,0 +1,349 @@
+//! Typed configuration for the whole system.
+//!
+//! Everything an experiment or the server needs is in [`Config`]; it loads
+//! from JSON (`--config file.json`) with field-level defaults so a partial
+//! file only overrides what it names.  `Config::default()` reproduces the
+//! paper's main setting: 750 ms P99 SLO, 20-core budget, α=1, β=0.05,
+//! γ=0.001 (normalized), 30 s adaptation interval.
+
+use crate::util::json::{parse, Value};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Objective weights `α·AA − (β·RC + γ·LC)` (paper Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObjectiveWeights {
+    /// Weight on weighted-average accuracy (percentage points).
+    pub alpha: f64,
+    /// Weight on resource cost (CPU cores).
+    pub beta: f64,
+    /// Weight on loading cost (seconds of max readiness time).
+    pub gamma: f64,
+}
+
+impl Default for ObjectiveWeights {
+    fn default() -> Self {
+        Self {
+            alpha: 1.0,
+            beta: 0.05,
+            gamma: 0.001,
+        }
+    }
+}
+
+/// Latency SLO definition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// The latency bound, milliseconds.
+    pub latency_ms: f64,
+    /// Which percentile the bound applies to (0..1), paper uses P99.
+    pub percentile: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Self {
+            latency_ms: 750.0,
+            percentile: 0.99,
+        }
+    }
+}
+
+/// Adapter (control-loop) parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterConfig {
+    /// Seconds between adaptation decisions (paper: 30).
+    pub interval_s: f64,
+    /// Forecaster kind: "lstm" | "moving_average" | "last_max" | "holt".
+    pub forecaster: String,
+    /// History window (seconds) fed to the forecaster.
+    pub history_window_s: usize,
+    /// Multiplicative headroom applied to the predicted rate.
+    pub headroom: f64,
+}
+
+impl Default for AdapterConfig {
+    fn default() -> Self {
+        Self {
+            interval_s: 30.0,
+            forecaster: "lstm".into(),
+            history_window_s: 120,
+            headroom: 1.1,
+        }
+    }
+}
+
+/// Cluster / budget parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Total CPU core budget B.
+    pub budget: usize,
+    /// Node core capacities (the paper's testbed: two 48-core machines).
+    pub node_cores: Vec<usize>,
+    /// Default readiness time (s) when no measurement is available.
+    pub default_readiness_s: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            budget: 20,
+            node_cores: vec![48, 48],
+            default_readiness_s: 10.0,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub weights: ObjectiveWeights,
+    pub slo: Slo,
+    pub adapter: AdapterConfig,
+    pub cluster: ClusterConfig,
+    /// Variants eligible for selection; empty = all in the manifest.
+    pub variants: Vec<String>,
+    /// Random seed for workloads and service-time noise.
+    pub seed: u64,
+}
+
+// ---- JSON (de)serialization -------------------------------------------------
+
+fn f64_or(v: &Value, key: &str, default: f64) -> Result<f64> {
+    match v.get(key) {
+        Some(x) => x.as_f64(),
+        None => Ok(default),
+    }
+}
+
+fn usize_or(v: &Value, key: &str, default: usize) -> Result<usize> {
+    match v.get(key) {
+        Some(x) => x.as_usize(),
+        None => Ok(default),
+    }
+}
+
+fn str_or(v: &Value, key: &str, default: &str) -> Result<String> {
+    match v.get(key) {
+        Some(x) => Ok(x.as_str()?.to_string()),
+        None => Ok(default.to_string()),
+    }
+}
+
+impl Config {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Config::default();
+        let weights = match v.get("weights") {
+            Some(w) => ObjectiveWeights {
+                alpha: f64_or(w, "alpha", d.weights.alpha)?,
+                beta: f64_or(w, "beta", d.weights.beta)?,
+                gamma: f64_or(w, "gamma", d.weights.gamma)?,
+            },
+            None => d.weights,
+        };
+        let slo = match v.get("slo") {
+            Some(s) => Slo {
+                latency_ms: f64_or(s, "latency_ms", d.slo.latency_ms)?,
+                percentile: f64_or(s, "percentile", d.slo.percentile)?,
+            },
+            None => d.slo,
+        };
+        let adapter = match v.get("adapter") {
+            Some(a) => AdapterConfig {
+                interval_s: f64_or(a, "interval_s", d.adapter.interval_s)?,
+                forecaster: str_or(a, "forecaster", &d.adapter.forecaster)?,
+                history_window_s: usize_or(a, "history_window_s", d.adapter.history_window_s)?,
+                headroom: f64_or(a, "headroom", d.adapter.headroom)?,
+            },
+            None => d.adapter,
+        };
+        let cluster = match v.get("cluster") {
+            Some(c) => ClusterConfig {
+                budget: usize_or(c, "budget", d.cluster.budget)?,
+                node_cores: match c.get("node_cores") {
+                    Some(nc) => nc
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    None => d.cluster.node_cores.clone(),
+                },
+                default_readiness_s: f64_or(
+                    c,
+                    "default_readiness_s",
+                    d.cluster.default_readiness_s,
+                )?,
+            },
+            None => d.cluster,
+        };
+        let variants = match v.get("variants") {
+            Some(vs) => vs
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(Self {
+            weights,
+            slo,
+            adapter,
+            cluster,
+            variants,
+            seed: v.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(0),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "weights",
+                Value::obj(vec![
+                    ("alpha", Value::Num(self.weights.alpha)),
+                    ("beta", Value::Num(self.weights.beta)),
+                    ("gamma", Value::Num(self.weights.gamma)),
+                ]),
+            ),
+            (
+                "slo",
+                Value::obj(vec![
+                    ("latency_ms", Value::Num(self.slo.latency_ms)),
+                    ("percentile", Value::Num(self.slo.percentile)),
+                ]),
+            ),
+            (
+                "adapter",
+                Value::obj(vec![
+                    ("interval_s", Value::Num(self.adapter.interval_s)),
+                    ("forecaster", Value::Str(self.adapter.forecaster.clone())),
+                    (
+                        "history_window_s",
+                        Value::Num(self.adapter.history_window_s as f64),
+                    ),
+                    ("headroom", Value::Num(self.adapter.headroom)),
+                ]),
+            ),
+            (
+                "cluster",
+                Value::obj(vec![
+                    ("budget", Value::Num(self.cluster.budget as f64)),
+                    (
+                        "node_cores",
+                        Value::Arr(
+                            self.cluster
+                                .node_cores
+                                .iter()
+                                .map(|&c| Value::Num(c as f64))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "default_readiness_s",
+                        Value::Num(self.cluster.default_readiness_s),
+                    ),
+                ]),
+            ),
+            (
+                "variants",
+                Value::Arr(self.variants.iter().map(|v| Value::Str(v.clone())).collect()),
+            ),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&parse(&text).with_context(|| format!("parsing config {path:?}"))?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing config {path:?}"))
+    }
+
+    /// Validate invariants that would otherwise surface deep in a run.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.slo.latency_ms > 0.0, "SLO latency must be positive");
+        anyhow::ensure!(
+            self.slo.percentile > 0.0 && self.slo.percentile < 1.0,
+            "SLO percentile must be in (0, 1)"
+        );
+        anyhow::ensure!(self.cluster.budget > 0, "budget must be positive");
+        anyhow::ensure!(
+            self.adapter.interval_s > 0.0,
+            "adapter interval must be positive"
+        );
+        anyhow::ensure!(self.adapter.headroom >= 1.0, "headroom must be >= 1");
+        anyhow::ensure!(
+            self.weights.alpha >= 0.0 && self.weights.beta >= 0.0 && self.weights.gamma >= 0.0,
+            "objective weights must be non-negative"
+        );
+        let node_total: usize = self.cluster.node_cores.iter().sum();
+        anyhow::ensure!(
+            self.cluster.budget <= node_total,
+            "budget {} exceeds total node capacity {}",
+            self.cluster.budget,
+            node_total
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_matches_paper() {
+        let c = Config::default();
+        c.validate().unwrap();
+        assert_eq!(c.slo.latency_ms, 750.0);
+        assert_eq!(c.slo.percentile, 0.99);
+        assert_eq!(c.adapter.interval_s, 30.0);
+        assert_eq!(c.weights.beta, 0.05);
+        assert_eq!(c.cluster.budget, 20);
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let mut c = Config::default();
+        c.variants = vec!["resnet18".into(), "resnet50".into()];
+        c.seed = 7;
+        let text = c.to_json().to_string_pretty();
+        let back = Config::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = parse(r#"{"weights":{"alpha":2.0,"beta":0.2}}"#).unwrap();
+        let c = Config::from_json(&v).unwrap();
+        assert_eq!(c.weights.alpha, 2.0);
+        assert_eq!(c.weights.beta, 0.2);
+        assert_eq!(c.weights.gamma, 0.001); // default
+        assert_eq!(c.slo.latency_ms, 750.0);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::testutil::TempDir::new();
+        let path = dir.path().join("config.json");
+        let c = Config::default();
+        c.save(&path).unwrap();
+        assert_eq!(Config::load(&path).unwrap(), c);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = Config::default();
+        c.slo.percentile = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.cluster.budget = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.cluster.budget = 1000;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Dispatcher: weighted round-robin load balancing over model variants.
+//!
+//! The paper's dispatcher "load balances the incoming workload among the
+//! models based on the weighted round-robin algorithm using the models'
+//! quota variable λ_m".  We implement *smooth* WRR (the nginx algorithm):
+//! for integer-ish weights it emits the exact quota proportions with the
+//! smoothest possible interleaving, avoiding the burst-to-one-backend
+//! behaviour of naive WRR — which matters for per-variant queue depth.
+//!
+//! Weight tables are swapped atomically by the adapter; `route()` is the
+//! request hot path (lock per call, O(#backends)).
+
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone)]
+struct Backend {
+    name: String,
+    weight: f64,
+    current: f64,
+}
+
+/// Smooth weighted round-robin router.
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    inner: Arc<Mutex<Vec<Backend>>>,
+}
+
+impl Default for Dispatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Replace the weight table. `weights` are the per-variant quotas λ_m
+    /// (any non-negative scale); zero/negative-weight backends are dropped.
+    /// Existing smoothing state is kept for surviving backends so a quota
+    /// update does not reset the interleaving.
+    pub fn set_weights(&self, weights: &[(String, f64)]) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut next: Vec<Backend> = Vec::with_capacity(weights.len());
+        for (name, w) in weights {
+            if *w <= 0.0 {
+                continue;
+            }
+            let current = inner
+                .iter()
+                .find(|b| &b.name == name)
+                .map(|b| b.current)
+                .unwrap_or(0.0);
+            next.push(Backend {
+                name: name.clone(),
+                weight: *w,
+                current,
+            });
+        }
+        *inner = next;
+    }
+
+    /// Pick the next backend (smooth WRR). None if no backend is active.
+    pub fn route(&self) -> Option<String> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.is_empty() {
+            return None;
+        }
+        let total: f64 = inner.iter().map(|b| b.weight).sum();
+        for b in inner.iter_mut() {
+            b.current += b.weight;
+        }
+        let best = inner
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.current.total_cmp(&b.1.current))
+            .map(|(i, _)| i)
+            .expect("non-empty");
+        inner[best].current -= total;
+        Some(inner[best].name.clone())
+    }
+
+    /// Current active backends and their weights (diagnostics).
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        self.inner
+            .lock().unwrap()
+            .iter()
+            .map(|b| (b.name.clone(), b.weight))
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn distribution(d: &Dispatcher, n: usize) -> HashMap<String, usize> {
+        let mut counts = HashMap::new();
+        for _ in 0..n {
+            *counts.entry(d.route().unwrap()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn respects_quota_proportions() {
+        let d = Dispatcher::new();
+        d.set_weights(&[
+            ("a".into(), 30.0),
+            ("b".into(), 60.0),
+            ("c".into(), 10.0),
+        ]);
+        let counts = distribution(&d, 10_000);
+        assert!((counts["a"] as f64 / 10_000.0 - 0.3).abs() < 0.01);
+        assert!((counts["b"] as f64 / 10_000.0 - 0.6).abs() < 0.01);
+        assert!((counts["c"] as f64 / 10_000.0 - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn smooth_interleaving_not_bursts() {
+        let d = Dispatcher::new();
+        d.set_weights(&[("a".into(), 5.0), ("b".into(), 1.0)]);
+        // in any window of 6, b appears exactly once (smooth WRR property)
+        let seq: Vec<String> = (0..60).map(|_| d.route().unwrap()).collect();
+        for w in seq.chunks(6) {
+            assert_eq!(w.iter().filter(|s| *s == "b").count(), 1, "{seq:?}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_backends_are_dropped() {
+        let d = Dispatcher::new();
+        d.set_weights(&[("a".into(), 0.0), ("b".into(), 2.0)]);
+        let counts = distribution(&d, 100);
+        assert!(!counts.contains_key("a"));
+        assert_eq!(counts["b"], 100);
+    }
+
+    #[test]
+    fn empty_table_routes_none() {
+        let d = Dispatcher::new();
+        assert_eq!(d.route(), None);
+        d.set_weights(&[]);
+        assert_eq!(d.route(), None);
+    }
+
+    #[test]
+    fn reweighting_preserves_smoothing_state() {
+        let d = Dispatcher::new();
+        d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0)]);
+        let _ = d.route();
+        d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0), ("c".into(), 1.0)]);
+        let counts = distribution(&d, 3000);
+        for v in ["a", "b", "c"] {
+            assert!(
+                (counts[v] as f64 / 3000.0 - 1.0 / 3.0).abs() < 0.02,
+                "{counts:?}"
+            );
+        }
+    }
+}

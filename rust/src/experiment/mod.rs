@@ -1,0 +1,295 @@
+//! Experiment harness: run a policy against a trace and produce the rows
+//! the paper's figures plot.
+//!
+//! Each figure bench builds a [`Scenario`], runs it through the simulation
+//! engine (calibrated by real PJRT measurements when artifacts exist, or
+//! the paper-like profile set otherwise) and prints/persists the series.
+
+use crate::baselines::{MsPlusPolicy, StaticPolicy, VpaPolicy};
+use crate::adapter::InfAdapterPolicy;
+use crate::config::Config;
+use crate::forecaster;
+use crate::metrics::{IntervalRow, RunSummary};
+use crate::profiler::ProfileSet;
+use crate::serving::sim::{SimConfig, SimEngine, SimResult};
+use crate::serving::Policy;
+use crate::solver::BranchBoundSolver;
+use crate::workload::RateSeries;
+use anyhow::Result;
+use std::path::Path;
+
+/// Which policy to instantiate for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    InfAdapter,
+    MsPlus,
+    /// VPA pinned to the named variant.
+    Vpa(String),
+    Static(String, usize),
+}
+
+impl PolicyKind {
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::InfAdapter => "InfAdapter".into(),
+            PolicyKind::MsPlus => "MS+".into(),
+            PolicyKind::Vpa(v) => format!("VPA-{}", v.trim_start_matches("resnet")),
+            PolicyKind::Static(v, c) => format!("Static-{v}x{c}"),
+        }
+    }
+}
+
+/// A fully-specified experiment.
+#[derive(Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub trace: RateSeries,
+    pub config: Config,
+    pub profiles: ProfileSet,
+}
+
+impl Scenario {
+    pub fn new(name: &str, trace: RateSeries, config: Config, profiles: ProfileSet) -> Self {
+        Self {
+            name: name.to_string(),
+            trace,
+            config,
+            profiles,
+        }
+    }
+
+    /// Build the policy object for `kind` under this scenario's config.
+    pub fn build_policy(&self, kind: &PolicyKind, artifacts_dir: &Path) -> Box<dyn Policy> {
+        let c = &self.config;
+        match kind {
+            PolicyKind::InfAdapter => Box::new(InfAdapterPolicy::new(
+                self.profiles.clone(),
+                forecaster::build(&c.adapter.forecaster, artifacts_dir, c.adapter.interval_s),
+                // exact and ~700x faster than brute force (see §Perf)
+                Box::new(BranchBoundSolver),
+                c.weights,
+                c.slo.latency_ms / 1000.0,
+                c.cluster.budget,
+                c.adapter.headroom,
+            )),
+            PolicyKind::MsPlus => Box::new(MsPlusPolicy::new(
+                self.profiles.clone(),
+                forecaster::build(&c.adapter.forecaster, artifacts_dir, c.adapter.interval_s),
+                c.weights,
+                c.slo.latency_ms / 1000.0,
+                c.cluster.budget,
+                c.adapter.headroom,
+            )),
+            PolicyKind::Vpa(variant) => Box::new(VpaPolicy::new(
+                variant,
+                self.profiles.clone(),
+                c.cluster.budget,
+            )),
+            PolicyKind::Static(variant, cores) => Box::new(StaticPolicy::new(variant, *cores)),
+        }
+    }
+
+    /// Run one policy through the simulator.
+    pub fn run(&self, kind: &PolicyKind, artifacts_dir: &Path) -> Result<RunOutput> {
+        let mut policy = self.build_policy(kind, artifacts_dir);
+        let sim = SimEngine::new(
+            self.profiles.clone(),
+            SimConfig {
+                slo_s: self.config.slo.latency_ms / 1000.0,
+                adapter_interval_s: self.config.adapter.interval_s,
+                node_cores: self.config.cluster.node_cores.clone(),
+                seed: self.config.seed,
+                bucket_s: 10.0,
+                queue_timeout_s: 10.0,
+            },
+        );
+        let result: SimResult = sim.run(policy.as_mut(), &self.trace);
+        let label = kind.label();
+        let rows = result.metrics.rows(result.duration_s);
+        let summary = result.metrics.summary(&label, result.duration_s);
+        Ok(RunOutput {
+            label,
+            rows,
+            summary,
+        })
+    }
+
+    /// Run a set of policies (one figure's worth of lines).
+    pub fn compare(&self, kinds: &[PolicyKind], artifacts_dir: &Path) -> Result<Vec<RunOutput>> {
+        kinds.iter().map(|k| self.run(k, artifacts_dir)).collect()
+    }
+}
+
+/// One (policy, scenario) result.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    pub label: String,
+    pub rows: Vec<IntervalRow>,
+    pub summary: RunSummary,
+}
+
+impl RunOutput {
+    pub fn to_csv(&self) -> String {
+        crate::metrics::rows_to_csv(&self.rows)
+    }
+}
+
+/// The standard comparison set of the paper's figures 5/7/8/9/10.
+pub fn paper_policy_set() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::InfAdapter,
+        PolicyKind::MsPlus,
+        PolicyKind::Vpa("resnet18".into()),
+        PolicyKind::Vpa("resnet50".into()),
+        PolicyKind::Vpa("resnet152".into()),
+    ]
+}
+
+/// Pretty-print a summary table (the benches' terminal output).
+pub fn print_summaries(title: &str, outs: &[RunOutput]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<14} {:>9} {:>8} {:>10} {:>10} {:>10} {:>9}",
+        "policy", "requests", "SLOviol%", "acc.loss", "cost(avg)", "P99(ms)", "dropped"
+    );
+    for o in outs {
+        let s = &o.summary;
+        println!(
+            "{:<14} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9}",
+            o.label,
+            s.total_requests,
+            s.slo_violation_rate * 100.0,
+            s.avg_accuracy_loss,
+            s.avg_cost_cores,
+            s.p99_latency_s * 1000.0,
+            s.dropped
+        );
+    }
+}
+
+/// Measured sustained throughput of one (variant, cores) pod under the
+/// SLO: binary-search the highest offered steady load whose simulated P99
+/// stays within `slo_s` (the paper's Figure 1 measurement procedure).
+pub fn find_saturation(
+    profiles: &ProfileSet,
+    variant: &str,
+    cores: usize,
+    slo_s: f64,
+    seed: u64,
+) -> f64 {
+    use crate::baselines::StaticPolicy;
+    use crate::workload::Trace;
+    let attempt = |rps: f64| -> bool {
+        if rps <= 0.0 {
+            return true;
+        }
+        let sim = SimEngine::new(
+            profiles.clone(),
+            SimConfig {
+                slo_s,
+                adapter_interval_s: 1e9, // static: never adapt
+                node_cores: vec![cores.max(48)],
+                seed,
+                bucket_s: 10.0,
+                queue_timeout_s: 10.0,
+            },
+        );
+        let mut policy = StaticPolicy::new(variant, cores);
+        let res = sim.run(&mut policy, &Trace::steady(rps, 90));
+        let s = res.metrics.summary("sat", 90.0);
+        s.dropped == 0 && s.p99_latency_s <= slo_s
+    };
+    // Exponential bracket, then bisect to 0.5 rps.
+    let mut lo = 0.0f64;
+    let mut hi = 4.0f64;
+    while attempt(hi) && hi < 100_000.0 {
+        lo = hi;
+        hi *= 2.0;
+    }
+    while hi - lo > 0.5 {
+        let mid = (lo + hi) / 2.0;
+        if attempt(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Load measured profiles if `profiles.json` exists next to the artifacts,
+/// else fall back to the paper-like calibration (CI without artifacts).
+pub fn load_or_default_profiles(artifacts_dir: &Path) -> ProfileSet {
+    let path = artifacts_dir.join("profiles.json");
+    match ProfileSet::load(&path) {
+        Ok(p) => p,
+        Err(_) => ProfileSet::paper_like(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    fn scenario(trace: RateSeries) -> Scenario {
+        Scenario::new(
+            "test",
+            trace,
+            Config::default(),
+            ProfileSet::paper_like(),
+        )
+    }
+
+    #[test]
+    fn infadapter_beats_vpa152_on_violations_under_burst() {
+        let s = scenario(Trace::bursty(40.0, 100.0, 600, 11));
+        let dir = std::path::Path::new("/nonexistent");
+        let inf = s.run(&PolicyKind::InfAdapter, dir).unwrap();
+        let vpa152 = s.run(&PolicyKind::Vpa("resnet152".into()), dir).unwrap();
+        assert!(
+            inf.summary.slo_violation_rate <= vpa152.summary.slo_violation_rate + 0.02,
+            "inf {} vs vpa152 {}",
+            inf.summary.slo_violation_rate,
+            vpa152.summary.slo_violation_rate
+        );
+    }
+
+    #[test]
+    fn infadapter_more_accurate_than_vpa18() {
+        let s = scenario(Trace::non_bursty(20.0, 60.0, 600, 12));
+        let dir = std::path::Path::new("/nonexistent");
+        let inf = s.run(&PolicyKind::InfAdapter, dir).unwrap();
+        let vpa18 = s.run(&PolicyKind::Vpa("resnet18".into()), dir).unwrap();
+        assert!(
+            inf.summary.avg_accuracy_loss < vpa18.summary.avg_accuracy_loss,
+            "inf {} vs vpa18 {}",
+            inf.summary.avg_accuracy_loss,
+            vpa18.summary.avg_accuracy_loss
+        );
+    }
+
+    #[test]
+    fn infadapter_accuracy_at_least_msplus() {
+        let s = scenario(Trace::bursty(40.0, 100.0, 600, 13));
+        let dir = std::path::Path::new("/nonexistent");
+        let inf = s.run(&PolicyKind::InfAdapter, dir).unwrap();
+        let ms = s.run(&PolicyKind::MsPlus, dir).unwrap();
+        assert!(
+            inf.summary.avg_accuracy_loss <= ms.summary.avg_accuracy_loss + 0.3,
+            "inf {} vs ms {}",
+            inf.summary.avg_accuracy_loss,
+            ms.summary.avg_accuracy_loss
+        );
+    }
+
+    #[test]
+    fn rows_cover_the_whole_trace() {
+        let s = scenario(Trace::steady(30.0, 300));
+        let out = s
+            .run(&PolicyKind::Static("resnet18".into(), 4), std::path::Path::new("/nonexistent"))
+            .unwrap();
+        assert_eq!(out.rows.len(), 30); // 300s / 10s buckets
+        assert!(out.rows.iter().all(|r| r.observed_rps > 0.0));
+    }
+}

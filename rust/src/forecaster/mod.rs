@@ -1,0 +1,293 @@
+//! Workload forecasting (paper §5 "Load forecaster").
+//!
+//! The paper predicts the next-minute **max** request rate from the past 10
+//! minutes with a 25-unit LSTM.  [`LstmForecaster`] runs the AOT-compiled
+//! JAX LSTM through PJRT (trained at build time by `python/compile/aot.py`);
+//! the classical forecasters are both fallbacks (no artifacts needed) and
+//! ablation baselines.
+//!
+//! All forecasters share [`Forecaster`]: push observed per-second rates,
+//! ask for the predicted max rate over the next horizon.
+
+use crate::runtime::RuntimeHandle;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::path::Path;
+
+/// Common interface: observe per-second rates, predict next-horizon max.
+pub trait Forecaster: Send {
+    fn name(&self) -> &'static str;
+    /// Record one observed per-second rate (oldest-first call order).
+    fn observe(&mut self, rate: f64);
+    /// Predicted max rate over the next horizon (requests/second).
+    fn predict_max(&mut self) -> f64;
+}
+
+fn push_window(buf: &mut VecDeque<f64>, cap: usize, rate: f64) {
+    if buf.len() == cap {
+        buf.pop_front();
+    }
+    buf.push_back(rate.max(0.0));
+}
+
+// ---------------------------------------------------------------------------
+// LSTM (AOT, PJRT)
+// ---------------------------------------------------------------------------
+
+/// The paper's LSTM forecaster, executed from the AOT HLO artifact.
+pub struct LstmForecaster {
+    runtime: RuntimeHandle,
+    window: usize,
+    rps_scale: f64,
+    history: VecDeque<f64>,
+}
+
+impl LstmForecaster {
+    /// Load `forecaster.hlo.txt` from the artifacts dir.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
+        let meta = manifest
+            .forecaster
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("manifest has no forecaster entry"))?;
+        let runtime = RuntimeHandle::spawn_forecaster(artifacts_dir, meta.window)?;
+        Ok(Self {
+            runtime,
+            window: meta.window,
+            rps_scale: meta.rps_scale,
+            history: VecDeque::with_capacity(meta.window),
+        })
+    }
+}
+
+impl Forecaster for LstmForecaster {
+    fn name(&self) -> &'static str {
+        "lstm"
+    }
+
+    fn observe(&mut self, rate: f64) {
+        push_window(&mut self.history, self.window, rate);
+    }
+
+    fn predict_max(&mut self) -> f64 {
+        // Left-pad with the oldest observed value until the window fills.
+        let pad = self.history.front().copied().unwrap_or(0.0);
+        let mut win = vec![(pad / self.rps_scale) as f32; self.window];
+        let start = self.window - self.history.len();
+        for (i, r) in self.history.iter().enumerate() {
+            win[start + i] = (*r / self.rps_scale) as f32;
+        }
+        // De-normalize; never forecast below the recently observed peak.
+        // The LSTM's value is *anticipating* load (ramps, recurring bursts);
+        // a safe serving system must still cover what it has just seen —
+        // under-prediction digs a queue backlog that never drains.
+        let recent_peak = self
+            .history
+            .iter()
+            .rev()
+            .take(60)
+            .cloned()
+            .fold(0.0, f64::max);
+        match self.runtime.predict(win) {
+            Ok(pred) => (pred as f64 * self.rps_scale).max(0.0).max(recent_peak),
+            Err(_) => recent_peak,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Classical baselines
+// ---------------------------------------------------------------------------
+
+/// Max of the last `window` seconds, times a safety factor.
+pub struct LastMaxForecaster {
+    window: usize,
+    safety: f64,
+    history: VecDeque<f64>,
+}
+
+impl LastMaxForecaster {
+    pub fn new(window: usize, safety: f64) -> Self {
+        Self {
+            window,
+            safety,
+            history: VecDeque::with_capacity(window),
+        }
+    }
+}
+
+impl Forecaster for LastMaxForecaster {
+    fn name(&self) -> &'static str {
+        "last_max"
+    }
+
+    fn observe(&mut self, rate: f64) {
+        push_window(&mut self.history, self.window, rate);
+    }
+
+    fn predict_max(&mut self) -> f64 {
+        self.history.iter().cloned().fold(0.0, f64::max) * self.safety
+    }
+}
+
+/// Exponentially-weighted moving average plus k·stddev headroom.
+pub struct MovingAverageForecaster {
+    alpha: f64,
+    k_sigma: f64,
+    mean: f64,
+    var: f64,
+    initialized: bool,
+}
+
+impl MovingAverageForecaster {
+    pub fn new(alpha: f64, k_sigma: f64) -> Self {
+        Self {
+            alpha,
+            k_sigma,
+            mean: 0.0,
+            var: 0.0,
+            initialized: false,
+        }
+    }
+}
+
+impl Forecaster for MovingAverageForecaster {
+    fn name(&self) -> &'static str {
+        "moving_average"
+    }
+
+    fn observe(&mut self, rate: f64) {
+        if !self.initialized {
+            self.mean = rate;
+            self.var = 0.0;
+            self.initialized = true;
+            return;
+        }
+        let d = rate - self.mean;
+        self.mean += self.alpha * d;
+        self.var = (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+    }
+
+    fn predict_max(&mut self) -> f64 {
+        (self.mean + self.k_sigma * self.var.sqrt()).max(0.0)
+    }
+}
+
+/// Holt's linear trend (double exponential smoothing), projected one
+/// horizon ahead — catches ramps that last-max misses.
+pub struct HoltForecaster {
+    alpha: f64,
+    beta: f64,
+    horizon_s: f64,
+    level: f64,
+    trend: f64,
+    initialized: bool,
+    recent_max: VecDeque<f64>,
+}
+
+impl HoltForecaster {
+    pub fn new(alpha: f64, beta: f64, horizon_s: f64) -> Self {
+        Self {
+            alpha,
+            beta,
+            horizon_s,
+            level: 0.0,
+            trend: 0.0,
+            initialized: false,
+            recent_max: VecDeque::with_capacity(60),
+        }
+    }
+}
+
+impl Forecaster for HoltForecaster {
+    fn name(&self) -> &'static str {
+        "holt"
+    }
+
+    fn observe(&mut self, rate: f64) {
+        push_window(&mut self.recent_max, 60, rate);
+        if !self.initialized {
+            self.level = rate;
+            self.trend = 0.0;
+            self.initialized = true;
+            return;
+        }
+        let prev_level = self.level;
+        self.level = self.alpha * rate + (1.0 - self.alpha) * (self.level + self.trend);
+        self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
+    }
+
+    fn predict_max(&mut self) -> f64 {
+        let projected = self.level + self.trend.max(0.0) * self.horizon_s;
+        let recent = self.recent_max.iter().cloned().fold(0.0, f64::max);
+        projected.max(recent).max(0.0)
+    }
+}
+
+/// Build a forecaster by config name; LSTM falls back to last-max when the
+/// artifact is unavailable (returns the fallback's name via `name()`).
+pub fn build(kind: &str, artifacts_dir: &Path, horizon_s: f64) -> Box<dyn Forecaster> {
+    match kind {
+        "lstm" => match LstmForecaster::load(artifacts_dir) {
+            Ok(f) => Box::new(f),
+            Err(e) => {
+                eprintln!("[forecaster] LSTM unavailable ({e:#}); using last_max");
+                Box::new(LastMaxForecaster::new(120, 1.1))
+            }
+        },
+        "moving_average" => Box::new(MovingAverageForecaster::new(0.1, 3.0)),
+        "holt" => Box::new(HoltForecaster::new(0.3, 0.1, horizon_s)),
+        _ => Box::new(LastMaxForecaster::new(120, 1.1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_max_tracks_peak_with_safety() {
+        let mut f = LastMaxForecaster::new(10, 1.2);
+        for r in [10.0, 50.0, 20.0] {
+            f.observe(r);
+        }
+        assert!((f.predict_max() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn last_max_window_forgets() {
+        let mut f = LastMaxForecaster::new(3, 1.0);
+        f.observe(100.0);
+        for _ in 0..3 {
+            f.observe(10.0);
+        }
+        assert!((f.predict_max() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moving_average_converges_to_steady_rate() {
+        let mut f = MovingAverageForecaster::new(0.2, 0.0);
+        for _ in 0..200 {
+            f.observe(40.0);
+        }
+        assert!((f.predict_max() - 40.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn holt_projects_a_ramp_above_current() {
+        let mut f = HoltForecaster::new(0.5, 0.3, 30.0);
+        for t in 0..60 {
+            f.observe(10.0 + 2.0 * t as f64); // ramp 2 rps/s
+        }
+        let pred = f.predict_max();
+        assert!(pred > 128.0, "pred {pred} should extrapolate past last obs");
+    }
+
+    #[test]
+    fn build_falls_back_without_artifacts() {
+        let dir = crate::util::testutil::TempDir::new();
+        let mut f = build("lstm", dir.path(), 30.0);
+        f.observe(25.0);
+        assert!(f.predict_max() > 0.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! # InfAdapter — SLO-, accuracy-, and cost-aware inference serving
+//!
+//! Reproduction of *"Reconciling High Accuracy, Cost-Efficiency, and Low
+//! Latency of Inference Serving Systems"* (Salmani et al., EuroMLSys '23).
+//!
+//! InfAdapter proactively selects a **set** of model variants together with
+//! their per-variant CPU allocations by solving an ILP every adaptation
+//! interval, maximizing `α·AA − (β·RC + γ·LC)` subject to latency-SLO and
+//! budget constraints, then load-balances requests across the active
+//! variants with weighted round-robin.
+//!
+//! Architecture (see `DESIGN.md`):
+//! * [`runtime`] — PJRT bridge; loads AOT HLO artifacts produced by
+//!   `python/compile/aot.py` (jax + Pallas). Python never runs at serve time.
+//! * [`workload`] — trace generators and arrival processes.
+//! * [`monitoring`] — arrival-rate windows and latency percentile tracking.
+//! * [`profiler`] — variant profiling + linear-regression throughput models.
+//! * [`forecaster`] — AOT LSTM + classical baselines.
+//! * [`solver`] — the ILP: brute-force, branch & bound, greedy.
+//! * [`dispatcher`] — weighted round-robin over per-variant quotas.
+//! * [`cluster`] — simulated Kubernetes substrate (pods, readiness,
+//!   create-before-remove).
+//! * [`serving`] — backend engines: real (PJRT worker pools) and simulated
+//!   (virtual-time M/G/n queues calibrated by real measurements).
+//! * [`adapter`] — the control loop: monitor → forecast → solve → enforce.
+//! * [`baselines`] — VPA+ and Model-Switching+ comparators.
+//! * [`experiment`] — scenario harness regenerating the paper's figures.
+
+pub mod adapter;
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod dispatcher;
+pub mod experiment;
+pub mod forecaster;
+pub mod metrics;
+pub mod monitoring;
+pub mod profiler;
+pub mod runtime;
+pub mod serving;
+pub mod solver;
+pub mod util;
+pub mod workload;
+
+pub use config::Config;

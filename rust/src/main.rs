@@ -1,0 +1,312 @@
+//! InfAdapter CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `info`     — show artifacts/manifest and measured profiles.
+//! * `profile`  — measure variant service/readiness times on the real PJRT
+//!                engine and write `artifacts/profiles.json`.
+//! * `solve`    — one-shot ILP solve for a given λ / budget / β.
+//! * `simulate` — run a policy vs a trace on the virtual-time engine.
+//! * `serve`    — live serving of a trace on the real PJRT engine.
+//!
+//! Flag parsing is hand-rolled (`--flag value` / `--flag=value`): the
+//! offline build has no clap.
+
+use anyhow::{bail, Context, Result};
+use infadapter::config::Config;
+use infadapter::experiment::{self, PolicyKind, Scenario};
+use infadapter::profiler::{self, ProfileSet};
+use infadapter::runtime::Manifest;
+use infadapter::serving::real::{RealConfig, RealEngine};
+use infadapter::solver::{BranchBoundSolver, BruteForceSolver, GreedySolver, Problem, Solver};
+use infadapter::util::json::Value;
+use infadapter::workload::{RateSeries, Trace};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+infadapter — SLO-, accuracy- and cost-aware inference serving (EuroMLSys'23 reproduction)
+
+USAGE: infadapter [--artifacts DIR] [--config FILE.json] <command> [flags]
+
+COMMANDS:
+  info                               show manifest + measured profiles
+  profile  [--iters N] [--variants a,b]
+                                     measure real service/readiness times
+  solve    --lambda RPS [--budget B] [--beta X] [--solver brute|bnb|greedy]
+                                     one-shot ILP solve
+  simulate [--trace T] [--policy P] [--seconds N] [--base RPS] [--out CSV]
+                                     virtual-time experiment
+  serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
+                                     live serving on the real PJRT engine
+
+  traces:   bursty | non-bursty | twitter | steady:<rps> | csv:<path>
+  policies: infadapter | ms+ | vpa:<variant> | static:<variant>:<cores>
+";
+
+/// `--flag value` / `--flag=value` parser.
+struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .with_context(|| format!("--{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self { flags, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn parse_trace(spec: &str, base: f64, seconds: usize, seed: u64) -> Result<RateSeries> {
+    Ok(match spec {
+        "bursty" => Trace::bursty(base, base * 2.5, seconds, seed),
+        "non-bursty" => Trace::non_bursty(base * 0.5, base * 1.5, seconds, seed),
+        "twitter" => Trace::twitter_like(base, seconds, seed),
+        other => {
+            if let Some(rps) = other.strip_prefix("steady:") {
+                Trace::steady(rps.parse()?, seconds)
+            } else if let Some(path) = other.strip_prefix("csv:") {
+                Trace::from_csv(std::path::Path::new(path))?
+            } else {
+                bail!("unknown trace spec {other} (see `infadapter` usage)")
+            }
+        }
+    })
+}
+
+fn parse_policy(spec: &str) -> Result<PolicyKind> {
+    Ok(match spec {
+        "infadapter" => PolicyKind::InfAdapter,
+        "ms+" | "ms" => PolicyKind::MsPlus,
+        other => {
+            if let Some(v) = other.strip_prefix("vpa:") {
+                PolicyKind::Vpa(v.to_string())
+            } else if let Some(rest) = other.strip_prefix("static:") {
+                let (v, c) = rest
+                    .split_once(':')
+                    .context("static:<variant>:<cores>")?;
+                PolicyKind::Static(v.to_string(), c.parse()?)
+            } else {
+                bail!("unknown policy {other} (see `infadapter` usage)")
+            }
+        }
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv)?;
+    let command = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("missing command")?;
+
+    let artifacts = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(infadapter::runtime::artifacts_dir);
+    let config = match args.get("config") {
+        Some(p) => Config::load(std::path::Path::new(p))?,
+        None => Config::default(),
+    };
+    config.validate()?;
+
+    match command {
+        "info" => {
+            let manifest = Manifest::load(&artifacts)?;
+            println!("artifacts: {}", artifacts.display());
+            println!(
+                "input: {}x{}x3, {} classes",
+                manifest.input_hw, manifest.input_hw, manifest.num_classes
+            );
+            println!(
+                "{:<12} {:>8} {:>12} {:>12} {:>10}",
+                "variant", "top-1", "params", "flops", "batches"
+            );
+            for v in &manifest.variants {
+                println!(
+                    "{:<12} {:>8.2} {:>12} {:>12} {:>10?}",
+                    v.name,
+                    v.accuracy,
+                    v.params,
+                    v.flops,
+                    v.batch_sizes()
+                );
+            }
+            if let Some(f) = &manifest.forecaster {
+                println!(
+                    "forecaster: LSTM({}) window={}s horizon={}s train-loss={:.5}",
+                    f.units, f.window, f.horizon, f.final_train_loss
+                );
+            }
+            if let Ok(p) = ProfileSet::load(&artifacts.join("profiles.json")) {
+                println!("\nmeasured profiles:");
+                for v in &p.profiles {
+                    println!(
+                        "  {:<12} service={:.1}ms readiness={:.2}s th(8)={:.1}rps r2={:.4}",
+                        v.name,
+                        v.service_time_s * 1000.0,
+                        v.readiness_s,
+                        v.throughput(8),
+                        v.throughput_model.r_squared
+                    );
+                }
+            }
+        }
+        "profile" => {
+            let manifest = Manifest::load(&artifacts)?;
+            let iters = args.get_usize("iters", 20)?;
+            let filter: Option<Vec<String>> = args
+                .get("variants")
+                .map(|v| v.split(',').map(str::to_string).collect());
+            let set = profiler::measure_real(&artifacts, &manifest, iters, filter.as_deref())?;
+            let out = artifacts.join("profiles.json");
+            set.save(&out)?;
+            println!("wrote {}", out.display());
+            for p in &set.profiles {
+                println!(
+                    "  {:<12} service={:.1}ms readiness={:.2}s",
+                    p.name,
+                    p.service_time_s * 1000.0,
+                    p.readiness_s
+                );
+            }
+        }
+        "solve" => {
+            let lambda = args.get_f64("lambda", f64::NAN)?;
+            anyhow::ensure!(lambda.is_finite(), "--lambda is required");
+            let budget = args.get_usize("budget", config.cluster.budget)?;
+            let beta = args.get_f64("beta", config.weights.beta)?;
+            let profiles = experiment::load_or_default_profiles(&artifacts);
+            let mut weights = config.weights;
+            weights.beta = beta;
+            let problem = Problem::from_profiles(
+                &profiles,
+                lambda,
+                config.slo.latency_ms / 1000.0,
+                budget,
+                weights,
+                &BTreeMap::new(),
+            );
+            let s: Box<dyn Solver> = match args.get("solver").unwrap_or("brute") {
+                "bnb" => Box::new(BranchBoundSolver),
+                "greedy" => Box::new(GreedySolver),
+                _ => Box::new(BruteForceSolver),
+            };
+            let t0 = std::time::Instant::now();
+            let alloc = s.solve(&problem).context("no allocation")?;
+            println!(
+                "solved in {:?} (search space {})",
+                t0.elapsed(),
+                BruteForceSolver::search_space(&problem)
+            );
+            println!(
+                "objective={:.3} AA={:.3} RC={} LC={:.1}s feasible={}",
+                alloc.objective,
+                alloc.average_accuracy,
+                alloc.resource_cost,
+                alloc.loading_cost,
+                alloc.feasible
+            );
+            for (v, (c, q)) in &alloc.assignments {
+                println!("  {v:<12} cores={c:<3} quota={q:.1} rps");
+            }
+        }
+        "simulate" => {
+            let seconds = args.get_usize("seconds", 1200)?;
+            let base = args.get_f64("base", 40.0)?;
+            let series = parse_trace(args.get("trace").unwrap_or("bursty"), base, seconds, config.seed)?;
+            let kind = parse_policy(args.get("policy").unwrap_or("infadapter"))?;
+            let profiles = experiment::load_or_default_profiles(&artifacts);
+            let scenario = Scenario::new("cli", series, config.clone(), profiles);
+            let result = scenario.run(&kind, &artifacts)?;
+            experiment::print_summaries("simulate", std::slice::from_ref(&result));
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, result.to_csv())?;
+                println!("rows -> {path}");
+            }
+        }
+        "serve" => {
+            let seconds = args.get_usize("seconds", 120)?;
+            let base = args.get_f64("base", 4.0)?;
+            let interval = args.get_f64("interval", 10.0)?;
+            let series = parse_trace(args.get("trace").unwrap_or("bursty"), base, seconds, config.seed)?;
+            let kind = parse_policy(args.get("policy").unwrap_or("infadapter"))?;
+            let profiles = experiment::load_or_default_profiles(&artifacts);
+            let scenario = Scenario::new("serve", series.clone(), config.clone(), profiles);
+            let mut policy_obj = scenario.build_policy(&kind, &artifacts);
+            let engine = RealEngine::new(
+                artifacts.clone(),
+                RealConfig {
+                    slo_s: config.slo.latency_ms / 1000.0,
+                    adapter_interval_s: interval,
+                    ..Default::default()
+                },
+            )?;
+            let metrics = engine.serve(policy_obj.as_mut(), &series)?;
+            let summary = metrics.summary(&kind.label(), seconds as f64);
+            println!("{}", summary_json(&summary).to_string_pretty());
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other}");
+        }
+    }
+    Ok(())
+}
+
+fn summary_json(s: &infadapter::metrics::RunSummary) -> Value {
+    Value::obj(vec![
+        ("policy", Value::Str(s.policy.clone())),
+        ("total_requests", Value::Num(s.total_requests as f64)),
+        ("dropped", Value::Num(s.dropped as f64)),
+        ("slo_violation_rate", Value::Num(s.slo_violation_rate)),
+        ("avg_accuracy", Value::Num(s.avg_accuracy)),
+        ("avg_accuracy_loss", Value::Num(s.avg_accuracy_loss)),
+        ("avg_cost_cores", Value::Num(s.avg_cost_cores)),
+        ("p99_latency_s", Value::Num(s.p99_latency_s)),
+        ("p50_latency_s", Value::Num(s.p50_latency_s)),
+        ("mean_latency_s", Value::Num(s.mean_latency_s)),
+    ])
+}

@@ -1,0 +1,362 @@
+//! Experiment metrics: per-interval timeseries and whole-run summaries.
+//!
+//! These are the quantities the paper's figures plot: accuracy loss (top
+//! accuracy minus served weighted-average accuracy), cost (billed CPU
+//! cores), and P99 latency, plus SLO-violation rates for the headline
+//! claims ("reduces SLO violations up to 65%, cost up to 33%").
+
+use std::collections::BTreeMap;
+
+/// One completed request.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub arrival_s: f64,
+    /// End-to-end latency in seconds. `f64::INFINITY` = dropped.
+    pub latency_s: f64,
+    /// Accuracy metadata of the variant that served it.
+    pub accuracy: f64,
+}
+
+impl RequestRecord {
+    pub fn dropped(&self) -> bool {
+        !self.latency_s.is_finite()
+    }
+}
+
+/// One row of the experiment timeseries (fixed-width buckets).
+#[derive(Debug, Clone)]
+pub struct IntervalRow {
+    pub t_start: f64,
+    /// Observed arrival rate (completed + dropped), rps.
+    pub observed_rps: f64,
+    /// λ̂ the policy predicted for this interval (0 before first decision).
+    pub predicted_rps: f64,
+    /// Billed CPU cores (time-averaged over the bucket).
+    pub cost_cores: f64,
+    /// Served weighted-average accuracy.
+    pub avg_accuracy: f64,
+    /// Accuracy loss vs the most accurate variant.
+    pub accuracy_loss: f64,
+    pub p99_latency_s: f64,
+    pub mean_latency_s: f64,
+    /// Fraction of requests in this bucket above the SLO (dropped count).
+    pub slo_violation_rate: f64,
+    pub dropped: u64,
+    pub completed: u64,
+}
+
+/// Whole-run summary (one figure box/bar).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub policy: String,
+    pub total_requests: u64,
+    pub dropped: u64,
+    /// Overall SLO violation fraction (dropped requests count as violations).
+    pub slo_violation_rate: f64,
+    /// Request-weighted average accuracy over the run.
+    pub avg_accuracy: f64,
+    pub avg_accuracy_loss: f64,
+    /// Time-averaged billed cores.
+    pub avg_cost_cores: f64,
+    /// Core-seconds integrated over the run.
+    pub core_seconds: f64,
+    pub p99_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub mean_latency_s: f64,
+}
+
+/// Accumulates request records + cost samples into rows and a summary.
+#[derive(Debug, Clone)]
+pub struct MetricsCollector {
+    pub bucket_s: f64,
+    pub slo_s: f64,
+    /// Accuracy of the most accurate variant (loss reference).
+    pub top_accuracy: f64,
+    records: Vec<RequestRecord>,
+    /// (time, billed_cores) samples (stepwise-constant between samples).
+    cost_samples: Vec<(f64, usize)>,
+    /// (time, predicted λ) from policy decisions.
+    predictions: Vec<(f64, f64)>,
+}
+
+impl MetricsCollector {
+    pub fn new(bucket_s: f64, slo_s: f64, top_accuracy: f64) -> Self {
+        Self {
+            bucket_s,
+            slo_s,
+            top_accuracy,
+            records: Vec::new(),
+            cost_samples: Vec::new(),
+            predictions: Vec::new(),
+        }
+    }
+
+    pub fn record_request(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn record_cost(&mut self, t: f64, billed_cores: usize) {
+        self.cost_samples.push((t, billed_cores));
+    }
+
+    pub fn record_prediction(&mut self, t: f64, lambda_hat: f64) {
+        self.predictions.push((t, lambda_hat));
+    }
+
+    fn cost_at(&self, t: f64) -> f64 {
+        match self.cost_samples.iter().rev().find(|&&(ts, _)| ts <= t) {
+            Some(&(_, c)) => c as f64,
+            None => 0.0,
+        }
+    }
+
+    fn prediction_at(&self, t: f64) -> f64 {
+        match self.predictions.iter().rev().find(|&&(ts, _)| ts <= t) {
+            Some(&(_, p)) => p,
+            None => 0.0,
+        }
+    }
+
+    /// Build the fixed-width timeseries over `[0, duration_s)`.
+    pub fn rows(&self, duration_s: f64) -> Vec<IntervalRow> {
+        let n_buckets = (duration_s / self.bucket_s).ceil() as usize;
+        let mut buckets: Vec<Vec<&RequestRecord>> = vec![Vec::new(); n_buckets];
+        for r in &self.records {
+            let b = (r.arrival_s / self.bucket_s) as usize;
+            if b < n_buckets {
+                buckets[b].push(r);
+            }
+        }
+        buckets
+            .iter()
+            .enumerate()
+            .map(|(b, reqs)| {
+                let t_start = b as f64 * self.bucket_s;
+                let completed: Vec<&&RequestRecord> =
+                    reqs.iter().filter(|r| !r.dropped()).collect();
+                let dropped = (reqs.len() - completed.len()) as u64;
+                let mut lats: Vec<f64> = completed.iter().map(|r| r.latency_s).collect();
+                lats.sort_by(f64::total_cmp);
+                let q = |p: f64| -> f64 {
+                    if lats.is_empty() {
+                        0.0
+                    } else {
+                        let rank = ((p * lats.len() as f64).ceil() as usize).clamp(1, lats.len());
+                        lats[rank - 1]
+                    }
+                };
+                let avg_acc = if completed.is_empty() {
+                    self.top_accuracy
+                } else {
+                    completed.iter().map(|r| r.accuracy).sum::<f64>() / completed.len() as f64
+                };
+                let violations = reqs
+                    .iter()
+                    .filter(|r| r.dropped() || r.latency_s > self.slo_s)
+                    .count();
+                // time-average cost via sub-sampling the step function
+                let cost = (0..10)
+                    .map(|i| self.cost_at(t_start + (i as f64 + 0.5) / 10.0 * self.bucket_s))
+                    .sum::<f64>()
+                    / 10.0;
+                IntervalRow {
+                    t_start,
+                    observed_rps: reqs.len() as f64 / self.bucket_s,
+                    predicted_rps: self.prediction_at(t_start),
+                    cost_cores: cost,
+                    avg_accuracy: avg_acc,
+                    accuracy_loss: self.top_accuracy - avg_acc,
+                    p99_latency_s: q(0.99),
+                    mean_latency_s: if lats.is_empty() {
+                        0.0
+                    } else {
+                        lats.iter().sum::<f64>() / lats.len() as f64
+                    },
+                    slo_violation_rate: if reqs.is_empty() {
+                        0.0
+                    } else {
+                        violations as f64 / reqs.len() as f64
+                    },
+                    dropped,
+                    completed: completed.len() as u64,
+                }
+            })
+            .collect()
+    }
+
+    /// Whole-run summary.
+    pub fn summary(&self, policy: &str, duration_s: f64) -> RunSummary {
+        let total = self.records.len() as u64;
+        let completed: Vec<&RequestRecord> =
+            self.records.iter().filter(|r| !r.dropped()).collect();
+        let dropped = total - completed.len() as u64;
+        let mut lats: Vec<f64> = completed.iter().map(|r| r.latency_s).collect();
+        lats.sort_by(f64::total_cmp);
+        let q = |p: f64| -> f64 {
+            if lats.is_empty() {
+                0.0
+            } else {
+                let rank = ((p * lats.len() as f64).ceil() as usize).clamp(1, lats.len());
+                lats[rank - 1]
+            }
+        };
+        let violations = self
+            .records
+            .iter()
+            .filter(|r| r.dropped() || r.latency_s > self.slo_s)
+            .count();
+        let avg_acc = if completed.is_empty() {
+            0.0
+        } else {
+            completed.iter().map(|r| r.accuracy).sum::<f64>() / completed.len() as f64
+        };
+        // integrate the cost step function
+        let mut core_seconds = 0.0;
+        for w in self.cost_samples.windows(2) {
+            core_seconds += w[0].1 as f64 * (w[1].0 - w[0].0);
+        }
+        if let Some(&(t_last, c_last)) = self.cost_samples.last() {
+            core_seconds += c_last as f64 * (duration_s - t_last).max(0.0);
+        }
+        RunSummary {
+            policy: policy.to_string(),
+            total_requests: total,
+            dropped,
+            slo_violation_rate: if total == 0 {
+                0.0
+            } else {
+                violations as f64 / total as f64
+            },
+            avg_accuracy: avg_acc,
+            avg_accuracy_loss: self.top_accuracy - avg_acc,
+            avg_cost_cores: core_seconds / duration_s.max(1e-9),
+            core_seconds,
+            p99_latency_s: q(0.99),
+            p50_latency_s: q(0.50),
+            mean_latency_s: if lats.is_empty() {
+                0.0
+            } else {
+                lats.iter().sum::<f64>() / lats.len() as f64
+            },
+        }
+    }
+
+    pub fn requests(&self) -> &[RequestRecord] {
+        &self.records
+    }
+}
+
+/// Write rows as CSV (figure-regeneration output format).
+pub fn rows_to_csv(rows: &[IntervalRow]) -> String {
+    let mut out = String::from(
+        "t,observed_rps,predicted_rps,cost_cores,avg_accuracy,accuracy_loss,\
+         p99_latency_s,mean_latency_s,slo_violation_rate,dropped,completed\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:.0},{:.2},{:.2},{:.2},{:.3},{:.3},{:.4},{:.4},{:.4},{},{}\n",
+            r.t_start,
+            r.observed_rps,
+            r.predicted_rps,
+            r.cost_cores,
+            r.avg_accuracy,
+            r.accuracy_loss,
+            r.p99_latency_s,
+            r.mean_latency_s,
+            r.slo_violation_rate,
+            r.dropped,
+            r.completed
+        ));
+    }
+    out
+}
+
+/// Per-variant served-request share (experiment diagnostics).
+pub fn served_share(records: &[RequestRecord]) -> BTreeMap<String, f64> {
+    // accuracy identifies the variant uniquely in our family
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    for r in records.iter().filter(|r| !r.dropped()) {
+        *counts.entry(format!("{:.2}", r.accuracy)).or_insert(0) += 1;
+    }
+    let total: u64 = counts.values().sum();
+    counts
+        .into_iter()
+        .map(|(k, v)| (k, v as f64 / total.max(1) as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collector() -> MetricsCollector {
+        MetricsCollector::new(10.0, 0.75, 78.31)
+    }
+
+    #[test]
+    fn summary_counts_violations_and_drops() {
+        let mut m = collector();
+        for i in 0..100 {
+            m.record_request(RequestRecord {
+                arrival_s: i as f64 * 0.1,
+                latency_s: if i < 90 { 0.1 } else { 1.0 },
+                accuracy: 76.13,
+            });
+        }
+        m.record_request(RequestRecord {
+            arrival_s: 5.0,
+            latency_s: f64::INFINITY,
+            accuracy: 76.13,
+        });
+        let s = m.summary("test", 10.0);
+        assert_eq!(s.total_requests, 101);
+        assert_eq!(s.dropped, 1);
+        assert!((s.slo_violation_rate - 11.0 / 101.0).abs() < 1e-9);
+        assert!((s.avg_accuracy - 76.13).abs() < 1e-9);
+        assert!((s.avg_accuracy_loss - 2.18).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_integration_is_stepwise() {
+        let mut m = collector();
+        m.record_cost(0.0, 10);
+        m.record_cost(50.0, 20);
+        let s = m.summary("test", 100.0);
+        assert!((s.core_seconds - (10.0 * 50.0 + 20.0 * 50.0)).abs() < 1e-9);
+        assert!((s.avg_cost_cores - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rows_bucket_by_arrival_time() {
+        let mut m = collector();
+        for t in [1.0, 2.0, 11.0, 12.0, 13.0] {
+            m.record_request(RequestRecord {
+                arrival_s: t,
+                latency_s: 0.2,
+                accuracy: 69.76,
+            });
+        }
+        m.record_cost(0.0, 8);
+        let rows = m.rows(20.0);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].completed, 2);
+        assert_eq!(rows[1].completed, 3);
+        assert!((rows[0].cost_cores - 8.0).abs() < 1e-9);
+        assert!((rows[0].accuracy_loss - (78.31 - 69.76)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p99_matches_exact_rank() {
+        let mut m = collector();
+        for i in 1..=200 {
+            m.record_request(RequestRecord {
+                arrival_s: 0.5,
+                latency_s: i as f64 / 1000.0,
+                accuracy: 78.31,
+            });
+        }
+        let s = m.summary("t", 10.0);
+        assert!((s.p99_latency_s - 0.198).abs() < 1e-9);
+        assert!((s.p50_latency_s - 0.100).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Monitoring substrate: arrival-rate windows and latency percentiles.
+//!
+//! The paper's monitoring daemon "keeps statistics about the distribution of
+//! request arrivals" and feeds per-second rates to the forecaster.  Here:
+//! * [`RateWindow`] — ring buffer of per-second arrival counts,
+//! * [`LatencyReservoir`] — exact windowed latencies (experiment reporting),
+//! * [`P2Quantile`] — O(1)-per-sample streaming percentile estimator (the
+//!   hot-path P99 used by the live dashboards; pinned against the exact
+//!   reservoir in tests).
+
+mod p2;
+mod rate_window;
+mod reservoir;
+
+pub use p2::P2Quantile;
+pub use rate_window::RateWindow;
+pub use reservoir::LatencyReservoir;

@@ -1,0 +1,179 @@
+//! P² (Jain & Chlamtac 1985) streaming quantile estimator.
+//!
+//! O(1) memory and O(1) per-sample update: five markers track the target
+//! quantile without storing the sample stream.  This is the serving hot
+//! path's P99; its accuracy is pinned against the exact reservoir in tests.
+
+/// Streaming estimator for a single quantile `q`.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    q: f64,
+    /// Marker heights (estimates of the quantile ladder).
+    heights: [f64; 5],
+    /// Marker positions (1-based ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Desired position increments per observation.
+    incr: [f64; 5],
+    count: usize,
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q), "quantile must be in [0,1]");
+        Self {
+            q,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            incr: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if self.count < 5 {
+            self.heights[self.count] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.heights.sort_by(f64::total_cmp);
+            }
+            return;
+        }
+        self.count += 1;
+
+        // Find the cell containing x; the extremes update the end markers.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= self.heights[i] && x < self.heights[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+
+        for p in self.pos.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        for (d, inc) in self.desired.iter_mut().zip(self.incr.iter()) {
+            *d += inc;
+        }
+
+        // Adjust interior markers via piecewise-parabolic interpolation.
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            let right_gap = self.pos[i + 1] - self.pos[i];
+            let left_gap = self.pos[i - 1] - self.pos[i];
+            if (d >= 1.0 && right_gap > 1.0) || (d <= -1.0 && left_gap < -1.0) {
+                let sign = d.signum();
+                let parabolic = self.parabolic(i, sign);
+                let new_h = if self.heights[i - 1] < parabolic && parabolic < self.heights[i + 1] {
+                    parabolic
+                } else {
+                    self.linear(i, sign)
+                };
+                self.heights[i] = new_h;
+                self.pos[i] += sign;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, sign: f64) -> f64 {
+        let (hm, h, hp) = (self.heights[i - 1], self.heights[i], self.heights[i + 1]);
+        let (pm, p, pp) = (self.pos[i - 1], self.pos[i], self.pos[i + 1]);
+        h + sign / (pp - pm)
+            * ((p - pm + sign) * (hp - h) / (pp - p) + (pp - p - sign) * (h - hm) / (p - pm))
+    }
+
+    fn linear(&self, i: usize, sign: f64) -> f64 {
+        let j = if sign > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + sign * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate; exact while fewer than 5 samples have arrived.
+    pub fn value(&self) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        if self.count < 5 {
+            let mut v = self.heights[..self.count].to_vec();
+            v.sort_by(f64::total_cmp);
+            let rank = ((self.q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+            return Some(v[rank - 1]);
+        }
+        Some(self.heights[2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tracks_uniform_p99_within_tolerance() {
+        let mut est = P2Quantile::new(0.99);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..50_000 {
+            est.record(rng.f64());
+        }
+        let v = est.value().unwrap();
+        assert!((v - 0.99).abs() < 0.01, "estimate {v}");
+    }
+
+    #[test]
+    fn tracks_exponential_p50() {
+        let mut est = P2Quantile::new(0.5);
+        let mut rng = Rng::seed_from_u64(2);
+        for _ in 0..50_000 {
+            est.record(rng.exp1()); // Exp(1), median ln 2
+        }
+        let v = est.value().unwrap();
+        assert!((v - std::f64::consts::LN_2).abs() < 0.05, "estimate {v}");
+    }
+
+    #[test]
+    fn agrees_with_exact_reservoir_on_latency_like_data() {
+        use crate::monitoring::LatencyReservoir;
+        let mut est = P2Quantile::new(0.99);
+        let mut exact = LatencyReservoir::new(100_000);
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..30_000 {
+            // lognormal-ish service latencies around 100ms
+            let lat = 100.0 * (0.3 * rng.normal()).exp();
+            est.record(lat);
+            exact.record(lat);
+        }
+        let approx = est.value().unwrap();
+        let truth = exact.quantile(0.99).unwrap();
+        assert!(
+            (approx - truth).abs() / truth < 0.08,
+            "approx {approx} vs exact {truth}"
+        );
+    }
+
+    #[test]
+    fn small_counts_are_exact() {
+        let mut est = P2Quantile::new(0.99);
+        assert_eq!(est.value(), None);
+        est.record(5.0);
+        assert_eq!(est.value(), Some(5.0));
+        est.record(1.0);
+        est.record(9.0);
+        assert_eq!(est.value(), Some(9.0));
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-second arrival counting over a sliding window.
+
+/// Ring buffer of per-second request counts.
+///
+/// `record(t)` increments the bucket for virtual/wall time `t` (seconds);
+/// `history()` returns the last `window` complete seconds, oldest first —
+/// exactly the input the forecaster consumes.
+#[derive(Debug, Clone)]
+pub struct RateWindow {
+    buckets: Vec<f64>,
+    window: usize,
+    /// Second index of the newest bucket written.
+    head_sec: i64,
+    started: bool,
+}
+
+impl RateWindow {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0, "window must be positive");
+        Self {
+            buckets: vec![0.0; window],
+            window,
+            head_sec: 0,
+            started: false,
+        }
+    }
+
+    fn advance_to(&mut self, sec: i64) {
+        if !self.started {
+            self.head_sec = sec;
+            self.started = true;
+            return;
+        }
+        while self.head_sec < sec {
+            self.head_sec += 1;
+            let idx = (self.head_sec.rem_euclid(self.window as i64)) as usize;
+            self.buckets[idx] = 0.0;
+        }
+    }
+
+    /// Record one arrival at time `t` (seconds). Out-of-order arrivals that
+    /// fall inside the window are credited to their own bucket; older ones
+    /// are dropped.
+    pub fn record(&mut self, t: f64) {
+        let sec = t.floor() as i64;
+        if self.started && sec < self.head_sec - self.window as i64 + 1 {
+            return; // too old for the window
+        }
+        if !self.started || sec > self.head_sec {
+            self.advance_to(sec);
+        }
+        let idx = (sec.rem_euclid(self.window as i64)) as usize;
+        self.buckets[idx] += 1.0;
+    }
+
+    /// Advance the clock without recording (quiet seconds must read 0).
+    pub fn tick(&mut self, t: f64) {
+        self.advance_to(t.floor() as i64);
+    }
+
+    /// Last `n` per-second rates ending at the current head, oldest first.
+    /// Seconds before the first record read as 0.
+    pub fn history(&self, n: usize) -> Vec<f64> {
+        let n = n.min(self.window);
+        let mut out = Vec::with_capacity(n);
+        for back in (0..n).rev() {
+            let sec = self.head_sec - back as i64;
+            let idx = (sec.rem_euclid(self.window as i64)) as usize;
+            if sec > self.head_sec - self.window as i64 {
+                out.push(self.buckets[idx]);
+            } else {
+                out.push(0.0);
+            }
+        }
+        out
+    }
+
+    /// Mean rate over the last `n` seconds.
+    pub fn rate(&self, n: usize) -> f64 {
+        let h = self.history(n);
+        if h.is_empty() {
+            0.0
+        } else {
+            h.iter().sum::<f64>() / h.len() as f64
+        }
+    }
+
+    /// Max per-second rate over the last `n` seconds.
+    pub fn peak(&self, n: usize) -> f64 {
+        self.history(n).into_iter().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_per_second() {
+        let mut w = RateWindow::new(10);
+        for i in 0..5 {
+            w.record(0.1 * i as f64); // 5 arrivals in second 0
+        }
+        w.record(1.5);
+        w.record(1.9);
+        let h = w.history(2);
+        assert_eq!(h, vec![5.0, 2.0]);
+    }
+
+    #[test]
+    fn quiet_seconds_read_zero() {
+        let mut w = RateWindow::new(10);
+        w.record(0.5);
+        w.tick(4.0);
+        assert_eq!(w.history(5), vec![1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!((w.rate(5) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_wraps_and_evicts() {
+        let mut w = RateWindow::new(3);
+        for t in 0..6 {
+            w.record(t as f64);
+            w.record(t as f64 + 0.5);
+        }
+        // only the last 3 seconds survive
+        assert_eq!(w.history(3), vec![2.0, 2.0, 2.0]);
+        assert_eq!(w.history(5).len(), 3);
+    }
+
+    #[test]
+    fn too_old_records_are_dropped() {
+        let mut w = RateWindow::new(3);
+        w.tick(10.0);
+        w.record(2.0); // far in the past
+        assert_eq!(w.history(3), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn peak_reports_max() {
+        let mut w = RateWindow::new(10);
+        for _ in 0..7 {
+            w.record(1.2);
+        }
+        w.record(2.1);
+        assert_eq!(w.peak(5), 7.0);
+    }
+}

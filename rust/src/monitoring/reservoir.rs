@@ -1,0 +1,121 @@
+//! Exact windowed latency reservoir (experiment-grade percentiles).
+
+/// Stores every latency sample in a bounded FIFO window and computes exact
+/// percentiles over it.  Used for experiment reporting; the serving hot
+/// path uses [`super::P2Quantile`] instead.
+#[derive(Debug, Clone)]
+pub struct LatencyReservoir {
+    samples: std::collections::VecDeque<f64>,
+    capacity: usize,
+    total_count: u64,
+}
+
+impl LatencyReservoir {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            samples: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+            total_count: 0,
+        }
+    }
+
+    pub fn record(&mut self, latency: f64) {
+        if self.samples.len() == self.capacity {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(latency);
+        self.total_count += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.total_count
+    }
+
+    /// Exact percentile (nearest-rank on the sorted window), `q` in (0,1].
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = self.samples.iter().cloned().collect();
+        v.sort_by(f64::total_cmp);
+        let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        Some(v[rank - 1])
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+
+    /// Fraction of windowed samples above `threshold`.
+    pub fn violation_rate(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().filter(|&&l| l > threshold).count() as f64
+            / self.samples.len() as f64
+    }
+
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_percentiles() {
+        let mut r = LatencyReservoir::new(1000);
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.quantile(0.5), Some(50.0));
+        assert_eq!(r.quantile(0.99), Some(99.0));
+        assert_eq!(r.quantile(1.0), Some(100.0));
+        assert_eq!(r.mean(), Some(50.5));
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut r = LatencyReservoir::new(10);
+        for i in 0..100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.quantile(1.0), Some(99.0));
+        assert_eq!(r.quantile(0.1), Some(90.0));
+        assert_eq!(r.total_count(), 100);
+    }
+
+    #[test]
+    fn violation_rate_counts_exceedances() {
+        let mut r = LatencyReservoir::new(100);
+        for i in 1..=10 {
+            r.record(i as f64 * 100.0); // 100..1000
+        }
+        assert!((r.violation_rate(750.0) - 0.3).abs() < 1e-12);
+        assert_eq!(r.violation_rate(2000.0), 0.0);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        let r = LatencyReservoir::new(10);
+        assert_eq!(r.quantile(0.99), None);
+        assert_eq!(r.mean(), None);
+        assert_eq!(r.violation_rate(1.0), 0.0);
+    }
+}

@@ -1,0 +1,341 @@
+//! Profiling substrate: per-variant performance models (paper §5,
+//! "Profiling methodology").
+//!
+//! The paper profiles each variant under CPU allocations {1, 2, 4, 8, 16},
+//! fits a **linear regression** `th_m(n) = a·n + b` to the sustained
+//! throughput, and uses it to predict throughput at any allocation
+//! (Figure 6 reports R² of 0.996 / 0.994 for ResNet18/50).
+//!
+//! [`VariantProfile`] carries the measured single-worker service time and
+//! the fitted regression; [`ProfileSet`] is the collection the solver and
+//! the simulation engine consume.  Profiles are measured against the real
+//! PJRT engine ([`measure_real`]) or derived from the queueing model
+//! ([`ProfileSet::from_service_times`]) and serialize to `profiles.json`.
+
+mod regression;
+
+pub use regression::LinearRegression;
+
+use crate::util::json::{parse, Value};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// The CPU allocations the paper profiles at.
+pub const PROFILE_POINTS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Performance model of one model variant.
+#[derive(Debug, Clone)]
+pub struct VariantProfile {
+    pub name: String,
+    /// `acc_m`: accuracy metadata (percentage points).
+    pub accuracy: f64,
+    /// Mean single-worker service time, seconds per request.
+    pub service_time_s: f64,
+    /// Lognormal sigma of service-time noise (measured dispersion).
+    pub service_sigma: f64,
+    /// Measured readiness time `rt_m`, seconds (compile + weight upload).
+    pub readiness_s: f64,
+    /// Fitted `th_m(n) = a·n + b` (requests/second).
+    pub throughput_model: LinearRegression,
+    /// Raw (cores, throughput) points the regression was fitted on.
+    pub profile_points: Vec<(usize, f64)>,
+}
+
+impl VariantProfile {
+    /// Predicted sustainable throughput at `n` cores (never negative).
+    pub fn throughput(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        self.throughput_model.predict(n as f64).max(0.0)
+    }
+
+    /// Predicted processing latency `p_m(n)` (seconds) at `n` cores under
+    /// its sustainable load: with n parallel single-threaded workers the
+    /// per-request service time stays ~constant; queueing headroom is what
+    /// the SLO constraint checks.
+    pub fn latency(&self, n: usize) -> f64 {
+        if n == 0 {
+            return f64::INFINITY;
+        }
+        self.service_time_s
+    }
+
+    /// Smallest allocation whose predicted latency meets `slo_s`, if any.
+    pub fn min_cores_for_slo(&self, slo_s: f64, max_cores: usize) -> Option<usize> {
+        (1..=max_cores).find(|&n| self.latency(n) <= slo_s)
+    }
+}
+
+/// The full profile collection (solver + sim input).
+#[derive(Debug, Clone)]
+pub struct ProfileSet {
+    pub profiles: Vec<VariantProfile>,
+}
+
+impl ProfileSet {
+    pub fn get(&self, name: &str) -> Result<&VariantProfile> {
+        self.profiles
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("no profile for variant {name}"))
+    }
+
+    /// Ascending-accuracy order (the solver's canonical enumeration order).
+    pub fn by_accuracy(&self) -> Vec<&VariantProfile> {
+        let mut v: Vec<&VariantProfile> = self.profiles.iter().collect();
+        v.sort_by(|a, b| a.accuracy.total_cmp(&b.accuracy));
+        v
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![(
+            "profiles",
+            Value::Arr(
+                self.profiles
+                    .iter()
+                    .map(|p| {
+                        Value::obj(vec![
+                            ("name", Value::Str(p.name.clone())),
+                            ("accuracy", Value::Num(p.accuracy)),
+                            ("service_time_s", Value::Num(p.service_time_s)),
+                            ("service_sigma", Value::Num(p.service_sigma)),
+                            ("readiness_s", Value::Num(p.readiness_s)),
+                            (
+                                "throughput_model",
+                                Value::obj(vec![
+                                    ("slope", Value::Num(p.throughput_model.slope)),
+                                    ("intercept", Value::Num(p.throughput_model.intercept)),
+                                    ("r_squared", Value::Num(p.throughput_model.r_squared)),
+                                ]),
+                            ),
+                            (
+                                "profile_points",
+                                Value::Arr(
+                                    p.profile_points
+                                        .iter()
+                                        .map(|&(n, th)| {
+                                            Value::Arr(vec![
+                                                Value::Num(n as f64),
+                                                Value::Num(th),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let profiles = v
+            .req("profiles")?
+            .as_arr()?
+            .iter()
+            .map(|p| -> Result<VariantProfile> {
+                let tm = p.req("throughput_model")?;
+                Ok(VariantProfile {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    accuracy: p.req("accuracy")?.as_f64()?,
+                    service_time_s: p.req("service_time_s")?.as_f64()?,
+                    service_sigma: p.req("service_sigma")?.as_f64()?,
+                    readiness_s: p.req("readiness_s")?.as_f64()?,
+                    throughput_model: LinearRegression {
+                        slope: tm.req("slope")?.as_f64()?,
+                        intercept: tm.req("intercept")?.as_f64()?,
+                        r_squared: tm.req("r_squared")?.as_f64()?,
+                    },
+                    profile_points: p
+                        .req("profile_points")?
+                        .as_arr()?
+                        .iter()
+                        .map(|pt| -> Result<(usize, f64)> {
+                            let a = pt.as_arr()?;
+                            anyhow::ensure!(a.len() == 2, "bad profile point");
+                            Ok((a[0].as_usize()?, a[1].as_f64()?))
+                        })
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { profiles })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing profiles {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profiles {path:?}"))?;
+        Self::from_json(&parse(&text).context("parsing profiles.json")?)
+    }
+
+    /// Build profiles from known service times via the M/D/n-style capacity
+    /// model the paper's TF-Serving configuration implies: a pod with `n`
+    /// cores is `n` independent single-threaded workers, so the sustained
+    /// throughput at the SLO is slightly below `n / service_time` (we apply
+    /// a utilization margin `rho` and fit the regression through the same
+    /// {1,2,4,8,16} points the paper measures).
+    pub fn from_service_times(
+        entries: &[(String, f64, f64, f64)], // (name, acc, service_s, readiness_s)
+        rho: f64,
+    ) -> Self {
+        let profiles = entries
+            .iter()
+            .map(|(name, acc, st, rt)| {
+                let pts: Vec<(usize, f64)> = PROFILE_POINTS
+                    .iter()
+                    .map(|&n| (n, rho * n as f64 / st))
+                    .collect();
+                let reg = LinearRegression::fit(
+                    &pts.iter()
+                        .map(|&(n, th)| (n as f64, th))
+                        .collect::<Vec<_>>(),
+                );
+                VariantProfile {
+                    name: name.clone(),
+                    accuracy: *acc,
+                    service_time_s: *st,
+                    service_sigma: 0.12,
+                    readiness_s: *rt,
+                    throughput_model: reg,
+                    profile_points: pts,
+                }
+            })
+            .collect();
+        Self { profiles }
+    }
+
+    /// A synthetic five-variant family calibrated to the paper's throughput
+    /// ladder (used by the figure benches and tests; real measurements from
+    /// `measure_real` replace it when artifacts exist).
+    ///
+    /// Per-core sustained throughputs ~{23, 13, 10, 7, 5} rps reproduce the
+    /// paper's motivating equivalences: ResNet50 @ 8 cores ≈ ResNet152 @ 20
+    /// (80 vs 100 rps loosely), ResNet152 alone cannot cover 75 rps inside
+    /// a 14-core budget (70 rps) — the Figure 2 regime where mixed variant
+    /// sets beat single-variant selection.
+    pub fn paper_like() -> Self {
+        Self::from_service_times(
+            &[
+                ("resnet18".into(), 69.76, 0.040, 4.0),
+                ("resnet34".into(), 73.31, 0.070, 6.0),
+                ("resnet50".into(), 76.13, 0.092, 8.0),
+                ("resnet101".into(), 77.37, 0.131, 12.0),
+                ("resnet152".into(), 78.31, 0.184, 16.0),
+            ],
+            0.92,
+        )
+    }
+}
+
+/// Measure service time + readiness of every manifest variant on the real
+/// PJRT engine: spawn a single worker, time `iters` sequential inferences.
+pub fn measure_real(
+    dir: &Path,
+    manifest: &crate::runtime::Manifest,
+    iters: usize,
+    variants: Option<&[String]>,
+) -> Result<ProfileSet> {
+    use std::sync::Arc;
+    let mut entries = Vec::new();
+    for meta in &manifest.variants {
+        if let Some(filter) = variants {
+            if !filter.contains(&meta.name) {
+                continue;
+            }
+        }
+        let pool = crate::runtime::WorkerPool::spawn(dir, manifest, meta, 1, 1)?;
+        let readiness = pool.readiness.as_secs_f64();
+        let image = Arc::new(vec![0.5f32; manifest.input_shape(1).iter().product()]);
+        // Warmup.
+        pool.infer_blocking(image.clone())?;
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            pool.infer_blocking(image.clone())?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        pool.shutdown();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+            / samples.len() as f64;
+        let sigma = (var.sqrt() / mean).min(0.5);
+        entries.push((meta.name.clone(), meta.accuracy, mean, readiness, sigma));
+    }
+    anyhow::ensure!(!entries.is_empty(), "no variants measured");
+    let mut set = ProfileSet::from_service_times(
+        &entries
+            .iter()
+            .map(|(n, a, s, r, _)| (n.clone(), *a, *s, *r))
+            .collect::<Vec<_>>(),
+        0.92,
+    );
+    for (p, (_, _, _, _, sigma)) in set.profiles.iter_mut().zip(entries.iter()) {
+        p.service_sigma = *sigma;
+    }
+    Ok(set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_like_ladder_is_ordered() {
+        let set = ProfileSet::paper_like();
+        let by_acc = set.by_accuracy();
+        assert_eq!(by_acc.first().unwrap().name, "resnet18");
+        assert_eq!(by_acc.last().unwrap().name, "resnet152");
+        // more accurate variants are slower (resnet34/50 invert in our
+        // family just like the real bottleneck-vs-basic transition)
+        assert!(
+            by_acc.last().unwrap().service_time_s > by_acc.first().unwrap().service_time_s
+        );
+    }
+
+    #[test]
+    fn throughput_model_is_monotone_in_cores() {
+        let set = ProfileSet::paper_like();
+        for p in &set.profiles {
+            for n in 1..32 {
+                assert!(p.throughput(n + 1) > p.throughput(n), "{}", p.name);
+            }
+            assert_eq!(p.throughput(0), 0.0);
+        }
+    }
+
+    #[test]
+    fn regression_matches_generating_model() {
+        let set = ProfileSet::paper_like();
+        let p = set.get("resnet18").unwrap();
+        // generated from th = rho*n/st, so the fit must be near-exact
+        let expect = 0.92 * 10.0 / 0.040;
+        assert!((p.throughput(10) - expect).abs() / expect < 0.01);
+        assert!(p.throughput_model.r_squared > 0.999);
+    }
+
+    #[test]
+    fn min_cores_for_slo() {
+        let set = ProfileSet::paper_like();
+        let p = set.get("resnet152").unwrap();
+        assert_eq!(p.min_cores_for_slo(0.75, 32), Some(1));
+        assert_eq!(p.min_cores_for_slo(0.01, 32), None);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::testutil::TempDir::new();
+        let path = dir.path().join("profiles.json");
+        let set = ProfileSet::paper_like();
+        set.save(&path).unwrap();
+        let back = ProfileSet::load(&path).unwrap();
+        assert_eq!(back.profiles.len(), set.profiles.len());
+        assert_eq!(back.get("resnet50").unwrap().accuracy, 76.13);
+    }
+}

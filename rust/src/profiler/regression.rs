@@ -1,0 +1,82 @@
+//! Ordinary least-squares linear regression (the paper's throughput model).
+
+/// `y = a·x + b` with fit diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearRegression {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination of the fit (paper reports 0.996/0.994).
+    pub r_squared: f64,
+}
+
+impl LinearRegression {
+    /// Least-squares fit over `(x, y)` points. Panics on < 2 points.
+    pub fn fit(points: &[(f64, f64)]) -> Self {
+        assert!(points.len() >= 2, "need at least two points to fit");
+        let n = points.len() as f64;
+        let sx: f64 = points.iter().map(|p| p.0).sum();
+        let sy: f64 = points.iter().map(|p| p.1).sum();
+        let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        let (slope, intercept) = if denom.abs() < 1e-12 {
+            (0.0, sy / n)
+        } else {
+            let a = (n * sxy - sx * sy) / denom;
+            (a, (sy - a * sx) / n)
+        };
+        let mean_y = sy / n;
+        let ss_tot: f64 = points.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+        let ss_res: f64 = points
+            .iter()
+            .map(|p| (p.1 - (slope * p.0 + intercept)).powi(2))
+            .sum();
+        let r_squared = if ss_tot < 1e-12 {
+            1.0
+        } else {
+            1.0 - ss_res / ss_tot
+        };
+        Self {
+            slope,
+            intercept,
+            r_squared,
+        }
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovers_parameters() {
+        let pts: Vec<(f64, f64)> = (1..=16).map(|n| (n as f64, 3.5 * n as f64 + 1.0)).collect();
+        let r = LinearRegression::fit(&pts);
+        assert!((r.slope - 3.5).abs() < 1e-9);
+        assert!((r.intercept - 1.0).abs() < 1e-9);
+        assert!((r.r_squared - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_fits_with_high_r2() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(4);
+        let pts: Vec<(f64, f64)> = [1.0f64, 2.0, 4.0, 8.0, 16.0]
+            .iter()
+            .map(|&n| (n, 20.0 * n + rng.f64() * 2.0 - 1.0))
+            .collect();
+        let r = LinearRegression::fit(&pts);
+        assert!((r.slope - 20.0).abs() < 0.5);
+        assert!(r.r_squared > 0.99, "r2 {}", r.r_squared);
+    }
+
+    #[test]
+    fn degenerate_x_falls_back_to_mean() {
+        let r = LinearRegression::fit(&[(2.0, 5.0), (2.0, 7.0)]);
+        assert_eq!(r.slope, 0.0);
+        assert_eq!(r.intercept, 6.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust coordinator.
+
+use crate::util::json::{parse, Value};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one exported model variant.
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub name: String,
+    /// Published ImageNet top-1 of the corresponding torchvision variant;
+    /// this is the `acc_m` constant in the paper's objective.
+    pub accuracy: f64,
+    pub block: String,
+    pub depths: Vec<usize>,
+    pub params: u64,
+    pub flops: u64,
+    pub weights: String,
+    /// batch size -> HLO file name.
+    pub hlo: BTreeMap<usize, String>,
+    pub num_weight_arrays: usize,
+}
+
+impl VariantMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let mut hlo = BTreeMap::new();
+        for (k, file) in v.req("hlo")?.as_obj()? {
+            hlo.insert(
+                k.parse::<usize>()
+                    .with_context(|| format!("bad batch key {k:?}"))?,
+                file.as_str()?.to_string(),
+            );
+        }
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            accuracy: v.req("accuracy")?.as_f64()?,
+            block: v.req("block")?.as_str()?.to_string(),
+            depths: v
+                .req("depths")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            params: v.req("params")?.as_u64()?,
+            flops: v.req("flops")?.as_u64()?,
+            weights: v.req("weights")?.as_str()?.to_string(),
+            hlo,
+            num_weight_arrays: v.req("num_weight_arrays")?.as_usize()?,
+        })
+    }
+
+    /// Path of the HLO artifact for a given batch size.
+    pub fn hlo_path(&self, dir: &Path, batch: usize) -> Result<PathBuf> {
+        let name = self
+            .hlo
+            .get(&batch)
+            .with_context(|| format!("{}: no artifact for batch {batch}", self.name))?;
+        Ok(dir.join(name))
+    }
+
+    pub fn weights_path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.weights)
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.hlo.keys().copied().collect()
+    }
+}
+
+/// Metadata for the exported LSTM forecaster.
+#[derive(Debug, Clone)]
+pub struct ForecasterMeta {
+    pub hlo: String,
+    pub window: usize,
+    pub horizon: usize,
+    pub units: usize,
+    pub rps_scale: f64,
+    pub final_train_loss: f64,
+    pub loss_curve: Vec<f64>,
+}
+
+impl ForecasterMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            hlo: v.req("hlo")?.as_str()?.to_string(),
+            window: v.req("window")?.as_usize()?,
+            horizon: v.req("horizon")?.as_usize()?,
+            units: v.req("units")?.as_usize()?,
+            rps_scale: v.req("rps_scale")?.as_f64()?,
+            final_train_loss: v.req("final_train_loss")?.as_f64()?,
+            loss_curve: match v.get("loss_curve") {
+                Some(c) => c.as_arr()?.iter().map(|x| x.as_f64()).collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+        })
+    }
+}
+
+/// Top-level manifest written by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub rps_scale: f64,
+    pub variants: Vec<VariantMeta>,
+    pub forecaster: Option<ForecasterMeta>,
+}
+
+impl Manifest {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let variants = v
+            .req("variants")?
+            .as_arr()?
+            .iter()
+            .map(VariantMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let forecaster = match v.get("forecaster") {
+            None | Some(Value::Null) => None,
+            Some(f) => Some(ForecasterMeta::from_json(f)?),
+        };
+        let m = Self {
+            input_hw: v.req("input_hw")?.as_usize()?,
+            num_classes: v.req("num_classes")?.as_usize()?,
+            rps_scale: v.req("rps_scale")?.as_f64()?,
+            variants,
+            forecaster,
+        };
+        anyhow::ensure!(!m.variants.is_empty(), "manifest has no variants");
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        Self::from_json(&parse(&text).context("parsing manifest.json")?)
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .with_context(|| format!("unknown variant {name}"))
+    }
+
+    /// Variants sorted by ascending accuracy (the solver's canonical order).
+    pub fn variants_by_accuracy(&self) -> Vec<&VariantMeta> {
+        let mut v: Vec<&VariantMeta> = self.variants.iter().collect();
+        v.sort_by(|a, b| a.accuracy.total_cmp(&b.accuracy));
+        v
+    }
+
+    /// NHWC input shape for a variant at a given batch size.
+    pub fn input_shape(&self, batch: usize) -> [usize; 4] {
+        [batch, self.input_hw, self.input_hw, 3]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "input_hw": 32,
+      "num_classes": 10,
+      "rps_scale": 200.0,
+      "variants": [
+        {"name": "resnet18", "accuracy": 69.76, "block": "basic",
+         "depths": [2,2,2,2], "params": 700266, "flops": 70000000,
+         "weights": "resnet18.weights.npz",
+         "hlo": {"1": "resnet18.b1.hlo.txt", "8": "resnet18.b8.hlo.txt"},
+         "num_weight_arrays": 42},
+        {"name": "resnet152", "accuracy": 78.31, "block": "bottleneck",
+         "depths": [3,8,36,3], "params": 3648426, "flops": 465000000,
+         "weights": "resnet152.weights.npz",
+         "hlo": {"1": "resnet152.b1.hlo.txt"},
+         "num_weight_arrays": 314}
+      ],
+      "forecaster": {"hlo": "forecaster.hlo.txt", "window": 120,
+                     "horizon": 30, "units": 25, "rps_scale": 200.0,
+                     "final_train_loss": 0.001, "loss_curve": [0.1, 0.001]}
+    }"#;
+
+    #[test]
+    fn parses_full_manifest() {
+        let m = Manifest::from_json(&parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.input_shape(1), [1, 32, 32, 3]);
+        let v = m.variant("resnet18").unwrap();
+        assert_eq!(v.batch_sizes(), vec![1, 8]);
+        assert_eq!(
+            v.hlo_path(Path::new("/a"), 8).unwrap(),
+            PathBuf::from("/a/resnet18.b8.hlo.txt")
+        );
+        assert!(v.hlo_path(Path::new("/a"), 4).is_err());
+        let f = m.forecaster.unwrap();
+        assert_eq!(f.window, 120);
+        assert_eq!(f.loss_curve.len(), 2);
+    }
+
+    #[test]
+    fn sorts_by_accuracy() {
+        let m = Manifest::from_json(&parse(SAMPLE).unwrap()).unwrap();
+        let sorted = m.variants_by_accuracy();
+        assert_eq!(sorted[0].name, "resnet18");
+        assert_eq!(sorted[1].name, "resnet152");
+    }
+
+    #[test]
+    fn null_forecaster_is_none() {
+        let text = SAMPLE.replace(
+            r#""forecaster": {"hlo": "forecaster.hlo.txt", "window": 120,
+                     "horizon": 30, "units": 25, "rps_scale": 200.0,
+                     "final_train_loss": 0.001, "loss_curve": [0.1, 0.001]}"#,
+            r#""forecaster": null"#,
+        );
+        let m = Manifest::from_json(&parse(&text).unwrap()).unwrap();
+        assert!(m.forecaster.is_none());
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let m = Manifest::from_json(&parse(SAMPLE).unwrap()).unwrap();
+        assert!(m.variant("resnet999").is_err());
+    }
+}

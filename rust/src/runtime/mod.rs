@@ -1,0 +1,133 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute them.
+//!
+//! This is the only module that touches the `xla` crate.  The PJRT client is
+//! `Rc`-based (not `Send`), so all execution is structured around
+//! [`RuntimeWorker`] threads: each worker owns a client, compiles the
+//! requested executables on its own thread, and serves inference requests
+//! from an MPMC channel.  A "pod with n cores" in the serving layer is n
+//! workers sharing one queue — exactly the paper's TF-Serving configuration
+//! (intra-op = 1, inter-op = #cores, i.e. n single-threaded executors).
+//!
+//! Python never runs here: artifacts are produced once by `make artifacts`.
+
+mod manifest;
+mod weights;
+mod worker;
+
+pub use manifest::{ForecasterMeta, Manifest, VariantMeta};
+pub use weights::load_weights_f32;
+pub use worker::{InferRequest, RuntimeHandle, RuntimeWorker, WorkerPool};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled model executable bound to one thread's PJRT client.
+///
+/// Weights are uploaded to device buffers once at load time; per-inference
+/// work is a single input-buffer upload + `execute_b` + readback.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// (batch, h, w, c) image input shape.
+    pub input_shape: [usize; 4],
+    pub num_classes: usize,
+    pub name: String,
+}
+
+impl LoadedModel {
+    /// Compile `hlo_path` on `client` and upload the weights from `npz_path`.
+    pub fn load(
+        client: &xla::PjRtClient,
+        name: &str,
+        hlo_path: &Path,
+        npz_path: &Path,
+        input_shape: [usize; 4],
+        num_classes: usize,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing HLO text {hlo_path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let weights = load_weights_f32(npz_path)?;
+        let mut weight_bufs = Vec::with_capacity(weights.len());
+        for (wname, data, dims) in &weights {
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .with_context(|| format!("uploading weight {wname}"))?;
+            weight_bufs.push(buf);
+        }
+        Ok(Self {
+            exe,
+            weight_bufs,
+            input_shape,
+            num_classes,
+            name: name.to_string(),
+        })
+    }
+
+    /// Number of image elements expected per call (batch * h * w * c).
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Run one inference; `image` is the flattened NHWC batch.
+    /// Returns the flattened (batch, num_classes) logits.
+    pub fn infer(&self, client: &xla::PjRtClient, image: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            image.len() == self.input_len(),
+            "input length {} != expected {} for {}",
+            image.len(),
+            self.input_len(),
+            self.name
+        );
+        let input = client.buffer_from_host_buffer::<f32>(image, &self.input_shape, None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(&input);
+        args.extend(self.weight_bufs.iter());
+        let result = self.exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// A compiled forecaster executable (weights baked as constants).
+pub struct LoadedForecaster {
+    exe: xla::PjRtLoadedExecutable,
+    pub window: usize,
+}
+
+impl LoadedForecaster {
+    pub fn load(client: &xla::PjRtClient, hlo_path: &Path, window: usize) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing forecaster HLO {hlo_path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling forecaster")?;
+        Ok(Self { exe, window })
+    }
+
+    /// Predict the next-horizon max rate from a normalized window.
+    pub fn predict(&self, client: &xla::PjRtClient, window: &[f32]) -> Result<f32> {
+        anyhow::ensure!(
+            window.len() == self.window,
+            "window length {} != expected {}",
+            window.len(),
+            self.window
+        );
+        let input = client.buffer_from_host_buffer::<f32>(window, &[self.window, 1], None)?;
+        let result = self.exe.execute_b(&[&input])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        anyhow::ensure!(v.len() == 1, "forecaster returned {} values", v.len());
+        Ok(v[0])
+    }
+}
+
+/// Resolve the artifacts directory: `$INFADAPTER_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("INFADAPTER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,36 @@
+//! Weight loading: `<variant>.weights.npz` -> ordered `(name, data, dims)`.
+//!
+//! The AOT exporter writes one array per model parameter with zero-padded
+//! index keys (`p0000`, `p0001`, ...) matching jax's pytree flatten order
+//! for the parameter list, so sorting by name recovers the exact positional
+//! argument order the lowered HLO expects after the image input.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use xla::FromRawBytes;
+
+/// Load all f32 arrays from an npz, sorted by entry name.
+pub fn load_weights_f32(path: &Path) -> Result<Vec<(String, Vec<f32>, Vec<usize>)>> {
+    let mut entries = xla::Literal::read_npz(path, &())
+        .with_context(|| format!("reading weights npz {path:?}"))?;
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut out = Vec::with_capacity(entries.len());
+    for (name, lit) in entries {
+        let shape = lit
+            .array_shape()
+            .with_context(|| format!("weight {name} has non-array shape"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit
+            .to_vec::<f32>()
+            .with_context(|| format!("weight {name} is not f32"))?;
+        anyhow::ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "weight {name}: data len {} != shape {:?}",
+            data.len(),
+            dims
+        );
+        out.push((name, data, dims));
+    }
+    anyhow::ensure!(!out.is_empty(), "empty weights file {path:?}");
+    Ok(out)
+}

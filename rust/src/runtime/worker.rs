@@ -1,0 +1,251 @@
+//! Worker threads: the execution substrate for the real serving engine.
+//!
+//! The PJRT client is not `Send`, so each worker is a dedicated OS thread
+//! that builds its own client, compiles the variant's HLO, uploads weights,
+//! and then serves inference jobs from a shared MPMC queue.  A backend pod
+//! with `n` cores is a [`WorkerPool`] of `n` workers — mirroring the paper's
+//! chosen TF-Serving configuration (intra-op = 1, inter-op = #cores: n
+//! independent single-threaded executors per container).
+//!
+//! Worker startup time (compile + weight upload) is measured and surfaced as
+//! the variant's readiness time `rt_m` — the quantity the paper's loading
+//! cost `LC = max(tc_m * rt_m)` penalizes.
+
+use crate::util::mpmc;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::manifest::{Manifest, VariantMeta};
+use super::LoadedModel;
+
+/// Completion callback: receives the logits (or error) and the total time
+/// the job spent in the pool (queueing + execution).
+pub type InferCallback = Box<dyn FnOnce(Result<Vec<f32>>, Duration) + Send + 'static>;
+
+/// One inference job.
+pub struct InferRequest {
+    pub image: Arc<Vec<f32>>,
+    pub respond: InferCallback,
+    pub enqueued: Instant,
+}
+
+/// A pool of identical workers serving one (variant, batch) executable.
+pub struct WorkerPool {
+    tx: mpmc::Sender<InferRequest>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Measured worker startup (HLO compile + weight upload), i.e. `rt_m`.
+    pub readiness: Duration,
+    pub variant: String,
+    pub size: usize,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers for `meta` at batch size `batch`.
+    ///
+    /// Blocks until every worker has finished compiling (is "ready"), so the
+    /// caller observes the true readiness time.
+    pub fn spawn(
+        dir: &std::path::Path,
+        manifest: &Manifest,
+        meta: &VariantMeta,
+        batch: usize,
+        size: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(size > 0, "worker pool must have at least one worker");
+        let (tx, rx) = mpmc::channel::<InferRequest>();
+        let hlo: PathBuf = meta.hlo_path(dir, batch)?;
+        let npz = meta.weights_path(dir);
+        let input_shape = manifest.input_shape(batch);
+        let num_classes = manifest.num_classes;
+        let start = Instant::now();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let inflight = Arc::new(AtomicUsize::new(0));
+
+        let mut handles = Vec::with_capacity(size);
+        for wid in 0..size {
+            let rx = rx.clone();
+            let ready_tx = ready_tx.clone();
+            let hlo = hlo.clone();
+            let npz = npz.clone();
+            let name = format!("{}#{}", meta.name, wid);
+            let inflight = inflight.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-{name}"))
+                    .spawn(move || {
+                        worker_main(rx, ready_tx, name, hlo, npz, input_shape, num_classes, inflight)
+                    })
+                    .context("spawning worker thread")?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..size {
+            ready_rx
+                .recv()
+                .context("worker died before signalling readiness")??;
+        }
+        Ok(Self {
+            tx,
+            handles,
+            readiness: start.elapsed(),
+            variant: meta.name.clone(),
+            size,
+            inflight,
+        })
+    }
+
+    /// Submit a job; `respond` runs on the worker thread when it completes.
+    pub fn submit(
+        &self,
+        image: Arc<Vec<f32>>,
+        respond: impl FnOnce(Result<Vec<f32>>, Duration) + Send + 'static,
+    ) -> Result<()> {
+        self.tx
+            .send(InferRequest {
+                image,
+                respond: Box::new(respond),
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow::anyhow!("worker pool {} is shut down", self.variant))
+    }
+
+    /// Synchronous inference (profiling, examples).
+    pub fn infer_blocking(&self, image: Arc<Vec<f32>>) -> Result<Vec<f32>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(image, move |result, _elapsed| {
+            let _ = tx.send(result);
+        })?;
+        rx.recv().context("worker dropped the response channel")?
+    }
+
+    /// Jobs queued but not yet picked up.
+    pub fn queue_len(&self) -> usize {
+        self.tx.len()
+    }
+
+    /// Jobs currently executing across the pool.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Queued + executing jobs are drained, then the workers exit.
+    pub fn shutdown(mut self) {
+        let (dummy, _) = mpmc::channel();
+        let _ = std::mem::replace(&mut self.tx, dummy);
+        for h in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel lets workers drain and exit; detach threads.
+        let (dummy, _) = mpmc::channel();
+        let _ = std::mem::replace(&mut self.tx, dummy);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    rx: mpmc::Receiver<InferRequest>,
+    ready_tx: std::sync::mpsc::Sender<Result<()>>,
+    name: String,
+    hlo: PathBuf,
+    npz: PathBuf,
+    input_shape: [usize; 4],
+    num_classes: usize,
+    inflight: Arc<AtomicUsize>,
+) {
+    let built = (|| -> Result<(xla::PjRtClient, LoadedModel)> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let model = LoadedModel::load(&client, &name, &hlo, &npz, input_shape, num_classes)?;
+        Ok((client, model))
+    })();
+    let (client, model) = match built {
+        Ok(cm) => {
+            let _ = ready_tx.send(Ok(()));
+            cm
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    drop(ready_tx);
+    while let Some(req) = rx.recv() {
+        inflight.fetch_add(1, Ordering::Relaxed);
+        let result = model.infer(&client, &req.image);
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        (req.respond)(result, req.enqueued.elapsed());
+    }
+}
+
+/// A dedicated thread hosting the AOT LSTM forecaster.
+pub struct RuntimeHandle {
+    tx: mpmc::Sender<(Vec<f32>, std::sync::mpsc::Sender<Result<f32>>)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RuntimeHandle {
+    /// Load `forecaster.hlo.txt` on its own thread.
+    pub fn spawn_forecaster(dir: &std::path::Path, window: usize) -> Result<Self> {
+        let hlo = dir.join("forecaster.hlo.txt");
+        anyhow::ensure!(hlo.exists(), "missing forecaster artifact {hlo:?}");
+        let (tx, rx) = mpmc::channel::<(Vec<f32>, std::sync::mpsc::Sender<Result<f32>>)>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-forecaster".into())
+            .spawn(move || {
+                let built = (|| -> Result<(xla::PjRtClient, super::LoadedForecaster)> {
+                    let client = xla::PjRtClient::cpu()?;
+                    let f = super::LoadedForecaster::load(&client, &hlo, window)?;
+                    Ok((client, f))
+                })();
+                let (client, forecaster) = match built {
+                    Ok(cf) => {
+                        let _ = ready_tx.send(Ok(()));
+                        cf
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Some((win, resp)) = rx.recv() {
+                    let _ = resp.send(forecaster.predict(&client, &win));
+                }
+            })?;
+        ready_rx.recv().context("forecaster thread died")??;
+        Ok(Self {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    /// Predict the next-horizon max rate (normalized units) from a window.
+    pub fn predict(&self, window: Vec<f32>) -> Result<f32> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send((window, tx))
+            .map_err(|_| anyhow::anyhow!("forecaster thread is gone"))?;
+        rx.recv().context("forecaster thread dropped response")?
+    }
+}
+
+impl Drop for RuntimeHandle {
+    fn drop(&mut self) {
+        let (dummy_tx, _) = mpmc::channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Alias kept for external readability.
+pub type RuntimeWorker = WorkerPool;

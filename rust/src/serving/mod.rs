@@ -1,0 +1,43 @@
+//! Serving engines and the policy interface.
+//!
+//! Two engines share the coordinator logic (cluster, dispatcher, policies):
+//! * [`sim::SimEngine`] — virtual-time discrete-event simulation of the
+//!   paper's testbed (M/G/n pods calibrated by measured service times);
+//!   regenerates all figures in seconds instead of 20 wall-clock minutes.
+//! * [`real::RealEngine`] — live PJRT execution: every request runs the
+//!   actual AOT-compiled variant on the CPU client through worker pools.
+//!
+//! A [`Policy`] is the adaptation brain invoked every interval: InfAdapter,
+//! MS+, VPA+, or a static allocation (see [`crate::baselines`] and
+//! [`crate::adapter`]).
+
+pub mod real;
+pub mod sim;
+
+use std::collections::BTreeMap;
+
+/// What a policy wants the cluster to look like.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// variant -> cores; absent or 0 means scale to zero.
+    pub target: BTreeMap<String, usize>,
+    /// Dispatcher weights λ_m (any non-negative scale).
+    pub quotas: Vec<(String, f64)>,
+    /// λ̂ the policy planned for (reporting).
+    pub predicted_lambda: f64,
+}
+
+/// Adaptation policy, invoked once per adapter interval.
+pub trait Policy: Send {
+    fn name(&self) -> String;
+
+    /// `rate_history`: per-second observed arrival rates since the previous
+    /// call (oldest first).  `committed`: the cluster's current committed
+    /// allocation (variant -> cores), i.e. what is already loaded.
+    fn decide(
+        &mut self,
+        now: f64,
+        rate_history: &[f64],
+        committed: &BTreeMap<String, usize>,
+    ) -> Decision;
+}

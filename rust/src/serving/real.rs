@@ -1,0 +1,354 @@
+//! Real serving engine: live PJRT execution of the AOT artifacts.
+//!
+//! Wall-clock, thread-driven: an open-loop arrival generator replays a
+//! trace, the dispatcher routes each request to a variant, and the
+//! variant's [`WorkerPool`](crate::runtime::WorkerPool) executes the actual
+//! compiled ResNet on the CPU PJRT client.  The adapter loop re-plans on
+//! the configured cadence; allocation changes spawn replacement pools
+//! (create-before-remove — the old pool keeps serving while the new one
+//! compiles, and compile time is the *measured* readiness cost rt_m).
+//!
+//! This engine is the end-to-end proof that the three layers compose with
+//! Python absent; the figure-scale experiments use the virtual-time
+//! simulator (see DESIGN.md §4 for the 1-core-host substitution).
+
+use crate::dispatcher::Dispatcher;
+use crate::metrics::{MetricsCollector, RequestRecord};
+use crate::monitoring::RateWindow;
+use crate::runtime::{Manifest, WorkerPool};
+use crate::serving::Policy;
+use crate::workload::{ArrivalProcess, RateSeries};
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Real-engine parameters.
+#[derive(Debug, Clone)]
+pub struct RealConfig {
+    pub slo_s: f64,
+    pub adapter_interval_s: f64,
+    /// Serving batch size (the paper disables batching on CPU: 1).
+    pub batch: usize,
+    /// Seed for the arrival process.
+    pub seed: u64,
+    /// Cap on per-variant worker counts (host protection).
+    pub max_workers_per_variant: usize,
+}
+
+impl Default for RealConfig {
+    fn default() -> Self {
+        Self {
+            slo_s: 0.75,
+            adapter_interval_s: 10.0,
+            batch: 1,
+            seed: 0,
+            max_workers_per_variant: 4,
+        }
+    }
+}
+
+/// Live serving system state.
+pub struct RealEngine {
+    artifacts_dir: PathBuf,
+    manifest: Arc<Manifest>,
+    pub config: RealConfig,
+    pools: Arc<RwLock<HashMap<String, Arc<WorkerPool>>>>,
+    dispatcher: Dispatcher,
+    rate_window: Arc<Mutex<RateWindow>>,
+    /// Variants with a replacement pool currently compiling (suppresses
+    /// duplicate builders while one is in flight).
+    building: Arc<Mutex<std::collections::HashSet<String>>>,
+    /// The allocation the policy currently wants (drives deferred removal).
+    desired: Arc<Mutex<BTreeMap<String, usize>>>,
+    /// The quota table the policy currently wants (intersected with the
+    /// pools that actually exist before reaching the dispatcher).
+    desired_quotas: Arc<Mutex<Vec<(String, f64)>>>,
+}
+
+impl RealEngine {
+    pub fn new(artifacts_dir: PathBuf, config: RealConfig) -> Result<Self> {
+        let manifest = Arc::new(Manifest::load(&artifacts_dir)?);
+        Ok(Self {
+            artifacts_dir,
+            manifest,
+            config,
+            pools: Arc::new(RwLock::new(HashMap::new())),
+            dispatcher: Dispatcher::new(),
+            rate_window: Arc::new(Mutex::new(RateWindow::new(600))),
+            building: Arc::new(Mutex::new(std::collections::HashSet::new())),
+            desired: Arc::new(Mutex::new(BTreeMap::new())),
+            desired_quotas: Arc::new(Mutex::new(Vec::new())),
+        })
+    }
+
+    /// Push the desired quota table to the dispatcher, restricted to pools
+    /// that exist *now*; while a transition is compiling, surviving pools
+    /// keep serving (create-before-remove at the routing layer).
+    fn refresh_dispatcher(
+        pools: &RwLock<HashMap<String, Arc<WorkerPool>>>,
+        dispatcher: &Dispatcher,
+        desired_quotas: &Mutex<Vec<(String, f64)>>,
+    ) {
+        let available = pools.read().unwrap();
+        let desired = desired_quotas.lock().unwrap();
+        let mut weights: Vec<(String, f64)> = desired
+            .iter()
+            .filter(|(v, _)| available.contains_key(v))
+            .cloned()
+            .collect();
+        if weights.is_empty() {
+            // Nothing the policy asked for is ready yet: serve with what
+            // exists rather than black-holing requests.
+            weights = available.keys().map(|v| (v.clone(), 1.0)).collect();
+        }
+        dispatcher.set_weights(&weights);
+    }
+
+    /// Remove pools not in the desired allocation — but only once every
+    /// desired variant has a ready pool (the paper's create-before-remove).
+    fn reconcile_removals(
+        pools: &RwLock<HashMap<String, Arc<WorkerPool>>>,
+        desired: &Mutex<BTreeMap<String, usize>>,
+    ) {
+        let want = desired.lock().unwrap().clone();
+        let mut pools = pools.write().unwrap();
+        let all_ready = want
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .all(|(v, _)| pools.contains_key(v));
+        if all_ready {
+            pools.retain(|v, _| want.get(v).copied().unwrap_or(0) > 0);
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Current committed allocation (variant -> worker count).
+    pub fn committed(&self) -> BTreeMap<String, usize> {
+        self.pools
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(v, p)| (v.clone(), p.size))
+            .collect()
+    }
+
+    /// Apply a target allocation **without blocking the serving path**:
+    /// replacement pools compile on builder threads and are swapped in when
+    /// Ready (create-before-remove — the old pool keeps serving; compile
+    /// time is the measured readiness cost rt_m).  Synchronous only when
+    /// `wait` is true (warm start / tests).
+    pub fn apply(&self, target: &BTreeMap<String, usize>, wait: bool) -> Result<()> {
+        *self.desired.lock().unwrap() = target.clone();
+        let current = self.committed();
+        for (variant, &cores) in target {
+            if cores == 0 {
+                continue;
+            }
+            let workers = cores.clamp(1, self.config.max_workers_per_variant);
+            if current.get(variant) == Some(&workers) {
+                continue;
+            }
+            {
+                let mut building = self.building.lock().unwrap();
+                if building.contains(variant) {
+                    continue; // a replacement is already compiling
+                }
+                building.insert(variant.clone());
+            }
+            let meta = self.manifest.variant(variant)?.clone();
+            let dir = self.artifacts_dir.clone();
+            let manifest = self.manifest.clone();
+            let pools = self.pools.clone();
+            let building = self.building.clone();
+            let batch = self.config.batch;
+            let variant_name = variant.clone();
+            let desired = self.desired.clone();
+            let desired_quotas = self.desired_quotas.clone();
+            let dispatcher = self.dispatcher.clone();
+            let builder = move || {
+                let built = WorkerPool::spawn(&dir, &manifest, &meta, batch, workers);
+                match built {
+                    Ok(pool) => {
+                        pools
+                            .write()
+                            .unwrap()
+                            .insert(variant_name.clone(), Arc::new(pool));
+                    }
+                    Err(e) => eprintln!("[real] pool build failed for {variant_name}: {e:#}"),
+                }
+                building.lock().unwrap().remove(&variant_name);
+                // The replacement is Ready: now (and only now) retire pools
+                // the policy no longer wants, and re-point the dispatcher.
+                Self::reconcile_removals(&pools, &desired);
+                Self::refresh_dispatcher(&pools, &dispatcher, &desired_quotas);
+            };
+            if wait {
+                builder();
+            } else {
+                std::thread::Builder::new()
+                    .name(format!("pool-builder-{variant}"))
+                    .spawn(builder)
+                    .context("spawning pool builder")?;
+            }
+        }
+        // Removals are deferred until replacements are Ready
+        // (create-before-remove); when nothing is building this applies
+        // scale-downs immediately.
+        Self::reconcile_removals(&self.pools, &self.desired);
+        Ok(())
+    }
+
+    pub fn set_quotas(&self, quotas: &[(String, f64)]) {
+        *self.desired_quotas.lock().unwrap() = quotas.to_vec();
+        Self::refresh_dispatcher(&self.pools, &self.dispatcher, &self.desired_quotas);
+    }
+
+    /// Serve `trace` (wall-clock) under `policy`. Returns collected metrics.
+    ///
+    /// The initial decision is applied before the clock starts (warm start).
+    pub fn serve(&self, policy: &mut dyn Policy, trace: &RateSeries) -> Result<MetricsCollector> {
+        let top_acc = self
+            .manifest
+            .variants
+            .iter()
+            .map(|v| v.accuracy)
+            .fold(0.0, f64::max);
+        let metrics = Arc::new(Mutex::new(MetricsCollector::new(
+            10.0,
+            self.config.slo_s,
+            top_acc,
+        )));
+        let acc_by_variant: HashMap<String, f64> = self
+            .manifest
+            .variants
+            .iter()
+            .map(|v| (v.name.clone(), v.accuracy))
+            .collect();
+
+        // Warm start.
+        let first_rate = trace.rates.first().copied().unwrap_or(0.0);
+        let d0 = policy.decide(0.0, &[first_rate], &BTreeMap::new());
+        self.apply(&d0.target, true)?; // warm start: block until ready
+        self.set_quotas(&d0.quotas);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_prediction(0.0, d0.predicted_lambda);
+            m.record_cost(0.0, self.committed().values().sum());
+        }
+
+        let arrivals = ArrivalProcess::poisson(trace, self.config.seed);
+        let started = Instant::now();
+        let image_len: usize = self
+            .manifest
+            .input_shape(self.config.batch)
+            .iter()
+            .product();
+        let image = Arc::new(vec![0.5f32; image_len]);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let mut next_adapt = self.config.adapter_interval_s;
+        let duration = trace.duration_s() as f64;
+
+        for &t_arr in &arrivals {
+            // Adapter ticks interleaved with arrivals.
+            while next_adapt <= t_arr && next_adapt < duration {
+                wait_until(started, next_adapt);
+                self.adapter_tick(policy, next_adapt, &metrics)?;
+                next_adapt += self.config.adapter_interval_s;
+            }
+            wait_until(started, t_arr);
+            let now_s = started.elapsed().as_secs_f64();
+            self.rate_window.lock().unwrap().record(now_s);
+
+            let variant = match self.dispatcher.route() {
+                Some(v) => v,
+                None => {
+                    metrics.lock().unwrap().record_request(RequestRecord {
+                        arrival_s: now_s,
+                        latency_s: f64::INFINITY,
+                        accuracy: 0.0,
+                    });
+                    continue;
+                }
+            };
+            let pool = self.pools.read().unwrap().get(&variant).cloned();
+            let Some(pool) = pool else {
+                metrics.lock().unwrap().record_request(RequestRecord {
+                    arrival_s: now_s,
+                    latency_s: f64::INFINITY,
+                    accuracy: 0.0,
+                });
+                continue;
+            };
+            let metrics_cb = metrics.clone();
+            let accuracy = acc_by_variant.get(&variant).copied().unwrap_or(0.0);
+            let inflight_cb = inflight.clone();
+            inflight.fetch_add(1, Ordering::SeqCst);
+            let submitted = pool.submit(image.clone(), move |result, elapsed| {
+                metrics_cb.lock().unwrap().record_request(RequestRecord {
+                    arrival_s: now_s,
+                    latency_s: if result.is_ok() {
+                        elapsed.as_secs_f64()
+                    } else {
+                        f64::INFINITY
+                    },
+                    accuracy,
+                });
+                inflight_cb.fetch_sub(1, Ordering::SeqCst);
+            });
+            if submitted.is_err() {
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                metrics.lock().unwrap().record_request(RequestRecord {
+                    arrival_s: now_s,
+                    latency_s: f64::INFINITY,
+                    accuracy,
+                });
+            }
+        }
+        // Remaining adapter ticks until the trace ends, then drain.
+        while next_adapt < duration {
+            wait_until(started, next_adapt);
+            self.adapter_tick(policy, next_adapt, &metrics)?;
+            next_adapt += self.config.adapter_interval_s;
+        }
+        let drain_deadline = Instant::now() + Duration::from_secs(60);
+        while inflight.load(Ordering::SeqCst) > 0 && Instant::now() < drain_deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let collector = metrics.lock().unwrap().clone();
+        Ok(collector)
+    }
+
+    fn adapter_tick(
+        &self,
+        policy: &mut dyn Policy,
+        now: f64,
+        metrics: &Arc<Mutex<MetricsCollector>>,
+    ) -> Result<()> {
+        let history = {
+            let w = self.rate_window.lock().unwrap();
+            w.history(self.config.adapter_interval_s.ceil() as usize)
+        };
+        let committed = self.committed();
+        let d = policy.decide(now, &history, &committed);
+        self.apply(&d.target, false)?; // non-blocking: builders swap in when ready
+        self.set_quotas(&d.quotas);
+        let mut m = metrics.lock().unwrap();
+        m.record_prediction(now, d.predicted_lambda);
+        m.record_cost(now, self.committed().values().sum());
+        Ok(())
+    }
+}
+
+fn wait_until(started: Instant, t: f64) {
+    let target = Duration::from_secs_f64(t);
+    let elapsed = started.elapsed();
+    if target > elapsed {
+        std::thread::sleep(target - elapsed);
+    }
+}

@@ -1,0 +1,467 @@
+//! Virtual-time discrete-event serving simulator.
+//!
+//! Models the paper's testbed faithfully at the queueing level: each pod is
+//! an M/G/n station — `cores` parallel servers (the TF-Serving inter-op
+//! pool) with lognormal service times calibrated from real PJRT
+//! measurements ([`crate::profiler::measure_real`]).  The cluster substrate
+//! supplies readiness delays and create-before-remove; the dispatcher
+//! supplies smooth-WRR routing; the policy is invoked on the same 30 s
+//! cadence as the live system.
+//!
+//! Event order: arrivals, completions, cluster ticks (1 s), adapter ticks.
+
+use super::{Decision, Policy};
+use crate::cluster::{Cluster, ClusterEvent};
+use crate::dispatcher::Dispatcher;
+use crate::metrics::{MetricsCollector, RequestRecord};
+use crate::profiler::ProfileSet;
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, RateSeries};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub slo_s: f64,
+    pub adapter_interval_s: f64,
+    pub node_cores: Vec<usize>,
+    pub seed: u64,
+    /// Metrics bucket width (figure x-resolution).
+    pub bucket_s: f64,
+    /// Drop requests that queued longer than this (paper clients time out).
+    pub queue_timeout_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            slo_s: 0.75,
+            adapter_interval_s: 30.0,
+            node_cores: vec![48, 48],
+            seed: 0,
+            bucket_s: 10.0,
+            queue_timeout_s: 10.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    Arrival(usize),
+    Completion { pod_id: u64, req: usize },
+    ClusterTick,
+    AdapterTick,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct PodSim {
+    variant: String,
+    cores: usize,
+    busy: usize,
+    queue: VecDeque<usize>, // request ids
+    alive: bool,
+}
+
+struct RequestSim {
+    arrival: f64,
+    accuracy: f64,
+}
+
+/// The simulator.
+pub struct SimEngine {
+    pub config: SimConfig,
+    profiles: ProfileSet,
+}
+
+/// Result of one simulated run.
+pub struct SimResult {
+    pub metrics: MetricsCollector,
+    pub duration_s: f64,
+    /// (t, decision) log for ablation inspection.
+    pub decisions: Vec<(f64, Decision)>,
+}
+
+impl SimEngine {
+    pub fn new(profiles: ProfileSet, config: SimConfig) -> Self {
+        Self { config, profiles }
+    }
+
+    /// Draw one service time for a variant (lognormal, measured mean).
+    fn sample_service(&self, variant: &str, rng: &mut Rng) -> f64 {
+        let p = self.profiles.get(variant).expect("unknown variant");
+        rng.lognormal_mean(p.service_time_s, p.service_sigma.max(1e-6))
+    }
+
+    /// Run `policy` against `trace`. The initial decision (t=0) is applied
+    /// with zero readiness (warm start, as in the paper's experiments).
+    pub fn run(&self, policy: &mut dyn Policy, trace: &RateSeries) -> SimResult {
+        let cfg = &self.config;
+        let duration = trace.duration_s() as f64;
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let arrivals = ArrivalProcess::poisson(trace, cfg.seed.wrapping_add(1));
+
+        let top_acc = self
+            .profiles
+            .profiles
+            .iter()
+            .map(|p| p.accuracy)
+            .fold(0.0, f64::max);
+        let mut metrics = MetricsCollector::new(cfg.bucket_s, cfg.slo_s, top_acc);
+        let mut cluster = Cluster::new(&cfg.node_cores);
+        let dispatcher = Dispatcher::new();
+        let mut decisions: Vec<(f64, Decision)> = Vec::new();
+
+        // --- Warm start: decide at t=0 and make pods ready instantly.
+        let first_rate = trace.rates.first().copied().unwrap_or(0.0);
+        let d0 = policy.decide(0.0, &[first_rate], &BTreeMap::new());
+        cluster.apply(&d0.target, 0.0, |_| 0.0);
+        cluster.tick(0.0);
+        dispatcher.set_weights(&d0.quotas);
+        metrics.record_prediction(0.0, d0.predicted_lambda);
+        metrics.record_cost(0.0, cluster.billed_cores());
+        decisions.push((0.0, d0));
+
+        // --- Event queue.
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind| {
+            *seq += 1;
+            heap.push(Reverse(Event { t, seq: *seq, kind }));
+        };
+        for (i, &t) in arrivals.iter().enumerate() {
+            push(&mut heap, &mut seq, t, EventKind::Arrival(i));
+        }
+        let mut t_next = 1.0;
+        while t_next < duration {
+            push(&mut heap, &mut seq, t_next, EventKind::ClusterTick);
+            t_next += 1.0;
+        }
+        let mut t_adapt = cfg.adapter_interval_s;
+        while t_adapt < duration {
+            push(&mut heap, &mut seq, t_adapt, EventKind::AdapterTick);
+            t_adapt += cfg.adapter_interval_s;
+        }
+
+        // --- State.
+        let mut pods: HashMap<u64, PodSim> = HashMap::new();
+        for p in cluster.pods() {
+            pods.insert(
+                p.id,
+                PodSim {
+                    variant: p.variant.clone(),
+                    cores: p.cores,
+                    busy: 0,
+                    queue: VecDeque::new(),
+                    alive: true,
+                },
+            );
+        }
+        let mut requests: Vec<RequestSim> = Vec::with_capacity(arrivals.len());
+        let mut rate_history: Vec<f64> = Vec::new();
+        let mut arrivals_this_second = 0u64;
+        let mut last_whole_second = 0u64;
+
+        let acc_of = |profiles: &ProfileSet, v: &str| -> f64 {
+            profiles.get(v).map(|p| p.accuracy).unwrap_or(0.0)
+        };
+
+        // --- Main loop.  Arrivals and ticks all fall inside [0, duration);
+        // completions may land past the end and are drained so every
+        // request is accounted for (conservation invariant).
+        while let Some(Reverse(ev)) = heap.pop() {
+            let now = ev.t;
+            // roll the per-second arrival counter
+            let sec = now as u64;
+            while last_whole_second < sec {
+                rate_history.push(arrivals_this_second as f64);
+                arrivals_this_second = 0;
+                last_whole_second += 1;
+            }
+
+            match ev.kind {
+                EventKind::Arrival(_) => {
+                    arrivals_this_second += 1;
+                    let rid = requests.len();
+                    // Route: dispatcher picks the variant; least-loaded
+                    // ready pod of that variant takes the request.
+                    let variant = dispatcher.route();
+                    let pod_id = variant.as_deref().and_then(|v| {
+                        pick_pod(&cluster, &pods, v).or_else(|| any_pod(&cluster, &pods))
+                    });
+                    let Some(pid) = pod_id else {
+                        requests.push(RequestSim {
+                            arrival: now,
+                            accuracy: 0.0,
+                        });
+                        metrics.record_request(RequestRecord {
+                            arrival_s: now,
+                            latency_s: f64::INFINITY,
+                            accuracy: 0.0,
+                        });
+                        continue;
+                    };
+                    let pod = pods.get_mut(&pid).expect("routed to unknown pod");
+                    requests.push(RequestSim {
+                        arrival: now,
+                        accuracy: acc_of(&self.profiles, &pod.variant),
+                    });
+                    if pod.busy < pod.cores {
+                        pod.busy += 1;
+                        let st = self.sample_service(&pod.variant, &mut rng);
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            now + st,
+                            EventKind::Completion { pod_id: pid, req: rid },
+                        );
+                    } else {
+                        pod.queue.push_back(rid);
+                    }
+                }
+                EventKind::Completion { pod_id, req } => {
+                    let r = &requests[req];
+                    metrics.record_request(RequestRecord {
+                        arrival_s: r.arrival,
+                        latency_s: now - r.arrival,
+                        accuracy: r.accuracy,
+                    });
+                    if let Some(pod) = pods.get_mut(&pod_id) {
+                        pod.busy = pod.busy.saturating_sub(1);
+                        // Start the next queued request, dropping timeouts.
+                        while let Some(next) = pod.queue.pop_front() {
+                            let waited = now - requests[next].arrival;
+                            if waited > self.config.queue_timeout_s {
+                                metrics.record_request(RequestRecord {
+                                    arrival_s: requests[next].arrival,
+                                    latency_s: f64::INFINITY,
+                                    accuracy: requests[next].accuracy,
+                                });
+                                continue;
+                            }
+                            pod.busy += 1;
+                            let st = self.sample_service(&pod.variant, &mut rng);
+                            push(
+                                &mut heap,
+                                &mut seq,
+                                now + st,
+                                EventKind::Completion {
+                                    pod_id,
+                                    req: next,
+                                },
+                            );
+                            break;
+                        }
+                    }
+                }
+                EventKind::ClusterTick => {
+                    for event in cluster.tick(now) {
+                        match event {
+                            ClusterEvent::PodReady { pod_id, variant } => {
+                                let cores = cluster
+                                    .pods()
+                                    .iter()
+                                    .find(|p| p.id == pod_id)
+                                    .map(|p| p.cores)
+                                    .unwrap_or(0);
+                                pods.insert(
+                                    pod_id,
+                                    PodSim {
+                                        variant,
+                                        cores,
+                                        busy: 0,
+                                        queue: VecDeque::new(),
+                                        alive: true,
+                                    },
+                                );
+                            }
+                            ClusterEvent::PodRemoved { pod_id, .. } => {
+                                // Re-route any still-queued requests.
+                                if let Some(mut dead) = pods.remove(&pod_id) {
+                                    dead.alive = false;
+                                    let orphans: Vec<usize> = dead.queue.drain(..).collect();
+                                    for rid in orphans {
+                                        if let Some(target) = dispatcher
+                                            .route()
+                                            .and_then(|v| pick_pod(&cluster, &pods, &v))
+                                            .or_else(|| any_pod(&cluster, &pods))
+                                        {
+                                            let pod =
+                                                pods.get_mut(&target).expect("alive pod");
+                                            requests[rid].accuracy =
+                                                acc_of(&self.profiles, &pod.variant);
+                                            if pod.busy < pod.cores {
+                                                pod.busy += 1;
+                                                let st = self.sample_service(&pod.variant, &mut rng);
+                                                push(
+                                                    &mut heap,
+                                                    &mut seq,
+                                                    now + st,
+                                                    EventKind::Completion {
+                                                        pod_id: target,
+                                                        req: rid,
+                                                    },
+                                                );
+                                            } else {
+                                                pod.queue.push_back(rid);
+                                            }
+                                        } else {
+                                            metrics.record_request(RequestRecord {
+                                                arrival_s: requests[rid].arrival,
+                                                latency_s: f64::INFINITY,
+                                                accuracy: requests[rid].accuracy,
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    metrics.record_cost(now, cluster.billed_cores());
+                }
+                EventKind::AdapterTick => {
+                    let committed = cluster.committed_allocation();
+                    let decision = policy.decide(now, &rate_history, &committed);
+                    rate_history.clear();
+                    let profiles = &self.profiles;
+                    cluster.apply(&decision.target, now, |v| {
+                        profiles.get(v).map(|p| p.readiness_s).unwrap_or(10.0)
+                    });
+                    dispatcher.set_weights(&decision.quotas);
+                    metrics.record_prediction(now, decision.predicted_lambda);
+                    metrics.record_cost(now, cluster.billed_cores());
+                    decisions.push((now, decision));
+                }
+            }
+        }
+
+        SimResult {
+            metrics,
+            duration_s: duration,
+            decisions,
+        }
+    }
+}
+
+/// Least-loaded ready pod of a variant (queue+busy normalized by cores).
+fn pick_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>, variant: &str) -> Option<u64> {
+    cluster
+        .ready_pods_of(variant)
+        .iter()
+        .filter_map(|p| pods.get(&p.id).map(|ps| (p.id, ps)))
+        .min_by(|a, b| {
+            let load_a = (a.1.busy + a.1.queue.len()) as f64 / a.1.cores.max(1) as f64;
+            let load_b = (b.1.busy + b.1.queue.len()) as f64 / b.1.cores.max(1) as f64;
+            load_a.total_cmp(&load_b)
+        })
+        .map(|(id, _)| id)
+}
+
+/// Any ready pod at all (fallback when the chosen variant has none yet).
+fn any_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>) -> Option<u64> {
+    cluster
+        .pods()
+        .iter()
+        .filter(|p| p.is_ready() && pods.contains_key(&p.id))
+        .map(|p| p.id)
+        .min_by(|a, b| {
+            let pa = &pods[a];
+            let pb = &pods[b];
+            let la = (pa.busy + pa.queue.len()) as f64 / pa.cores.max(1) as f64;
+            let lb = (pb.busy + pb.queue.len()) as f64 / pb.cores.max(1) as f64;
+            la.total_cmp(&lb)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::StaticPolicy;
+    use crate::workload::Trace;
+
+    fn engine(seed: u64) -> SimEngine {
+        SimEngine::new(
+            ProfileSet::paper_like(),
+            SimConfig {
+                seed,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn steady_load_under_capacity_meets_slo() {
+        // resnet18 at 4 cores sustains ~92 rps in the model; offer 40.
+        let mut policy = StaticPolicy::new("resnet18", 4);
+        let res = engine(1).run(&mut policy, &Trace::steady(40.0, 120));
+        let s = res.metrics.summary("static", 120.0);
+        assert!(s.total_requests > 4000, "{s:?}");
+        assert_eq!(s.dropped, 0);
+        assert!(s.slo_violation_rate < 0.01, "{s:?}");
+        assert!(s.p99_latency_s < 0.75, "{s:?}");
+    }
+
+    #[test]
+    fn overload_violates_slo() {
+        // resnet152 at 2 cores sustains ~12 rps; offer 60.
+        let mut policy = StaticPolicy::new("resnet152", 2);
+        let res = engine(2).run(&mut policy, &Trace::steady(60.0, 60));
+        let s = res.metrics.summary("static", 60.0);
+        assert!(
+            s.slo_violation_rate > 0.3,
+            "expected heavy violations, got {s:?}"
+        );
+    }
+
+    #[test]
+    fn served_accuracy_matches_variant() {
+        let mut policy = StaticPolicy::new("resnet50", 4);
+        let res = engine(3).run(&mut policy, &Trace::steady(20.0, 60));
+        let s = res.metrics.summary("static", 60.0);
+        assert!((s.avg_accuracy - 76.13).abs() < 1e-6);
+        assert!((s.avg_accuracy_loss - (78.31 - 76.13)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cost_tracks_allocation() {
+        let mut policy = StaticPolicy::new("resnet18", 6);
+        let res = engine(4).run(&mut policy, &Trace::steady(10.0, 100));
+        let s = res.metrics.summary("static", 100.0);
+        assert!((s.avg_cost_cores - 6.0).abs() < 0.5, "{s:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut p1 = StaticPolicy::new("resnet18", 4);
+        let mut p2 = StaticPolicy::new("resnet18", 4);
+        let r1 = engine(7).run(&mut p1, &Trace::steady(30.0, 60));
+        let r2 = engine(7).run(&mut p2, &Trace::steady(30.0, 60));
+        let s1 = r1.metrics.summary("a", 60.0);
+        let s2 = r2.metrics.summary("b", 60.0);
+        assert_eq!(s1.total_requests, s2.total_requests);
+        assert_eq!(s1.p99_latency_s, s2.p99_latency_s);
+    }
+}

@@ -1,0 +1,184 @@
+//! Exact branch-and-bound solver (scales past brute force).
+//!
+//! Addresses the paper's §7 "Scalability with ML" concern exactly instead of
+//! approximately: depth-first over variants (most accurate first), bounding
+//! each partial assignment with an optimistic completion: the remaining load
+//! is served at the highest possible accuracy, and the *cheapest possible*
+//! number of additional cores (remaining capacity gap divided by the best
+//! remaining per-core throughput) is still charged — a valid upper bound
+//! that prunes aggressively at large budgets.
+
+use super::{score, Allocation, Problem, Solver};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BranchBoundSolver;
+
+struct Ctx<'a> {
+    problem: &'a Problem,
+    order: Vec<usize>,
+    caps: Vec<usize>,
+    max_acc: f64,
+    /// Best throughput-per-core over all variants (bound ingredient).
+    best_rate_per_core: f64,
+    best: Option<(f64, Vec<usize>)>,
+    visited: u64,
+}
+
+impl Solver for BranchBoundSolver {
+    fn name(&self) -> &'static str {
+        "branch_bound"
+    }
+
+    fn solve(&self, problem: &Problem) -> Option<Allocation> {
+        if problem.variants.is_empty() {
+            return None;
+        }
+        let m = problem.variants.len();
+        // Visit most accurate variants first so good solutions surface early
+        // and the bound tightens fast.
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            problem.variants[b]
+                .accuracy
+                .total_cmp(&problem.variants[a].accuracy)
+        });
+        let caps: Vec<usize> = (0..m).map(|i| problem.useful_max_cores(i)).collect();
+        let max_acc = problem
+            .variants
+            .iter()
+            .map(|v| v.accuracy)
+            .fold(0.0, f64::max);
+        let best_rate_per_core = problem
+            .variants
+            .iter()
+            .filter_map(|v| {
+                if problem.budget >= 1 {
+                    Some(v.throughput[1.min(problem.budget)])
+                } else {
+                    None
+                }
+            })
+            .fold(0.0, f64::max)
+            .max(1e-9);
+
+        let mut ctx = Ctx {
+            problem,
+            order,
+            caps,
+            max_acc,
+            best_rate_per_core,
+            best: None,
+            visited: 0,
+        };
+        dfs(&mut ctx, &mut vec![0usize; m], 0, problem.budget, 0.0, 0.0);
+        ctx.best.and_then(|(_, cores)| score(problem, &cores))
+    }
+}
+
+/// `filled`: λ already absorbable by decided variants (greedy order —
+/// variants are decided in descending accuracy, which *is* the greedy fill
+/// order); `acc_sum`: Σ quota·accuracy over that fill.
+fn dfs(
+    ctx: &mut Ctx,
+    cores: &mut Vec<usize>,
+    depth: usize,
+    left: usize,
+    filled: f64,
+    acc_sum: f64,
+) {
+    ctx.visited += 1;
+    if depth == ctx.order.len() {
+        if let Some((objective, _)) = super::score_fast(ctx.problem, cores) {
+            if ctx.best.as_ref().map_or(true, |(b, _)| objective > *b) {
+                ctx.best = Some((objective, cores.clone()));
+            }
+        }
+        return;
+    }
+    // Optimistic bound:
+    //  * accuracy — the unabsorbed load can at best be served by the most
+    //    accurate *remaining* variant (they are visited in descending
+    //    accuracy, so that is order[depth]);
+    //  * cost — at least the committed cores plus the cheapest completion
+    //    that could close the capacity gap at the best per-core rate.
+    let lambda = ctx.problem.lambda;
+    let committed: usize = cores.iter().sum();
+    let gap = (lambda - filled).max(0.0);
+    let min_extra = ((gap / ctx.best_rate_per_core).ceil() as usize).min(left);
+    let next_acc = ctx.problem.variants[ctx.order[depth]].accuracy;
+    let opt_aa = if lambda > 0.0 {
+        (acc_sum + gap * next_acc) / lambda
+    } else {
+        ctx.max_acc
+    };
+    let bound = ctx.problem.weights.alpha * opt_aa
+        - ctx.problem.weights.beta * (committed + min_extra) as f64;
+    if let Some((b, _)) = &ctx.best {
+        if bound <= *b {
+            return;
+        }
+    }
+    let i = ctx.order[depth];
+    let cap = ctx.caps[i].min(left);
+    // Try larger allocations first: feasible (high-objective) solutions
+    // appear sooner, tightening the bound.
+    for n in (0..=cap).rev() {
+        if !ctx.problem.slo_ok(i, n) {
+            continue;
+        }
+        cores[i] = n;
+        let q = (lambda - filled).max(0.0).min(ctx.problem.variants[i].throughput[n]);
+        dfs(
+            ctx,
+            cores,
+            depth + 1,
+            left - n,
+            filled + q,
+            acc_sum + q * ctx.problem.variants[i].accuracy,
+        );
+    }
+    cores[i] = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::problem;
+    use super::super::BruteForceSolver;
+    use super::*;
+    use crate::solver::Solver as _;
+
+    #[test]
+    fn agrees_with_brute_force_on_objective() {
+        for (lambda, budget, beta) in [
+            (75.0, 20, 0.05),
+            (40.0, 14, 0.05),
+            (75.0, 8, 0.2),
+            (120.0, 24, 0.0125),
+            (10.0, 4, 0.05),
+            (0.0, 10, 0.05),
+        ] {
+            let p = problem(lambda, budget, beta);
+            let bb = BranchBoundSolver.solve(&p).unwrap();
+            let bf = BruteForceSolver.solve(&p).unwrap();
+            assert!(
+                (bb.objective - bf.objective).abs() < 1e-9,
+                "λ={lambda} B={budget} β={beta}: bb={} bf={}",
+                bb.objective,
+                bf.objective
+            );
+        }
+    }
+
+    #[test]
+    fn handles_large_budget_quickly() {
+        let p = problem(400.0, 64, 0.05);
+        let t0 = std::time::Instant::now();
+        let alloc = BranchBoundSolver.solve(&p).unwrap();
+        assert!(alloc.feasible);
+        assert!(
+            t0.elapsed().as_secs_f64() < 5.0,
+            "took {:?}",
+            t0.elapsed()
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Exact brute-force enumeration over core vectors (the paper's solver).
+
+use super::{score, Allocation, Problem, Solver};
+
+/// Enumerates every weak composition of ≤ B cores over the variants, with
+/// two prunings that keep exactness:
+/// * per-variant cap at `useful_max_cores` — past the allocation whose
+///   throughput already covers λ, more cores only add cost;
+/// * SLO-infeasible per-variant allocations are skipped outright.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BruteForceSolver;
+
+impl BruteForceSolver {
+    /// Number of core vectors the enumeration will visit (diagnostics).
+    pub fn search_space(problem: &Problem) -> u64 {
+        fn count(problem: &Problem, i: usize, left: usize) -> u64 {
+            if i == problem.variants.len() {
+                return 1;
+            }
+            let cap = problem.useful_max_cores(i).min(left);
+            (0..=cap)
+                .filter(|&n| problem.slo_ok(i, n))
+                .map(|n| count(problem, i + 1, left - n))
+                .sum()
+        }
+        count(problem, 0, problem.budget)
+    }
+}
+
+impl Solver for BruteForceSolver {
+    fn name(&self) -> &'static str {
+        "brute_force"
+    }
+
+    fn solve(&self, problem: &Problem) -> Option<Allocation> {
+        if problem.variants.is_empty() {
+            return None;
+        }
+        let m = problem.variants.len();
+        let caps: Vec<usize> = (0..m).map(|i| problem.useful_max_cores(i)).collect();
+        let mut cores = vec![0usize; m];
+        // Search with the allocation-free scorer; materialize only the
+        // winner (EXPERIMENTS.md §Perf: ~40x over scoring via Allocation).
+        let mut best: Option<(f64, Vec<usize>)> = None;
+
+        fn recurse(
+            problem: &Problem,
+            caps: &[usize],
+            cores: &mut Vec<usize>,
+            i: usize,
+            left: usize,
+            best: &mut Option<(f64, Vec<usize>)>,
+        ) {
+            if i == cores.len() {
+                if let Some((objective, _feasible)) = super::score_fast(problem, cores) {
+                    if best.as_ref().map_or(true, |(b, _)| objective > *b) {
+                        *best = Some((objective, cores.clone()));
+                    }
+                }
+                return;
+            }
+            let cap = caps[i].min(left);
+            for n in 0..=cap {
+                if !problem.slo_ok(i, n) {
+                    continue;
+                }
+                cores[i] = n;
+                recurse(problem, caps, cores, i + 1, left - n, best);
+            }
+            cores[i] = 0;
+        }
+
+        recurse(problem, &caps, &mut cores, 0, problem.budget, &mut best);
+        best.and_then(|(_, cores)| score(problem, &cores))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::problem;
+    use super::*;
+
+    #[test]
+    fn finds_feasible_allocation_under_budget() {
+        let p = problem(75.0, 20, 0.05);
+        let alloc = BruteForceSolver.solve(&p).unwrap();
+        assert!(alloc.feasible, "{alloc:?}");
+        assert!(alloc.total_cores() <= 20);
+        assert!(alloc.capacity >= 75.0);
+    }
+
+    #[test]
+    fn prefers_accurate_mix_when_cost_weight_is_low() {
+        let lo = BruteForceSolver.solve(&problem(75.0, 20, 0.0125)).unwrap();
+        let hi = BruteForceSolver.solve(&problem(75.0, 20, 0.2)).unwrap();
+        assert!(
+            lo.average_accuracy >= hi.average_accuracy,
+            "lo {} hi {}",
+            lo.average_accuracy,
+            hi.average_accuracy
+        );
+        assert!(lo.resource_cost >= hi.resource_cost);
+    }
+
+    #[test]
+    fn tight_budget_still_serves_with_cheap_variant() {
+        // 4 cores can't host resnet152 capacity for 75 rps; brute force must
+        // fall back to cheaper variants and stay feasible.
+        let p = problem(75.0, 4, 0.05);
+        let alloc = BruteForceSolver.solve(&p).unwrap();
+        assert!(alloc.feasible, "{alloc:?}");
+        assert!(alloc.cores_of("resnet18") > 0 || alloc.cores_of("resnet34") > 0);
+    }
+
+    #[test]
+    fn overload_returns_least_bad_allocation() {
+        // λ far beyond any capacity at the budget: still returns something,
+        // flagged infeasible, using all cores on the highest-throughput mix.
+        let p = problem(10_000.0, 8, 0.05);
+        let alloc = BruteForceSolver.solve(&p).unwrap();
+        assert!(!alloc.feasible);
+        assert_eq!(alloc.total_cores(), 8);
+    }
+
+    #[test]
+    fn search_space_is_pruned() {
+        let p = problem(75.0, 20, 0.05);
+        let space = BruteForceSolver::search_space(&p);
+        // unpruned C(25,5) = 53130; pruning must cut it
+        assert!(space < 53_130, "space {space}");
+        assert!(space > 100);
+    }
+
+    #[test]
+    fn zero_lambda_prefers_empty_or_minimal() {
+        let p = problem(0.0, 20, 0.05);
+        let alloc = BruteForceSolver.solve(&p).unwrap();
+        assert!(alloc.feasible);
+        // with no load, cost dominates: nothing (or almost nothing) allocated
+        assert!(alloc.total_cores() <= 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Greedy heuristic solver (ablation baseline).
+//!
+//! Marginal-utility greedy: starting from the cheapest feasible base, it
+//! repeatedly moves one core to whichever variant improves the objective
+//! most.  Fast (O(B·M) scores) but not exact — the ablation bench
+//! (`micro_hotpaths` + EXPERIMENTS.md) quantifies the optimality gap that
+//! justifies the paper's exact enumeration.
+
+use super::{score, score_fast, Allocation, Problem, Solver};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GreedySolver;
+
+impl Solver for GreedySolver {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn solve(&self, problem: &Problem) -> Option<Allocation> {
+        if problem.variants.is_empty() {
+            return None;
+        }
+        let m = problem.variants.len();
+        let mut cores = vec![0usize; m];
+        let (mut best_obj, mut best_feasible) = score_fast(problem, &cores)?;
+
+        // Phase 1: reach feasibility by adding the core with the best
+        // capacity-per-objective-loss until capacity covers λ.
+        loop {
+            if best_feasible || cores.iter().sum::<usize>() >= problem.budget {
+                break;
+            }
+            let mut improved: Option<(usize, f64, bool)> = None;
+            for i in 0..m {
+                if cores.iter().sum::<usize>() >= problem.budget {
+                    break;
+                }
+                cores[i] += 1;
+                if problem.slo_ok(i, cores[i]) {
+                    if let Some((obj, feas)) = score_fast(problem, &cores) {
+                        if improved.as_ref().map_or(true, |&(_, b, _)| obj > b) {
+                            improved = Some((i, obj, feas));
+                        }
+                    }
+                }
+                cores[i] -= 1;
+            }
+            match improved {
+                Some((i, obj, feas)) => {
+                    cores[i] += 1;
+                    best_obj = obj;
+                    best_feasible = feas;
+                }
+                None => break,
+            }
+        }
+
+        // Phase 2: local moves — single-core add / remove / transfer while
+        // the objective improves.
+        let mut changed = true;
+        while changed {
+            changed = false;
+            let mut candidate_obj = best_obj;
+            let mut candidate_cores = cores.clone();
+            for i in 0..m {
+                for j in 0..m {
+                    let mut trial = cores.clone();
+                    if i == j {
+                        // pure removal
+                        if trial[i] == 0 {
+                            continue;
+                        }
+                        trial[i] -= 1;
+                    } else {
+                        // transfer i -> j
+                        if trial[i] == 0 || trial.iter().sum::<usize>() > problem.budget {
+                            continue;
+                        }
+                        trial[i] -= 1;
+                        trial[j] += 1;
+                        if !problem.slo_ok(j, trial[j]) {
+                            continue;
+                        }
+                    }
+                    if let Some((obj, _)) = score_fast(problem, &trial) {
+                        if obj > candidate_obj + 1e-12 {
+                            candidate_obj = obj;
+                            candidate_cores = trial;
+                        }
+                    }
+                }
+                // pure addition
+                if cores.iter().sum::<usize>() < problem.budget {
+                    let mut trial = cores.clone();
+                    trial[i] += 1;
+                    if problem.slo_ok(i, trial[i]) {
+                        if let Some((obj, _)) = score_fast(problem, &trial) {
+                            if obj > candidate_obj + 1e-12 {
+                                candidate_obj = obj;
+                                candidate_cores = trial;
+                            }
+                        }
+                    }
+                }
+            }
+            if candidate_obj > best_obj + 1e-12 {
+                best_obj = candidate_obj;
+                cores = candidate_cores;
+                changed = true;
+            }
+        }
+        let _ = best_feasible;
+        score(problem, &cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::problem;
+    use super::super::BruteForceSolver;
+    use super::*;
+
+    #[test]
+    fn reaches_feasibility_when_possible() {
+        let p = problem(75.0, 20, 0.05);
+        let alloc = GreedySolver.solve(&p).unwrap();
+        assert!(alloc.feasible, "{alloc:?}");
+        assert!(alloc.total_cores() <= 20);
+    }
+
+    #[test]
+    fn gap_to_exact_is_bounded() {
+        // Greedy may be suboptimal but should land within a few accuracy
+        // points of the exact objective on paper-scale instances.
+        for (lambda, budget) in [(75.0, 20), (40.0, 14), (100.0, 24)] {
+            let p = problem(lambda, budget, 0.05);
+            let g = GreedySolver.solve(&p).unwrap();
+            let e = BruteForceSolver.solve(&p).unwrap();
+            assert!(g.objective <= e.objective + 1e-9);
+            assert!(
+                e.objective - g.objective < 5.0,
+                "gap {} at λ={lambda} B={budget}",
+                e.objective - g.objective
+            );
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! The InfAdapter ILP (paper Eq. 1) and its solvers.
+//!
+//! Decision variables: per variant m, an integer core count `n_m` and a
+//! workload quota `λ_m`.  Objective: maximize
+//!
+//! ```text
+//!   α·AA − (β·RC + γ·LC)
+//!   AA = Σ (λ_m / λ)·acc_m     RC = Σ n_m      LC = max tc_m·rt_m
+//! ```
+//!
+//! subject to aggregate stability `Σ th_m(n_m) ≥ λ`, per-variant stability
+//! `λ_m ≤ th_m(n_m)`, the latency SLO `p_m(n_m) ≤ L` for active variants,
+//! and the budget `Σ n_m ≤ B`.
+//!
+//! Key structural fact (DESIGN.md §5): **given a core vector, the optimal
+//! quota split is greedy** — fill the most accurate active variants to
+//! capacity first.  So the search space is core vectors only, each scored
+//! in O(M); the paper notes its own solution enumerates all configurations.
+//!
+//! Three solvers share the scoring code:
+//! * [`BruteForceSolver`] — exact enumeration of all weak compositions
+//!   (the paper's approach; with dominance pruning).
+//! * [`BranchBoundSolver`] — exact, prunes with an accuracy upper bound
+//!   (the paper's "scalability with ML" future-work axis, solved exactly).
+//! * [`GreedySolver`] — fast heuristic baseline for the ablation bench.
+
+mod branch_bound;
+mod brute;
+mod greedy;
+
+pub use branch_bound::BranchBoundSolver;
+pub use brute::BruteForceSolver;
+pub use greedy::GreedySolver;
+
+use crate::config::ObjectiveWeights;
+use crate::profiler::ProfileSet;
+use std::collections::BTreeMap;
+
+/// One variant's inputs to the ILP.
+#[derive(Debug, Clone)]
+pub struct VariantInput {
+    pub name: String,
+    pub accuracy: f64,
+    /// `th_m(n)` for n in 0..=budget (precomputed from the regression).
+    pub throughput: Vec<f64>,
+    /// `p_m(n)` in seconds for n in 0..=budget.
+    pub latency: Vec<f64>,
+    /// Readiness time `rt_m`, seconds.
+    pub readiness_s: f64,
+    /// Cores currently allocated (0 = not loaded); drives `tc_m`.
+    pub current_cores: usize,
+}
+
+/// The full problem instance.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub variants: Vec<VariantInput>,
+    /// Predicted workload λ (requests/second).
+    pub lambda: f64,
+    /// Latency SLO L in seconds.
+    pub slo_s: f64,
+    /// CPU budget B.
+    pub budget: usize,
+    pub weights: ObjectiveWeights,
+}
+
+impl Problem {
+    /// Build a problem from profiles (the normal path).
+    pub fn from_profiles(
+        profiles: &ProfileSet,
+        lambda: f64,
+        slo_s: f64,
+        budget: usize,
+        weights: ObjectiveWeights,
+        current: &BTreeMap<String, usize>,
+    ) -> Self {
+        let variants = profiles
+            .profiles
+            .iter()
+            .map(|p| VariantInput {
+                name: p.name.clone(),
+                accuracy: p.accuracy,
+                throughput: (0..=budget).map(|n| p.throughput(n)).collect(),
+                latency: (0..=budget).map(|n| p.latency(n)).collect(),
+                readiness_s: p.readiness_s,
+                current_cores: current.get(&p.name).copied().unwrap_or(0),
+            })
+            .collect();
+        Self {
+            variants,
+            lambda,
+            slo_s,
+            budget,
+            weights,
+        }
+    }
+
+    /// Max cores worth giving variant i: beyond the point where throughput
+    /// already covers λ, additional cores only add cost (dominance pruning).
+    pub(crate) fn useful_max_cores(&self, i: usize) -> usize {
+        let v = &self.variants[i];
+        for n in 0..=self.budget {
+            if v.throughput[n] >= self.lambda {
+                return n;
+            }
+        }
+        self.budget
+    }
+
+    /// Is `n` cores on variant `i` SLO-feasible (n == 0 is always allowed)?
+    pub(crate) fn slo_ok(&self, i: usize, n: usize) -> bool {
+        n == 0 || self.variants[i].latency[n] <= self.slo_s
+    }
+}
+
+/// A solved allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    /// variant name -> (cores, quota λ_m). Only active variants appear.
+    pub assignments: BTreeMap<String, (usize, f64)>,
+    pub objective: f64,
+    /// Weighted average accuracy AA (percentage points).
+    pub average_accuracy: f64,
+    /// Resource cost RC = Σ n_m.
+    pub resource_cost: usize,
+    /// Loading cost LC = max tc_m · rt_m (seconds).
+    pub loading_cost: f64,
+    /// Aggregate capacity Σ th_m(n_m) at this allocation.
+    pub capacity: f64,
+    /// True if aggregate capacity covers λ.
+    pub feasible: bool,
+}
+
+impl Allocation {
+    pub fn cores_of(&self, name: &str) -> usize {
+        self.assignments.get(name).map(|&(c, _)| c).unwrap_or(0)
+    }
+
+    pub fn quota_of(&self, name: &str) -> f64 {
+        self.assignments.get(name).map(|&(_, q)| q).unwrap_or(0.0)
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.assignments.values().map(|&(c, _)| c).sum()
+    }
+
+    /// Quota weights for the dispatcher, normalized to sum 1.
+    pub fn quota_weights(&self) -> Vec<(String, f64)> {
+        let total: f64 = self.assignments.values().map(|&(_, q)| q).sum();
+        self.assignments
+            .iter()
+            .filter(|(_, &(_, q))| q > 0.0)
+            .map(|(n, &(_, q))| (n.clone(), if total > 0.0 { q / total } else { 0.0 }))
+            .collect()
+    }
+}
+
+/// Allocation-free scoring: (objective, feasible) for a core vector, or
+/// None if an active variant violates the SLO.  This is the enumeration
+/// hot path — no heap traffic (see EXPERIMENTS.md §Perf).
+pub(crate) fn score_fast(problem: &Problem, cores: &[usize]) -> Option<(f64, bool)> {
+    debug_assert_eq!(cores.len(), problem.variants.len());
+    let m = cores.len();
+    let mut capacity = 0.0;
+    for (i, &n) in cores.iter().enumerate() {
+        if !problem.slo_ok(i, n) {
+            return None;
+        }
+        capacity += problem.variants[i].throughput[n];
+    }
+    // Greedy quota fill in descending accuracy (selection loop, no sort
+    // allocation; M is small).
+    let mut remaining = problem.lambda;
+    let mut acc_weighted = 0.0;
+    let mut used = [false; 64];
+    debug_assert!(m <= 64, "more than 64 variants needs a heap scratch");
+    let mut best_active_acc: f64 = 0.0;
+    let mut any_active = false;
+    loop {
+        let mut pick: Option<usize> = None;
+        for i in 0..m {
+            if cores[i] == 0 || used[i] {
+                continue;
+            }
+            if pick.map_or(true, |j| {
+                problem.variants[i].accuracy > problem.variants[j].accuracy
+            }) {
+                pick = Some(i);
+            }
+        }
+        let Some(i) = pick else { break };
+        used[i] = true;
+        if !any_active {
+            best_active_acc = problem.variants[i].accuracy;
+            any_active = true;
+        }
+        let q = remaining.min(problem.variants[i].throughput[cores[i]]);
+        remaining -= q;
+        acc_weighted += q * problem.variants[i].accuracy;
+    }
+    let feasible = remaining <= 1e-9 && capacity >= problem.lambda - 1e-9;
+    let average_accuracy = if problem.lambda > 0.0 {
+        acc_weighted / problem.lambda
+    } else if any_active {
+        best_active_acc
+    } else {
+        0.0
+    };
+    let resource_cost: usize = cores.iter().sum();
+    let mut loading_cost = 0.0f64;
+    for (i, &n) in cores.iter().enumerate() {
+        if n > 0 && problem.variants[i].current_cores == 0 {
+            loading_cost = loading_cost.max(problem.variants[i].readiness_s);
+        }
+    }
+    let w = problem.weights;
+    let shortfall = (problem.lambda - capacity).max(0.0);
+    let objective = w.alpha * average_accuracy
+        - (w.beta * resource_cost as f64 + w.gamma * loading_cost)
+        - if feasible { 0.0 } else { 1e3 + shortfall };
+    Some((objective, feasible))
+}
+
+/// Score a core vector: greedy quota fill (most accurate first), then the
+/// paper's objective.  Returns None if any active variant violates the SLO.
+/// Materializes the full [`Allocation`] — use [`score_fast`] in search loops.
+pub(crate) fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
+    debug_assert_eq!(cores.len(), problem.variants.len());
+    let mut capacity = 0.0;
+    for (i, &n) in cores.iter().enumerate() {
+        if !problem.slo_ok(i, n) {
+            return None;
+        }
+        capacity += problem.variants[i].throughput[n];
+    }
+    // Greedy quota: most accurate active variants absorb load first.
+    let mut order: Vec<usize> = (0..cores.len()).filter(|&i| cores[i] > 0).collect();
+    order.sort_by(|&a, &b| {
+        problem.variants[b]
+            .accuracy
+            .total_cmp(&problem.variants[a].accuracy)
+    });
+    let mut remaining = problem.lambda;
+    let mut assignments = BTreeMap::new();
+    let mut acc_weighted = 0.0;
+    for &i in &order {
+        let v = &problem.variants[i];
+        let q = remaining.min(v.throughput[cores[i]]);
+        remaining -= q;
+        acc_weighted += q * v.accuracy;
+        assignments.insert(v.name.clone(), (cores[i], q));
+    }
+    let feasible = remaining <= 1e-9 && capacity >= problem.lambda - 1e-9;
+    let average_accuracy = if problem.lambda > 0.0 {
+        acc_weighted / problem.lambda
+    } else {
+        // No load: AA is the accuracy of the best active variant (serving
+        // readiness), or 0 with nothing active.
+        order
+            .first()
+            .map(|&i| problem.variants[i].accuracy)
+            .unwrap_or(0.0)
+    };
+    let resource_cost: usize = cores.iter().sum();
+    let loading_cost = cores
+        .iter()
+        .enumerate()
+        .filter(|&(i, &n)| n > 0 && problem.variants[i].current_cores == 0)
+        .map(|(i, _)| problem.variants[i].readiness_s)
+        .fold(0.0, f64::max);
+    let w = problem.weights;
+    // Infeasible allocations are heavily penalized by their capacity gap so
+    // the solver still returns the least-bad option when λ exceeds what the
+    // budget can serve (the paper's "even the least accurate variant cannot
+    // respond" regime).
+    let shortfall = (problem.lambda - capacity).max(0.0);
+    let objective = w.alpha * average_accuracy
+        - (w.beta * resource_cost as f64 + w.gamma * loading_cost)
+        - if feasible { 0.0 } else { 1e3 + shortfall };
+    Some(Allocation {
+        assignments,
+        objective,
+        average_accuracy,
+        resource_cost,
+        loading_cost,
+        capacity,
+        feasible,
+    })
+}
+
+/// Common solver interface.
+pub trait Solver {
+    fn name(&self) -> &'static str;
+    /// Best allocation for the problem; None only if the problem is empty.
+    fn solve(&self, problem: &Problem) -> Option<Allocation>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn problem(lambda: f64, budget: usize, beta: f64) -> Problem {
+        let profiles = ProfileSet::paper_like();
+        Problem::from_profiles(
+            &profiles,
+            lambda,
+            0.75,
+            budget,
+            ObjectiveWeights {
+                alpha: 1.0,
+                beta,
+                gamma: 0.001,
+            },
+            &BTreeMap::new(),
+        )
+    }
+
+    #[test]
+    fn score_fills_most_accurate_first() {
+        let p = problem(50.0, 20, 0.05);
+        // resnet18 gets 2 cores (cap ~46), resnet152 gets 8 (cap ~49)
+        let cores = vec![2, 0, 0, 0, 8];
+        let alloc = score(&p, &cores).unwrap();
+        assert!(alloc.feasible);
+        // resnet152 (most accurate) absorbs to capacity first
+        let q152 = alloc.quota_of("resnet152");
+        let q18 = alloc.quota_of("resnet18");
+        assert!(q152 > q18, "q152={q152} q18={q18}");
+        assert!((q152 + q18 - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn score_flags_infeasible_capacity() {
+        let p = problem(1000.0, 4, 0.05);
+        let alloc = score(&p, &[4, 0, 0, 0, 0]).unwrap();
+        assert!(!alloc.feasible);
+        assert!(alloc.objective < -100.0);
+    }
+
+    #[test]
+    fn quota_weights_normalize() {
+        let p = problem(60.0, 20, 0.05);
+        let alloc = score(&p, &[3, 0, 0, 0, 6]).unwrap();
+        let w: f64 = alloc.quota_weights().iter().map(|(_, q)| q).sum();
+        assert!((w - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loading_cost_counts_only_new_variants() {
+        let profiles = ProfileSet::paper_like();
+        let mut current = BTreeMap::new();
+        current.insert("resnet18".to_string(), 4);
+        let p = Problem::from_profiles(
+            &profiles,
+            10.0,
+            0.75,
+            20,
+            ObjectiveWeights::default(),
+            &current,
+        );
+        // keeping resnet18 only: no loading cost
+        let keep = score(&p, &[4, 0, 0, 0, 0]).unwrap();
+        assert_eq!(keep.loading_cost, 0.0);
+        // adding resnet152: pays its readiness time
+        let add = score(&p, &[4, 0, 0, 0, 2]).unwrap();
+        assert!((add.loading_cost - 16.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny timing harness for the `harness = false` benches (no criterion in
+//! the offline build).
+//!
+//! [`bench`] warms up, runs timed iterations until a wall budget or
+//! iteration cap, and reports mean / p50 / p99 per-iteration time.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() > 0.0 {
+            1.0 / self.mean.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}  min {:>10.3?}  ({} iters, {:.1}/s)",
+            self.mean,
+            self.p50,
+            self.p99,
+            self.min,
+            self.iters,
+            self.per_sec()
+        )
+    }
+}
+
+/// Time `f` repeatedly: `warmup` untimed runs, then iterate until `budget`
+/// wall time or `max_iters`, whichever first (at least one iteration).
+pub fn bench<F: FnMut()>(warmup: usize, budget: Duration, max_iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    let mut samples: Vec<Duration> = Vec::new();
+    while (samples.is_empty() || start.elapsed() < budget) && samples.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let q = |p: f64| samples[((p * samples.len() as f64) as usize).min(samples.len() - 1)];
+    BenchStats {
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: q(0.50),
+        p99: q(0.99),
+        min: samples[0],
+    }
+}
+
+/// Convenience: run + print one named benchmark.
+pub fn run_named<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    let stats = bench(2, Duration::from_secs(2), 10_000, f);
+    println!("{name:<40} {stats}");
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_statistics() {
+        let stats = bench(1, Duration::from_millis(50), 1000, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(stats.iters >= 1);
+        assert!(stats.min <= stats.p50 && stats.p50 <= stats.p99);
+        assert!(stats.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn respects_iteration_cap() {
+        let stats = bench(0, Duration::from_secs(10), 5, || {});
+        assert_eq!(stats.iters, 5);
+    }
+}

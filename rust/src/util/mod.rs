@@ -1,0 +1,15 @@
+//! Self-built substrates (the build is fully offline: only the `xla` crate
+//! and `anyhow` are external — see Cargo.toml).
+//!
+//! * [`rng`] — xoshiro256++ PRNG with normal / exponential / Poisson /
+//!   lognormal samplers.
+//! * [`json`] — minimal, correct JSON value codec (manifest/config/profiles
+//!   interchange with the Python layer).
+//! * [`mpmc`] — multi-producer multi-consumer FIFO channel (worker pools).
+//! * [`benchkit`] — timing harness for the `harness = false` benches.
+
+pub mod benchkit;
+pub mod json;
+pub mod mpmc;
+pub mod rng;
+pub mod testutil;

@@ -1,0 +1,86 @@
+//! Arrival processes: turn a per-second rate series into request timestamps.
+
+use super::RateSeries;
+use crate::util::rng::Rng;
+
+/// Generates concrete arrival timestamps from a rate trace.
+pub struct ArrivalProcess;
+
+impl ArrivalProcess {
+    /// Non-homogeneous Poisson arrivals via per-second thinning: within
+    /// second `t` the process is homogeneous with rate `rates[t]`.
+    pub fn poisson(series: &RateSeries, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut out = Vec::with_capacity(series.total().ceil() as usize + 16);
+        for (t, &rate) in series.rates.iter().enumerate() {
+            if rate <= 0.0 {
+                continue;
+            }
+            let mut clock = 0.0f64;
+            loop {
+                // Exponential inter-arrival within this second.
+                clock += rng.exp1() / rate;
+                if clock >= 1.0 {
+                    break;
+                }
+                out.push(t as f64 + clock);
+            }
+        }
+        out
+    }
+
+    /// Deterministic evenly-spaced arrivals (tests; worst-case-free load).
+    pub fn uniform(series: &RateSeries) -> Vec<f64> {
+        let mut out = Vec::with_capacity(series.total().ceil() as usize + 16);
+        for (t, &rate) in series.rates.iter().enumerate() {
+            let n = rate.round() as usize;
+            for i in 0..n {
+                out.push(t as f64 + (i as f64 + 0.5) / n as f64);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    #[test]
+    fn poisson_count_matches_expectation() {
+        let series = Trace::steady(50.0, 200);
+        let arrivals = ArrivalProcess::poisson(&series, 42);
+        let expected = series.total();
+        let got = arrivals.len() as f64;
+        // 10k expected arrivals: 5-sigma band ~ +-500
+        assert!(
+            (got - expected).abs() < 500.0,
+            "got {got}, expected {expected}"
+        );
+    }
+
+    #[test]
+    fn poisson_is_sorted_and_in_range() {
+        let series = Trace::bursty(30.0, 90.0, 300, 5);
+        let arrivals = ArrivalProcess::poisson(&series, 1);
+        assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+        assert!(arrivals.iter().all(|&t| t >= 0.0 && t < 300.0));
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let series = Trace::steady(10.0, 50);
+        assert_eq!(
+            ArrivalProcess::poisson(&series, 9),
+            ArrivalProcess::poisson(&series, 9)
+        );
+    }
+
+    #[test]
+    fn uniform_matches_rate_exactly() {
+        let series = Trace::steady(7.0, 10);
+        let arrivals = ArrivalProcess::uniform(&series);
+        assert_eq!(arrivals.len(), 70);
+    }
+}

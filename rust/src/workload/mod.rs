@@ -1,0 +1,67 @@
+//! Workload substrate: rate traces and arrival processes.
+//!
+//! The paper evaluates on a 20-minute sample of the archiveteam Twitter
+//! trace plus a non-bursty sample.  That trace is not redistributable here,
+//! so [`Trace`] generators synthesize the same *shapes* the paper describes
+//! (see DESIGN.md §4):
+//! * [`Trace::bursty`] — steady (0-600 s), spike (600-800 s), gradual decay
+//!   (800-1000 s), return to base (1000-1200 s): exactly Figure 5's phases.
+//! * [`Trace::non_bursty`] — smooth diurnal-style oscillation (Figure 8).
+//! * [`Trace::twitter_like`] — seasonal baseline + AR(1) noise + Poisson
+//!   spikes; the same recipe `python/compile/tracegen.py` trains the LSTM on.
+//! * [`Trace::from_csv`] — plug in a real trace.
+//!
+//! [`ArrivalProcess`] turns a rate trace into concrete request timestamps
+//! (non-homogeneous Poisson by default, or deterministic for tests).
+
+mod arrivals;
+mod traces;
+
+pub use arrivals::ArrivalProcess;
+pub use traces::Trace;
+
+/// Per-second request rates plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct RateSeries {
+    /// requests/second, one entry per second.
+    pub rates: Vec<f64>,
+    pub name: String,
+}
+
+impl RateSeries {
+    pub fn duration_s(&self) -> usize {
+        self.rates.len()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.rates.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.rates.is_empty() {
+            return 0.0;
+        }
+        self.rates.iter().sum::<f64>() / self.rates.len() as f64
+    }
+
+    /// Total expected number of requests.
+    pub fn total(&self) -> f64 {
+        self.rates.iter().sum()
+    }
+
+    /// Multiply every rate by `k` (host-scale a paper-scale trace).
+    pub fn scaled(&self, k: f64) -> Self {
+        Self {
+            rates: self.rates.iter().map(|r| r * k).collect(),
+            name: format!("{}*{k:.3}", self.name),
+        }
+    }
+
+    /// Clip to the first `seconds` seconds.
+    pub fn truncated(&self, seconds: usize) -> Self {
+        Self {
+            rates: self.rates[..seconds.min(self.rates.len())].to_vec(),
+            name: self.name.clone(),
+        }
+    }
+}

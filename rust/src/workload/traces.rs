@@ -1,0 +1,217 @@
+//! Trace generators (see module docs in `mod.rs`).
+
+use super::RateSeries;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Namespace for the generators.
+pub struct Trace;
+
+impl Trace {
+    /// Constant-rate trace (tests, profiling saturation points).
+    pub fn steady(rps: f64, seconds: usize) -> RateSeries {
+        RateSeries {
+            rates: vec![rps; seconds],
+            name: format!("steady-{rps}rps"),
+        }
+    }
+
+    /// The paper's bursty 20-minute sample (Figure 5):
+    /// steady base, sharp spike, gradual decay, return to base.
+    ///
+    /// `base` is the steady rate, `peak` the spike top.  Defaults in the
+    /// figure benches: base 40, peak 100 (the published plot's axis scale).
+    pub fn bursty(base: f64, peak: f64, seconds: usize, seed: u64) -> RateSeries {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut rates = Vec::with_capacity(seconds);
+        let t_spike = (seconds as f64 * 0.5) as usize; // 600 of 1200
+        let t_decay = (seconds as f64 * 2.0 / 3.0) as usize; // 800
+        let t_return = (seconds as f64 * 5.0 / 6.0) as usize; // 1000
+        for t in 0..seconds {
+            let shape = if t < t_spike {
+                base
+            } else if t < t_decay {
+                // fast ramp to the peak within ~20 s, then hold
+                let dt = (t - t_spike) as f64;
+                base + (peak - base) * (1.0 - (-dt / 8.0).exp())
+            } else if t < t_return {
+                // gradual decay back towards base
+                let frac = (t - t_decay) as f64 / (t_return - t_decay) as f64;
+                base + (peak - base) * (1.0 - frac)
+            } else {
+                base
+            };
+            let noise: f64 = rng.normal() * 0.03 * shape;
+            rates.push((shape + noise).max(0.0));
+        }
+        RateSeries {
+            rates,
+            name: format!("bursty-{base}-{peak}"),
+        }
+    }
+
+    /// Smooth non-bursty oscillation (Figure 8): a slow sinusoid between
+    /// `low` and `high` with mild noise.
+    pub fn non_bursty(low: f64, high: f64, seconds: usize, seed: u64) -> RateSeries {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mid = (low + high) / 2.0;
+        let amp = (high - low) / 2.0;
+        let rates = (0..seconds)
+            .map(|t| {
+                let phase = 2.0 * std::f64::consts::PI * t as f64 / (seconds as f64 / 2.0);
+                let shape = mid + amp * phase.sin();
+                let noise: f64 = rng.normal() * 0.02 * shape;
+                (shape + noise).max(0.0)
+            })
+            .collect();
+        RateSeries {
+            rates,
+            name: format!("non-bursty-{low}-{high}"),
+        }
+    }
+
+    /// Twitter-like series: diurnal + hourly seasonality, AR(1) noise, and
+    /// Poisson-arriving spikes with fast attack and exponential decay.
+    ///
+    /// Mirrors `python/compile/tracegen.py::twitter_like` (the LSTM's
+    /// training distribution) — keep the two in sync.
+    pub fn twitter_like(base: f64, seconds: usize, seed: u64) -> RateSeries {
+        let mut rng = Rng::seed_from_u64(seed);
+        let diurnal_amp = 0.35;
+        let hourly_amp = 0.10;
+        let noise_sigma = 0.03;
+        let noise_rho = 0.97;
+        let spike_rate = 1.0 / 1800.0;
+        let spike_mag = 1.2;
+        let spike_tau = 60.0;
+        let spike_attack = 8.0;
+
+        let mut rates = vec![0.0f64; seconds];
+        let mut ar = 0.0f64;
+        for (t, r) in rates.iter_mut().enumerate() {
+            let tf = t as f64;
+            let seasonal = 1.0
+                + diurnal_amp * (2.0 * std::f64::consts::PI * tf / 86400.0).sin()
+                + hourly_amp * (2.0 * std::f64::consts::PI * tf / 3600.0 + 1.3).sin();
+            let eps: f64 = rng.normal() * noise_sigma;
+            ar = noise_rho * ar + eps;
+            *r = base * seasonal * (1.0 + ar);
+        }
+        let n_spikes = rng.poisson((spike_rate * seconds as f64).max(1e-9));
+        for _ in 0..n_spikes {
+            let t0 = rng.f64() * seconds as f64;
+            let mag = base * spike_mag * rng.exp1();
+            for (t, r) in rates.iter_mut().enumerate() {
+                let dt = t as f64 - t0;
+                if dt >= 0.0 {
+                    *r += mag * (1.0 - (-dt / spike_attack).exp()) * (-dt / spike_tau).exp();
+                }
+            }
+        }
+        for r in rates.iter_mut() {
+            *r = r.max(0.0);
+        }
+        RateSeries {
+            rates,
+            name: format!("twitter-like-{base}"),
+        }
+    }
+
+    /// Load `t,rps` or single-column CSV (one row per second).
+    pub fn from_csv(path: &Path) -> Result<RateSeries> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+        let mut rates = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || (i == 0 && line.contains("rps")) {
+                continue;
+            }
+            let field = line.split(',').next_back().unwrap_or(line);
+            let v: f64 = field
+                .trim()
+                .parse()
+                .with_context(|| format!("{path:?}:{} bad rate {field:?}", i + 1))?;
+            anyhow::ensure!(v >= 0.0, "{path:?}:{} negative rate", i + 1);
+            rates.push(v);
+        }
+        anyhow::ensure!(!rates.is_empty(), "empty trace file {path:?}");
+        Ok(RateSeries {
+            rates,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Write a series as CSV (`t,rps` header included).
+    pub fn to_csv(series: &RateSeries, path: &Path) -> Result<()> {
+        let mut out = String::from("t,rps\n");
+        for (t, r) in series.rates.iter().enumerate() {
+            out.push_str(&format!("{t},{r:.4}\n"));
+        }
+        std::fs::write(path, out).with_context(|| format!("writing trace {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bursty_has_the_papers_phases() {
+        let t = Trace::bursty(40.0, 100.0, 1200, 1);
+        let avg = |lo: usize, hi: usize| {
+            t.rates[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        };
+        let steady = avg(100, 500);
+        let spike = avg(650, 790);
+        let back = avg(1050, 1200);
+        assert!((steady - 40.0).abs() < 4.0, "steady {steady}");
+        assert!(spike > 85.0, "spike {spike}");
+        assert!((back - 40.0).abs() < 4.0, "back {back}");
+        // decay is monotone-ish downward
+        assert!(avg(810, 850) > avg(950, 1000));
+    }
+
+    #[test]
+    fn non_bursty_stays_in_band() {
+        let t = Trace::non_bursty(20.0, 60.0, 1200, 2);
+        assert!(t.max() < 70.0);
+        assert!(t.rates.iter().cloned().fold(f64::MAX, f64::min) > 10.0);
+        assert!((t.mean() - 40.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn twitter_like_is_deterministic_per_seed() {
+        let a = Trace::twitter_like(40.0, 2000, 7);
+        let b = Trace::twitter_like(40.0, 2000, 7);
+        assert_eq!(a.rates, b.rates);
+        let c = Trace::twitter_like(40.0, 2000, 8);
+        assert_ne!(a.rates, c.rates);
+    }
+
+    #[test]
+    fn twitter_like_is_nonnegative_and_near_base() {
+        let t = Trace::twitter_like(40.0, 10_000, 3);
+        assert!(t.rates.iter().all(|&r| r >= 0.0));
+        assert!((t.mean() - 40.0).abs() < 15.0, "mean {}", t.mean());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = crate::util::testutil::TempDir::new();
+        let p = dir.path().join("trace.csv");
+        let t = Trace::steady(12.5, 30);
+        Trace::to_csv(&t, &p).unwrap();
+        let back = Trace::from_csv(&p).unwrap();
+        assert_eq!(back.rates.len(), 30);
+        assert!((back.rates[0] - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_and_truncation() {
+        let t = Trace::steady(10.0, 100).scaled(0.5).truncated(40);
+        assert_eq!(t.duration_s(), 40);
+        assert!((t.mean() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts`; every test self-skips (with a note)
+//! when the artifacts directory is absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use infadapter::forecaster::{Forecaster, LstmForecaster};
+use infadapter::runtime::{load_weights_f32, Manifest, WorkerPool};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = infadapter::runtime::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_the_paper_family() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let names: Vec<&str> = m.variants.iter().map(|v| v.name.as_str()).collect();
+    for want in ["resnet18", "resnet34", "resnet50", "resnet101", "resnet152"] {
+        assert!(names.contains(&want), "missing {want}");
+    }
+    // accuracy ladder ascends with depth
+    let sorted = m.variants_by_accuracy();
+    assert_eq!(sorted.first().unwrap().name, "resnet18");
+    assert_eq!(sorted.last().unwrap().name, "resnet152");
+}
+
+#[test]
+fn weights_npz_matches_manifest_counts() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.variant("resnet18").unwrap();
+    let weights = load_weights_f32(&meta.weights_path(&dir)).unwrap();
+    assert_eq!(weights.len(), meta.num_weight_arrays);
+    // names are sorted zero-padded indices => positional order is stable
+    let names: Vec<&str> = weights.iter().map(|(n, _, _)| n.as_str()).collect();
+    let mut sorted = names.clone();
+    sorted.sort();
+    assert_eq!(names, sorted);
+    let total: usize = weights.iter().map(|(_, d, _)| d.len()).sum();
+    assert_eq!(total as u64, meta.params);
+}
+
+#[test]
+fn end_to_end_inference_is_deterministic_and_sane() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.variant("resnet18").unwrap();
+    let pool = WorkerPool::spawn(&dir, &m, meta, 1, 1).unwrap();
+    let image = Arc::new(vec![0.5f32; m.input_shape(1).iter().product()]);
+    let a = pool.infer_blocking(image.clone()).unwrap();
+    let b = pool.infer_blocking(image.clone()).unwrap();
+    assert_eq!(a.len(), m.num_classes);
+    assert_eq!(a, b, "same input must give identical logits");
+    assert!(a.iter().all(|x| x.is_finite()));
+    // different input -> different logits
+    let other = Arc::new(vec![-0.25f32; m.input_shape(1).iter().product()]);
+    let c = pool.infer_blocking(other).unwrap();
+    assert_ne!(a, c);
+    pool.shutdown();
+}
+
+#[test]
+fn pool_serves_concurrent_submissions() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.variant("resnet18").unwrap();
+    let pool = WorkerPool::spawn(&dir, &m, meta, 1, 2).unwrap();
+    let image = Arc::new(vec![0.1f32; m.input_shape(1).iter().product()]);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let n = 12;
+    for _ in 0..n {
+        let tx = tx.clone();
+        pool.submit(image.clone(), move |result, _elapsed| {
+            tx.send(result.is_ok()).unwrap();
+        })
+        .unwrap();
+    }
+    drop(tx);
+    let oks: Vec<bool> = rx.iter().collect();
+    assert_eq!(oks.len(), n);
+    assert!(oks.iter().all(|&ok| ok));
+    pool.shutdown();
+}
+
+#[test]
+fn readiness_time_is_measured() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.variant("resnet18").unwrap();
+    let pool = WorkerPool::spawn(&dir, &m, meta, 1, 1).unwrap();
+    // compile + weight upload takes real time (this is rt_m)
+    assert!(pool.readiness.as_secs_f64() > 0.05);
+    assert!(pool.readiness.as_secs_f64() < 120.0);
+    pool.shutdown();
+}
+
+#[test]
+fn lstm_forecaster_loads_and_reacts_to_load() {
+    let Some(dir) = artifacts() else { return };
+    let mut f = match LstmForecaster::load(&dir) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("skipping: forecaster artifact missing ({e:#})");
+            return;
+        }
+    };
+    for _ in 0..120 {
+        f.observe(40.0);
+    }
+    let low = f.predict_max();
+    for _ in 0..120 {
+        f.observe(120.0);
+    }
+    let high = f.predict_max();
+    assert!(low >= 40.0, "floor at observed peak, got {low}");
+    assert!(high > low, "must react to rising load: {low} -> {high}");
+    assert!(high >= 120.0 && high < 400.0, "sane range, got {high}");
+}
+
+#[test]
+fn batched_artifacts_accept_batched_inputs() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.variant("resnet50").unwrap();
+    for &batch in meta.batch_sizes().iter().filter(|&&b| b <= 2) {
+        let pool = WorkerPool::spawn(&dir, &m, meta, batch, 1).unwrap();
+        let image = Arc::new(vec![0.3f32; m.input_shape(batch).iter().product()]);
+        let out = pool.infer_blocking(image).unwrap();
+        assert_eq!(out.len(), batch * m.num_classes);
+        pool.shutdown();
+    }
+}

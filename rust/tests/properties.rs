@@ -1,0 +1,234 @@
+//! Property-based tests on coordinator invariants (hand-rolled generators:
+//! the offline build has no proptest — `util::rng` drives the cases).
+
+use infadapter::baselines::StaticPolicy;
+use infadapter::config::{Config, ObjectiveWeights};
+use infadapter::dispatcher::Dispatcher;
+use infadapter::experiment::{PolicyKind, Scenario};
+use infadapter::profiler::ProfileSet;
+use infadapter::serving::sim::{SimConfig, SimEngine};
+use infadapter::solver::{BranchBoundSolver, BruteForceSolver, Problem, Solver};
+use infadapter::util::rng::Rng;
+use infadapter::workload::{ArrivalProcess, Trace};
+use std::collections::BTreeMap;
+
+fn random_problem(rng: &mut Rng) -> Problem {
+    let profiles = ProfileSet::paper_like();
+    let lambda = rng.f64() * 200.0;
+    let budget = 4 + rng.below(28);
+    let beta = [0.0125, 0.05, 0.2][rng.below(3)];
+    let mut current = BTreeMap::new();
+    if rng.f64() < 0.5 {
+        current.insert("resnet50".to_string(), 1 + rng.below(8));
+    }
+    Problem::from_profiles(
+        &profiles,
+        lambda,
+        0.75,
+        budget,
+        ObjectiveWeights {
+            alpha: 1.0,
+            beta,
+            gamma: 0.001,
+        },
+        &current,
+    )
+}
+
+#[test]
+fn prop_solver_never_exceeds_budget() {
+    let mut rng = Rng::seed_from_u64(100);
+    for _ in 0..60 {
+        let p = random_problem(&mut rng);
+        let a = BruteForceSolver.solve(&p).unwrap();
+        assert!(a.total_cores() <= p.budget, "{a:?} vs budget {}", p.budget);
+        assert_eq!(a.resource_cost, a.total_cores());
+    }
+}
+
+#[test]
+fn prop_solver_covers_load_whenever_possible() {
+    let mut rng = Rng::seed_from_u64(101);
+    for _ in 0..60 {
+        let p = random_problem(&mut rng);
+        let a = BruteForceSolver.solve(&p).unwrap();
+        // if the best single-variant saturation can cover λ, result must be feasible
+        let max_capacity: f64 = (0..p.variants.len())
+            .map(|i| p.variants[i].throughput[p.budget])
+            .fold(0.0, f64::max);
+        if max_capacity >= p.lambda {
+            assert!(a.feasible, "λ={} coverable but infeasible: {a:?}", p.lambda);
+        }
+        if a.feasible {
+            assert!(a.capacity >= p.lambda - 1e-6);
+            let quota_sum: f64 = a.assignments.values().map(|&(_, q)| q).sum();
+            assert!((quota_sum - p.lambda).abs() < 1e-6, "quotas must sum to λ");
+        }
+    }
+}
+
+#[test]
+fn prop_quotas_respect_per_variant_capacity() {
+    let mut rng = Rng::seed_from_u64(102);
+    let profiles = ProfileSet::paper_like();
+    for _ in 0..60 {
+        let p = random_problem(&mut rng);
+        let a = BruteForceSolver.solve(&p).unwrap();
+        for (name, &(cores, quota)) in &a.assignments {
+            let th = profiles.get(name).unwrap().throughput(cores);
+            assert!(quota <= th + 1e-9, "{name}: quota {quota} > th {th}");
+        }
+    }
+}
+
+#[test]
+fn prop_branch_bound_equals_brute_force() {
+    let mut rng = Rng::seed_from_u64(103);
+    for _ in 0..25 {
+        let p = random_problem(&mut rng);
+        let bf = BruteForceSolver.solve(&p).unwrap();
+        let bb = BranchBoundSolver.solve(&p).unwrap();
+        assert!(
+            (bf.objective - bb.objective).abs() < 1e-9,
+            "bf={} bb={} (λ={}, B={})",
+            bf.objective,
+            bb.objective,
+            p.lambda,
+            p.budget
+        );
+    }
+}
+
+#[test]
+fn prop_objective_monotone_in_budget() {
+    let mut rng = Rng::seed_from_u64(104);
+    let profiles = ProfileSet::paper_like();
+    for _ in 0..20 {
+        let lambda = rng.f64() * 150.0;
+        let mut prev = f64::NEG_INFINITY;
+        for budget in [6usize, 12, 20, 28] {
+            let p = Problem::from_profiles(
+                &profiles,
+                lambda,
+                0.75,
+                budget,
+                ObjectiveWeights::default(),
+                &BTreeMap::new(),
+            );
+            let a = BruteForceSolver.solve(&p).unwrap();
+            assert!(
+                a.objective >= prev - 1e-9,
+                "objective must not fall with budget: λ={lambda} B={budget}"
+            );
+            prev = a.objective;
+        }
+    }
+}
+
+#[test]
+fn prop_accuracy_decreases_with_beta() {
+    let profiles = ProfileSet::paper_like();
+    for lambda in [30.0, 60.0, 90.0, 120.0] {
+        let mut prev_acc = f64::INFINITY;
+        for beta in [0.0125, 0.05, 0.2, 0.8] {
+            let p = Problem::from_profiles(
+                &profiles,
+                lambda,
+                0.75,
+                20,
+                ObjectiveWeights {
+                    alpha: 1.0,
+                    beta,
+                    gamma: 0.001,
+                },
+                &BTreeMap::new(),
+            );
+            let a = BruteForceSolver.solve(&p).unwrap();
+            assert!(
+                a.average_accuracy <= prev_acc + 1e-9,
+                "AA must not rise with β: λ={lambda} β={beta}"
+            );
+            prev_acc = a.average_accuracy;
+        }
+    }
+}
+
+#[test]
+fn prop_dispatcher_distribution_tracks_weights() {
+    let mut rng = Rng::seed_from_u64(105);
+    for _ in 0..10 {
+        let k = 2 + rng.below(4);
+        let weights: Vec<(String, f64)> = (0..k)
+            .map(|i| (format!("v{i}"), 1.0 + rng.f64() * 9.0))
+            .collect();
+        let d = Dispatcher::new();
+        d.set_weights(&weights);
+        let total: f64 = weights.iter().map(|(_, w)| w).sum();
+        let n = 20_000;
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for _ in 0..n {
+            *counts.entry(d.route().unwrap()).or_insert(0) += 1;
+        }
+        for (name, w) in &weights {
+            let got = counts.get(name).copied().unwrap_or(0) as f64 / n as f64;
+            let want = w / total;
+            assert!(
+                (got - want).abs() < 0.01,
+                "{name}: got {got:.3}, want {want:.3}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sim_conserves_requests() {
+    // completed + dropped == arrivals, for any policy/seed/trace
+    let profiles = ProfileSet::paper_like();
+    let mut rng = Rng::seed_from_u64(106);
+    for _ in 0..6 {
+        let seed = rng.next_u64() % 1000;
+        let base = 10.0 + rng.f64() * 60.0;
+        let trace = Trace::bursty(base, base * 2.0, 240, seed);
+        let expected = ArrivalProcess::poisson(&trace, seed.wrapping_add(1)).len() as u64;
+        let sim = SimEngine::new(
+            profiles.clone(),
+            SimConfig {
+                seed,
+                ..Default::default()
+            },
+        );
+        let mut policy = StaticPolicy::new("resnet50", 4);
+        let res = sim.run(&mut policy, &trace);
+        let s = res.metrics.summary("t", 240.0);
+        assert_eq!(
+            s.total_requests, expected,
+            "request conservation violated (seed {seed})"
+        );
+    }
+}
+
+#[test]
+fn prop_sim_accuracy_bounded_by_family() {
+    let profiles = ProfileSet::paper_like();
+    let mut rng = Rng::seed_from_u64(107);
+    for kind in [
+        PolicyKind::InfAdapter,
+        PolicyKind::MsPlus,
+        PolicyKind::Vpa("resnet50".into()),
+    ] {
+        let seed = rng.next_u64() % 1000;
+        let mut config = Config::default();
+        config.seed = seed;
+        config.adapter.forecaster = "last_max".into();
+        let s = Scenario::new(
+            "prop",
+            Trace::non_bursty(20.0, 50.0, 300, seed),
+            config,
+            profiles.clone(),
+        );
+        let out = s.run(&kind, std::path::Path::new("/nonexistent")).unwrap();
+        assert!(out.summary.avg_accuracy >= 69.76 - 1e-6, "{kind:?}");
+        assert!(out.summary.avg_accuracy <= 78.31 + 1e-6, "{kind:?}");
+        assert!(out.summary.avg_accuracy_loss >= -1e-6);
+    }
+}
