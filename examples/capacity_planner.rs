@@ -6,11 +6,13 @@
 //!
 //! Prints (a) the predicted sustained-throughput table for every variant at
 //! 8/14/20 cores (the paper's Figure 1 axes), (b) the ILP decision for a
-//! grid of workloads and budgets with the variant mix it selects, and (c)
-//! the InfAdapter-vs-MS+ accuracy-loss comparison at 75 rps (Figure 2).
+//! grid of workloads and budgets with the variant mix it selects, (c) the
+//! InfAdapter-vs-MS+ accuracy-loss comparison at 75 rps (Figure 2), and
+//! (d) the same planning grid with server-side batching enabled — showing
+//! the batch size the solver picks per variant and the cores it saves.
 
 use anyhow::Result;
-use infadapter::config::ObjectiveWeights;
+use infadapter::config::{BatchingConfig, ObjectiveWeights};
 use infadapter::experiment::load_or_default_profiles;
 use infadapter::runtime::artifacts_dir;
 use infadapter::solver::{BruteForceSolver, Problem, Solver};
@@ -94,6 +96,52 @@ fn main() -> Result<()> {
                 .unwrap_or_else(|| "infeasible".into()),
         );
     }
+    println!("\n== batched ILP decisions (max_batch = 8, 50 ms formation wait) ==");
+    let batching = BatchingConfig {
+        max_batch: 8,
+        max_wait_s: 0.05,
+    };
+    println!(
+        "{:>6} {:>7} | {:<40} {:>8} {:>6}",
+        "λ rps", "budget", "selected set (cores@batch)", "AA %", "RC"
+    );
+    for &lambda in &[75.0, 150.0, 250.0] {
+        for &budget in &[8usize, 14, 20] {
+            let problem = Problem::from_profiles_batched(
+                &profiles,
+                lambda,
+                0.75,
+                budget,
+                weights,
+                &BTreeMap::new(),
+                &batching,
+            );
+            let alloc = BruteForceSolver.solve(&problem).expect("solvable");
+            let set: Vec<String> = alloc
+                .assignments
+                .iter()
+                .filter(|(_, &(c, _))| c > 0)
+                .map(|(v, &(c, _))| {
+                    format!(
+                        "{}x{}@{}",
+                        v.trim_start_matches("resnet"),
+                        c,
+                        alloc.batch_of(v)
+                    )
+                })
+                .collect();
+            println!(
+                "{:>6.0} {:>7} | {:<40} {:>8.2} {:>6} {}",
+                lambda,
+                budget,
+                set.join(" + "),
+                alloc.average_accuracy,
+                alloc.resource_cost,
+                if alloc.feasible { "" } else { "(infeasible!)" }
+            );
+        }
+    }
+
     println!("\ncapacity_planner OK");
     Ok(())
 }

@@ -4,10 +4,11 @@
 //! arrival rates to the forecaster, (2) predicts the next-interval max
 //! workload λ̂, (3) solves the ILP of Eq. 1 for the best variant set + core
 //! allocation given the current cluster state (loading costs are relative
-//! to what is already loaded), and (4) emits the target allocation and the
-//! per-variant quotas λ_m for the dispatcher.
+//! to what is already loaded), and (4) emits the target allocation, the
+//! per-variant quotas λ_m for the dispatcher, and — when batching is
+//! enabled — the per-variant batch sizes for the serving pods.
 
-use crate::config::ObjectiveWeights;
+use crate::config::{BatchingConfig, ObjectiveWeights};
 use crate::forecaster::Forecaster;
 use crate::profiler::ProfileSet;
 use crate::serving::{Decision, Policy};
@@ -30,6 +31,8 @@ pub struct InfAdapterPolicy {
     /// objective beats it by more than this (suppresses churn — every
     /// reallocation pays a readiness window at reduced capacity).
     pub hysteresis: f64,
+    /// Server-side batching knobs (default: disabled, `max_batch = 1`).
+    pub batching: BatchingConfig,
     last_allocation: Option<Allocation>,
 }
 
@@ -53,8 +56,15 @@ impl InfAdapterPolicy {
             headroom,
             min_lambda: 1.0,
             hysteresis: 0.5,
+            batching: BatchingConfig::default(),
             last_allocation: None,
         }
+    }
+
+    /// Enable server-side batching (builder style).
+    pub fn with_batching(mut self, batching: BatchingConfig) -> Self {
+        self.batching = batching;
+        self
     }
 
     /// Last solved allocation (diagnostics / benches).
@@ -78,13 +88,14 @@ impl Policy for InfAdapterPolicy {
             self.forecaster.observe(r);
         }
         let lambda_hat = (self.forecaster.predict_max() * self.headroom).max(self.min_lambda);
-        let problem = Problem::from_profiles(
+        let problem = Problem::from_profiles_batched(
             &self.profiles,
             lambda_hat,
             self.slo_s,
             self.budget,
             self.weights,
             committed,
+            &self.batching,
         );
         let mut allocation = self
             .solver
@@ -117,9 +128,16 @@ impl Policy for InfAdapterPolicy {
             .map(|(v, &(c, _))| (v.clone(), c))
             .collect();
         let quotas = allocation.quota_weights();
+        let batches: BTreeMap<String, usize> = allocation
+            .batches
+            .iter()
+            .filter(|(_, &b)| b > 1)
+            .map(|(v, &b)| (v.clone(), b))
+            .collect();
         let decision = Decision {
             target,
             quotas,
+            batches,
             predicted_lambda: lambda_hat,
         };
         self.last_allocation = Some(allocation);
@@ -196,6 +214,32 @@ mod tests {
             "expected a variant set, got {:?}",
             d.target
         );
+    }
+
+    #[test]
+    fn batching_extends_coverage_and_surfaces_batch_sizes() {
+        // 250 rps (×1.1 headroom) exceeds every unbatched capacity at B=8…
+        let mut plain = policy(0.05, 8);
+        let d_plain = plain.decide(0.0, &vec![250.0; 60], &BTreeMap::new());
+        assert!(d_plain.batches.is_empty());
+        assert!(!plain.last_allocation().unwrap().feasible);
+        // …but the batched solver covers it on the same budget.
+        let mut batched = policy(0.05, 8).with_batching(BatchingConfig {
+            max_batch: 8,
+            max_wait_s: 0.05,
+        });
+        let d = batched.decide(0.0, &vec![250.0; 60], &BTreeMap::new());
+        let alloc = batched.last_allocation().unwrap();
+        assert!(alloc.feasible, "{alloc:?}");
+        assert!(
+            d.batches.values().any(|&b| b > 1),
+            "expected batch sizes in {:?}",
+            d.batches
+        );
+        for (v, &b) in &d.batches {
+            assert!(d.target.contains_key(v));
+            assert_eq!(d.batch_of(v), b);
+        }
     }
 
     #[test]

@@ -17,24 +17,36 @@ pub use vpa::VpaPolicy;
 use crate::serving::{Decision, Policy};
 use std::collections::BTreeMap;
 
-/// Fixed variant and allocation; never adapts.
+/// Fixed variant and allocation; never adapts.  Optionally pins a
+/// server-side batch size (the batching ablation baseline).
 pub struct StaticPolicy {
     variant: String,
     cores: usize,
+    batch: usize,
 }
 
 impl StaticPolicy {
     pub fn new(variant: &str, cores: usize) -> Self {
+        Self::with_batch(variant, cores, 1)
+    }
+
+    /// Fixed allocation serving with batches of `batch` items.
+    pub fn with_batch(variant: &str, cores: usize, batch: usize) -> Self {
         Self {
             variant: variant.to_string(),
             cores,
+            batch: batch.max(1),
         }
     }
 }
 
 impl Policy for StaticPolicy {
     fn name(&self) -> String {
-        format!("static-{}x{}", self.variant, self.cores)
+        if self.batch > 1 {
+            format!("static-{}x{}b{}", self.variant, self.cores, self.batch)
+        } else {
+            format!("static-{}x{}", self.variant, self.cores)
+        }
     }
 
     fn decide(
@@ -47,6 +59,7 @@ impl Policy for StaticPolicy {
         Decision {
             target: BTreeMap::from([(self.variant.clone(), self.cores)]),
             quotas: vec![(self.variant.clone(), 1.0)],
+            batches: BTreeMap::from([(self.variant.clone(), self.batch)]),
             predicted_lambda: observed,
         }
     }

@@ -83,15 +83,18 @@ impl Policy for MsPlusPolicy {
         match best {
             Some((i, n, _)) => {
                 let name = problem.variants[i].name.clone();
+                // MS+ serves unbatched (batch 1), like the paper's baseline.
                 Decision {
                     target: BTreeMap::from([(name.clone(), n)]),
                     quotas: vec![(name, 1.0)],
+                    batches: BTreeMap::new(),
                     predicted_lambda: lambda_hat,
                 }
             }
             None => Decision {
                 target: BTreeMap::new(),
                 quotas: vec![],
+                batches: BTreeMap::new(),
                 predicted_lambda: lambda_hat,
             },
         }

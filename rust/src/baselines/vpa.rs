@@ -77,6 +77,7 @@ impl Policy for VpaPolicy {
         Decision {
             target: BTreeMap::from([(self.variant.clone(), cores)]),
             quotas: vec![(self.variant.clone(), 1.0)],
+            batches: BTreeMap::new(),
             predicted_lambda: self
                 .window
                 .iter()

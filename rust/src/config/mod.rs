@@ -4,7 +4,15 @@
 //! from JSON (`--config file.json`) with field-level defaults so a partial
 //! file only overrides what it names.  `Config::default()` reproduces the
 //! paper's main setting: 750 ms P99 SLO, 20-core budget, α=1, β=0.05,
-//! γ=0.001 (normalized), 30 s adaptation interval.
+//! γ=0.001 (normalized), 30 s adaptation interval, batching disabled.
+//!
+//! Batching knobs ([`BatchingConfig`]): `max_batch` caps the server-side
+//! batch size the solver may choose per variant (1 = disabled, the paper's
+//! CPU setting) and `max_wait_s` caps how long a pod's batcher waits to
+//! fill a batch before dispatching it partially filled.  The solver charges
+//! `max_wait_s` as worst-case batch-formation latency on top of the batched
+//! service time when checking the SLO, so every chosen batch size is
+//! SLO-feasible by construction.
 
 use crate::util::json::{parse, Value};
 use anyhow::{Context, Result};
@@ -73,6 +81,26 @@ impl Default for AdapterConfig {
     }
 }
 
+/// Server-side batching parameters (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchingConfig {
+    /// Largest batch the solver may pick per variant; 1 disables batching.
+    pub max_batch: usize,
+    /// Batch-formation wait cap, seconds: a pod dispatches a partial batch
+    /// after waiting this long for it to fill.  Also the worst-case
+    /// formation latency the solver charges against the SLO.
+    pub max_wait_s: f64,
+}
+
+impl Default for BatchingConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 1,
+            max_wait_s: 0.05,
+        }
+    }
+}
+
 /// Cluster / budget parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
@@ -101,6 +129,7 @@ pub struct Config {
     pub slo: Slo,
     pub adapter: AdapterConfig,
     pub cluster: ClusterConfig,
+    pub batching: BatchingConfig,
     /// Variants eligible for selection; empty = all in the manifest.
     pub variants: Vec<String>,
     /// Random seed for workloads and service-time noise.
@@ -176,6 +205,13 @@ impl Config {
             },
             None => d.cluster,
         };
+        let batching = match v.get("batching") {
+            Some(b) => BatchingConfig {
+                max_batch: usize_or(b, "max_batch", d.batching.max_batch)?,
+                max_wait_s: f64_or(b, "max_wait_s", d.batching.max_wait_s)?,
+            },
+            None => d.batching,
+        };
         let variants = match v.get("variants") {
             Some(vs) => vs
                 .as_arr()?
@@ -189,6 +225,7 @@ impl Config {
             slo,
             adapter,
             cluster,
+            batching,
             variants,
             seed: v.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(0),
         })
@@ -244,6 +281,13 @@ impl Config {
                 ]),
             ),
             (
+                "batching",
+                Value::obj(vec![
+                    ("max_batch", Value::Num(self.batching.max_batch as f64)),
+                    ("max_wait_s", Value::Num(self.batching.max_wait_s)),
+                ]),
+            ),
+            (
                 "variants",
                 Value::Arr(self.variants.iter().map(|v| Value::Str(v.clone())).collect()),
             ),
@@ -275,6 +319,18 @@ impl Config {
             "adapter interval must be positive"
         );
         anyhow::ensure!(self.adapter.headroom >= 1.0, "headroom must be >= 1");
+        anyhow::ensure!(self.batching.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(
+            self.batching.max_wait_s >= 0.0,
+            "batch max_wait_s must be non-negative"
+        );
+        anyhow::ensure!(
+            self.batching.max_batch == 1
+                || self.batching.max_wait_s < self.slo.latency_ms / 1000.0,
+            "batch max_wait_s {} must stay under the SLO {} s",
+            self.batching.max_wait_s,
+            self.slo.latency_ms / 1000.0
+        );
         anyhow::ensure!(
             self.weights.alpha >= 0.0 && self.weights.beta >= 0.0 && self.weights.gamma >= 0.0,
             "objective weights must be non-negative"
@@ -306,9 +362,24 @@ mod tests {
     }
 
     #[test]
+    fn default_batching_is_disabled() {
+        let c = Config::default();
+        assert_eq!(c.batching.max_batch, 1);
+        assert!(c.batching.max_wait_s > 0.0);
+        // enabling batching with a wait at/over the SLO is rejected
+        let mut c = Config::default();
+        c.batching.max_batch = 8;
+        c.batching.max_wait_s = 1.0;
+        assert!(c.validate().is_err());
+        c.batching.max_wait_s = 0.1;
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn roundtrips_through_json() {
         let mut c = Config::default();
         c.variants = vec!["resnet18".into(), "resnet50".into()];
+        c.batching.max_batch = 4;
         c.seed = 7;
         let text = c.to_json().to_string_pretty();
         let back = Config::from_json(&parse(&text).unwrap()).unwrap();

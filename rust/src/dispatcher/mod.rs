@@ -41,9 +41,17 @@ impl Dispatcher {
     /// Replace the weight table. `weights` are the per-variant quotas λ_m
     /// (any non-negative scale); zero/negative-weight backends are dropped.
     /// Existing smoothing state is kept for surviving backends so a quota
-    /// update does not reset the interleaving.
+    /// update does not reset the interleaving — but carried credit is
+    /// clamped to the *new* total weight.  Smooth WRR keeps every credit
+    /// inside (−total, total), so re-setting unchanged weights (which the
+    /// adapter does every tick) preserves state exactly; only a backend
+    /// downweighted by orders of magnitude (e.g. 100 → 1 after a
+    /// reallocation) gets its stale credit truncated — without the clamp
+    /// it would monopolize the next tens of picks, bursting traffic at
+    /// exactly the backend the policy just shrank.
     pub fn set_weights(&self, weights: &[(String, f64)]) {
         let mut inner = self.inner.lock().unwrap();
+        let total: f64 = weights.iter().filter(|(_, w)| *w > 0.0).map(|(_, w)| w).sum();
         let mut next: Vec<Backend> = Vec::with_capacity(weights.len());
         for (name, w) in weights {
             if *w <= 0.0 {
@@ -52,7 +60,7 @@ impl Dispatcher {
             let current = inner
                 .iter()
                 .find(|b| &b.name == name)
-                .map(|b| b.current)
+                .map(|b| b.current.clamp(-total, total))
                 .unwrap_or(0.0);
             next.push(Backend {
                 name: name.clone(),
@@ -150,6 +158,48 @@ mod tests {
         assert_eq!(d.route(), None);
         d.set_weights(&[]);
         assert_eq!(d.route(), None);
+    }
+
+    #[test]
+    fn downweighting_does_not_burst_to_the_shrunk_backend() {
+        let d = Dispatcher::new();
+        d.set_weights(&[("a".into(), 100.0), ("b".into(), 1.0)]);
+        // After exactly 51 picks `a` sits on ~+50 credit (b just won); an
+        // unclamped carry would let `a` monopolize the next ~50 picks even
+        // at equal weights.
+        for _ in 0..51 {
+            let _ = d.route();
+        }
+        d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0)]);
+        let next: Vec<String> = (0..20).map(|_| d.route().unwrap()).collect();
+        let a_count = next.iter().filter(|s| *s == "a").count();
+        assert!(
+            (8..=12).contains(&a_count),
+            "downweighted backend should serve ~half, got {a_count}/20: {next:?}"
+        );
+    }
+
+    #[test]
+    fn reapplying_same_weights_keeps_low_weight_backend_share() {
+        // The adapter re-sets (often unchanged) quotas every tick; a
+        // backend worth 1% must still get its ~1% even when the table is
+        // re-applied far more often than it wins a pick.
+        let d = Dispatcher::new();
+        let table = [("a".to_string(), 100.0), ("b".to_string(), 1.0)];
+        d.set_weights(&table);
+        let mut b_count = 0;
+        for _ in 0..101 {
+            for _ in 0..10 {
+                if d.route().unwrap() == "b" {
+                    b_count += 1;
+                }
+            }
+            d.set_weights(&table); // unchanged re-set must keep credit
+        }
+        assert!(
+            (5..=15).contains(&b_count),
+            "b should keep ~1% of 1010 picks, got {b_count}"
+        );
     }
 
     #[test]

@@ -32,7 +32,8 @@ COMMANDS:
   info                               show manifest + measured profiles
   profile  [--iters N] [--variants a,b]
                                      measure real service/readiness times
-  solve    --lambda RPS [--budget B] [--beta X] [--solver brute|bnb|greedy]
+  solve    --lambda RPS [--budget B] [--beta X] [--max-batch N]
+           [--solver brute|bnb|greedy]
                                      one-shot ILP solve
   simulate [--trace T] [--policy P] [--seconds N] [--base RPS] [--out CSV]
                                      virtual-time experiment
@@ -221,13 +222,16 @@ fn main() -> Result<()> {
             let profiles = experiment::load_or_default_profiles(&artifacts);
             let mut weights = config.weights;
             weights.beta = beta;
-            let problem = Problem::from_profiles(
+            let mut batching = config.batching;
+            batching.max_batch = args.get_usize("max-batch", batching.max_batch)?;
+            let problem = Problem::from_profiles_batched(
                 &profiles,
                 lambda,
                 config.slo.latency_ms / 1000.0,
                 budget,
                 weights,
                 &BTreeMap::new(),
+                &batching,
             );
             let s: Box<dyn Solver> = match args.get("solver").unwrap_or("brute") {
                 "bnb" => Box::new(BranchBoundSolver),
@@ -250,7 +254,10 @@ fn main() -> Result<()> {
                 alloc.feasible
             );
             for (v, (c, q)) in &alloc.assignments {
-                println!("  {v:<12} cores={c:<3} quota={q:.1} rps");
+                println!(
+                    "  {v:<12} cores={c:<3} quota={q:.1} rps batch={}",
+                    alloc.batch_of(v)
+                );
             }
         }
         "simulate" => {

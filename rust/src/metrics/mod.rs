@@ -53,6 +53,9 @@ pub struct RunSummary {
     pub dropped: u64,
     /// Overall SLO violation fraction (dropped requests count as violations).
     pub slo_violation_rate: f64,
+    /// Requests completed *within* the SLO per second of the run — the
+    /// sustained useful throughput the batching experiments compare.
+    pub goodput_rps: f64,
     /// Request-weighted average accuracy over the run.
     pub avg_accuracy: f64,
     pub avg_accuracy_loss: f64,
@@ -77,6 +80,8 @@ pub struct MetricsCollector {
     cost_samples: Vec<(f64, usize)>,
     /// (time, predicted λ) from policy decisions.
     predictions: Vec<(f64, f64)>,
+    /// (time, variant, batch size) from policy decisions (batching audit).
+    batch_decisions: Vec<(f64, String, usize)>,
 }
 
 impl MetricsCollector {
@@ -88,6 +93,7 @@ impl MetricsCollector {
             records: Vec::new(),
             cost_samples: Vec::new(),
             predictions: Vec::new(),
+            batch_decisions: Vec::new(),
         }
     }
 
@@ -101,6 +107,16 @@ impl MetricsCollector {
 
     pub fn record_prediction(&mut self, t: f64, lambda_hat: f64) {
         self.predictions.push((t, lambda_hat));
+    }
+
+    /// Record a policy's chosen batch size for one variant.
+    pub fn record_batch_decision(&mut self, t: f64, variant: &str, batch: usize) {
+        self.batch_decisions.push((t, variant.to_string(), batch));
+    }
+
+    /// The per-variant batch-size decision log, in decision order.
+    pub fn batch_decisions(&self) -> &[(f64, String, usize)] {
+        &self.batch_decisions
     }
 
     fn cost_at(&self, t: f64) -> f64 {
@@ -218,6 +234,10 @@ impl MetricsCollector {
         if let Some(&(t_last, c_last)) = self.cost_samples.last() {
             core_seconds += c_last as f64 * (duration_s - t_last).max(0.0);
         }
+        let within_slo = completed
+            .iter()
+            .filter(|r| r.latency_s <= self.slo_s)
+            .count();
         RunSummary {
             policy: policy.to_string(),
             total_requests: total,
@@ -227,6 +247,7 @@ impl MetricsCollector {
             } else {
                 violations as f64 / total as f64
             },
+            goodput_rps: within_slo as f64 / duration_s.max(1e-9),
             avg_accuracy: avg_acc,
             avg_accuracy_loss: self.top_accuracy - avg_acc,
             avg_cost_cores: core_seconds / duration_s.max(1e-9),
@@ -343,6 +364,35 @@ mod tests {
         assert_eq!(rows[1].completed, 3);
         assert!((rows[0].cost_cores - 8.0).abs() < 1e-9);
         assert!((rows[0].accuracy_loss - (78.31 - 69.76)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn goodput_counts_only_within_slo_completions() {
+        let mut m = collector();
+        for i in 0..100 {
+            m.record_request(RequestRecord {
+                arrival_s: i as f64 * 0.1,
+                latency_s: if i < 80 { 0.2 } else { 2.0 },
+                accuracy: 76.13,
+            });
+        }
+        m.record_request(RequestRecord {
+            arrival_s: 1.0,
+            latency_s: f64::INFINITY,
+            accuracy: 0.0,
+        });
+        let s = m.summary("t", 10.0);
+        // 80 of 101 finished within the 0.75 s SLO over 10 s
+        assert!((s.goodput_rps - 8.0).abs() < 1e-9, "{}", s.goodput_rps);
+    }
+
+    #[test]
+    fn batch_decisions_are_logged_in_order() {
+        let mut m = collector();
+        m.record_batch_decision(0.0, "resnet50", 4);
+        m.record_batch_decision(30.0, "resnet50", 8);
+        assert_eq!(m.batch_decisions().len(), 2);
+        assert_eq!(m.batch_decisions()[1], (30.0, "resnet50".to_string(), 8));
     }
 
     #[test]

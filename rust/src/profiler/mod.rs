@@ -11,6 +11,20 @@
 //! the simulation engine consume.  Profiles are measured against the real
 //! PJRT engine ([`measure_real`]) or derived from the queueing model
 //! ([`ProfileSet::from_service_times`]) and serialize to `profiles.json`.
+//!
+//! ## Batch model
+//!
+//! Server-side batching amortizes per-dispatch fixed costs over the batch:
+//! a batch of `b` items takes `s(b) = s(1)·(f + (1−f)·b)` seconds, where
+//! `f ∈ [0, 1)` is the calibrated fixed-cost fraction
+//! ([`VariantProfile::batch_fixed_frac`]).  The implied throughput gain is
+//! `s(1)·b / s(b) = b / (f + (1−f)·b)`, which is 1 at `b = 1` and saturates
+//! at `1/(1−f)` — so `f = 0` reproduces the paper's CPU finding (batching
+//! buys nothing) while `f > 0` models accelerator-style amortization.  The
+//! batched curves `th_m(n, b)` ([`VariantProfile::throughput_batched`]) and
+//! `p_m(n, b)` ([`VariantProfile::latency_batched`]) extend the per-core
+//! regression along the batch axis; with `b = 1` both collapse to the
+//! original tables, keeping non-batched paths bit-compatible.
 
 mod regression;
 
@@ -22,6 +36,12 @@ use std::path::Path;
 
 /// The CPU allocations the paper profiles at.
 pub const PROFILE_POINTS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Default fixed-cost fraction of the batch amortization model: half of a
+/// single-item service time is dispatch overhead amortized by batching
+/// (asymptotic throughput gain 2x).  Replaced by measurement when batched
+/// artifacts are profiled; irrelevant while batching is disabled (b = 1).
+pub const DEFAULT_BATCH_FIXED_FRAC: f64 = 0.5;
 
 /// Performance model of one model variant.
 #[derive(Debug, Clone)]
@@ -39,6 +59,9 @@ pub struct VariantProfile {
     pub throughput_model: LinearRegression,
     /// Raw (cores, throughput) points the regression was fitted on.
     pub profile_points: Vec<(usize, f64)>,
+    /// Fixed-cost fraction `f` of the batch amortization model
+    /// `s(b) = s(1)·(f + (1−f)·b)` (see the module docs).
+    pub batch_fixed_frac: f64,
 }
 
 impl VariantProfile {
@@ -64,6 +87,48 @@ impl VariantProfile {
     /// Smallest allocation whose predicted latency meets `slo_s`, if any.
     pub fn min_cores_for_slo(&self, slo_s: f64, max_cores: usize) -> Option<usize> {
         (1..=max_cores).find(|&n| self.latency(n) <= slo_s)
+    }
+
+    /// Mean service time of a batch of `b` items on one worker:
+    /// `s(b) = s(1)·(f + (1−f)·b)`.  `s(1) = service_time_s` exactly.
+    pub fn service_time_batch(&self, b: usize) -> f64 {
+        if b <= 1 {
+            // exact, so b = 1 stays bit-compatible with the unbatched model
+            return self.service_time_s;
+        }
+        let b = b as f64;
+        let f = self.batch_fixed_frac.clamp(0.0, 1.0);
+        self.service_time_s * (f + (1.0 - f) * b)
+    }
+
+    /// Throughput multiplier of batch size `b` over `b = 1`:
+    /// `s(1)·b / s(b) = b / (f + (1−f)·b)`; 1 at `b = 1`, monotone
+    /// increasing, saturating at `1/(1−f)`.
+    pub fn batch_gain(&self, b: usize) -> f64 {
+        if b <= 1 {
+            return 1.0;
+        }
+        let b = b as f64;
+        let f = self.batch_fixed_frac.clamp(0.0, 1.0);
+        b / (f + (1.0 - f) * b)
+    }
+
+    /// Predicted sustainable throughput `th_m(n, b)` at `n` cores with
+    /// server-side batches of `b` items: the per-core regression scaled by
+    /// the batch amortization gain.  `b = 1` equals [`Self::throughput`].
+    pub fn throughput_batched(&self, n: usize, b: usize) -> f64 {
+        self.throughput(n) * self.batch_gain(b)
+    }
+
+    /// Predicted processing latency `p_m(n, b)` (seconds): a request rides
+    /// a full batch, so it pays the whole batched service draw.  Batch
+    /// *formation* wait is accounted separately by the solver (worst-case
+    /// `max_wait_s`) and the simulator (actual accumulation time).
+    pub fn latency_batched(&self, n: usize, b: usize) -> f64 {
+        if n == 0 {
+            return f64::INFINITY;
+        }
+        self.service_time_batch(b)
     }
 }
 
@@ -101,6 +166,7 @@ impl ProfileSet {
                             ("service_time_s", Value::Num(p.service_time_s)),
                             ("service_sigma", Value::Num(p.service_sigma)),
                             ("readiness_s", Value::Num(p.readiness_s)),
+                            ("batch_fixed_frac", Value::Num(p.batch_fixed_frac)),
                             (
                                 "throughput_model",
                                 Value::obj(vec![
@@ -143,6 +209,11 @@ impl ProfileSet {
                     service_time_s: p.req("service_time_s")?.as_f64()?,
                     service_sigma: p.req("service_sigma")?.as_f64()?,
                     readiness_s: p.req("readiness_s")?.as_f64()?,
+                    // Absent in pre-batching profile files: use the default.
+                    batch_fixed_frac: match p.get("batch_fixed_frac") {
+                        Some(v) => v.as_f64()?,
+                        None => DEFAULT_BATCH_FIXED_FRAC,
+                    },
                     throughput_model: LinearRegression {
                         slope: tm.req("slope")?.as_f64()?,
                         intercept: tm.req("intercept")?.as_f64()?,
@@ -205,6 +276,7 @@ impl ProfileSet {
                     readiness_s: *rt,
                     throughput_model: reg,
                     profile_points: pts,
+                    batch_fixed_frac: DEFAULT_BATCH_FIXED_FRAC,
                 }
             })
             .collect();
@@ -326,6 +398,35 @@ mod tests {
         let p = set.get("resnet152").unwrap();
         assert_eq!(p.min_cores_for_slo(0.75, 32), Some(1));
         assert_eq!(p.min_cores_for_slo(0.01, 32), None);
+    }
+
+    #[test]
+    fn batch_model_is_anchored_and_monotone() {
+        let set = ProfileSet::paper_like();
+        let p = set.get("resnet50").unwrap();
+        // b = 1 is exactly the unbatched model (bit-compat anchor).
+        assert_eq!(p.service_time_batch(1), p.service_time_s);
+        assert_eq!(p.batch_gain(1), 1.0);
+        assert_eq!(p.throughput_batched(4, 1), p.throughput(4));
+        assert_eq!(p.latency_batched(4, 1), p.latency(4));
+        let cap = 1.0 / (1.0 - p.batch_fixed_frac);
+        for b in 1..16 {
+            assert!(p.service_time_batch(b + 1) > p.service_time_batch(b));
+            assert!(p.batch_gain(b + 1) > p.batch_gain(b));
+            assert!(p.batch_gain(b + 1) < cap);
+        }
+        assert_eq!(p.latency_batched(0, 4), f64::INFINITY);
+    }
+
+    #[test]
+    fn batch_frac_roundtrips_and_defaults() {
+        let dir = crate::util::testutil::TempDir::new();
+        let path = dir.path().join("profiles.json");
+        let mut set = ProfileSet::paper_like();
+        set.profiles[0].batch_fixed_frac = 0.25;
+        set.save(&path).unwrap();
+        let back = ProfileSet::load(&path).unwrap();
+        assert_eq!(back.profiles[0].batch_fixed_frac, 0.25);
     }
 
     #[test]

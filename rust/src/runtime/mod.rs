@@ -14,6 +14,13 @@ mod manifest;
 mod weights;
 mod worker;
 
+/// PJRT bindings.  The offline build has no crate registry, so the real
+/// `xla` crate is replaced by an API-compatible stub whose entry points
+/// all fail with a clear error (see `xla_stub.rs`); swap this declaration
+/// for `pub use ::xla;` to restore live execution.
+#[path = "xla_stub.rs"]
+pub mod xla;
+
 pub use manifest::{ForecasterMeta, Manifest, VariantMeta};
 pub use weights::load_weights_f32;
 pub use worker::{InferRequest, RuntimeHandle, RuntimeWorker, WorkerPool};

@@ -5,9 +5,10 @@
 //! for the parameter list, so sorting by name recovers the exact positional
 //! argument order the lowered HLO expects after the image input.
 
+use super::xla;
+use super::xla::FromRawBytes;
 use anyhow::{Context, Result};
 use std::path::Path;
-use xla::FromRawBytes;
 
 /// Load all f32 arrays from an npz, sorted by entry name.
 pub fn load_weights_f32(path: &Path) -> Result<Vec<(String, Vec<f32>, Vec<usize>)>> {

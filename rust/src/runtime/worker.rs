@@ -11,6 +11,7 @@
 //! the variant's readiness time `rt_m` — the quantity the paper's loading
 //! cost `LC = max(tc_m * rt_m)` penalizes.
 
+use super::xla;
 use crate::util::mpmc;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -40,6 +41,8 @@ pub struct WorkerPool {
     pub readiness: Duration,
     pub variant: String,
     pub size: usize,
+    /// Batch size of the compiled executable this pool serves.
+    pub batch: usize,
     inflight: Arc<AtomicUsize>,
 }
 
@@ -94,6 +97,7 @@ impl WorkerPool {
             readiness: start.elapsed(),
             variant: meta.name.clone(),
             size,
+            batch,
             inflight,
         })
     }

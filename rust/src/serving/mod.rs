@@ -23,8 +23,18 @@ pub struct Decision {
     pub target: BTreeMap<String, usize>,
     /// Dispatcher weights λ_m (any non-negative scale).
     pub quotas: Vec<(String, f64)>,
+    /// variant -> server-side batch size the variant's pods should form;
+    /// absent means 1 (no batching).
+    pub batches: BTreeMap<String, usize>,
     /// λ̂ the policy planned for (reporting).
     pub predicted_lambda: f64,
+}
+
+impl Decision {
+    /// Batch size for a variant (1 when the policy did not set one).
+    pub fn batch_of(&self, variant: &str) -> usize {
+        self.batches.get(variant).copied().unwrap_or(1).max(1)
+    }
 }
 
 /// Adaptation policy, invoked once per adapter interval.

@@ -30,7 +30,9 @@ use std::time::{Duration, Instant};
 pub struct RealConfig {
     pub slo_s: f64,
     pub adapter_interval_s: f64,
-    /// Serving batch size (the paper disables batching on CPU: 1).
+    /// Default serving batch size (the paper disables batching on CPU: 1).
+    /// A policy's `Decision::batches` overrides it per variant when the
+    /// manifest has an executable compiled at that batch size.
     pub batch: usize,
     /// Seed for the arrival process.
     pub seed: u64,
@@ -66,6 +68,9 @@ pub struct RealEngine {
     /// The quota table the policy currently wants (intersected with the
     /// pools that actually exist before reaching the dispatcher).
     desired_quotas: Arc<Mutex<Vec<(String, f64)>>>,
+    /// Per-variant batch sizes the policy currently wants (from
+    /// `Decision::batches`; absent = the config default).
+    desired_batches: Arc<Mutex<BTreeMap<String, usize>>>,
 }
 
 impl RealEngine {
@@ -81,6 +86,7 @@ impl RealEngine {
             building: Arc::new(Mutex::new(std::collections::HashSet::new())),
             desired: Arc::new(Mutex::new(BTreeMap::new())),
             desired_quotas: Arc::new(Mutex::new(Vec::new())),
+            desired_batches: Arc::new(Mutex::new(BTreeMap::new())),
         })
     }
 
@@ -146,12 +152,35 @@ impl RealEngine {
     pub fn apply(&self, target: &BTreeMap<String, usize>, wait: bool) -> Result<()> {
         *self.desired.lock().unwrap() = target.clone();
         let current = self.committed();
+        let current_batches: BTreeMap<String, usize> = self
+            .pools
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(v, p)| (v.clone(), p.batch))
+            .collect();
+        let wanted_batches = self.desired_batches.lock().unwrap().clone();
         for (variant, &cores) in target {
             if cores == 0 {
                 continue;
             }
+            let meta = self.manifest.variant(variant)?.clone();
+            // Serve at the policy's chosen batch size when an executable
+            // was exported for it; otherwise fall back to the default.
+            let want = wanted_batches
+                .get(variant)
+                .copied()
+                .unwrap_or(self.config.batch)
+                .max(1);
+            let batch = if meta.hlo.contains_key(&want) {
+                want
+            } else {
+                self.config.batch
+            };
             let workers = cores.clamp(1, self.config.max_workers_per_variant);
-            if current.get(variant) == Some(&workers) {
+            if current.get(variant) == Some(&workers)
+                && current_batches.get(variant) == Some(&batch)
+            {
                 continue;
             }
             {
@@ -161,12 +190,10 @@ impl RealEngine {
                 }
                 building.insert(variant.clone());
             }
-            let meta = self.manifest.variant(variant)?.clone();
             let dir = self.artifacts_dir.clone();
             let manifest = self.manifest.clone();
             let pools = self.pools.clone();
             let building = self.building.clone();
-            let batch = self.config.batch;
             let variant_name = variant.clone();
             let desired = self.desired.clone();
             let desired_quotas = self.desired_quotas.clone();
@@ -234,6 +261,7 @@ impl RealEngine {
         // Warm start.
         let first_rate = trace.rates.first().copied().unwrap_or(0.0);
         let d0 = policy.decide(0.0, &[first_rate], &BTreeMap::new());
+        *self.desired_batches.lock().unwrap() = d0.batches.clone();
         self.apply(&d0.target, true)?; // warm start: block until ready
         self.set_quotas(&d0.quotas);
         {
@@ -244,12 +272,9 @@ impl RealEngine {
 
         let arrivals = ArrivalProcess::poisson(trace, self.config.seed);
         let started = Instant::now();
-        let image_len: usize = self
-            .manifest
-            .input_shape(self.config.batch)
-            .iter()
-            .product();
-        let image = Arc::new(vec![0.5f32; image_len]);
+        // Input buffers per batch size: pools of different variants may
+        // serve different compiled batch shapes.
+        let mut image_cache: HashMap<usize, Arc<Vec<f32>>> = HashMap::new();
         let inflight = Arc::new(AtomicUsize::new(0));
         let mut next_adapt = self.config.adapter_interval_s;
         let duration = trace.duration_s() as f64;
@@ -288,8 +313,17 @@ impl RealEngine {
             let metrics_cb = metrics.clone();
             let accuracy = acc_by_variant.get(&variant).copied().unwrap_or(0.0);
             let inflight_cb = inflight.clone();
+            let image = image_cache
+                .entry(pool.batch)
+                .or_insert_with(|| {
+                    Arc::new(vec![
+                        0.5f32;
+                        self.manifest.input_shape(pool.batch).iter().product()
+                    ])
+                })
+                .clone();
             inflight.fetch_add(1, Ordering::SeqCst);
-            let submitted = pool.submit(image.clone(), move |result, elapsed| {
+            let submitted = pool.submit(image, move |result, elapsed| {
                 metrics_cb.lock().unwrap().record_request(RequestRecord {
                     arrival_s: now_s,
                     latency_s: if result.is_ok() {
@@ -336,6 +370,7 @@ impl RealEngine {
         };
         let committed = self.committed();
         let d = policy.decide(now, &history, &committed);
+        *self.desired_batches.lock().unwrap() = d.batches.clone();
         self.apply(&d.target, false)?; // non-blocking: builders swap in when ready
         self.set_quotas(&d.quotas);
         let mut m = metrics.lock().unwrap();

@@ -8,7 +8,35 @@
 //! supplies smooth-WRR routing; the policy is invoked on the same 30 s
 //! cadence as the live system.
 //!
-//! Event order: arrivals, completions, cluster ticks (1 s), adapter ticks.
+//! ## Batch formation
+//!
+//! When a policy's [`Decision`] assigns a variant a batch size `b > 1`,
+//! every pod of that variant forms batches at the queue head: arrivals
+//! accumulate until either `b` requests are waiting or the oldest has
+//! waited `batch_max_wait_s`, then the whole batch is dispatched as *one*
+//! service draw occupying *one* core, with the batched mean service time
+//! `s(b)` from the profile's amortization model
+//! ([`crate::profiler::VariantProfile::service_time_batch`]).  A request's
+//! recorded latency spans arrival → batch completion, so formation wait,
+//! queueing, and the full batched service are all inside the SLO
+//! accounting — matching the worst case the solver charges (`max_wait_s`
+//! formation + `s(b)` service).  With `b = 1` (the default) a batch is a
+//! single request dispatched immediately and no timeout events exist, so
+//! the event and RNG-draw sequence is bit-identical to the pre-batching
+//! engine.
+//!
+//! ## Rate accounting
+//!
+//! Arrivals are counted into per-second buckets; completed seconds are
+//! flushed into the rate history the policy sees.  At every adapter tick
+//! the counter is additionally flushed *up to `now`*: a tick at a
+//! fractional time pushes the in-progress partial second as an
+//! extrapolated per-second rate, so the just-observed load is never
+//! invisible to the policy (previously it only surfaced when a later event
+//! rolled the second counter forward).
+//!
+//! Event order: arrivals, completions, batch timeouts, cluster ticks
+//! (1 s), adapter ticks.
 
 use super::{Decision, Policy};
 use crate::cluster::{Cluster, ClusterEvent};
@@ -31,6 +59,9 @@ pub struct SimConfig {
     pub bucket_s: f64,
     /// Drop requests that queued longer than this (paper clients time out).
     pub queue_timeout_s: f64,
+    /// Batch-formation wait cap: a pod dispatches a partial batch once its
+    /// oldest member has waited this long.  Irrelevant at batch size 1.
+    pub batch_max_wait_s: f64,
 }
 
 impl Default for SimConfig {
@@ -42,6 +73,7 @@ impl Default for SimConfig {
             seed: 0,
             bucket_s: 10.0,
             queue_timeout_s: 10.0,
+            batch_max_wait_s: 0.05,
         }
     }
 }
@@ -49,7 +81,10 @@ impl Default for SimConfig {
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum EventKind {
     Arrival(usize),
-    Completion { pod_id: u64, req: usize },
+    /// One batched service draw finishing; `batch` indexes the batch table.
+    Completion { pod_id: u64, batch: usize },
+    /// Formation wait expired for the batch a pod opened at `forming_seq`.
+    BatchTimeout { pod_id: u64, forming_seq: u64 },
     ClusterTick,
     AdapterTick,
 }
@@ -78,12 +113,41 @@ impl Ord for Event {
     }
 }
 
+fn push_event(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
+    *seq += 1;
+    heap.push(Reverse(Event { t, seq: *seq, kind }));
+}
+
+/// Shortest window a rate sample may be normalized over.  Caps the
+/// extrapolation factor at 4x: an adapter tick at t = 30.001 must not turn
+/// one arrival in a 1 ms sliver into a 1000 rps sample (a max-picking
+/// forecaster would seize on it).  Windows shorter than this merge into
+/// the neighbouring sample instead.
+const MIN_RATE_SAMPLE_SPAN_S: f64 = 0.25;
+
 struct PodSim {
     variant: String,
     cores: usize,
     busy: usize,
-    queue: VecDeque<usize>, // request ids
-    alive: bool,
+    /// Formed batches (ids into the batch table) awaiting a free core.
+    queue: VecDeque<usize>,
+    /// Requests accumulating toward the next batch (ids).
+    forming: Vec<usize>,
+    /// Bumped on every dispatch; stale `BatchTimeout` events don't match.
+    forming_seq: u64,
+    /// Current batch-size target for this pod's variant (1 = no batching).
+    max_batch: usize,
+    /// Requests waiting at this pod (forming + members of queued batches);
+    /// kept as a counter so routing comparisons stay O(1).
+    waiting: usize,
+}
+
+impl PodSim {
+    /// Waiting + in-service requests normalized by cores — the
+    /// least-loaded routing metric.
+    fn load(&self) -> f64 {
+        (self.busy + self.waiting) as f64 / self.cores.max(1) as f64
+    }
 }
 
 struct RequestSim {
@@ -110,10 +174,12 @@ impl SimEngine {
         Self { config, profiles }
     }
 
-    /// Draw one service time for a variant (lognormal, measured mean).
-    fn sample_service(&self, variant: &str, rng: &mut Rng) -> f64 {
+    /// Draw one service time for a batch of `batch` requests on a variant
+    /// (lognormal around the amortized mean; `batch = 1` is the plain
+    /// measured service time).
+    fn sample_service_batch(&self, variant: &str, batch: usize, rng: &mut Rng) -> f64 {
         let p = self.profiles.get(variant).expect("unknown variant");
-        rng.lognormal_mean(p.service_time_s, p.service_sigma.max(1e-6))
+        rng.lognormal_mean(p.service_time_batch(batch), p.service_sigma.max(1e-6))
     }
 
     /// Run `policy` against `trace`. The initial decision (t=0) is applied
@@ -143,26 +209,31 @@ impl SimEngine {
         dispatcher.set_weights(&d0.quotas);
         metrics.record_prediction(0.0, d0.predicted_lambda);
         metrics.record_cost(0.0, cluster.billed_cores());
+        // Per-variant batch-size targets in force (new pods inherit them).
+        let mut current_batches: BTreeMap<String, usize> = d0
+            .target
+            .keys()
+            .map(|v| (v.clone(), d0.batch_of(v)))
+            .collect();
+        for (v, &b) in current_batches.iter().filter(|&(_, &b)| b > 1) {
+            metrics.record_batch_decision(0.0, v, b);
+        }
         decisions.push((0.0, d0));
 
         // --- Event queue.
         let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
         let mut seq = 0u64;
-        let push = |heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind| {
-            *seq += 1;
-            heap.push(Reverse(Event { t, seq: *seq, kind }));
-        };
         for (i, &t) in arrivals.iter().enumerate() {
-            push(&mut heap, &mut seq, t, EventKind::Arrival(i));
+            push_event(&mut heap, &mut seq, t, EventKind::Arrival(i));
         }
         let mut t_next = 1.0;
         while t_next < duration {
-            push(&mut heap, &mut seq, t_next, EventKind::ClusterTick);
+            push_event(&mut heap, &mut seq, t_next, EventKind::ClusterTick);
             t_next += 1.0;
         }
         let mut t_adapt = cfg.adapter_interval_s;
         while t_adapt < duration {
-            push(&mut heap, &mut seq, t_adapt, EventKind::AdapterTick);
+            push_event(&mut heap, &mut seq, t_adapt, EventKind::AdapterTick);
             t_adapt += cfg.adapter_interval_s;
         }
 
@@ -176,14 +247,24 @@ impl SimEngine {
                     cores: p.cores,
                     busy: 0,
                     queue: VecDeque::new(),
-                    alive: true,
+                    forming: Vec::new(),
+                    forming_seq: 0,
+                    max_batch: current_batches.get(&p.variant).copied().unwrap_or(1),
+                    waiting: 0,
                 },
             );
         }
         let mut requests: Vec<RequestSim> = Vec::with_capacity(arrivals.len());
+        // batch id -> member request ids (set at dispatch, pruned of
+        // timed-out members at service start)
+        let mut batches: Vec<Vec<usize>> = Vec::new();
         let mut rate_history: Vec<f64> = Vec::new();
         let mut arrivals_this_second = 0u64;
         let mut last_whole_second = 0u64;
+        // Start of the window `arrivals_this_second` covers; advances with
+        // the per-second roll and with partial flushes at adapter ticks so
+        // every sample is normalized by the span it actually observed.
+        let mut counter_since = 0.0f64;
 
         let acc_of = |profiles: &ProfileSet, v: &str| -> f64 {
             profiles.get(v).map(|p| p.accuracy).unwrap_or(0.0)
@@ -194,11 +275,19 @@ impl SimEngine {
         // request is accounted for (conservation invariant).
         while let Some(Reverse(ev)) = heap.pop() {
             let now = ev.t;
-            // roll the per-second arrival counter
+            // roll the per-second arrival counter (the division is by
+            // exactly 1.0 — a bit-exact no-op — unless an adapter tick
+            // partially flushed this second; a sliver left by a flush just
+            // before the boundary merges into the next second's sample)
             let sec = now as u64;
             while last_whole_second < sec {
-                rate_history.push(arrivals_this_second as f64);
-                arrivals_this_second = 0;
+                let boundary = (last_whole_second + 1) as f64;
+                let span = boundary - counter_since;
+                if span >= MIN_RATE_SAMPLE_SPAN_S {
+                    rate_history.push(arrivals_this_second as f64 / span);
+                    arrivals_this_second = 0;
+                    counter_since = boundary;
+                }
                 last_whole_second += 1;
             }
 
@@ -224,56 +313,82 @@ impl SimEngine {
                         });
                         continue;
                     };
-                    let pod = pods.get_mut(&pid).expect("routed to unknown pod");
+                    let accuracy = acc_of(&self.profiles, &pods[&pid].variant);
                     requests.push(RequestSim {
                         arrival: now,
-                        accuracy: acc_of(&self.profiles, &pod.variant),
+                        accuracy,
                     });
-                    if pod.busy < pod.cores {
-                        pod.busy += 1;
-                        let st = self.sample_service(&pod.variant, &mut rng);
-                        push(
-                            &mut heap,
-                            &mut seq,
-                            now + st,
-                            EventKind::Completion { pod_id: pid, req: rid },
-                        );
-                    } else {
-                        pod.queue.push_back(rid);
-                    }
+                    self.enqueue_request(
+                        pid,
+                        rid,
+                        now,
+                        &mut pods,
+                        &mut batches,
+                        &mut heap,
+                        &mut seq,
+                        &mut rng,
+                    );
                 }
-                EventKind::Completion { pod_id, req } => {
-                    let r = &requests[req];
-                    metrics.record_request(RequestRecord {
-                        arrival_s: r.arrival,
-                        latency_s: now - r.arrival,
-                        accuracy: r.accuracy,
-                    });
+                EventKind::Completion { pod_id, batch } => {
+                    for &rid in &batches[batch] {
+                        let r = &requests[rid];
+                        metrics.record_request(RequestRecord {
+                            arrival_s: r.arrival,
+                            latency_s: now - r.arrival,
+                            accuracy: r.accuracy,
+                        });
+                    }
                     if let Some(pod) = pods.get_mut(&pod_id) {
                         pod.busy = pod.busy.saturating_sub(1);
-                        // Start the next queued request, dropping timeouts.
-                        while let Some(next) = pod.queue.pop_front() {
-                            let waited = now - requests[next].arrival;
-                            if waited > self.config.queue_timeout_s {
-                                metrics.record_request(RequestRecord {
-                                    arrival_s: requests[next].arrival,
-                                    latency_s: f64::INFINITY,
-                                    accuracy: requests[next].accuracy,
-                                });
+                        // Start the next formed batch, dropping members
+                        // that queued past the client timeout.
+                        while let Some(bid) = pod.queue.pop_front() {
+                            pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
+                            let mut live = Vec::with_capacity(batches[bid].len());
+                            for &rid in &batches[bid] {
+                                let waited = now - requests[rid].arrival;
+                                if waited > self.config.queue_timeout_s {
+                                    metrics.record_request(RequestRecord {
+                                        arrival_s: requests[rid].arrival,
+                                        latency_s: f64::INFINITY,
+                                        accuracy: requests[rid].accuracy,
+                                    });
+                                } else {
+                                    live.push(rid);
+                                }
+                            }
+                            if live.is_empty() {
                                 continue;
                             }
                             pod.busy += 1;
-                            let st = self.sample_service(&pod.variant, &mut rng);
-                            push(
+                            let st =
+                                self.sample_service_batch(&pod.variant, live.len(), &mut rng);
+                            batches[bid] = live;
+                            push_event(
                                 &mut heap,
                                 &mut seq,
                                 now + st,
-                                EventKind::Completion {
-                                    pod_id,
-                                    req: next,
-                                },
+                                EventKind::Completion { pod_id, batch: bid },
                             );
                             break;
+                        }
+                    }
+                }
+                EventKind::BatchTimeout { pod_id, forming_seq } => {
+                    if let Some(pod) = pods.get_mut(&pod_id) {
+                        if pod.forming_seq == forming_seq && !pod.forming.is_empty() {
+                            let items = std::mem::take(&mut pod.forming);
+                            pod.forming_seq += 1;
+                            self.dispatch_batch(
+                                pod,
+                                pod_id,
+                                items,
+                                now,
+                                &mut batches,
+                                &mut heap,
+                                &mut seq,
+                                &mut rng,
+                            );
                         }
                     }
                 }
@@ -287,6 +402,8 @@ impl SimEngine {
                                     .find(|p| p.id == pod_id)
                                     .map(|p| p.cores)
                                     .unwrap_or(0);
+                                let max_batch =
+                                    current_batches.get(&variant).copied().unwrap_or(1);
                                 pods.insert(
                                     pod_id,
                                     PodSim {
@@ -294,40 +411,40 @@ impl SimEngine {
                                         cores,
                                         busy: 0,
                                         queue: VecDeque::new(),
-                                        alive: true,
+                                        forming: Vec::new(),
+                                        forming_seq: 0,
+                                        max_batch,
+                                        waiting: 0,
                                     },
                                 );
                             }
                             ClusterEvent::PodRemoved { pod_id, .. } => {
-                                // Re-route any still-queued requests.
+                                // Re-route still-waiting requests (queued
+                                // batches and the forming buffer).
                                 if let Some(mut dead) = pods.remove(&pod_id) {
-                                    dead.alive = false;
-                                    let orphans: Vec<usize> = dead.queue.drain(..).collect();
+                                    let mut orphans: Vec<usize> = Vec::new();
+                                    for bid in dead.queue.drain(..) {
+                                        orphans.append(&mut batches[bid]);
+                                    }
+                                    orphans.append(&mut dead.forming);
                                     for rid in orphans {
                                         if let Some(target) = dispatcher
                                             .route()
                                             .and_then(|v| pick_pod(&cluster, &pods, &v))
                                             .or_else(|| any_pod(&cluster, &pods))
                                         {
-                                            let pod =
-                                                pods.get_mut(&target).expect("alive pod");
                                             requests[rid].accuracy =
-                                                acc_of(&self.profiles, &pod.variant);
-                                            if pod.busy < pod.cores {
-                                                pod.busy += 1;
-                                                let st = self.sample_service(&pod.variant, &mut rng);
-                                                push(
-                                                    &mut heap,
-                                                    &mut seq,
-                                                    now + st,
-                                                    EventKind::Completion {
-                                                        pod_id: target,
-                                                        req: rid,
-                                                    },
-                                                );
-                                            } else {
-                                                pod.queue.push_back(rid);
-                                            }
+                                                acc_of(&self.profiles, &pods[&target].variant);
+                                            self.enqueue_request(
+                                                target,
+                                                rid,
+                                                now,
+                                                &mut pods,
+                                                &mut batches,
+                                                &mut heap,
+                                                &mut seq,
+                                                &mut rng,
+                                            );
                                         } else {
                                             metrics.record_request(RequestRecord {
                                                 arrival_s: requests[rid].arrival,
@@ -343,6 +460,20 @@ impl SimEngine {
                     metrics.record_cost(now, cluster.billed_cores());
                 }
                 EventKind::AdapterTick => {
+                    // Flush the arrival counter up to `now` so the policy
+                    // sees the in-progress partial second (normalized to a
+                    // per-second rate); integer tick times flush nothing
+                    // extra because the roll above already caught up.  The
+                    // remainder of the second is then normalized by its own
+                    // span at the next roll via `counter_since`.  Slivers
+                    // below the minimum span stay in the counter rather
+                    // than become wildly extrapolated samples.
+                    let span = now - counter_since;
+                    if span >= MIN_RATE_SAMPLE_SPAN_S {
+                        rate_history.push(arrivals_this_second as f64 / span);
+                        arrivals_this_second = 0;
+                        counter_since = now;
+                    }
                     let committed = cluster.committed_allocation();
                     let decision = policy.decide(now, &rate_history, &committed);
                     rate_history.clear();
@@ -351,6 +482,41 @@ impl SimEngine {
                         profiles.get(v).map(|p| p.readiness_s).unwrap_or(10.0)
                     });
                     dispatcher.set_weights(&decision.quotas);
+                    // Propagate batch-size targets to live and future pods;
+                    // a shrunk target can complete a forming batch.  Visit
+                    // pods in id order — HashMap iteration order would make
+                    // the RNG draw sequence nondeterministic across runs.
+                    current_batches = decision
+                        .target
+                        .keys()
+                        .map(|v| (v.clone(), decision.batch_of(v)))
+                        .collect();
+                    let mut pod_ids: Vec<u64> = pods.keys().copied().collect();
+                    pod_ids.sort_unstable();
+                    for pid in pod_ids {
+                        let pod = pods.get_mut(&pid).expect("listed pod");
+                        let mb = current_batches.get(&pod.variant).copied().unwrap_or(1);
+                        if mb != pod.max_batch {
+                            pod.max_batch = mb;
+                            if pod.forming.len() >= mb {
+                                let items = std::mem::take(&mut pod.forming);
+                                pod.forming_seq += 1;
+                                self.dispatch_batch(
+                                    pod,
+                                    pid,
+                                    items,
+                                    now,
+                                    &mut batches,
+                                    &mut heap,
+                                    &mut seq,
+                                    &mut rng,
+                                );
+                            }
+                        }
+                    }
+                    for (v, &b) in current_batches.iter().filter(|&(_, &b)| b > 1) {
+                        metrics.record_batch_decision(now, v, b);
+                    }
                     metrics.record_prediction(now, decision.predicted_lambda);
                     metrics.record_cost(now, cluster.billed_cores());
                     decisions.push((now, decision));
@@ -364,19 +530,77 @@ impl SimEngine {
             decisions,
         }
     }
+
+    /// Add one routed request to a pod: it joins the forming batch, which
+    /// dispatches when full (immediately at `max_batch = 1`); opening a
+    /// fresh batch arms the formation timeout.
+    #[allow(clippy::too_many_arguments)]
+    fn enqueue_request(
+        &self,
+        pod_id: u64,
+        rid: usize,
+        now: f64,
+        pods: &mut HashMap<u64, PodSim>,
+        batches: &mut Vec<Vec<usize>>,
+        heap: &mut BinaryHeap<Reverse<Event>>,
+        seq: &mut u64,
+        rng: &mut Rng,
+    ) {
+        let pod = pods.get_mut(&pod_id).expect("routed to unknown pod");
+        pod.forming.push(rid);
+        pod.waiting += 1;
+        if pod.forming.len() >= pod.max_batch {
+            let items = std::mem::take(&mut pod.forming);
+            pod.forming_seq += 1;
+            self.dispatch_batch(pod, pod_id, items, now, batches, heap, seq, rng);
+        } else if pod.forming.len() == 1 {
+            push_event(
+                heap,
+                seq,
+                now + self.config.batch_max_wait_s,
+                EventKind::BatchTimeout {
+                    pod_id,
+                    forming_seq: pod.forming_seq,
+                },
+            );
+        }
+    }
+
+    /// Hand a formed batch to the pod: one service draw on a free core, or
+    /// the formed-batch queue when all cores are busy.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_batch(
+        &self,
+        pod: &mut PodSim,
+        pod_id: u64,
+        items: Vec<usize>,
+        now: f64,
+        batches: &mut Vec<Vec<usize>>,
+        heap: &mut BinaryHeap<Reverse<Event>>,
+        seq: &mut u64,
+        rng: &mut Rng,
+    ) {
+        let bid = batches.len();
+        batches.push(items);
+        if pod.busy < pod.cores {
+            pod.busy += 1;
+            pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
+            let st = self.sample_service_batch(&pod.variant, batches[bid].len(), rng);
+            push_event(heap, seq, now + st, EventKind::Completion { pod_id, batch: bid });
+        } else {
+            pod.queue.push_back(bid);
+        }
+    }
 }
 
-/// Least-loaded ready pod of a variant (queue+busy normalized by cores).
+/// Least-loaded ready pod of a variant (waiting requests normalized by
+/// cores).
 fn pick_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>, variant: &str) -> Option<u64> {
     cluster
         .ready_pods_of(variant)
         .iter()
         .filter_map(|p| pods.get(&p.id).map(|ps| (p.id, ps)))
-        .min_by(|a, b| {
-            let load_a = (a.1.busy + a.1.queue.len()) as f64 / a.1.cores.max(1) as f64;
-            let load_b = (b.1.busy + b.1.queue.len()) as f64 / b.1.cores.max(1) as f64;
-            load_a.total_cmp(&load_b)
-        })
+        .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
         .map(|(id, _)| id)
 }
 
@@ -387,13 +611,7 @@ fn any_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>) -> Option<u64> {
         .iter()
         .filter(|p| p.is_ready() && pods.contains_key(&p.id))
         .map(|p| p.id)
-        .min_by(|a, b| {
-            let pa = &pods[a];
-            let pb = &pods[b];
-            let la = (pa.busy + pa.queue.len()) as f64 / pa.cores.max(1) as f64;
-            let lb = (pb.busy + pb.queue.len()) as f64 / pb.cores.max(1) as f64;
-            la.total_cmp(&lb)
-        })
+        .min_by(|a, b| pods[a].load().total_cmp(&pods[b].load()))
 }
 
 #[cfg(test)]
@@ -463,5 +681,139 @@ mod tests {
         let s2 = r2.metrics.summary("b", 60.0);
         assert_eq!(s1.total_requests, s2.total_requests);
         assert_eq!(s1.p99_latency_s, s2.p99_latency_s);
+    }
+
+    #[test]
+    fn deterministic_given_seed_with_batching() {
+        let mut p1 = StaticPolicy::with_batch("resnet50", 4, 6);
+        let mut p2 = StaticPolicy::with_batch("resnet50", 4, 6);
+        let r1 = engine(7).run(&mut p1, &Trace::steady(30.0, 60));
+        let r2 = engine(7).run(&mut p2, &Trace::steady(30.0, 60));
+        let s1 = r1.metrics.summary("a", 60.0);
+        let s2 = r2.metrics.summary("b", 60.0);
+        assert_eq!(s1.total_requests, s2.total_requests);
+        assert_eq!(s1.p99_latency_s, s2.p99_latency_s);
+    }
+
+    #[test]
+    fn batched_pod_meets_slo_under_capacity() {
+        // resnet50 at 4 cores, batch 6: formation ≤ 50 ms + batched service
+        // s(b) stays well under the 750 ms SLO at 30 rps offered.
+        let mut policy = StaticPolicy::with_batch("resnet50", 4, 6);
+        let res = engine(11).run(&mut policy, &Trace::steady(30.0, 120));
+        let s = res.metrics.summary("batched", 120.0);
+        assert_eq!(s.dropped, 0, "{s:?}");
+        assert!(s.p99_latency_s < 0.75, "{s:?}");
+        assert!(s.slo_violation_rate < 0.01, "{s:?}");
+        // batching adds formation wait: latency sits above the unbatched run
+        let mut plain = StaticPolicy::new("resnet50", 4);
+        let rp = engine(11).run(&mut plain, &Trace::steady(30.0, 120));
+        let sp = rp.metrics.summary("plain", 120.0);
+        assert!(s.mean_latency_s > sp.mean_latency_s, "{} vs {}", s.mean_latency_s, sp.mean_latency_s);
+    }
+
+    #[test]
+    fn batching_increases_goodput_under_overload() {
+        // resnet50 at 8 cores saturates near 80 rps unbatched; offered 120
+        // rps the unbatched pod drowns while batch amortization (~1.7x
+        // capacity) keeps the queue stable.
+        let trace = Trace::steady(120.0, 180);
+        let mut plain = StaticPolicy::new("resnet50", 8);
+        let s1 = engine(9).run(&mut plain, &trace).metrics.summary("b1", 180.0);
+        let mut batched = StaticPolicy::with_batch("resnet50", 8, 8);
+        let sb = engine(9).run(&mut batched, &trace).metrics.summary("b8", 180.0);
+        assert!(
+            sb.goodput_rps > s1.goodput_rps * 1.2,
+            "batched {} vs plain {}",
+            sb.goodput_rps,
+            s1.goodput_rps
+        );
+    }
+
+    #[test]
+    fn batch_decisions_are_surfaced_in_metrics() {
+        let mut policy = StaticPolicy::with_batch("resnet50", 4, 6);
+        let res = engine(12).run(&mut policy, &Trace::steady(20.0, 70));
+        let log = res.metrics.batch_decisions();
+        assert!(!log.is_empty());
+        assert_eq!(log[0], (0.0, "resnet50".to_string(), 6));
+        // unbatched runs log nothing
+        let mut plain = StaticPolicy::new("resnet50", 4);
+        let rp = engine(12).run(&mut plain, &Trace::steady(20.0, 70));
+        assert!(rp.metrics.batch_decisions().is_empty());
+    }
+
+    /// Records the rate history each `decide` call observes.
+    struct ProbePolicy {
+        inner: StaticPolicy,
+        windows: Vec<Vec<f64>>,
+    }
+
+    impl ProbePolicy {
+        fn new(variant: &str, cores: usize) -> Self {
+            Self {
+                inner: StaticPolicy::new(variant, cores),
+                windows: Vec::new(),
+            }
+        }
+    }
+
+    impl Policy for ProbePolicy {
+        fn name(&self) -> String {
+            "probe".into()
+        }
+
+        fn decide(
+            &mut self,
+            now: f64,
+            rate_history: &[f64],
+            committed: &BTreeMap<String, usize>,
+        ) -> Decision {
+            self.windows.push(rate_history.to_vec());
+            self.inner.decide(now, rate_history, committed)
+        }
+    }
+
+    #[test]
+    fn first_adapter_tick_sees_thirty_rate_samples() {
+        // 30 s of steady traffic before the first tick must surface as 30
+        // per-second samples (the 31st second only starts at the tick).
+        let mut probe = ProbePolicy::new("resnet18", 4);
+        engine(5).run(&mut probe, &Trace::steady(40.0, 31));
+        assert_eq!(probe.windows.len(), 2); // warm start + t=30 tick
+        assert_eq!(probe.windows[1].len(), 30, "{:?}", probe.windows[1]);
+    }
+
+    #[test]
+    fn fractional_adapter_tick_sees_the_partial_second() {
+        // A tick at t=10.5 must see 10 whole seconds plus the in-progress
+        // half second — previously the partial second was invisible — and
+        // every sample must be normalized to a per-second rate: both the
+        // partial sample and the post-tick remainder of that second sit
+        // near the offered 200 rps, not near half of it.
+        let eng = SimEngine::new(
+            ProfileSet::paper_like(),
+            SimConfig {
+                seed: 6,
+                adapter_interval_s: 10.5,
+                ..Default::default()
+            },
+        );
+        let mut probe = ProbePolicy::new("resnet18", 4);
+        eng.run(&mut probe, &Trace::steady(200.0, 22));
+        // warm start + ticks at 10.5 and 21.0
+        assert_eq!(probe.windows.len(), 3);
+        let w1 = &probe.windows[1];
+        assert_eq!(w1.len(), 11, "{w1:?}");
+        let partial = *w1.last().unwrap();
+        assert!(partial > 150.0 && partial < 260.0, "partial sample {partial}");
+        // second window starts with the [10.5, 11) remainder, normalized
+        let w2 = &probe.windows[2];
+        assert_eq!(w2.len(), 11, "{w2:?}");
+        assert!(
+            w2[0] > 150.0 && w2[0] < 260.0,
+            "remainder sample {} must be span-normalized",
+            w2[0]
+        );
     }
 }

@@ -170,6 +170,27 @@ mod tests {
     }
 
     #[test]
+    fn agrees_with_brute_force_on_batched_problems() {
+        use super::super::tests::problem_batched;
+        for (lambda, budget, max_batch) in [
+            (75.0, 20, 4),
+            (120.0, 14, 8),
+            (250.0, 8, 8),
+            (40.0, 10, 2),
+        ] {
+            let p = problem_batched(lambda, budget, 0.05, max_batch);
+            let bb = BranchBoundSolver.solve(&p).unwrap();
+            let bf = BruteForceSolver.solve(&p).unwrap();
+            assert!(
+                (bb.objective - bf.objective).abs() < 1e-9,
+                "λ={lambda} B={budget} mb={max_batch}: bb={} bf={}",
+                bb.objective,
+                bf.objective
+            );
+        }
+    }
+
+    #[test]
     fn handles_large_budget_quickly() {
         let p = problem(400.0, 64, 0.05);
         let t0 = std::time::Instant::now();

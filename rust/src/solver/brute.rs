@@ -123,6 +123,36 @@ mod tests {
     }
 
     #[test]
+    fn batching_extends_feasible_load_at_equal_budget() {
+        // λ=250 at B=8 exceeds every unbatched capacity (resnet18 peaks at
+        // ~184 rps); with batch amortization the same 8 cores cover it.
+        let unb = super::super::tests::problem(250.0, 8, 0.05);
+        let bat = super::super::tests::problem_batched(250.0, 8, 0.05, 8);
+        let a_unb = BruteForceSolver.solve(&unb).unwrap();
+        let a_bat = BruteForceSolver.solve(&bat).unwrap();
+        assert!(!a_unb.feasible, "{a_unb:?}");
+        assert!(a_bat.feasible, "{a_bat:?}");
+        assert!(a_bat.total_cores() <= 8);
+        assert!(a_bat.batches.values().any(|&b| b > 1));
+    }
+
+    #[test]
+    fn batching_never_hurts_the_objective() {
+        for (lambda, budget) in [(40.0, 14), (75.0, 20), (120.0, 10), (200.0, 24)] {
+            let unb = super::super::tests::problem(lambda, budget, 0.05);
+            let bat = super::super::tests::problem_batched(lambda, budget, 0.05, 8);
+            let a = BruteForceSolver.solve(&unb).unwrap();
+            let b = BruteForceSolver.solve(&bat).unwrap();
+            assert!(
+                b.objective >= a.objective - 1e-9,
+                "λ={lambda} B={budget}: batched {} < unbatched {}",
+                b.objective,
+                a.objective
+            );
+        }
+    }
+
+    #[test]
     fn search_space_is_pruned() {
         let p = problem(75.0, 20, 0.05);
         let space = BruteForceSolver::search_space(&p);

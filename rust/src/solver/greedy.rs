@@ -129,6 +129,23 @@ mod tests {
     }
 
     #[test]
+    fn batched_problems_stay_feasible_and_bounded() {
+        use super::super::tests::problem_batched;
+        for (lambda, budget) in [(75.0, 20), (200.0, 14)] {
+            let p = problem_batched(lambda, budget, 0.05, 8);
+            let g = GreedySolver.solve(&p).unwrap();
+            let e = BruteForceSolver.solve(&p).unwrap();
+            assert!(g.feasible, "λ={lambda} B={budget}: {g:?}");
+            assert!(g.objective <= e.objective + 1e-9);
+            assert!(
+                e.objective - g.objective < 5.0,
+                "gap {} at λ={lambda} B={budget}",
+                e.objective - g.objective
+            );
+        }
+    }
+
+    #[test]
     fn gap_to_exact_is_bounded() {
         // Greedy may be suboptimal but should land within a few accuracy
         // points of the exact objective on paper-scale instances.

@@ -17,6 +17,24 @@
 //! capacity first.  So the search space is core vectors only, each scored
 //! in O(M); the paper notes its own solution enumerates all configurations.
 //!
+//! ## Batching
+//!
+//! With server-side batching enabled ([`Problem::from_profiles_batched`])
+//! the decision gains a per-variant batch size `b_m ≤ max_batch`.  A second
+//! structural fact keeps the search space unchanged: the batch amortization
+//! gain is monotone in `b` and the objective depends on `b_m` only through
+//! the capacity `th_m(n, b)` and the SLO constraint, so **for every
+//! (variant, cores) pair the optimal batch is the largest SLO-feasible
+//! one**, chosen independently per table entry.  The SLO accounting charges
+//! the worst case end-to-end: `max_wait_s` of batch-formation wait (a pod
+//! dispatches a partial batch after at most that long) plus the full
+//! batched service time `s_m(b)` — a request may ride a batch that only
+//! dispatched on timeout.  The chosen sizes surface as
+//! [`VariantInput::batch`] / [`Allocation::batches`] and flow through
+//! `Decision` into the serving engines; `max_batch = 1` reproduces the
+//! unbatched tables bit-for-bit, so batching off is behaviourally identical
+//! to the pre-batching solver.
+//!
 //! Three solvers share the scoring code:
 //! * [`BruteForceSolver`] — exact enumeration of all weak compositions
 //!   (the paper's approach; with dominance pruning).
@@ -32,7 +50,7 @@ pub use branch_bound::BranchBoundSolver;
 pub use brute::BruteForceSolver;
 pub use greedy::GreedySolver;
 
-use crate::config::ObjectiveWeights;
+use crate::config::{BatchingConfig, ObjectiveWeights};
 use crate::profiler::ProfileSet;
 use std::collections::BTreeMap;
 
@@ -41,14 +59,18 @@ use std::collections::BTreeMap;
 pub struct VariantInput {
     pub name: String,
     pub accuracy: f64,
-    /// `th_m(n)` for n in 0..=budget (precomputed from the regression).
+    /// `th_m(n, b_n)` for n in 0..=budget (precomputed from the regression,
+    /// at the per-n chosen batch size).
     pub throughput: Vec<f64>,
-    /// `p_m(n)` in seconds for n in 0..=budget.
+    /// Worst-case `p_m(n, b_n)` in seconds for n in 0..=budget, including
+    /// batch-formation wait when `b_n > 1`.
     pub latency: Vec<f64>,
     /// Readiness time `rt_m`, seconds.
     pub readiness_s: f64,
     /// Cores currently allocated (0 = not loaded); drives `tc_m`.
     pub current_cores: usize,
+    /// Chosen batch size per core count (all 1 when batching is disabled).
+    pub batch: Vec<usize>,
 }
 
 /// The full problem instance.
@@ -62,10 +84,16 @@ pub struct Problem {
     /// CPU budget B.
     pub budget: usize,
     pub weights: ObjectiveWeights,
+    /// Batch-size cap the tables were built with (1 = batching disabled).
+    pub max_batch: usize,
+    /// Batch-formation wait cap charged against the SLO when batching.
+    pub max_wait_s: f64,
 }
 
 impl Problem {
-    /// Build a problem from profiles (the normal path).
+    /// Build a problem from profiles with batching disabled (the paper's
+    /// CPU setting; identical to [`Self::from_profiles_batched`] with
+    /// `max_batch = 1`).
     pub fn from_profiles(
         profiles: &ProfileSet,
         lambda: f64,
@@ -74,16 +102,73 @@ impl Problem {
         weights: ObjectiveWeights,
         current: &BTreeMap<String, usize>,
     ) -> Self {
+        Self::from_profiles_batched(
+            profiles,
+            lambda,
+            slo_s,
+            budget,
+            weights,
+            current,
+            &BatchingConfig::default(),
+        )
+    }
+
+    /// Build a problem whose per-(variant, cores) tables additionally pick
+    /// a server-side batch size: the largest `b ≤ max_batch` whose
+    /// worst-case latency (formation wait + batched service) meets the SLO.
+    /// The amortization gain is monotone in `b`, so that choice maximizes
+    /// throughput — and therefore the Eq. 1 objective — pointwise, keeping
+    /// the solvers' search space core vectors only.
+    pub fn from_profiles_batched(
+        profiles: &ProfileSet,
+        lambda: f64,
+        slo_s: f64,
+        budget: usize,
+        weights: ObjectiveWeights,
+        current: &BTreeMap<String, usize>,
+        batching: &BatchingConfig,
+    ) -> Self {
+        let max_batch = batching.max_batch.max(1);
         let variants = profiles
             .profiles
             .iter()
-            .map(|p| VariantInput {
-                name: p.name.clone(),
-                accuracy: p.accuracy,
-                throughput: (0..=budget).map(|n| p.throughput(n)).collect(),
-                latency: (0..=budget).map(|n| p.latency(n)).collect(),
-                readiness_s: p.readiness_s,
-                current_cores: current.get(&p.name).copied().unwrap_or(0),
+            .map(|p| {
+                // Largest SLO-feasible batch; independent of the core count
+                // (worst-case latency is formation wait + batched service,
+                // neither depends on n).  b = 1 is kept even when itself
+                // infeasible so `slo_ok` flags the variant just like the
+                // unbatched tables.
+                let mut best = 1usize;
+                for b in 2..=max_batch {
+                    if batching.max_wait_s + p.service_time_batch(b) <= slo_s {
+                        best = b;
+                    }
+                }
+                let formation = if best > 1 { batching.max_wait_s } else { 0.0 };
+                let worst_latency = formation + p.service_time_batch(best);
+                let mut throughput = Vec::with_capacity(budget + 1);
+                let mut latency = Vec::with_capacity(budget + 1);
+                let mut batch = Vec::with_capacity(budget + 1);
+                for n in 0..=budget {
+                    if n == 0 {
+                        throughput.push(0.0);
+                        latency.push(f64::INFINITY);
+                        batch.push(1);
+                        continue;
+                    }
+                    throughput.push(p.throughput_batched(n, best));
+                    latency.push(worst_latency);
+                    batch.push(best);
+                }
+                VariantInput {
+                    name: p.name.clone(),
+                    accuracy: p.accuracy,
+                    throughput,
+                    latency,
+                    readiness_s: p.readiness_s,
+                    current_cores: current.get(&p.name).copied().unwrap_or(0),
+                    batch,
+                }
             })
             .collect();
         Self {
@@ -92,6 +177,8 @@ impl Problem {
             slo_s,
             budget,
             weights,
+            max_batch,
+            max_wait_s: batching.max_wait_s,
         }
     }
 
@@ -118,6 +205,9 @@ impl Problem {
 pub struct Allocation {
     /// variant name -> (cores, quota λ_m). Only active variants appear.
     pub assignments: BTreeMap<String, (usize, f64)>,
+    /// variant name -> chosen server-side batch size (1 unless batching is
+    /// enabled). Only active variants appear.
+    pub batches: BTreeMap<String, usize>,
     pub objective: f64,
     /// Weighted average accuracy AA (percentage points).
     pub average_accuracy: f64,
@@ -140,6 +230,10 @@ impl Allocation {
         self.assignments.get(name).map(|&(_, q)| q).unwrap_or(0.0)
     }
 
+    pub fn batch_of(&self, name: &str) -> usize {
+        self.batches.get(name).copied().unwrap_or(1)
+    }
+
     pub fn total_cores(&self) -> usize {
         self.assignments.values().map(|&(c, _)| c).sum()
     }
@@ -157,8 +251,10 @@ impl Allocation {
 
 /// Allocation-free scoring: (objective, feasible) for a core vector, or
 /// None if an active variant violates the SLO.  This is the enumeration
-/// hot path — no heap traffic (see EXPERIMENTS.md §Perf).
-pub(crate) fn score_fast(problem: &Problem, cores: &[usize]) -> Option<(f64, bool)> {
+/// hot path — no heap traffic (see EXPERIMENTS.md §Perf).  Must agree with
+/// [`score`] on every input (cross-checked by `prop_score_fast_matches_score`
+/// in `tests/properties.rs`).
+pub fn score_fast(problem: &Problem, cores: &[usize]) -> Option<(f64, bool)> {
     debug_assert_eq!(cores.len(), problem.variants.len());
     let m = cores.len();
     let mut capacity = 0.0;
@@ -224,7 +320,7 @@ pub(crate) fn score_fast(problem: &Problem, cores: &[usize]) -> Option<(f64, boo
 /// Score a core vector: greedy quota fill (most accurate first), then the
 /// paper's objective.  Returns None if any active variant violates the SLO.
 /// Materializes the full [`Allocation`] — use [`score_fast`] in search loops.
-pub(crate) fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
+pub fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
     debug_assert_eq!(cores.len(), problem.variants.len());
     let mut capacity = 0.0;
     for (i, &n) in cores.iter().enumerate() {
@@ -242,6 +338,7 @@ pub(crate) fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
     });
     let mut remaining = problem.lambda;
     let mut assignments = BTreeMap::new();
+    let mut batches = BTreeMap::new();
     let mut acc_weighted = 0.0;
     for &i in &order {
         let v = &problem.variants[i];
@@ -249,6 +346,7 @@ pub(crate) fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
         remaining -= q;
         acc_weighted += q * v.accuracy;
         assignments.insert(v.name.clone(), (cores[i], q));
+        batches.insert(v.name.clone(), v.batch[cores[i]]);
     }
     let feasible = remaining <= 1e-9 && capacity >= problem.lambda - 1e-9;
     let average_accuracy = if problem.lambda > 0.0 {
@@ -279,6 +377,7 @@ pub(crate) fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
         - if feasible { 0.0 } else { 1e3 + shortfall };
     Some(Allocation {
         assignments,
+        batches,
         objective,
         average_accuracy,
         resource_cost,
@@ -315,6 +414,31 @@ mod tests {
         )
     }
 
+    pub(crate) fn problem_batched(
+        lambda: f64,
+        budget: usize,
+        beta: f64,
+        max_batch: usize,
+    ) -> Problem {
+        let profiles = ProfileSet::paper_like();
+        Problem::from_profiles_batched(
+            &profiles,
+            lambda,
+            0.75,
+            budget,
+            ObjectiveWeights {
+                alpha: 1.0,
+                beta,
+                gamma: 0.001,
+            },
+            &BTreeMap::new(),
+            &BatchingConfig {
+                max_batch,
+                max_wait_s: 0.05,
+            },
+        )
+    }
+
     #[test]
     fn score_fills_most_accurate_first() {
         let p = problem(50.0, 20, 0.05);
@@ -343,6 +467,68 @@ mod tests {
         let alloc = score(&p, &[3, 0, 0, 0, 6]).unwrap();
         let w: f64 = alloc.quota_weights().iter().map(|(_, q)| q).sum();
         assert!((w - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_batch_one_reproduces_unbatched_tables_exactly() {
+        let a = problem(60.0, 20, 0.05);
+        let b = problem_batched(60.0, 20, 0.05, 1);
+        for (va, vb) in a.variants.iter().zip(&b.variants) {
+            assert_eq!(va.throughput, vb.throughput);
+            assert_eq!(va.latency, vb.latency);
+            assert!(vb.batch.iter().all(|&x| x == 1));
+        }
+    }
+
+    #[test]
+    fn batched_tables_cap_batch_at_the_slo() {
+        let p = problem_batched(60.0, 20, 0.05, 8);
+        let unb = problem(60.0, 20, 0.05);
+        for (v, vu) in p.variants.iter().zip(&unb.variants) {
+            for n in 1..=p.budget {
+                assert!((1..=8).contains(&v.batch[n]), "{}: b={}", v.name, v.batch[n]);
+                // the chosen batch is SLO-feasible (or batching was refused)
+                assert!(v.batch[n] == 1 || v.latency[n] <= 0.75 + 1e-12, "{}", v.name);
+                // batching never reduces capacity
+                assert!(v.throughput[n] >= vu.throughput[n] - 1e-12);
+            }
+        }
+        // fast variant takes the full batch; the slowest is capped by the
+        // SLO: s(b) = 0.184·(0.5 + 0.5·b) + 0.05 wait ≤ 0.75 ⇒ b ≤ 6.
+        assert_eq!(p.variants[0].name, "resnet18");
+        assert_eq!(p.variants[0].batch[4], 8);
+        assert_eq!(p.variants[4].name, "resnet152");
+        assert_eq!(p.variants[4].batch[4], 6);
+    }
+
+    #[test]
+    fn score_reports_chosen_batches() {
+        let p = problem_batched(50.0, 20, 0.05, 8);
+        let alloc = score(&p, &[2, 0, 0, 0, 8]).unwrap();
+        assert_eq!(alloc.batch_of("resnet18"), 8);
+        assert_eq!(alloc.batch_of("resnet152"), 6);
+        // inactive variants report the neutral batch size
+        assert_eq!(alloc.batch_of("resnet50"), 1);
+        // unbatched problems report 1 everywhere
+        let alloc1 = score(&problem(50.0, 20, 0.05), &[2, 0, 0, 0, 8]).unwrap();
+        assert!(alloc1.batches.values().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn batching_weakly_improves_every_core_vector() {
+        // per-vector capacity is pointwise ≥, so the score is too
+        let unb = problem(120.0, 12, 0.05);
+        let bat = problem_batched(120.0, 12, 0.05, 8);
+        for cores in [
+            vec![4, 0, 0, 0, 8],
+            vec![0, 0, 12, 0, 0],
+            vec![2, 2, 2, 2, 2],
+            vec![5, 0, 0, 0, 0],
+        ] {
+            let (u, _) = score_fast(&unb, &cores).unwrap();
+            let (b, _) = score_fast(&bat, &cores).unwrap();
+            assert!(b >= u - 1e-9, "cores {cores:?}: batched {b} < unbatched {u}");
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Self-built substrates (the build is fully offline: only the `xla` crate
-//! and `anyhow` are external — see Cargo.toml).
+//! Self-built substrates (the build is fully offline: `anyhow` is a
+//! vendored shim under `vendor/anyhow` and the `xla` PJRT bindings are
+//! replaced by `runtime::xla_stub` — see Cargo.toml).
 //!
 //! * [`rng`] — xoshiro256++ PRNG with normal / exponential / Poisson /
 //!   lognormal samplers.

@@ -2,12 +2,12 @@
 //! the offline build has no proptest — `util::rng` drives the cases).
 
 use infadapter::baselines::StaticPolicy;
-use infadapter::config::{Config, ObjectiveWeights};
+use infadapter::config::{BatchingConfig, Config, ObjectiveWeights};
 use infadapter::dispatcher::Dispatcher;
 use infadapter::experiment::{PolicyKind, Scenario};
 use infadapter::profiler::ProfileSet;
 use infadapter::serving::sim::{SimConfig, SimEngine};
-use infadapter::solver::{BranchBoundSolver, BruteForceSolver, Problem, Solver};
+use infadapter::solver::{score, score_fast, BranchBoundSolver, BruteForceSolver, Problem, Solver};
 use infadapter::util::rng::Rng;
 use infadapter::workload::{ArrivalProcess, Trace};
 use std::collections::BTreeMap;
@@ -33,6 +33,92 @@ fn random_problem(rng: &mut Rng) -> Problem {
         },
         &current,
     )
+}
+
+/// A fully randomized instance: synthetic profile family (random size,
+/// accuracies, service times), random λ/budget/weights/SLO, random current
+/// allocation, random batching config.
+fn random_problem_general(rng: &mut Rng) -> Problem {
+    let m = 1 + rng.below(6);
+    let entries: Vec<(String, f64, f64, f64)> = (0..m)
+        .map(|i| {
+            (
+                format!("v{i}"),
+                50.0 + rng.f64() * 45.0,          // accuracy
+                0.02 + rng.f64() * 0.3,           // service time
+                1.0 + rng.f64() * 20.0,           // readiness
+            )
+        })
+        .collect();
+    let mut profiles = ProfileSet::from_service_times(&entries, 0.8 + rng.f64() * 0.2);
+    for p in profiles.profiles.iter_mut() {
+        p.batch_fixed_frac = rng.f64() * 0.9;
+    }
+    let budget = 1 + rng.below(24);
+    let mut current = BTreeMap::new();
+    for i in 0..m {
+        if rng.f64() < 0.3 {
+            current.insert(format!("v{i}"), 1 + rng.below(budget));
+        }
+    }
+    let batching = BatchingConfig {
+        max_batch: 1 + rng.below(12),
+        max_wait_s: rng.f64() * 0.2,
+    };
+    Problem::from_profiles_batched(
+        &profiles,
+        rng.f64() * 400.0,
+        0.1 + rng.f64() * 1.5, // SLO
+        budget,
+        ObjectiveWeights {
+            alpha: rng.f64() * 2.0,
+            beta: rng.f64() * 0.5,
+            gamma: rng.f64() * 0.01,
+        },
+        &current,
+        &batching,
+    )
+}
+
+#[test]
+fn prop_score_fast_matches_score() {
+    // The enumeration hot path (`score_fast`) and the materializing path
+    // (`score`) duplicate the greedy-fill logic; they must agree on
+    // objective and feasibility for every core vector of every problem.
+    let mut rng = Rng::seed_from_u64(108);
+    for case in 0..300 {
+        let p = if case % 2 == 0 {
+            random_problem(&mut rng)
+        } else {
+            random_problem_general(&mut rng)
+        };
+        for _ in 0..16 {
+            let cores: Vec<usize> = (0..p.variants.len())
+                .map(|_| rng.below(p.budget + 1))
+                .collect();
+            let fast = score_fast(&p, &cores);
+            let full = score(&p, &cores);
+            match (fast, full) {
+                (None, None) => {}
+                (Some((obj, feasible)), Some(alloc)) => {
+                    assert!(
+                        (obj - alloc.objective).abs() < 1e-9,
+                        "objective mismatch on {cores:?}: fast {obj} vs full {}",
+                        alloc.objective
+                    );
+                    assert_eq!(
+                        feasible, alloc.feasible,
+                        "feasibility mismatch on {cores:?}"
+                    );
+                }
+                (fast, full) => panic!(
+                    "SLO-gate mismatch on {cores:?}: fast {:?} vs full {:?}",
+                    fast.is_some(),
+                    full.is_some()
+                ),
+            }
+        }
+    }
 }
 
 #[test]
