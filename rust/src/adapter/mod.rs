@@ -71,23 +71,50 @@ impl InfAdapterPolicy {
     pub fn last_allocation(&self) -> Option<&Allocation> {
         self.last_allocation.as_ref()
     }
-}
 
-impl Policy for InfAdapterPolicy {
-    fn name(&self) -> String {
-        format!("infadapter[{}]", self.solver.name())
-    }
-
-    fn decide(
-        &mut self,
-        _now: f64,
-        rate_history: &[f64],
-        committed: &BTreeMap<String, usize>,
-    ) -> Decision {
+    /// First half of [`Policy::decide`]: feed the observed rates to the
+    /// forecaster and return the planned-for workload λ̂ (headroom and
+    /// floor applied).  Split out so the fleet layer can learn λ̂, ask for
+    /// a value curve, and only then commit to a budget — calling this once
+    /// followed by [`Self::decide_with_lambda`] is exactly `decide`.
+    pub fn observe_and_predict(&mut self, rate_history: &[f64]) -> f64 {
         for &r in rate_history {
             self.forecaster.observe(r);
         }
-        let lambda_hat = (self.forecaster.predict_max() * self.headroom).max(self.min_lambda);
+        (self.forecaster.predict_max() * self.headroom).max(self.min_lambda)
+    }
+
+    /// Best-objective value curve over candidate core grants `0..=cap` —
+    /// what the fleet arbiter asks this service for.  Pure solver work: it
+    /// touches neither the forecaster nor any RNG, so it may run between
+    /// [`Self::observe_and_predict`] and [`Self::decide_with_lambda`]
+    /// without perturbing the decision sequence.
+    pub fn value_curve(
+        &self,
+        lambda_hat: f64,
+        committed: &BTreeMap<String, usize>,
+        cap: usize,
+    ) -> Vec<f64> {
+        let problem = Problem::from_profiles_batched(
+            &self.profiles,
+            lambda_hat,
+            self.slo_s,
+            cap,
+            self.weights,
+            committed,
+            &self.batching,
+        );
+        crate::solver::value_curve(&problem, &*self.solver, cap)
+    }
+
+    /// Second half of [`Policy::decide`]: solve for the best variant set
+    /// and allocation inside `self.budget` given a λ̂ already produced by
+    /// [`Self::observe_and_predict`].
+    pub fn decide_with_lambda(
+        &mut self,
+        lambda_hat: f64,
+        committed: &BTreeMap<String, usize>,
+    ) -> Decision {
         let problem = Problem::from_profiles_batched(
             &self.profiles,
             lambda_hat,
@@ -142,6 +169,22 @@ impl Policy for InfAdapterPolicy {
         };
         self.last_allocation = Some(allocation);
         decision
+    }
+}
+
+impl Policy for InfAdapterPolicy {
+    fn name(&self) -> String {
+        format!("infadapter[{}]", self.solver.name())
+    }
+
+    fn decide(
+        &mut self,
+        _now: f64,
+        rate_history: &[f64],
+        committed: &BTreeMap<String, usize>,
+    ) -> Decision {
+        let lambda_hat = self.observe_and_predict(rate_history);
+        self.decide_with_lambda(lambda_hat, committed)
     }
 }
 
@@ -240,6 +283,39 @@ mod tests {
             assert!(d.target.contains_key(v));
             assert_eq!(d.batch_of(v), b);
         }
+    }
+
+    #[test]
+    fn split_decide_matches_decide_exactly() {
+        // The fleet path runs observe_and_predict + decide_with_lambda with
+        // value-curve solves in between; it must reproduce decide()
+        // verbatim, or single-service fleet runs stop being bit-identical.
+        let mut whole = policy(0.05, 20);
+        let mut split = policy(0.05, 20);
+        let history = vec![70.0; 60];
+        let committed = BTreeMap::from([("resnet18".to_string(), 4)]);
+        let d1 = whole.decide(0.0, &history, &committed);
+        let lambda = split.observe_and_predict(&history);
+        let _curves_are_pure = split.value_curve(lambda, &committed, 20);
+        let d2 = split.decide_with_lambda(lambda, &committed);
+        assert_eq!(d1.predicted_lambda, d2.predicted_lambda);
+        assert_eq!(d1.target, d2.target);
+        assert_eq!(d1.quotas, d2.quotas);
+        assert_eq!(d1.batches, d2.batches);
+    }
+
+    #[test]
+    fn value_curve_is_monotone_and_consistent_with_the_solve() {
+        let p = policy(0.05, 20);
+        let curve = p.value_curve(77.0, &BTreeMap::new(), 20);
+        assert_eq!(curve.len(), 21);
+        for w in curve.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "nondecreasing: {curve:?}");
+        }
+        let mut solver_view = policy(0.05, 20);
+        solver_view.decide_with_lambda(77.0, &BTreeMap::new());
+        let best = solver_view.last_allocation().unwrap().objective;
+        assert!((curve[20] - best).abs() < 1e-9);
     }
 
     #[test]

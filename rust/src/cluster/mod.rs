@@ -37,8 +37,22 @@ impl Pod {
         matches!(self.state, PodState::Ready)
     }
 
-    /// Counts toward the resource bill (everything not yet fully removed).
+    /// Counts toward the resource bill.  Every lifecycle state holds its
+    /// node reservation — **including `Draining`**: during the
+    /// create-before-remove overlap the old pod still serves in-flight
+    /// requests while its replacement is already Ready, so the cluster
+    /// genuinely runs both (double occupancy) and cost accounting must see
+    /// both until the drain grace elapses and the pod is removed.
     pub fn is_billed(&self) -> bool {
+        true
+    }
+
+    /// Counts toward the solver-facing committed allocation
+    /// (Pending + Ready).  Draining pods are excluded: they are already
+    /// scheduled for removal, so the adapter must not treat their variant
+    /// as "still loaded" when costing a reload (`tc_m`), nor re-target
+    /// them.
+    pub fn is_committed(&self) -> bool {
         !matches!(self.state, PodState::Draining { .. })
     }
 }
@@ -206,7 +220,7 @@ impl Cluster {
     /// treat as "already loaded" for loading-cost purposes).
     pub fn committed_allocation(&self) -> BTreeMap<String, usize> {
         let mut out = BTreeMap::new();
-        for p in self.pods.iter().filter(|p| p.is_billed()) {
+        for p in self.pods.iter().filter(|p| p.is_committed()) {
             *out.entry(p.variant.clone()).or_insert(0) += p.cores;
         }
         out
@@ -278,7 +292,38 @@ mod tests {
         // during the overlap both allocations are committed
         assert_eq!(c.billed_cores(), 12);
         c.tick(11.0);
-        assert_eq!(c.billed_cores(), 8); // old is draining (not billed)
+        // the old pod is Draining: gone from the solver-facing committed
+        // view, but it still occupies its node reservation and is billed
+        assert_eq!(c.committed_allocation()["resnet18"], 8);
+        assert_eq!(c.billed_cores(), 12);
+        c.tick(11.0 + c.drain_grace_s);
+        assert_eq!(c.billed_cores(), 8); // drain elapsed, old removed
+    }
+
+    #[test]
+    fn double_occupancy_window_is_billed_until_drained() {
+        // Regression for the create-before-remove billing audit: Draining
+        // pods hold node capacity (`node_used` counts them for placement)
+        // for the whole drain grace, so the bill must include them — the
+        // previous accounting silently dropped them at the Ready→Draining
+        // transition, under-reporting cost for `drain_grace_s` per update.
+        let mut c = Cluster::new(&[48]);
+        c.apply(&target(&[("resnet50", 6)]), 0.0, |_| 4.0);
+        c.tick(4.0);
+        assert_eq!(c.billed_cores(), 6);
+        c.apply(&target(&[("resnet50", 10)]), 5.0, |_| 4.0);
+        // replacement Pending: both reservations held and billed
+        assert_eq!(c.billed_cores(), 16);
+        // replacement Ready at t=9, old flips to Draining — still billed,
+        // and placement still sees its cores as occupied
+        c.tick(9.0);
+        assert_eq!(c.billed_cores(), 16);
+        assert_eq!(c.committed_allocation()["resnet50"], 10);
+        assert_eq!(c.ready_allocation()["resnet50"], 10);
+        // only after the drain grace does the bill drop to the new pod
+        c.tick(9.0 + c.drain_grace_s);
+        assert_eq!(c.billed_cores(), 10);
+        assert_eq!(c.pods().len(), 1);
     }
 
     #[test]

@@ -122,6 +122,60 @@ impl Default for ClusterConfig {
     }
 }
 
+/// One service of a multi-service fleet ([`FleetConfig`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetServiceConfig {
+    /// Service name; namespaces its pods on the shared cluster.  Must be
+    /// non-empty, unique within the fleet, and slash-free.
+    pub name: String,
+    /// Arbitration weight (> 0): higher claims marginal cores first.
+    pub priority: f64,
+    /// Guaranteed-minimum core grant.
+    pub floor_cores: usize,
+    /// Per-service latency SLO, milliseconds.
+    pub slo_latency_ms: f64,
+    /// Trace spec (the CLI grammar: `bursty | non-bursty | twitter |
+    /// steady:<rps> | csv:<path> | burst:<start_s>:<len_s>[:<peak_rps>]`).
+    pub trace: String,
+    /// Base arrival rate the trace generator scales from.
+    pub base_rps: f64,
+}
+
+impl Default for FleetServiceConfig {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            priority: 1.0,
+            floor_cores: 0,
+            slo_latency_ms: 750.0,
+            trace: "bursty".into(),
+            base_rps: 30.0,
+        }
+    }
+}
+
+/// Multi-service fleet: N independent services (each its own SLO, trace,
+/// and policy instance) sharing one cluster, with the core arbiter
+/// re-partitioning `global_budget` across them every adaptation interval.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetConfig {
+    /// Shared core budget the arbiter partitions; 0 = use `cluster.budget`.
+    pub global_budget: usize,
+    /// Empty = fleet serving disabled (single-service mode).
+    pub services: Vec<FleetServiceConfig>,
+}
+
+impl FleetConfig {
+    /// The budget the arbiter actually partitions.
+    pub fn resolved_budget(&self, cluster: &ClusterConfig) -> usize {
+        if self.global_budget > 0 {
+            self.global_budget
+        } else {
+            cluster.budget
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -130,6 +184,8 @@ pub struct Config {
     pub adapter: AdapterConfig,
     pub cluster: ClusterConfig,
     pub batching: BatchingConfig,
+    /// Multi-service fleet definition (empty services = disabled).
+    pub fleet: FleetConfig,
     /// Variants eligible for selection; empty = all in the manifest.
     pub variants: Vec<String>,
     /// Random seed for workloads and service-time noise.
@@ -212,6 +268,30 @@ impl Config {
             },
             None => d.batching,
         };
+        let fleet = match v.get("fleet") {
+            Some(f) => FleetConfig {
+                global_budget: usize_or(f, "global_budget", 0)?,
+                services: match f.get("services") {
+                    Some(svcs) => svcs
+                        .as_arr()?
+                        .iter()
+                        .map(|s| -> Result<FleetServiceConfig> {
+                            let d = FleetServiceConfig::default();
+                            Ok(FleetServiceConfig {
+                                name: str_or(s, "name", &d.name)?,
+                                priority: f64_or(s, "priority", d.priority)?,
+                                floor_cores: usize_or(s, "floor_cores", d.floor_cores)?,
+                                slo_latency_ms: f64_or(s, "slo_latency_ms", d.slo_latency_ms)?,
+                                trace: str_or(s, "trace", &d.trace)?,
+                                base_rps: f64_or(s, "base_rps", d.base_rps)?,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                    None => Vec::new(),
+                },
+            },
+            None => FleetConfig::default(),
+        };
         let variants = match v.get("variants") {
             Some(vs) => vs
                 .as_arr()?
@@ -226,6 +306,7 @@ impl Config {
             adapter,
             cluster,
             batching,
+            fleet,
             variants,
             seed: v.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(0),
         })
@@ -288,6 +369,40 @@ impl Config {
                 ]),
             ),
             (
+                "fleet",
+                Value::obj(vec![
+                    (
+                        "global_budget",
+                        Value::Num(self.fleet.global_budget as f64),
+                    ),
+                    (
+                        "services",
+                        Value::Arr(
+                            self.fleet
+                                .services
+                                .iter()
+                                .map(|s| {
+                                    Value::obj(vec![
+                                        ("name", Value::Str(s.name.clone())),
+                                        ("priority", Value::Num(s.priority)),
+                                        (
+                                            "floor_cores",
+                                            Value::Num(s.floor_cores as f64),
+                                        ),
+                                        (
+                                            "slo_latency_ms",
+                                            Value::Num(s.slo_latency_ms),
+                                        ),
+                                        ("trace", Value::Str(s.trace.clone())),
+                                        ("base_rps", Value::Num(s.base_rps)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
                 "variants",
                 Value::Arr(self.variants.iter().map(|v| Value::Str(v.clone())).collect()),
             ),
@@ -342,6 +457,47 @@ impl Config {
             self.cluster.budget,
             node_total
         );
+        if !self.fleet.services.is_empty() {
+            let global = self.fleet.resolved_budget(&self.cluster);
+            anyhow::ensure!(
+                global <= node_total,
+                "fleet global budget {global} exceeds total node capacity {node_total}"
+            );
+            let mut names: Vec<&str> =
+                self.fleet.services.iter().map(|s| s.name.as_str()).collect();
+            anyhow::ensure!(
+                names.iter().all(|n| !n.is_empty() && !n.contains('/')),
+                "fleet service names must be non-empty and slash-free"
+            );
+            names.sort_unstable();
+            names.dedup();
+            anyhow::ensure!(
+                names.len() == self.fleet.services.len(),
+                "fleet service names must be unique"
+            );
+            let floors: usize = self.fleet.services.iter().map(|s| s.floor_cores).sum();
+            anyhow::ensure!(
+                floors <= global,
+                "fleet floors {floors} exceed the global budget {global}"
+            );
+            for s in &self.fleet.services {
+                anyhow::ensure!(
+                    s.priority > 0.0,
+                    "fleet service {} needs a positive priority",
+                    s.name
+                );
+                anyhow::ensure!(
+                    s.slo_latency_ms > 0.0,
+                    "fleet service {} needs a positive SLO",
+                    s.name
+                );
+                anyhow::ensure!(
+                    s.base_rps >= 0.0,
+                    "fleet service {} has a negative base rate",
+                    s.name
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -381,9 +537,59 @@ mod tests {
         c.variants = vec!["resnet18".into(), "resnet50".into()];
         c.batching.max_batch = 4;
         c.seed = 7;
+        c.fleet.global_budget = 24;
+        c.fleet.services = vec![
+            FleetServiceConfig {
+                name: "search".into(),
+                priority: 2.0,
+                floor_cores: 4,
+                slo_latency_ms: 400.0,
+                trace: "burst:100:200".into(),
+                base_rps: 50.0,
+            },
+            FleetServiceConfig {
+                name: "feed".into(),
+                ..Default::default()
+            },
+        ];
         let text = c.to_json().to_string_pretty();
         let back = Config::from_json(&parse(&text).unwrap()).unwrap();
         assert_eq!(c, back);
+    }
+
+    #[test]
+    fn fleet_validation_catches_bad_fleets() {
+        let svc = |name: &str, floor: usize| FleetServiceConfig {
+            name: name.into(),
+            floor_cores: floor,
+            ..Default::default()
+        };
+        // duplicate names
+        let mut c = Config::default();
+        c.fleet.services = vec![svc("a", 0), svc("a", 0)];
+        assert!(c.validate().is_err());
+        // slash in a name (would break cluster namespacing)
+        let mut c = Config::default();
+        c.fleet.services = vec![svc("a/b", 0)];
+        assert!(c.validate().is_err());
+        // floors exceeding the (cluster-derived) global budget of 20
+        let mut c = Config::default();
+        c.fleet.services = vec![svc("a", 12), svc("b", 12)];
+        assert!(c.validate().is_err());
+        // non-positive priority
+        let mut c = Config::default();
+        c.fleet.services = vec![FleetServiceConfig {
+            name: "a".into(),
+            priority: 0.0,
+            ..Default::default()
+        }];
+        assert!(c.validate().is_err());
+        // a well-formed fleet passes, explicit global budget respected
+        let mut c = Config::default();
+        c.fleet.global_budget = 30;
+        c.fleet.services = vec![svc("a", 10), svc("b", 10)];
+        c.validate().unwrap();
+        assert_eq!(c.fleet.resolved_budget(&c.cluster), 30);
     }
 
     #[test]

@@ -171,9 +171,84 @@ pub fn print_summaries(title: &str, outs: &[RunOutput]) {
     }
 }
 
+/// Saturation search parameters: binary-search the highest offered steady
+/// load a (variant, cores) pod sustains within the SLO (the paper's
+/// Figure 1 measurement procedure).  One parameterized probe backs every
+/// caller — [`find_saturation`] (Figures 1/2), the batching ablation
+/// ([`find_saturation_batched`], Figure 4), and the fleet bench's
+/// per-SLO capacity context (`benches/fig_fleet.rs`) — so the procedure
+/// cannot drift between experiments.
+#[derive(Debug, Clone)]
+pub struct SaturationProbe {
+    pub slo_s: f64,
+    /// Server-side batch size pinned for the whole probe (1 = unbatched).
+    pub batch: usize,
+    pub seed: u64,
+    /// Steady-load seconds per attempt.
+    pub duration_s: usize,
+    /// Bisection width, rps.
+    pub resolution_rps: f64,
+}
+
+impl Default for SaturationProbe {
+    fn default() -> Self {
+        Self {
+            slo_s: 0.75,
+            batch: 1,
+            seed: 0,
+            duration_s: 90,
+            resolution_rps: 0.5,
+        }
+    }
+}
+
+impl SaturationProbe {
+    /// Highest steady rps the pod sustains with zero drops and P99 within
+    /// the SLO (exponential bracket, then bisection).
+    pub fn measure(&self, profiles: &ProfileSet, variant: &str, cores: usize) -> f64 {
+        use crate::baselines::StaticPolicy;
+        use crate::workload::Trace;
+        let attempt = |rps: f64| -> bool {
+            if rps <= 0.0 {
+                return true;
+            }
+            let sim = SimEngine::new(
+                profiles.clone(),
+                SimConfig {
+                    slo_s: self.slo_s,
+                    adapter_interval_s: 1e9, // static: never adapt
+                    node_cores: vec![cores.max(48)],
+                    seed: self.seed,
+                    bucket_s: 10.0,
+                    queue_timeout_s: 10.0,
+                    batch_max_wait_s: 0.05,
+                },
+            );
+            let mut policy = StaticPolicy::with_batch(variant, cores, self.batch);
+            let res = sim.run(&mut policy, &Trace::steady(rps, self.duration_s));
+            let s = res.metrics.summary("sat", self.duration_s as f64);
+            s.dropped == 0 && s.p99_latency_s <= self.slo_s
+        };
+        let mut lo = 0.0f64;
+        let mut hi = 4.0f64;
+        while attempt(hi) && hi < 100_000.0 {
+            lo = hi;
+            hi *= 2.0;
+        }
+        while hi - lo > self.resolution_rps {
+            let mid = (lo + hi) / 2.0;
+            if attempt(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
 /// Measured sustained throughput of one (variant, cores) pod under the
-/// SLO: binary-search the highest offered steady load whose simulated P99
-/// stays within `slo_s` (the paper's Figure 1 measurement procedure).
+/// SLO (thin wrapper over [`SaturationProbe`]).
 pub fn find_saturation(
     profiles: &ProfileSet,
     variant: &str,
@@ -181,7 +256,12 @@ pub fn find_saturation(
     slo_s: f64,
     seed: u64,
 ) -> f64 {
-    find_saturation_batched(profiles, variant, cores, 1, slo_s, seed)
+    SaturationProbe {
+        slo_s,
+        seed,
+        ..Default::default()
+    }
+    .measure(profiles, variant, cores)
 }
 
 /// [`find_saturation`] with server-side batching pinned at `batch` — the
@@ -194,45 +274,13 @@ pub fn find_saturation_batched(
     slo_s: f64,
     seed: u64,
 ) -> f64 {
-    use crate::baselines::StaticPolicy;
-    use crate::workload::Trace;
-    let attempt = |rps: f64| -> bool {
-        if rps <= 0.0 {
-            return true;
-        }
-        let sim = SimEngine::new(
-            profiles.clone(),
-            SimConfig {
-                slo_s,
-                adapter_interval_s: 1e9, // static: never adapt
-                node_cores: vec![cores.max(48)],
-                seed,
-                bucket_s: 10.0,
-                queue_timeout_s: 10.0,
-                batch_max_wait_s: 0.05,
-            },
-        );
-        let mut policy = StaticPolicy::with_batch(variant, cores, batch);
-        let res = sim.run(&mut policy, &Trace::steady(rps, 90));
-        let s = res.metrics.summary("sat", 90.0);
-        s.dropped == 0 && s.p99_latency_s <= slo_s
-    };
-    // Exponential bracket, then bisect to 0.5 rps.
-    let mut lo = 0.0f64;
-    let mut hi = 4.0f64;
-    while attempt(hi) && hi < 100_000.0 {
-        lo = hi;
-        hi *= 2.0;
+    SaturationProbe {
+        slo_s,
+        batch,
+        seed,
+        ..Default::default()
     }
-    while hi - lo > 0.5 {
-        let mid = (lo + hi) / 2.0;
-        if attempt(mid) {
-            lo = mid;
-        } else {
-            hi = mid;
-        }
-    }
-    lo
+    .measure(profiles, variant, cores)
 }
 
 /// Load measured profiles if `profiles.json` exists next to the artifacts,
@@ -324,6 +372,29 @@ mod tests {
             batched.summary.goodput_rps,
             plain.summary.goodput_rps
         );
+    }
+
+    #[test]
+    fn saturation_probe_backs_the_wrappers() {
+        let profiles = ProfileSet::paper_like();
+        let a = find_saturation(&profiles, "resnet50", 4, 0.75, 3);
+        let b = SaturationProbe {
+            slo_s: 0.75,
+            seed: 3,
+            ..Default::default()
+        }
+        .measure(&profiles, "resnet50", 4);
+        assert_eq!(a, b, "wrapper must be the probe verbatim");
+        // resnet50@4 models ~40 rps capacity; saturation sits below it
+        assert!(a > 20.0 && a < 60.0, "{a}");
+        // a tighter SLO can only lower the measured saturation
+        let tight = SaturationProbe {
+            slo_s: 0.3,
+            seed: 3,
+            ..Default::default()
+        }
+        .measure(&profiles, "resnet50", 4);
+        assert!(tight <= a + 1e-9, "tight {tight} vs {a}");
     }
 
     #[test]

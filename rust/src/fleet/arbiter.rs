@@ -1,0 +1,173 @@
+//! The fleet's core arbiter: top-level partitioning of the shared core
+//! budget across services.
+//!
+//! Every adaptation interval each arbitrated service reports a *value
+//! curve* `v_i(g)` — the best objective `α·AA − (β·RC + γ·LC)` its own
+//! solver can achieve inside a grant of `g` cores, computed by re-solving
+//! the per-service ILP at every candidate budget
+//! ([`crate::solver::value_curve`]).  The arbiter then **water-fills**:
+//! starting every service at its guaranteed-minimum floor, it repeatedly
+//! grants one core to the service with the highest *priority-weighted
+//! marginal utility* `w_i · (v_i(g_i + 1) − v_i(g_i))` until the global
+//! budget is exhausted or every curve is at its cap.  Ties break toward
+//! the lowest service index, so the partition is a pure function of its
+//! inputs — deterministic across runs with the same seed.
+//!
+//! Grants are **caps**, not reservations: each service's solver still
+//! decides how many of its granted cores to actually allocate (the β·RC
+//! term makes unused grant free), so handing out the whole budget never
+//! hurts — it only widens the feasible set of the per-service solve.
+//! Exact solvers make `v_i` monotone nondecreasing (anything feasible at
+//! `g` is feasible at `g + 1`), so the marginals are nonnegative and the
+//! fill order follows genuine utility.
+
+/// One service's input to [`CoreArbiter::partition`].
+#[derive(Debug, Clone)]
+pub struct ArbiterEntry {
+    /// Arbitration weight `w_i` (> 0); scales this service's marginals.
+    pub priority: f64,
+    /// Guaranteed-minimum core grant, handed out before water-filling.
+    pub floor: usize,
+    /// `v(g)` for `g in 0..=cap` (length `cap + 1`).  `None` marks a
+    /// fixed-budget service outside arbitration (e.g. an independent VPA
+    /// instance): it is locked at exactly its floor.
+    pub curve: Option<Vec<f64>>,
+}
+
+/// Water-filling partitioner of the global core budget.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreArbiter {
+    /// Total cores the fleet may grant across all services.
+    pub global_budget: usize,
+}
+
+impl CoreArbiter {
+    pub fn new(global_budget: usize) -> Self {
+        Self { global_budget }
+    }
+
+    /// Partition the global budget into per-service core grants.
+    ///
+    /// Invariants (see `prop_arbiter_*` in `tests/properties.rs`):
+    /// * `Σ grants ≤ global_budget`;
+    /// * `grants[i] ≥ entries[i].floor` for every service;
+    /// * curve-less entries receive exactly their floor;
+    /// * no grant exceeds its curve's cap (`curve.len() − 1`);
+    /// * the result is a pure function of `entries` (deterministic).
+    ///
+    /// Floors are trusted to fit inside the budget — `FleetConfig`
+    /// validation enforces it before a run ever starts.
+    pub fn partition(&self, entries: &[ArbiterEntry]) -> Vec<usize> {
+        let mut grants: Vec<usize> = entries.iter().map(|e| e.floor).collect();
+        let floors: usize = grants.iter().sum();
+        debug_assert!(
+            floors <= self.global_budget,
+            "floors {floors} exceed the global budget {}",
+            self.global_budget
+        );
+        let mut remaining = self.global_budget.saturating_sub(floors);
+        while remaining > 0 {
+            // Highest priority-weighted marginal utility wins the next
+            // core; strict `>` keeps ties at the lowest index.
+            let mut pick: Option<(usize, f64)> = None;
+            for (i, e) in entries.iter().enumerate() {
+                let Some(curve) = &e.curve else { continue };
+                if grants[i] + 1 >= curve.len() {
+                    continue; // at this curve's cap
+                }
+                let marginal = e.priority * (curve[grants[i] + 1] - curve[grants[i]]);
+                if pick.map_or(true, |(_, m)| marginal > m) {
+                    pick = Some((i, marginal));
+                }
+            }
+            let Some((i, _)) = pick else { break };
+            grants[i] += 1;
+            remaining -= 1;
+        }
+        grants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(priority: f64, floor: usize, curve: Option<Vec<f64>>) -> ArbiterEntry {
+        ArbiterEntry {
+            priority,
+            floor,
+            curve,
+        }
+    }
+
+    /// `v(g) = slope·min(g, knee)`: steep utility up to a knee, flat after.
+    fn kneed(cap: usize, knee: usize, slope: f64) -> Vec<f64> {
+        (0..=cap)
+            .map(|g| slope * g.min(knee) as f64)
+            .collect()
+    }
+
+    #[test]
+    fn single_service_gets_the_whole_budget() {
+        let arb = CoreArbiter::new(20);
+        let grants = arb.partition(&[entry(1.0, 0, Some(kneed(20, 8, 1.0)))]);
+        assert_eq!(grants, vec![20]);
+    }
+
+    #[test]
+    fn longer_rising_curve_absorbs_the_marginal_cores() {
+        // A's utility saturates at 4 cores, B's at 10: the budget covers
+        // both knees exactly, so the fill stops at (4, 10) — nothing is
+        // wasted past a knee while the other service still has utility.
+        let arb = CoreArbiter::new(14);
+        let grants = arb.partition(&[
+            entry(1.0, 0, Some(kneed(14, 4, 1.0))),
+            entry(1.0, 0, Some(kneed(14, 10, 1.0))),
+        ]);
+        assert_eq!(grants, vec![4, 10]);
+    }
+
+    #[test]
+    fn priority_weights_break_contention() {
+        // Identical curves, one service twice as important: it must fill
+        // its knee first when the budget cannot cover both.
+        let arb = CoreArbiter::new(8);
+        let grants = arb.partition(&[
+            entry(1.0, 0, Some(kneed(8, 8, 1.0))),
+            entry(2.0, 0, Some(kneed(8, 8, 1.0))),
+        ]);
+        assert_eq!(grants, vec![0, 8]);
+    }
+
+    #[test]
+    fn floors_are_guaranteed_even_with_flat_curves() {
+        let arb = CoreArbiter::new(10);
+        let grants = arb.partition(&[
+            entry(1.0, 3, Some(vec![0.0; 11])), // flat: no marginal utility
+            entry(1.0, 0, Some(kneed(7, 7, 1.0))),
+        ]);
+        assert!(grants[0] >= 3, "{grants:?}");
+        assert!(grants.iter().sum::<usize>() <= 10);
+    }
+
+    #[test]
+    fn fixed_budget_entries_hold_exactly_their_floor() {
+        let arb = CoreArbiter::new(10);
+        let grants = arb.partition(&[
+            entry(1.0, 4, None), // e.g. an independent VPA instance
+            entry(1.0, 0, Some(kneed(6, 6, 1.0))),
+        ]);
+        assert_eq!(grants[0], 4);
+        assert_eq!(grants[1], 6);
+    }
+
+    #[test]
+    fn leftover_stays_unallocated_when_every_curve_is_capped() {
+        let arb = CoreArbiter::new(20);
+        let grants = arb.partition(&[
+            entry(1.0, 0, Some(kneed(5, 5, 1.0))),
+            entry(1.0, 0, Some(kneed(5, 5, 1.0))),
+        ]);
+        assert_eq!(grants, vec![5, 5]); // 10 cores idle, grants are caps
+    }
+}

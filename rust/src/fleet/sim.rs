@@ -1,0 +1,1178 @@
+//! Multi-service virtual-time serving simulator — the fleet engine.
+//!
+//! Generalizes the single-adapter discrete-event loop (see
+//! [`crate::serving::sim`], which is now a thin single-service wrapper
+//! around this engine) to N independent services sharing one [`Cluster`]:
+//!
+//! * **Shared substrate** — one node pool, one event heap, one virtual
+//!   clock.  Pods are namespaced on the cluster as `"<service>/<variant>"`
+//!   so services never collide; placement, readiness, and
+//!   create-before-remove work exactly as before.
+//! * **Per-service everything else** — each service brings its own trace,
+//!   profile set, SLO, dispatcher, metrics collector, rate accounting,
+//!   and policy.  Arrival timestamps and service-time noise come from
+//!   per-service RNG streams: service `i` draws from
+//!   `seed + i·SPLITMIX_GAMMA` (arrivals from that value + 1), so a fixed
+//!   seed is deterministic regardless of how the services' events
+//!   interleave, and service 0's streams equal the single-engine streams.
+//! * **Arbitration** — when the engine holds a [`CoreArbiter`], every
+//!   adaptation interval runs a three-phase protocol: (1) each arbitrated
+//!   service observes its rate history and predicts λ̂, (2) it reports a
+//!   value curve over candidate core grants
+//!   ([`InfAdapterPolicy::value_curve`]), and (3) the arbiter water-fills
+//!   the global budget, each service then solving its own variant/batch
+//!   selection inside its grant.  Without an arbiter every service keeps
+//!   its configured budget (the "static split" baseline).
+//!
+//! **Bit-identity invariant:** a single-service fleet performs the same
+//! cluster operations, heap pushes, and RNG draws in the same order as the
+//! pre-fleet single-adapter engine — arbitration only inserts pure solver
+//! work between the forecast and the decision (`decide` ≡
+//! `observe_and_predict` + `decide_with_lambda`, and a lone service is
+//! always granted the whole budget).  `single_service_fleet_matches_single_adapter_path`
+//! below pins this.
+
+use super::arbiter::{ArbiterEntry, CoreArbiter};
+use crate::adapter::InfAdapterPolicy;
+use crate::cluster::{Cluster, ClusterEvent};
+use crate::dispatcher::Dispatcher;
+use crate::metrics::{MetricsCollector, RequestRecord};
+use crate::profiler::ProfileSet;
+use crate::serving::sim::{SimConfig, SimResult};
+use crate::serving::{Decision, Policy};
+use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, RateSeries};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+
+/// Seed of service `i`'s RNG stream.  Service 0 uses the base seed
+/// unchanged — a single-service fleet reproduces the single-adapter engine
+/// draw for draw — and later services hop by the SplitMix64 constant so
+/// streams never collide.  Service `i` owns the pair
+/// (`service_seed(base, i)` for service-time noise,
+/// `service_seed(base, i) + 1` for arrivals); anything else deriving
+/// per-service seeds from the same base (e.g. trace generators, see
+/// [`super::FleetScenario`]) must offset past that pair.
+pub(crate) fn service_seed(base: u64, i: usize) -> u64 {
+    base.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Shortest window a rate sample may be normalized over.  Caps the
+/// extrapolation factor at 4x: an adapter tick at t = 30.001 must not turn
+/// one arrival in a 1 ms sliver into a 1000 rps sample (a max-picking
+/// forecaster would seize on it).  Windows shorter than this merge into
+/// the neighbouring sample instead.
+const MIN_RATE_SAMPLE_SPAN_S: f64 = 0.25;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    Arrival { svc: usize },
+    /// One batched service draw finishing; `batch` indexes the batch table.
+    Completion { pod_id: u64, batch: usize },
+    /// Formation wait expired for the batch a pod opened at `forming_seq`.
+    BatchTimeout { pod_id: u64, forming_seq: u64 },
+    ClusterTick,
+    AdapterTick,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+fn push_event(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
+    *seq += 1;
+    heap.push(Reverse(Event { t, seq: *seq, kind }));
+}
+
+/// One simulated pod (M/G/n station) owned by a service.
+struct PodSim {
+    /// Index of the owning service (RNG stream, metrics, profiles).
+    svc: usize,
+    /// Raw (un-namespaced) variant name within the owning service.
+    variant: String,
+    cores: usize,
+    busy: usize,
+    /// Formed batches (ids into the batch table) awaiting a free core.
+    queue: VecDeque<usize>,
+    /// Requests accumulating toward the next batch (ids).
+    forming: Vec<usize>,
+    /// Bumped on every dispatch; stale `BatchTimeout` events don't match.
+    forming_seq: u64,
+    /// Current batch-size target for this pod's variant (1 = no batching).
+    max_batch: usize,
+    /// Requests waiting at this pod (forming + members of queued batches);
+    /// kept as a counter so routing comparisons stay O(1).
+    waiting: usize,
+}
+
+impl PodSim {
+    /// Waiting + in-service requests normalized by cores — the
+    /// least-loaded routing metric.
+    fn load(&self) -> f64 {
+        (self.busy + self.waiting) as f64 / self.cores.max(1) as f64
+    }
+}
+
+struct RequestSim {
+    arrival: f64,
+    accuracy: f64,
+    svc: usize,
+}
+
+/// One service of a fleet run: the adaptation policy plus everything it
+/// serves (trace, profiles, SLO) and its arbitration terms.
+pub struct FleetService<'a> {
+    /// Service name; namespaces this service's pods on the shared cluster
+    /// as `"<name>/<variant>"`.  May be empty only in a single-service
+    /// fleet (the unprefixed single-adapter compatibility path); must not
+    /// contain `/`.
+    pub name: String,
+    pub trace: &'a RateSeries,
+    pub profiles: ProfileSet,
+    /// Latency SLO for this service's metrics accounting, seconds.
+    pub slo_s: f64,
+    /// Arbitration weight (higher claims marginal cores first).
+    pub priority: f64,
+    /// Guaranteed-minimum core grant under arbitration; also the fixed
+    /// reservation of a [`FleetPolicyRef::Plain`] service.
+    pub floor_cores: usize,
+    pub policy: FleetPolicyRef<'a>,
+}
+
+/// How a service's policy participates in the fleet.
+pub enum FleetPolicyRef<'a> {
+    /// Fixed-budget policy (VPA+, MS+, static, or an InfAdapter holding a
+    /// static share): its decisions are used as-is and it stays outside
+    /// arbitration.  Under an arbiter it is expected to stay within its
+    /// `floor_cores` reservation (checked in debug builds — the arbiter
+    /// partitions the rest of the budget assuming it).
+    Plain(&'a mut dyn Policy),
+    /// An InfAdapter whose core budget is re-set to the arbiter's grant
+    /// every adaptation interval.  With no arbiter on the engine it keeps
+    /// its configured budget (the "static split" baseline) and behaves
+    /// exactly like `Plain`.
+    Arbitrated(&'a mut InfAdapterPolicy),
+}
+
+/// Per-service runtime state.
+struct SvcState {
+    /// `"<name>/"`, or empty for the unprefixed single-service path.
+    prefix: String,
+    duration: f64,
+    dispatcher: Dispatcher,
+    metrics: MetricsCollector,
+    rng: Rng,
+    rate_history: Vec<f64>,
+    arrivals_this_second: u64,
+    last_whole_second: u64,
+    /// Start of the window `arrivals_this_second` covers; advances with
+    /// the per-second roll and with partial flushes at adapter ticks so
+    /// every sample is normalized by the span it actually observed.
+    counter_since: f64,
+    /// Raw variant -> batch-size target in force (new pods inherit it).
+    current_batches: BTreeMap<String, usize>,
+    decisions: Vec<(f64, Decision)>,
+    /// λ̂ carried from the arbitration phase into the decision phase.
+    pending_lambda: f64,
+}
+
+/// The multi-service engine.
+pub struct FleetSimEngine {
+    pub config: SimConfig,
+    /// `None`: every service keeps its own fixed budget (static split).
+    pub arbiter: Option<CoreArbiter>,
+}
+
+impl FleetSimEngine {
+    pub fn new(config: SimConfig, arbiter: Option<CoreArbiter>) -> Self {
+        Self { config, arbiter }
+    }
+
+    /// Run every service's event stream against the shared cluster;
+    /// returns one [`SimResult`] per service, in input order.
+    pub fn run(&self, services: &mut [FleetService]) -> Vec<SimResult> {
+        let cfg = &self.config;
+        let n = services.len();
+        assert!(n > 0, "a fleet needs at least one service");
+        if n > 1 {
+            let mut names: Vec<&str> = services.iter().map(|s| s.name.as_str()).collect();
+            assert!(
+                names.iter().all(|nm| !nm.is_empty() && !nm.contains('/')),
+                "multi-service fleets need non-empty, slash-free service names"
+            );
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), n, "service names must be unique");
+        }
+        let max_duration = services
+            .iter()
+            .map(|s| s.trace.duration_s())
+            .max()
+            .unwrap_or(0) as f64;
+
+        let mut st: Vec<SvcState> = services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let top_acc = s
+                    .profiles
+                    .profiles
+                    .iter()
+                    .map(|p| p.accuracy)
+                    .fold(0.0, f64::max);
+                SvcState {
+                    prefix: if s.name.is_empty() {
+                        String::new()
+                    } else {
+                        format!("{}/", s.name)
+                    },
+                    duration: s.trace.duration_s() as f64,
+                    dispatcher: Dispatcher::new(),
+                    metrics: MetricsCollector::new(cfg.bucket_s, s.slo_s, top_acc),
+                    rng: Rng::seed_from_u64(service_seed(cfg.seed, i)),
+                    rate_history: Vec::new(),
+                    arrivals_this_second: 0,
+                    last_whole_second: 0,
+                    counter_since: 0.0,
+                    current_batches: BTreeMap::new(),
+                    decisions: Vec::new(),
+                    pending_lambda: 0.0,
+                }
+            })
+            .collect();
+
+        let mut cluster = Cluster::new(&cfg.node_cores);
+
+        // --- Warm start: every service decides at t = 0 and its pods
+        // become ready instantly (as in the paper's experiments).
+        let first_rates: Vec<Vec<f64>> = services
+            .iter()
+            .map(|s| vec![s.trace.rates.first().copied().unwrap_or(0.0)])
+            .collect();
+        let empty_committed: Vec<BTreeMap<String, usize>> = vec![BTreeMap::new(); n];
+        let grants = self.arbitrate(services, &mut st, &first_rates, &empty_committed);
+        let decisions0 = decide_all(0.0, services, &st, &first_rates, &empty_committed, &grants);
+        let merged = merged_target(&st, &decisions0);
+        cluster.apply(&merged, 0.0, |_| 0.0);
+        cluster.tick(0.0);
+        for (i, d) in decisions0.iter().enumerate() {
+            let s = &mut st[i];
+            s.dispatcher.set_weights(&d.quotas);
+            s.metrics.record_prediction(0.0, d.predicted_lambda);
+            s.current_batches = d
+                .target
+                .keys()
+                .map(|v| (v.clone(), d.batch_of(v)))
+                .collect();
+            for (v, &b) in s.current_batches.iter().filter(|&(_, &b)| b > 1) {
+                s.metrics.record_batch_decision(0.0, v, b);
+            }
+        }
+        record_costs(&cluster, &mut st, 0.0);
+
+        // --- Event queue.
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let arrival_lists: Vec<Vec<f64>> = services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                ArrivalProcess::poisson(s.trace, service_seed(cfg.seed, i).wrapping_add(1))
+            })
+            .collect();
+        for (i, list) in arrival_lists.iter().enumerate() {
+            for &t in list {
+                push_event(&mut heap, &mut seq, t, EventKind::Arrival { svc: i });
+            }
+        }
+        let total_arrivals: usize = arrival_lists.iter().map(|l| l.len()).sum();
+        let mut t_next = 1.0;
+        while t_next < max_duration {
+            push_event(&mut heap, &mut seq, t_next, EventKind::ClusterTick);
+            t_next += 1.0;
+        }
+        let mut t_adapt = cfg.adapter_interval_s;
+        while t_adapt < max_duration {
+            push_event(&mut heap, &mut seq, t_adapt, EventKind::AdapterTick);
+            t_adapt += cfg.adapter_interval_s;
+        }
+
+        // --- State.
+        let mut pods: HashMap<u64, PodSim> = HashMap::new();
+        for p in cluster.pods() {
+            let svc = owner_of(&st, &p.variant);
+            let raw = p.variant[st[svc].prefix.len()..].to_string();
+            let max_batch = st[svc].current_batches.get(&raw).copied().unwrap_or(1);
+            pods.insert(
+                p.id,
+                PodSim {
+                    svc,
+                    variant: raw,
+                    cores: p.cores,
+                    busy: 0,
+                    queue: VecDeque::new(),
+                    forming: Vec::new(),
+                    forming_seq: 0,
+                    max_batch,
+                    waiting: 0,
+                },
+            );
+        }
+        let mut requests: Vec<RequestSim> = Vec::with_capacity(total_arrivals);
+        // batch id -> member request ids (set at dispatch, pruned of
+        // timed-out members at service start)
+        let mut batches: Vec<Vec<usize>> = Vec::new();
+        for (i, d) in decisions0.into_iter().enumerate() {
+            st[i].decisions.push((0.0, d));
+        }
+
+        // --- Main loop.  Arrivals and ticks all fall inside
+        // [0, max_duration); completions may land past the end and are
+        // drained so every request is accounted for (conservation).
+        while let Some(Reverse(ev)) = heap.pop() {
+            let now = ev.t;
+            // roll every service's per-second arrival counter (the division
+            // is by exactly 1.0 — a bit-exact no-op — unless an adapter
+            // tick partially flushed this second; a sliver left by a flush
+            // just before the boundary merges into the next second)
+            let sec = now as u64;
+            for s in st.iter_mut() {
+                while s.last_whole_second < sec {
+                    let boundary = (s.last_whole_second + 1) as f64;
+                    let span = boundary - s.counter_since;
+                    if span >= MIN_RATE_SAMPLE_SPAN_S {
+                        s.rate_history.push(s.arrivals_this_second as f64 / span);
+                        s.arrivals_this_second = 0;
+                        s.counter_since = boundary;
+                    }
+                    s.last_whole_second += 1;
+                }
+            }
+
+            match ev.kind {
+                EventKind::Arrival { svc } => {
+                    st[svc].arrivals_this_second += 1;
+                    let rid = requests.len();
+                    // Route: the service's dispatcher picks the variant;
+                    // its least-loaded ready pod takes the request.
+                    let variant = st[svc].dispatcher.route();
+                    let pod_id = variant.as_deref().and_then(|v| {
+                        pick_pod(&cluster, &pods, &namespaced(&st[svc].prefix, v))
+                            .or_else(|| any_pod(&cluster, &pods, svc))
+                    });
+                    let Some(pid) = pod_id else {
+                        requests.push(RequestSim {
+                            arrival: now,
+                            accuracy: 0.0,
+                            svc,
+                        });
+                        st[svc].metrics.record_request(RequestRecord {
+                            arrival_s: now,
+                            latency_s: f64::INFINITY,
+                            accuracy: 0.0,
+                        });
+                        continue;
+                    };
+                    let accuracy = acc_of(&services[svc].profiles, &pods[&pid].variant);
+                    requests.push(RequestSim {
+                        arrival: now,
+                        accuracy,
+                        svc,
+                    });
+                    enqueue_request(
+                        &services[svc].profiles,
+                        cfg.batch_max_wait_s,
+                        pid,
+                        rid,
+                        now,
+                        &mut pods,
+                        &mut batches,
+                        &mut heap,
+                        &mut seq,
+                        &mut st[svc].rng,
+                    );
+                }
+                EventKind::Completion { pod_id, batch } => {
+                    for &rid in &batches[batch] {
+                        let r = &requests[rid];
+                        st[r.svc].metrics.record_request(RequestRecord {
+                            arrival_s: r.arrival,
+                            latency_s: now - r.arrival,
+                            accuracy: r.accuracy,
+                        });
+                    }
+                    if let Some(pod) = pods.get_mut(&pod_id) {
+                        pod.busy = pod.busy.saturating_sub(1);
+                        // Start the next formed batch, dropping members
+                        // that queued past the client timeout.
+                        while let Some(bid) = pod.queue.pop_front() {
+                            pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
+                            let mut live = Vec::with_capacity(batches[bid].len());
+                            for &rid in &batches[bid] {
+                                let waited = now - requests[rid].arrival;
+                                if waited > self.config.queue_timeout_s {
+                                    st[requests[rid].svc].metrics.record_request(
+                                        RequestRecord {
+                                            arrival_s: requests[rid].arrival,
+                                            latency_s: f64::INFINITY,
+                                            accuracy: requests[rid].accuracy,
+                                        },
+                                    );
+                                } else {
+                                    live.push(rid);
+                                }
+                            }
+                            if live.is_empty() {
+                                continue;
+                            }
+                            pod.busy += 1;
+                            let svc = pod.svc;
+                            let stime = sample_service_batch(
+                                &services[svc].profiles,
+                                &pod.variant,
+                                live.len(),
+                                &mut st[svc].rng,
+                            );
+                            batches[bid] = live;
+                            push_event(
+                                &mut heap,
+                                &mut seq,
+                                now + stime,
+                                EventKind::Completion { pod_id, batch: bid },
+                            );
+                            break;
+                        }
+                    }
+                }
+                EventKind::BatchTimeout { pod_id, forming_seq } => {
+                    if let Some(pod) = pods.get_mut(&pod_id) {
+                        if pod.forming_seq == forming_seq && !pod.forming.is_empty() {
+                            let items = std::mem::take(&mut pod.forming);
+                            pod.forming_seq += 1;
+                            let svc = pod.svc;
+                            dispatch_batch(
+                                &services[svc].profiles,
+                                pod,
+                                pod_id,
+                                items,
+                                now,
+                                &mut batches,
+                                &mut heap,
+                                &mut seq,
+                                &mut st[svc].rng,
+                            );
+                        }
+                    }
+                }
+                EventKind::ClusterTick => {
+                    for event in cluster.tick(now) {
+                        match event {
+                            ClusterEvent::PodReady { pod_id, variant } => {
+                                let cores = cluster
+                                    .pods()
+                                    .iter()
+                                    .find(|p| p.id == pod_id)
+                                    .map(|p| p.cores)
+                                    .unwrap_or(0);
+                                let svc = owner_of(&st, &variant);
+                                let raw = variant[st[svc].prefix.len()..].to_string();
+                                let max_batch =
+                                    st[svc].current_batches.get(&raw).copied().unwrap_or(1);
+                                pods.insert(
+                                    pod_id,
+                                    PodSim {
+                                        svc,
+                                        variant: raw,
+                                        cores,
+                                        busy: 0,
+                                        queue: VecDeque::new(),
+                                        forming: Vec::new(),
+                                        forming_seq: 0,
+                                        max_batch,
+                                        waiting: 0,
+                                    },
+                                );
+                            }
+                            ClusterEvent::PodRemoved { pod_id, .. } => {
+                                // Re-route still-waiting requests (queued
+                                // batches and the forming buffer) within
+                                // the owning service.
+                                if let Some(mut dead) = pods.remove(&pod_id) {
+                                    let svc = dead.svc;
+                                    let mut orphans: Vec<usize> = Vec::new();
+                                    for bid in dead.queue.drain(..) {
+                                        orphans.append(&mut batches[bid]);
+                                    }
+                                    orphans.append(&mut dead.forming);
+                                    for rid in orphans {
+                                        if let Some(target) = st[svc]
+                                            .dispatcher
+                                            .route()
+                                            .and_then(|v| {
+                                                pick_pod(
+                                                    &cluster,
+                                                    &pods,
+                                                    &namespaced(&st[svc].prefix, &v),
+                                                )
+                                            })
+                                            .or_else(|| any_pod(&cluster, &pods, svc))
+                                        {
+                                            requests[rid].accuracy = acc_of(
+                                                &services[svc].profiles,
+                                                &pods[&target].variant,
+                                            );
+                                            enqueue_request(
+                                                &services[svc].profiles,
+                                                cfg.batch_max_wait_s,
+                                                target,
+                                                rid,
+                                                now,
+                                                &mut pods,
+                                                &mut batches,
+                                                &mut heap,
+                                                &mut seq,
+                                                &mut st[svc].rng,
+                                            );
+                                        } else {
+                                            st[svc].metrics.record_request(RequestRecord {
+                                                arrival_s: requests[rid].arrival,
+                                                latency_s: f64::INFINITY,
+                                                accuracy: requests[rid].accuracy,
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    record_costs(&cluster, &mut st, now);
+                }
+                EventKind::AdapterTick => {
+                    // Flush every service's in-progress partial second so
+                    // the just-observed load is visible to its policy
+                    // (normalized by the span it actually covers; slivers
+                    // below the minimum span stay in the counter).
+                    for s in st.iter_mut() {
+                        let span = now - s.counter_since;
+                        if span >= MIN_RATE_SAMPLE_SPAN_S {
+                            s.rate_history.push(s.arrivals_this_second as f64 / span);
+                            s.arrivals_this_second = 0;
+                            s.counter_since = now;
+                        }
+                    }
+                    let committed_full = cluster.committed_allocation();
+                    let committed: Vec<BTreeMap<String, usize>> = (0..n)
+                        .map(|i| {
+                            committed_full
+                                .iter()
+                                .filter(|(k, _)| owner_of(&st, k) == i)
+                                .map(|(k, &c)| (k[st[i].prefix.len()..].to_string(), c))
+                                .collect()
+                        })
+                        .collect();
+                    let histories: Vec<Vec<f64>> = st
+                        .iter_mut()
+                        .map(|s| std::mem::take(&mut s.rate_history))
+                        .collect();
+                    let grants = self.arbitrate(services, &mut st, &histories, &committed);
+                    let decisions = decide_all(now, services, &st, &histories, &committed, &grants);
+                    let merged = merged_target(&st, &decisions);
+                    {
+                        let svc_view: &[FleetService] = services;
+                        cluster.apply(&merged, now, |v| readiness_of(svc_view, &st, v));
+                    }
+                    for (i, d) in decisions.iter().enumerate() {
+                        let s = &mut st[i];
+                        s.dispatcher.set_weights(&d.quotas);
+                        // Propagate batch-size targets to this service's
+                        // live and future pods; a shrunk target can
+                        // complete a forming batch.  Visit pods in id
+                        // order — HashMap iteration order would make the
+                        // RNG draw sequence nondeterministic across runs.
+                        s.current_batches = d
+                            .target
+                            .keys()
+                            .map(|v| (v.clone(), d.batch_of(v)))
+                            .collect();
+                        let mut pod_ids: Vec<u64> = pods
+                            .iter()
+                            .filter(|(_, p)| p.svc == i)
+                            .map(|(&id, _)| id)
+                            .collect();
+                        pod_ids.sort_unstable();
+                        for pid in pod_ids {
+                            let pod = pods.get_mut(&pid).expect("listed pod");
+                            let mb = s.current_batches.get(&pod.variant).copied().unwrap_or(1);
+                            if mb != pod.max_batch {
+                                pod.max_batch = mb;
+                                if pod.forming.len() >= mb {
+                                    let items = std::mem::take(&mut pod.forming);
+                                    pod.forming_seq += 1;
+                                    dispatch_batch(
+                                        &services[i].profiles,
+                                        pod,
+                                        pid,
+                                        items,
+                                        now,
+                                        &mut batches,
+                                        &mut heap,
+                                        &mut seq,
+                                        &mut s.rng,
+                                    );
+                                }
+                            }
+                        }
+                        for (v, &b) in s.current_batches.iter().filter(|&(_, &b)| b > 1) {
+                            s.metrics.record_batch_decision(now, v, b);
+                        }
+                        s.metrics.record_prediction(now, d.predicted_lambda);
+                    }
+                    record_costs(&cluster, &mut st, now);
+                    for (i, d) in decisions.into_iter().enumerate() {
+                        st[i].decisions.push((now, d));
+                    }
+                }
+            }
+        }
+
+        st.into_iter()
+            .map(|s| SimResult {
+                metrics: s.metrics,
+                duration_s: s.duration,
+                decisions: s.decisions,
+            })
+            .collect()
+    }
+
+    /// Arbitration phase: arbitrated services observe their rate history,
+    /// predict λ̂, and report value curves; the arbiter water-fills the
+    /// global budget.  Returns `None` per service when the engine has no
+    /// arbiter (every policy keeps its own budget).
+    fn arbitrate(
+        &self,
+        services: &mut [FleetService],
+        st: &mut [SvcState],
+        histories: &[Vec<f64>],
+        committed: &[BTreeMap<String, usize>],
+    ) -> Vec<Option<usize>> {
+        let Some(arb) = &self.arbiter else {
+            return vec![None; services.len()];
+        };
+        let floors_sum: usize = services.iter().map(|s| s.floor_cores).sum();
+        let mut entries = Vec::with_capacity(services.len());
+        for (i, s) in services.iter_mut().enumerate() {
+            let floor = s.floor_cores;
+            let priority = s.priority;
+            let entry = match &mut s.policy {
+                FleetPolicyRef::Plain(_) => ArbiterEntry {
+                    priority,
+                    floor,
+                    curve: None,
+                },
+                FleetPolicyRef::Arbitrated(p) => {
+                    let lambda = p.observe_and_predict(&histories[i]);
+                    st[i].pending_lambda = lambda;
+                    // The most this service could ever be granted: the
+                    // whole budget minus everyone else's floors.
+                    let cap = arb.global_budget.saturating_sub(floors_sum - floor);
+                    let curve = p.value_curve(lambda, &committed[i], cap);
+                    ArbiterEntry {
+                        priority,
+                        floor,
+                        curve: Some(curve),
+                    }
+                }
+            };
+            entries.push(entry);
+        }
+        arb.partition(&entries).into_iter().map(Some).collect()
+    }
+}
+
+/// Decision phase: every service solves inside its grant (arbitrated) or
+/// decides with its own fixed budget (plain / no arbiter).
+fn decide_all(
+    now: f64,
+    services: &mut [FleetService],
+    st: &[SvcState],
+    histories: &[Vec<f64>],
+    committed: &[BTreeMap<String, usize>],
+    grants: &[Option<usize>],
+) -> Vec<Decision> {
+    services
+        .iter_mut()
+        .enumerate()
+        .map(|(i, s)| match &mut s.policy {
+            FleetPolicyRef::Plain(p) => {
+                let d = p.decide(now, &histories[i], &committed[i]);
+                // Under arbitration a plain service's floor is its whole
+                // reservation — the arbiter partitioned the rest of the
+                // budget assuming it.  A policy that targets more quietly
+                // oversubscribes the cluster; catch the misconfiguration
+                // in debug builds.
+                if let Some(g) = grants[i] {
+                    debug_assert!(
+                        d.target.values().sum::<usize>() <= g,
+                        "plain service {} targets {} cores but is reserved only {} \
+                         of the arbitrated budget",
+                        s.name,
+                        d.target.values().sum::<usize>(),
+                        g
+                    );
+                }
+                d
+            }
+            FleetPolicyRef::Arbitrated(p) => match grants[i] {
+                Some(g) => {
+                    p.budget = g;
+                    p.decide_with_lambda(st[i].pending_lambda, &committed[i])
+                }
+                None => p.decide(now, &histories[i], &committed[i]),
+            },
+        })
+        .collect()
+}
+
+/// Cluster-facing variant key of a service's variant.
+fn namespaced(prefix: &str, variant: &str) -> String {
+    if prefix.is_empty() {
+        variant.to_string()
+    } else {
+        format!("{prefix}{variant}")
+    }
+}
+
+/// Which service owns a cluster variant key.  Prefixes end in `/` and
+/// names are slash-free, so matches are unambiguous; the empty prefix
+/// (single-service compatibility path) owns everything.
+fn owner_of(st: &[SvcState], key: &str) -> usize {
+    st.iter()
+        .position(|s| !s.prefix.is_empty() && key.starts_with(&s.prefix))
+        .unwrap_or(0)
+}
+
+/// Union of every service's namespaced target (the shared cluster's
+/// reconciliation goal; keys absent from the union are drained).
+fn merged_target(st: &[SvcState], decisions: &[Decision]) -> BTreeMap<String, usize> {
+    let mut merged = BTreeMap::new();
+    for (s, d) in st.iter().zip(decisions) {
+        for (v, &c) in &d.target {
+            merged.insert(namespaced(&s.prefix, v), c);
+        }
+    }
+    merged
+}
+
+/// Readiness time of a namespaced variant key (owner's profile).
+fn readiness_of(services: &[FleetService], st: &[SvcState], key: &str) -> f64 {
+    let i = owner_of(st, key);
+    let raw = &key[st[i].prefix.len()..];
+    services[i]
+        .profiles
+        .get(raw)
+        .map(|p| p.readiness_s)
+        .unwrap_or(10.0)
+}
+
+/// Cores billed to one service right now (its share of the shared bill).
+fn billed_of(cluster: &Cluster, st: &[SvcState], i: usize) -> usize {
+    cluster
+        .pods()
+        .iter()
+        .filter(|p| p.is_billed() && owner_of(st, &p.variant) == i)
+        .map(|p| p.cores)
+        .sum()
+}
+
+/// Sample every service's billed cores at `now` — but only inside that
+/// service's own metric window `[0, duration]`.  Traces of different
+/// lengths share one clock: cluster ticks run to the fleet-wide maximum,
+/// and a sample past a short service's end would otherwise be integrated
+/// by `MetricsCollector::summary` (which normalizes by the service's own
+/// duration), inflating its average cost.
+fn record_costs(cluster: &Cluster, st: &mut [SvcState], now: f64) {
+    for i in 0..st.len() {
+        if now > st[i].duration {
+            continue;
+        }
+        let billed = billed_of(cluster, st, i);
+        st[i].metrics.record_cost(now, billed);
+    }
+}
+
+fn acc_of(profiles: &ProfileSet, variant: &str) -> f64 {
+    profiles.get(variant).map(|p| p.accuracy).unwrap_or(0.0)
+}
+
+/// Draw one service time for a batch of `batch` requests on a variant
+/// (lognormal around the amortized mean; `batch = 1` is the plain
+/// measured service time).
+fn sample_service_batch(
+    profiles: &ProfileSet,
+    variant: &str,
+    batch: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let p = profiles.get(variant).expect("unknown variant");
+    rng.lognormal_mean(p.service_time_batch(batch), p.service_sigma.max(1e-6))
+}
+
+/// Add one routed request to a pod: it joins the forming batch, which
+/// dispatches when full (immediately at `max_batch = 1`); opening a fresh
+/// batch arms the formation timeout.
+#[allow(clippy::too_many_arguments)]
+fn enqueue_request(
+    profiles: &ProfileSet,
+    batch_max_wait_s: f64,
+    pod_id: u64,
+    rid: usize,
+    now: f64,
+    pods: &mut HashMap<u64, PodSim>,
+    batches: &mut Vec<Vec<usize>>,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    rng: &mut Rng,
+) {
+    let pod = pods.get_mut(&pod_id).expect("routed to unknown pod");
+    pod.forming.push(rid);
+    pod.waiting += 1;
+    if pod.forming.len() >= pod.max_batch {
+        let items = std::mem::take(&mut pod.forming);
+        pod.forming_seq += 1;
+        dispatch_batch(profiles, pod, pod_id, items, now, batches, heap, seq, rng);
+    } else if pod.forming.len() == 1 {
+        push_event(
+            heap,
+            seq,
+            now + batch_max_wait_s,
+            EventKind::BatchTimeout {
+                pod_id,
+                forming_seq: pod.forming_seq,
+            },
+        );
+    }
+}
+
+/// Hand a formed batch to the pod: one service draw on a free core, or
+/// the formed-batch queue when all cores are busy.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_batch(
+    profiles: &ProfileSet,
+    pod: &mut PodSim,
+    pod_id: u64,
+    items: Vec<usize>,
+    now: f64,
+    batches: &mut Vec<Vec<usize>>,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    rng: &mut Rng,
+) {
+    let bid = batches.len();
+    batches.push(items);
+    if pod.busy < pod.cores {
+        pod.busy += 1;
+        pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
+        let stime = sample_service_batch(profiles, &pod.variant, batches[bid].len(), rng);
+        push_event(
+            heap,
+            seq,
+            now + stime,
+            EventKind::Completion { pod_id, batch: bid },
+        );
+    } else {
+        pod.queue.push_back(bid);
+    }
+}
+
+/// Least-loaded ready pod of a namespaced variant key.
+fn pick_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>, key: &str) -> Option<u64> {
+    cluster
+        .ready_pods_of(key)
+        .iter()
+        .filter_map(|p| pods.get(&p.id).map(|ps| (p.id, ps)))
+        .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
+        .map(|(id, _)| id)
+}
+
+/// Any ready pod of the service (fallback when the chosen variant has
+/// none yet).
+fn any_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>, svc: usize) -> Option<u64> {
+    cluster
+        .pods()
+        .iter()
+        .filter(|p| p.is_ready())
+        .filter_map(|p| pods.get(&p.id).map(|ps| (p.id, ps)))
+        .filter(|(_, ps)| ps.svc == svc)
+        .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
+        .map(|(id, _)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::InfAdapterPolicy;
+    use crate::baselines::StaticPolicy;
+    use crate::config::ObjectiveWeights;
+    use crate::forecaster::LastMaxForecaster;
+    use crate::serving::sim::SimEngine;
+    use crate::solver::BranchBoundSolver;
+    use crate::workload::Trace;
+
+    fn inf_policy(budget: usize) -> InfAdapterPolicy {
+        InfAdapterPolicy::new(
+            ProfileSet::paper_like(),
+            Box::new(LastMaxForecaster::new(120, 1.0)),
+            Box::new(BranchBoundSolver),
+            ObjectiveWeights::default(),
+            0.75,
+            budget,
+            1.1,
+        )
+    }
+
+    /// The ISSUE acceptance criterion: a single service run through the
+    /// fleet path (arbiter on, namespaced pods, per-service RNG streams)
+    /// is bit-identical to the pre-fleet single-adapter path.
+    #[test]
+    fn single_service_fleet_matches_single_adapter_path() {
+        let profiles = ProfileSet::paper_like();
+        let trace = Trace::bursty(40.0, 100.0, 420, 9);
+        let config = SimConfig {
+            seed: 9,
+            ..Default::default()
+        };
+        let mut p1 = inf_policy(20);
+        let base = SimEngine::new(profiles.clone(), config.clone()).run(&mut p1, &trace);
+        let mut p2 = inf_policy(20);
+        let mut services = [FleetService {
+            name: "svc0".into(),
+            trace: &trace,
+            profiles: profiles.clone(),
+            slo_s: 0.75,
+            priority: 1.0,
+            floor_cores: 0,
+            policy: FleetPolicyRef::Arbitrated(&mut p2),
+        }];
+        let fleet = FleetSimEngine::new(config, Some(CoreArbiter::new(20))).run(&mut services);
+        let a = base.metrics.summary("single", base.duration_s);
+        let b = fleet[0].metrics.summary("fleet", fleet[0].duration_s);
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.p99_latency_s, b.p99_latency_s);
+        assert_eq!(a.p50_latency_s, b.p50_latency_s);
+        assert_eq!(a.mean_latency_s, b.mean_latency_s);
+        assert_eq!(a.slo_violation_rate, b.slo_violation_rate);
+        assert_eq!(a.avg_accuracy, b.avg_accuracy);
+        assert_eq!(a.core_seconds, b.core_seconds);
+        assert_eq!(base.decisions.len(), fleet[0].decisions.len());
+        for ((t1, d1), (t2, d2)) in base.decisions.iter().zip(&fleet[0].decisions) {
+            assert_eq!(t1, t2);
+            assert_eq!(d1.target, d2.target);
+            assert_eq!(d1.quotas, d2.quotas);
+            assert_eq!(d1.predicted_lambda, d2.predicted_lambda);
+        }
+    }
+
+    #[test]
+    fn multi_service_fleet_is_deterministic_per_seed() {
+        let profiles = ProfileSet::paper_like();
+        let ta = Trace::burst_window(30.0, 120.0, 300, 60, 80, 4);
+        let tb = Trace::burst_window(30.0, 120.0, 300, 180, 80, 5);
+        let run = || {
+            let mut pa = inf_policy(6);
+            let mut pb = inf_policy(6);
+            let mut services = [
+                FleetService {
+                    name: "a".into(),
+                    trace: &ta,
+                    profiles: profiles.clone(),
+                    slo_s: 0.75,
+                    priority: 1.0,
+                    floor_cores: 1,
+                    policy: FleetPolicyRef::Arbitrated(&mut pa),
+                },
+                FleetService {
+                    name: "b".into(),
+                    trace: &tb,
+                    profiles: profiles.clone(),
+                    slo_s: 0.4,
+                    priority: 1.0,
+                    floor_cores: 1,
+                    policy: FleetPolicyRef::Arbitrated(&mut pb),
+                },
+            ];
+            let cfg = SimConfig {
+                seed: 21,
+                ..Default::default()
+            };
+            FleetSimEngine::new(cfg, Some(CoreArbiter::new(12))).run(&mut services)
+        };
+        let r1 = run();
+        let r2 = run();
+        for (x, y) in r1.iter().zip(&r2) {
+            let sx = x.metrics.summary("x", x.duration_s);
+            let sy = y.metrics.summary("y", y.duration_s);
+            assert_eq!(sx.total_requests, sy.total_requests);
+            assert_eq!(sx.p99_latency_s, sy.p99_latency_s);
+            assert_eq!(sx.core_seconds, sy.core_seconds);
+            assert!(sx.total_requests > 0);
+        }
+    }
+
+    #[test]
+    fn plain_services_share_the_cluster_without_interfering() {
+        // Two static services on one cluster: each keeps its own pods and
+        // serves only its own trace.
+        let profiles = ProfileSet::paper_like();
+        let ta = Trace::steady(30.0, 120);
+        let tb = Trace::steady(10.0, 120);
+        let mut pa = StaticPolicy::new("resnet18", 4);
+        let mut pb = StaticPolicy::new("resnet50", 4);
+        let mut services = [
+            FleetService {
+                name: "a".into(),
+                trace: &ta,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 4,
+                policy: FleetPolicyRef::Plain(&mut pa),
+            },
+            FleetService {
+                name: "b".into(),
+                trace: &tb,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 4,
+                policy: FleetPolicyRef::Plain(&mut pb),
+            },
+        ];
+        let cfg = SimConfig {
+            seed: 3,
+            ..Default::default()
+        };
+        let results = FleetSimEngine::new(cfg, None).run(&mut services);
+        let sa = results[0].metrics.summary("a", 120.0);
+        let sb = results[1].metrics.summary("b", 120.0);
+        assert!(sa.total_requests > 3000, "{sa:?}");
+        assert!(sb.total_requests > 900, "{sb:?}");
+        assert_eq!(sa.dropped, 0);
+        assert_eq!(sb.dropped, 0);
+        // service a runs resnet18 (69.76), service b resnet50 (76.13):
+        // routing never leaks across the namespace boundary
+        assert!((sa.avg_accuracy - 69.76).abs() < 1e-6, "{sa:?}");
+        assert!((sb.avg_accuracy - 76.13).abs() < 1e-6, "{sb:?}");
+        // both bills stay near the static allocations
+        assert!((sa.avg_cost_cores - 4.0).abs() < 0.5, "{sa:?}");
+        assert!((sb.avg_cost_cores - 4.0).abs() < 0.5, "{sb:?}");
+    }
+
+    #[test]
+    fn short_trace_service_cost_normalizes_over_its_own_window() {
+        // Services with different trace lengths share one clock: the
+        // cluster keeps ticking (and billing) until the fleet-wide
+        // maximum, but a service's summary normalizes by its *own*
+        // duration — cost samples past its end must not be integrated
+        // (they would report 4 cores over 100 s as ~16 avg cores here).
+        let profiles = ProfileSet::paper_like();
+        let ta = Trace::steady(20.0, 100);
+        let tb = Trace::steady(20.0, 400);
+        let mut pa = StaticPolicy::new("resnet18", 4);
+        let mut pb = StaticPolicy::new("resnet18", 4);
+        let mut services = [
+            FleetService {
+                name: "short".into(),
+                trace: &ta,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 4,
+                policy: FleetPolicyRef::Plain(&mut pa),
+            },
+            FleetService {
+                name: "long".into(),
+                trace: &tb,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 4,
+                policy: FleetPolicyRef::Plain(&mut pb),
+            },
+        ];
+        let cfg = SimConfig {
+            seed: 8,
+            ..Default::default()
+        };
+        let results = FleetSimEngine::new(cfg, None).run(&mut services);
+        let short = results[0].metrics.summary("short", results[0].duration_s);
+        let long = results[1].metrics.summary("long", results[1].duration_s);
+        assert!((short.avg_cost_cores - 4.0).abs() < 0.5, "{short:?}");
+        assert!((long.avg_cost_cores - 4.0).abs() < 0.5, "{long:?}");
+    }
+
+    #[test]
+    fn arbiter_shifts_cores_toward_the_bursting_service() {
+        // Service a bursts in [60, 180); b stays quiet.  Under arbitration
+        // a's grant during its burst must exceed the even share, and its
+        // solved allocation must actually use more than the share.
+        let profiles = ProfileSet::paper_like();
+        let ta = Trace::burst_window(30.0, 150.0, 360, 60, 120, 11);
+        let tb = Trace::steady(30.0, 360);
+        let mut pa = inf_policy(6);
+        let mut pb = inf_policy(6);
+        let mut services = [
+            FleetService {
+                name: "a".into(),
+                trace: &ta,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 2,
+                policy: FleetPolicyRef::Arbitrated(&mut pa),
+            },
+            FleetService {
+                name: "b".into(),
+                trace: &tb,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 2,
+                policy: FleetPolicyRef::Arbitrated(&mut pb),
+            },
+        ];
+        let cfg = SimConfig {
+            seed: 13,
+            ..Default::default()
+        };
+        let results = FleetSimEngine::new(cfg, Some(CoreArbiter::new(12))).run(&mut services);
+        // find service a's decision right inside the burst window
+        let in_burst = results[0]
+            .decisions
+            .iter()
+            .find(|(t, _)| (90.0..180.0).contains(t))
+            .map(|(_, d)| d.target.values().sum::<usize>())
+            .expect("a decision inside the burst");
+        assert!(in_burst > 6, "burst grant should exceed the even share, got {in_burst}");
+    }
+}

@@ -23,6 +23,10 @@
 //! * [`serving`] — backend engines: real (PJRT worker pools) and simulated
 //!   (virtual-time M/G/n queues calibrated by real measurements).
 //! * [`adapter`] — the control loop: monitor → forecast → solve → enforce.
+//! * [`fleet`] — multi-service layer: N independent adapter instances on
+//!   one shared cluster, with a top-level core arbiter re-partitioning the
+//!   global budget every interval by water-filling on priority-weighted
+//!   marginal utility (per-service ILP value curves).
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 
@@ -32,6 +36,7 @@ pub mod cluster;
 pub mod config;
 pub mod dispatcher;
 pub mod experiment;
+pub mod fleet;
 pub mod forecaster;
 pub mod metrics;
 pub mod monitoring;

@@ -6,6 +6,8 @@
 //!                engine and write `artifacts/profiles.json`.
 //! * `solve`    — one-shot ILP solve for a given λ / budget / β.
 //! * `simulate` — run a policy vs a trace on the virtual-time engine.
+//! * `fleet`    — multi-service serving on one shared cluster (core
+//!                arbitration vs static splits).
 //! * `serve`    — live serving of a trace on the real PJRT engine.
 //!
 //! Flag parsing is hand-rolled (`--flag value` / `--flag=value`): the
@@ -14,6 +16,7 @@
 use anyhow::{bail, Context, Result};
 use infadapter::config::Config;
 use infadapter::experiment::{self, PolicyKind, Scenario};
+use infadapter::fleet::{print_fleet, FleetMode, FleetScenario};
 use infadapter::profiler::{self, ProfileSet};
 use infadapter::runtime::Manifest;
 use infadapter::serving::real::{RealConfig, RealEngine};
@@ -37,11 +40,19 @@ COMMANDS:
                                      one-shot ILP solve
   simulate [--trace T] [--policy P] [--seconds N] [--base RPS] [--out CSV]
                                      virtual-time experiment
+  fleet    [--services N] [--mode M] [--seconds N] [--base RPS] [--budget B]
+           [--out PREFIX]
+                                     multi-service serving on one shared
+                                     cluster (config.fleet when present,
+                                     else N synthetic services with
+                                     interleaved bursts)
   serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
                                      live serving on the real PJRT engine
 
   traces:   bursty | non-bursty | twitter | steady:<rps> | csv:<path>
+            | burst:<start_s>:<len_s>[:<peak_rps>]
   policies: infadapter | ms+ | vpa:<variant> | static:<variant>:<cores>
+  fleet modes: arbiter | even | vpa:<variant>
 ";
 
 /// `--flag value` / `--flag=value` parser.
@@ -95,20 +106,7 @@ impl Args {
 }
 
 fn parse_trace(spec: &str, base: f64, seconds: usize, seed: u64) -> Result<RateSeries> {
-    Ok(match spec {
-        "bursty" => Trace::bursty(base, base * 2.5, seconds, seed),
-        "non-bursty" => Trace::non_bursty(base * 0.5, base * 1.5, seconds, seed),
-        "twitter" => Trace::twitter_like(base, seconds, seed),
-        other => {
-            if let Some(rps) = other.strip_prefix("steady:") {
-                Trace::steady(rps.parse()?, seconds)
-            } else if let Some(path) = other.strip_prefix("csv:") {
-                Trace::from_csv(std::path::Path::new(path))?
-            } else {
-                bail!("unknown trace spec {other} (see `infadapter` usage)")
-            }
-        }
-    })
+    Trace::from_spec(spec, base, seconds, seed)
 }
 
 fn parse_policy(spec: &str) -> Result<PolicyKind> {
@@ -272,6 +270,56 @@ fn main() -> Result<()> {
             if let Some(path) = args.get("out") {
                 std::fs::write(path, result.to_csv())?;
                 println!("rows -> {path}");
+            }
+        }
+        "fleet" => {
+            let seconds = args.get_usize("seconds", 1200)?;
+            let base = args.get_f64("base", 30.0)?;
+            let profiles = experiment::load_or_default_profiles(&artifacts);
+            let scenario = if !config.fleet.services.is_empty() {
+                anyhow::ensure!(
+                    args.get("services").is_none()
+                        && args.get("budget").is_none()
+                        && args.get("base").is_none(),
+                    "--services/--budget/--base conflict with the config file's \
+                     fleet section; edit config.fleet or drop the flags"
+                );
+                FleetScenario::from_config(&config, &profiles, seconds)?
+            } else {
+                let n = args.get_usize("services", 2)?;
+                anyhow::ensure!(n >= 1, "--services must be at least 1");
+                let budget = args.get_usize("budget", config.cluster.budget)?;
+                FleetScenario::synthetic(n, base, seconds, budget, &config, &profiles)
+            };
+            let mode = match args.get("mode").unwrap_or("arbiter") {
+                "arbiter" => FleetMode::Arbiter,
+                "even" => FleetMode::EvenSplit,
+                other => {
+                    if let Some(v) = other.strip_prefix("vpa:") {
+                        FleetMode::IndependentVpa(v.to_string())
+                    } else {
+                        bail!("unknown fleet mode {other} (arbiter | even | vpa:<variant>)")
+                    }
+                }
+            };
+            let out = scenario.run(&mode, &artifacts);
+            print_fleet(
+                &format!(
+                    "fleet: {} services, budget {}",
+                    scenario.services.len(),
+                    scenario.global_budget
+                ),
+                &out,
+            );
+            if let Some(prefix) = args.get("out") {
+                for (r, s) in out.per_service.iter().zip(&scenario.services) {
+                    let path = format!("{prefix}_{}.csv", s.name);
+                    std::fs::write(
+                        &path,
+                        infadapter::metrics::rows_to_csv(&r.metrics.rows(r.duration_s)),
+                    )?;
+                    println!("rows -> {path}");
+                }
             }
         }
         "serve" => {

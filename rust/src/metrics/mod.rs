@@ -68,6 +68,73 @@ pub struct RunSummary {
     pub mean_latency_s: f64,
 }
 
+/// Aggregate of a multi-service fleet run: the per-service [`RunSummary`]s
+/// plus cluster-wide rollups.  Requests are judged against their *own*
+/// service's SLO, so the aggregate violation rate is the request-weighted
+/// mean of the per-service rates; latency percentiles do not merge across
+/// different SLOs, so the fleet reports the worst per-service P99 instead
+/// (a fleet meets its SLOs only if every service does).
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub services: Vec<RunSummary>,
+    pub total_requests: u64,
+    pub dropped: u64,
+    /// Request-weighted SLO-violation fraction across services.
+    pub slo_violation_rate: f64,
+    /// Sum of per-service goodput (each a rate over its *own* active
+    /// window and its own SLO — per-service sustained useful throughput,
+    /// not a cluster-horizon rate).
+    pub goodput_rps: f64,
+    /// Completed-request-weighted accuracy loss (each service relative to
+    /// its own top variant).
+    pub avg_accuracy_loss: f64,
+    /// Cluster-wide time-averaged billed cores: summed core-seconds
+    /// normalized by the fleet horizon (services whose traces end early
+    /// stop billing, so summing per-window averages would over-report).
+    pub avg_cost_cores: f64,
+    pub core_seconds: f64,
+    /// Worst per-service P99 latency.
+    pub worst_p99_latency_s: f64,
+}
+
+impl FleetSummary {
+    /// Aggregate per-service summaries; `horizon_s` is the fleet-wide run
+    /// length (max service duration) that cost is averaged over.
+    pub fn from_services(services: Vec<RunSummary>, horizon_s: f64) -> Self {
+        let total_requests: u64 = services.iter().map(|s| s.total_requests).sum();
+        let dropped: u64 = services.iter().map(|s| s.dropped).sum();
+        let completed: f64 = services
+            .iter()
+            .map(|s| (s.total_requests - s.dropped) as f64)
+            .sum();
+        let slo_violation_rate = services
+            .iter()
+            .map(|s| s.slo_violation_rate * s.total_requests as f64)
+            .sum::<f64>()
+            / (total_requests.max(1) as f64);
+        let avg_accuracy_loss = services
+            .iter()
+            .map(|s| s.avg_accuracy_loss * (s.total_requests - s.dropped) as f64)
+            .sum::<f64>()
+            / completed.max(1.0);
+        let core_seconds: f64 = services.iter().map(|s| s.core_seconds).sum();
+        Self {
+            total_requests,
+            dropped,
+            slo_violation_rate,
+            goodput_rps: services.iter().map(|s| s.goodput_rps).sum(),
+            avg_accuracy_loss,
+            avg_cost_cores: core_seconds / horizon_s.max(1e-9),
+            core_seconds,
+            worst_p99_latency_s: services
+                .iter()
+                .map(|s| s.p99_latency_s)
+                .fold(0.0, f64::max),
+            services,
+        }
+    }
+}
+
 /// Accumulates request records + cost samples into rows and a summary.
 #[derive(Debug, Clone)]
 pub struct MetricsCollector {
@@ -393,6 +460,51 @@ mod tests {
         m.record_batch_decision(30.0, "resnet50", 8);
         assert_eq!(m.batch_decisions().len(), 2);
         assert_eq!(m.batch_decisions()[1], (30.0, "resnet50".to_string(), 8));
+    }
+
+    #[test]
+    fn fleet_summary_aggregates_request_weighted() {
+        let mk = |total: u64, dropped: u64, viol: f64, loss: f64, cost: f64, p99: f64| {
+            RunSummary {
+                policy: "svc".into(),
+                total_requests: total,
+                dropped,
+                slo_violation_rate: viol,
+                goodput_rps: 10.0,
+                avg_accuracy: 0.0,
+                avg_accuracy_loss: loss,
+                avg_cost_cores: cost,
+                core_seconds: cost * 100.0,
+                p99_latency_s: p99,
+                p50_latency_s: 0.1,
+                mean_latency_s: 0.1,
+            }
+        };
+        let f = FleetSummary::from_services(
+            vec![
+                mk(300, 0, 0.10, 1.0, 6.0, 0.5),
+                mk(100, 100, 0.30, 0.0, 2.0, 0.9),
+            ],
+            100.0,
+        );
+        assert_eq!(f.total_requests, 400);
+        assert_eq!(f.dropped, 100);
+        // (0.10·300 + 0.30·100) / 400
+        assert!((f.slo_violation_rate - 0.15).abs() < 1e-9);
+        // loss weighted by completed requests only: (1.0·300 + 0.0·0)/300
+        assert!((f.avg_accuracy_loss - 1.0).abs() < 1e-9);
+        // (600 + 200) core-seconds over the 100 s horizon
+        assert!((f.avg_cost_cores - 8.0).abs() < 1e-9);
+        assert!((f.goodput_rps - 20.0).abs() < 1e-9);
+        assert!((f.worst_p99_latency_s - 0.9).abs() < 1e-9);
+        assert_eq!(f.services.len(), 2);
+        // a service billed over a shorter window must not inflate the
+        // cluster average: same core-seconds, longer horizon, lower avg
+        let g = FleetSummary::from_services(
+            vec![mk(300, 0, 0.0, 0.0, 4.0, 0.1), mk(100, 0, 0.0, 0.0, 4.0, 0.1)],
+            400.0,
+        );
+        assert!((g.avg_cost_cores - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Virtual-time discrete-event serving simulator.
+//! Virtual-time discrete-event serving simulator (single-service facade).
 //!
 //! Models the paper's testbed faithfully at the queueing level: each pod is
 //! an M/G/n station — `cores` parallel servers (the TF-Serving inter-op
@@ -8,45 +8,19 @@
 //! supplies smooth-WRR routing; the policy is invoked on the same 30 s
 //! cadence as the live system.
 //!
-//! ## Batch formation
-//!
-//! When a policy's [`Decision`] assigns a variant a batch size `b > 1`,
-//! every pod of that variant forms batches at the queue head: arrivals
-//! accumulate until either `b` requests are waiting or the oldest has
-//! waited `batch_max_wait_s`, then the whole batch is dispatched as *one*
-//! service draw occupying *one* core, with the batched mean service time
-//! `s(b)` from the profile's amortization model
-//! ([`crate::profiler::VariantProfile::service_time_batch`]).  A request's
-//! recorded latency spans arrival → batch completion, so formation wait,
-//! queueing, and the full batched service are all inside the SLO
-//! accounting — matching the worst case the solver charges (`max_wait_s`
-//! formation + `s(b)` service).  With `b = 1` (the default) a batch is a
-//! single request dispatched immediately and no timeout events exist, so
-//! the event and RNG-draw sequence is bit-identical to the pre-batching
-//! engine.
-//!
-//! ## Rate accounting
-//!
-//! Arrivals are counted into per-second buckets; completed seconds are
-//! flushed into the rate history the policy sees.  At every adapter tick
-//! the counter is additionally flushed *up to `now`*: a tick at a
-//! fractional time pushes the in-progress partial second as an
-//! extrapolated per-second rate, so the just-observed load is never
-//! invisible to the policy (previously it only surfaced when a later event
-//! rolled the second counter forward).
-//!
-//! Event order: arrivals, completions, batch timeouts, cluster ticks
-//! (1 s), adapter ticks.
+//! The event loop itself lives in the multi-service fleet engine
+//! ([`crate::fleet::sim::FleetSimEngine`]); [`SimEngine::run`] is the
+//! single-service special case — one unprefixed service, no arbiter — so
+//! the historical single-adapter behaviour (batch formation, rate
+//! accounting, event order, RNG draw sequence) is exactly the fleet
+//! engine's N = 1 path.  See the fleet module docs for the batching and
+//! rate-accounting semantics, which are unchanged.
 
 use super::{Decision, Policy};
-use crate::cluster::{Cluster, ClusterEvent};
-use crate::dispatcher::Dispatcher;
-use crate::metrics::{MetricsCollector, RequestRecord};
+use crate::fleet::sim::{FleetPolicyRef, FleetService, FleetSimEngine};
+use crate::metrics::MetricsCollector;
 use crate::profiler::ProfileSet;
-use crate::util::rng::Rng;
-use crate::workload::{ArrivalProcess, RateSeries};
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use crate::workload::RateSeries;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -78,90 +52,13 @@ impl Default for SimConfig {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EventKind {
-    Arrival(usize),
-    /// One batched service draw finishing; `batch` indexes the batch table.
-    Completion { pod_id: u64, batch: usize },
-    /// Formation wait expired for the batch a pod opened at `forming_seq`.
-    BatchTimeout { pod_id: u64, forming_seq: u64 },
-    ClusterTick,
-    AdapterTick,
-}
-
-#[derive(Debug, Clone, Copy)]
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
-    }
-}
-
-fn push_event(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
-    *seq += 1;
-    heap.push(Reverse(Event { t, seq: *seq, kind }));
-}
-
-/// Shortest window a rate sample may be normalized over.  Caps the
-/// extrapolation factor at 4x: an adapter tick at t = 30.001 must not turn
-/// one arrival in a 1 ms sliver into a 1000 rps sample (a max-picking
-/// forecaster would seize on it).  Windows shorter than this merge into
-/// the neighbouring sample instead.
-const MIN_RATE_SAMPLE_SPAN_S: f64 = 0.25;
-
-struct PodSim {
-    variant: String,
-    cores: usize,
-    busy: usize,
-    /// Formed batches (ids into the batch table) awaiting a free core.
-    queue: VecDeque<usize>,
-    /// Requests accumulating toward the next batch (ids).
-    forming: Vec<usize>,
-    /// Bumped on every dispatch; stale `BatchTimeout` events don't match.
-    forming_seq: u64,
-    /// Current batch-size target for this pod's variant (1 = no batching).
-    max_batch: usize,
-    /// Requests waiting at this pod (forming + members of queued batches);
-    /// kept as a counter so routing comparisons stay O(1).
-    waiting: usize,
-}
-
-impl PodSim {
-    /// Waiting + in-service requests normalized by cores — the
-    /// least-loaded routing metric.
-    fn load(&self) -> f64 {
-        (self.busy + self.waiting) as f64 / self.cores.max(1) as f64
-    }
-}
-
-struct RequestSim {
-    arrival: f64,
-    accuracy: f64,
-}
-
-/// The simulator.
+/// The single-service simulator.
 pub struct SimEngine {
     pub config: SimConfig,
     profiles: ProfileSet,
 }
 
-/// Result of one simulated run.
+/// Result of one simulated run (one service's stream).
 pub struct SimResult {
     pub metrics: MetricsCollector,
     pub duration_s: f64,
@@ -174,444 +71,24 @@ impl SimEngine {
         Self { config, profiles }
     }
 
-    /// Draw one service time for a batch of `batch` requests on a variant
-    /// (lognormal around the amortized mean; `batch = 1` is the plain
-    /// measured service time).
-    fn sample_service_batch(&self, variant: &str, batch: usize, rng: &mut Rng) -> f64 {
-        let p = self.profiles.get(variant).expect("unknown variant");
-        rng.lognormal_mean(p.service_time_batch(batch), p.service_sigma.max(1e-6))
-    }
-
     /// Run `policy` against `trace`. The initial decision (t=0) is applied
     /// with zero readiness (warm start, as in the paper's experiments).
     pub fn run(&self, policy: &mut dyn Policy, trace: &RateSeries) -> SimResult {
-        let cfg = &self.config;
-        let duration = trace.duration_s() as f64;
-        let mut rng = Rng::seed_from_u64(cfg.seed);
-        let arrivals = ArrivalProcess::poisson(trace, cfg.seed.wrapping_add(1));
-
-        let top_acc = self
-            .profiles
-            .profiles
-            .iter()
-            .map(|p| p.accuracy)
-            .fold(0.0, f64::max);
-        let mut metrics = MetricsCollector::new(cfg.bucket_s, cfg.slo_s, top_acc);
-        let mut cluster = Cluster::new(&cfg.node_cores);
-        let dispatcher = Dispatcher::new();
-        let mut decisions: Vec<(f64, Decision)> = Vec::new();
-
-        // --- Warm start: decide at t=0 and make pods ready instantly.
-        let first_rate = trace.rates.first().copied().unwrap_or(0.0);
-        let d0 = policy.decide(0.0, &[first_rate], &BTreeMap::new());
-        cluster.apply(&d0.target, 0.0, |_| 0.0);
-        cluster.tick(0.0);
-        dispatcher.set_weights(&d0.quotas);
-        metrics.record_prediction(0.0, d0.predicted_lambda);
-        metrics.record_cost(0.0, cluster.billed_cores());
-        // Per-variant batch-size targets in force (new pods inherit them).
-        let mut current_batches: BTreeMap<String, usize> = d0
-            .target
-            .keys()
-            .map(|v| (v.clone(), d0.batch_of(v)))
-            .collect();
-        for (v, &b) in current_batches.iter().filter(|&(_, &b)| b > 1) {
-            metrics.record_batch_decision(0.0, v, b);
-        }
-        decisions.push((0.0, d0));
-
-        // --- Event queue.
-        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
-        let mut seq = 0u64;
-        for (i, &t) in arrivals.iter().enumerate() {
-            push_event(&mut heap, &mut seq, t, EventKind::Arrival(i));
-        }
-        let mut t_next = 1.0;
-        while t_next < duration {
-            push_event(&mut heap, &mut seq, t_next, EventKind::ClusterTick);
-            t_next += 1.0;
-        }
-        let mut t_adapt = cfg.adapter_interval_s;
-        while t_adapt < duration {
-            push_event(&mut heap, &mut seq, t_adapt, EventKind::AdapterTick);
-            t_adapt += cfg.adapter_interval_s;
-        }
-
-        // --- State.
-        let mut pods: HashMap<u64, PodSim> = HashMap::new();
-        for p in cluster.pods() {
-            pods.insert(
-                p.id,
-                PodSim {
-                    variant: p.variant.clone(),
-                    cores: p.cores,
-                    busy: 0,
-                    queue: VecDeque::new(),
-                    forming: Vec::new(),
-                    forming_seq: 0,
-                    max_batch: current_batches.get(&p.variant).copied().unwrap_or(1),
-                    waiting: 0,
-                },
-            );
-        }
-        let mut requests: Vec<RequestSim> = Vec::with_capacity(arrivals.len());
-        // batch id -> member request ids (set at dispatch, pruned of
-        // timed-out members at service start)
-        let mut batches: Vec<Vec<usize>> = Vec::new();
-        let mut rate_history: Vec<f64> = Vec::new();
-        let mut arrivals_this_second = 0u64;
-        let mut last_whole_second = 0u64;
-        // Start of the window `arrivals_this_second` covers; advances with
-        // the per-second roll and with partial flushes at adapter ticks so
-        // every sample is normalized by the span it actually observed.
-        let mut counter_since = 0.0f64;
-
-        let acc_of = |profiles: &ProfileSet, v: &str| -> f64 {
-            profiles.get(v).map(|p| p.accuracy).unwrap_or(0.0)
-        };
-
-        // --- Main loop.  Arrivals and ticks all fall inside [0, duration);
-        // completions may land past the end and are drained so every
-        // request is accounted for (conservation invariant).
-        while let Some(Reverse(ev)) = heap.pop() {
-            let now = ev.t;
-            // roll the per-second arrival counter (the division is by
-            // exactly 1.0 — a bit-exact no-op — unless an adapter tick
-            // partially flushed this second; a sliver left by a flush just
-            // before the boundary merges into the next second's sample)
-            let sec = now as u64;
-            while last_whole_second < sec {
-                let boundary = (last_whole_second + 1) as f64;
-                let span = boundary - counter_since;
-                if span >= MIN_RATE_SAMPLE_SPAN_S {
-                    rate_history.push(arrivals_this_second as f64 / span);
-                    arrivals_this_second = 0;
-                    counter_since = boundary;
-                }
-                last_whole_second += 1;
-            }
-
-            match ev.kind {
-                EventKind::Arrival(_) => {
-                    arrivals_this_second += 1;
-                    let rid = requests.len();
-                    // Route: dispatcher picks the variant; least-loaded
-                    // ready pod of that variant takes the request.
-                    let variant = dispatcher.route();
-                    let pod_id = variant.as_deref().and_then(|v| {
-                        pick_pod(&cluster, &pods, v).or_else(|| any_pod(&cluster, &pods))
-                    });
-                    let Some(pid) = pod_id else {
-                        requests.push(RequestSim {
-                            arrival: now,
-                            accuracy: 0.0,
-                        });
-                        metrics.record_request(RequestRecord {
-                            arrival_s: now,
-                            latency_s: f64::INFINITY,
-                            accuracy: 0.0,
-                        });
-                        continue;
-                    };
-                    let accuracy = acc_of(&self.profiles, &pods[&pid].variant);
-                    requests.push(RequestSim {
-                        arrival: now,
-                        accuracy,
-                    });
-                    self.enqueue_request(
-                        pid,
-                        rid,
-                        now,
-                        &mut pods,
-                        &mut batches,
-                        &mut heap,
-                        &mut seq,
-                        &mut rng,
-                    );
-                }
-                EventKind::Completion { pod_id, batch } => {
-                    for &rid in &batches[batch] {
-                        let r = &requests[rid];
-                        metrics.record_request(RequestRecord {
-                            arrival_s: r.arrival,
-                            latency_s: now - r.arrival,
-                            accuracy: r.accuracy,
-                        });
-                    }
-                    if let Some(pod) = pods.get_mut(&pod_id) {
-                        pod.busy = pod.busy.saturating_sub(1);
-                        // Start the next formed batch, dropping members
-                        // that queued past the client timeout.
-                        while let Some(bid) = pod.queue.pop_front() {
-                            pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
-                            let mut live = Vec::with_capacity(batches[bid].len());
-                            for &rid in &batches[bid] {
-                                let waited = now - requests[rid].arrival;
-                                if waited > self.config.queue_timeout_s {
-                                    metrics.record_request(RequestRecord {
-                                        arrival_s: requests[rid].arrival,
-                                        latency_s: f64::INFINITY,
-                                        accuracy: requests[rid].accuracy,
-                                    });
-                                } else {
-                                    live.push(rid);
-                                }
-                            }
-                            if live.is_empty() {
-                                continue;
-                            }
-                            pod.busy += 1;
-                            let st =
-                                self.sample_service_batch(&pod.variant, live.len(), &mut rng);
-                            batches[bid] = live;
-                            push_event(
-                                &mut heap,
-                                &mut seq,
-                                now + st,
-                                EventKind::Completion { pod_id, batch: bid },
-                            );
-                            break;
-                        }
-                    }
-                }
-                EventKind::BatchTimeout { pod_id, forming_seq } => {
-                    if let Some(pod) = pods.get_mut(&pod_id) {
-                        if pod.forming_seq == forming_seq && !pod.forming.is_empty() {
-                            let items = std::mem::take(&mut pod.forming);
-                            pod.forming_seq += 1;
-                            self.dispatch_batch(
-                                pod,
-                                pod_id,
-                                items,
-                                now,
-                                &mut batches,
-                                &mut heap,
-                                &mut seq,
-                                &mut rng,
-                            );
-                        }
-                    }
-                }
-                EventKind::ClusterTick => {
-                    for event in cluster.tick(now) {
-                        match event {
-                            ClusterEvent::PodReady { pod_id, variant } => {
-                                let cores = cluster
-                                    .pods()
-                                    .iter()
-                                    .find(|p| p.id == pod_id)
-                                    .map(|p| p.cores)
-                                    .unwrap_or(0);
-                                let max_batch =
-                                    current_batches.get(&variant).copied().unwrap_or(1);
-                                pods.insert(
-                                    pod_id,
-                                    PodSim {
-                                        variant,
-                                        cores,
-                                        busy: 0,
-                                        queue: VecDeque::new(),
-                                        forming: Vec::new(),
-                                        forming_seq: 0,
-                                        max_batch,
-                                        waiting: 0,
-                                    },
-                                );
-                            }
-                            ClusterEvent::PodRemoved { pod_id, .. } => {
-                                // Re-route still-waiting requests (queued
-                                // batches and the forming buffer).
-                                if let Some(mut dead) = pods.remove(&pod_id) {
-                                    let mut orphans: Vec<usize> = Vec::new();
-                                    for bid in dead.queue.drain(..) {
-                                        orphans.append(&mut batches[bid]);
-                                    }
-                                    orphans.append(&mut dead.forming);
-                                    for rid in orphans {
-                                        if let Some(target) = dispatcher
-                                            .route()
-                                            .and_then(|v| pick_pod(&cluster, &pods, &v))
-                                            .or_else(|| any_pod(&cluster, &pods))
-                                        {
-                                            requests[rid].accuracy =
-                                                acc_of(&self.profiles, &pods[&target].variant);
-                                            self.enqueue_request(
-                                                target,
-                                                rid,
-                                                now,
-                                                &mut pods,
-                                                &mut batches,
-                                                &mut heap,
-                                                &mut seq,
-                                                &mut rng,
-                                            );
-                                        } else {
-                                            metrics.record_request(RequestRecord {
-                                                arrival_s: requests[rid].arrival,
-                                                latency_s: f64::INFINITY,
-                                                accuracy: requests[rid].accuracy,
-                                            });
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    metrics.record_cost(now, cluster.billed_cores());
-                }
-                EventKind::AdapterTick => {
-                    // Flush the arrival counter up to `now` so the policy
-                    // sees the in-progress partial second (normalized to a
-                    // per-second rate); integer tick times flush nothing
-                    // extra because the roll above already caught up.  The
-                    // remainder of the second is then normalized by its own
-                    // span at the next roll via `counter_since`.  Slivers
-                    // below the minimum span stay in the counter rather
-                    // than become wildly extrapolated samples.
-                    let span = now - counter_since;
-                    if span >= MIN_RATE_SAMPLE_SPAN_S {
-                        rate_history.push(arrivals_this_second as f64 / span);
-                        arrivals_this_second = 0;
-                        counter_since = now;
-                    }
-                    let committed = cluster.committed_allocation();
-                    let decision = policy.decide(now, &rate_history, &committed);
-                    rate_history.clear();
-                    let profiles = &self.profiles;
-                    cluster.apply(&decision.target, now, |v| {
-                        profiles.get(v).map(|p| p.readiness_s).unwrap_or(10.0)
-                    });
-                    dispatcher.set_weights(&decision.quotas);
-                    // Propagate batch-size targets to live and future pods;
-                    // a shrunk target can complete a forming batch.  Visit
-                    // pods in id order — HashMap iteration order would make
-                    // the RNG draw sequence nondeterministic across runs.
-                    current_batches = decision
-                        .target
-                        .keys()
-                        .map(|v| (v.clone(), decision.batch_of(v)))
-                        .collect();
-                    let mut pod_ids: Vec<u64> = pods.keys().copied().collect();
-                    pod_ids.sort_unstable();
-                    for pid in pod_ids {
-                        let pod = pods.get_mut(&pid).expect("listed pod");
-                        let mb = current_batches.get(&pod.variant).copied().unwrap_or(1);
-                        if mb != pod.max_batch {
-                            pod.max_batch = mb;
-                            if pod.forming.len() >= mb {
-                                let items = std::mem::take(&mut pod.forming);
-                                pod.forming_seq += 1;
-                                self.dispatch_batch(
-                                    pod,
-                                    pid,
-                                    items,
-                                    now,
-                                    &mut batches,
-                                    &mut heap,
-                                    &mut seq,
-                                    &mut rng,
-                                );
-                            }
-                        }
-                    }
-                    for (v, &b) in current_batches.iter().filter(|&(_, &b)| b > 1) {
-                        metrics.record_batch_decision(now, v, b);
-                    }
-                    metrics.record_prediction(now, decision.predicted_lambda);
-                    metrics.record_cost(now, cluster.billed_cores());
-                    decisions.push((now, decision));
-                }
-            }
-        }
-
-        SimResult {
-            metrics,
-            duration_s: duration,
-            decisions,
-        }
+        let mut services = [FleetService {
+            // empty name: unprefixed variant keys, the pre-fleet layout
+            name: String::new(),
+            trace,
+            profiles: self.profiles.clone(),
+            slo_s: self.config.slo_s,
+            priority: 1.0,
+            floor_cores: 0,
+            policy: FleetPolicyRef::Plain(policy),
+        }];
+        FleetSimEngine::new(self.config.clone(), None)
+            .run(&mut services)
+            .pop()
+            .expect("a single-service fleet returns exactly one result")
     }
-
-    /// Add one routed request to a pod: it joins the forming batch, which
-    /// dispatches when full (immediately at `max_batch = 1`); opening a
-    /// fresh batch arms the formation timeout.
-    #[allow(clippy::too_many_arguments)]
-    fn enqueue_request(
-        &self,
-        pod_id: u64,
-        rid: usize,
-        now: f64,
-        pods: &mut HashMap<u64, PodSim>,
-        batches: &mut Vec<Vec<usize>>,
-        heap: &mut BinaryHeap<Reverse<Event>>,
-        seq: &mut u64,
-        rng: &mut Rng,
-    ) {
-        let pod = pods.get_mut(&pod_id).expect("routed to unknown pod");
-        pod.forming.push(rid);
-        pod.waiting += 1;
-        if pod.forming.len() >= pod.max_batch {
-            let items = std::mem::take(&mut pod.forming);
-            pod.forming_seq += 1;
-            self.dispatch_batch(pod, pod_id, items, now, batches, heap, seq, rng);
-        } else if pod.forming.len() == 1 {
-            push_event(
-                heap,
-                seq,
-                now + self.config.batch_max_wait_s,
-                EventKind::BatchTimeout {
-                    pod_id,
-                    forming_seq: pod.forming_seq,
-                },
-            );
-        }
-    }
-
-    /// Hand a formed batch to the pod: one service draw on a free core, or
-    /// the formed-batch queue when all cores are busy.
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch_batch(
-        &self,
-        pod: &mut PodSim,
-        pod_id: u64,
-        items: Vec<usize>,
-        now: f64,
-        batches: &mut Vec<Vec<usize>>,
-        heap: &mut BinaryHeap<Reverse<Event>>,
-        seq: &mut u64,
-        rng: &mut Rng,
-    ) {
-        let bid = batches.len();
-        batches.push(items);
-        if pod.busy < pod.cores {
-            pod.busy += 1;
-            pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
-            let st = self.sample_service_batch(&pod.variant, batches[bid].len(), rng);
-            push_event(heap, seq, now + st, EventKind::Completion { pod_id, batch: bid });
-        } else {
-            pod.queue.push_back(bid);
-        }
-    }
-}
-
-/// Least-loaded ready pod of a variant (waiting requests normalized by
-/// cores).
-fn pick_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>, variant: &str) -> Option<u64> {
-    cluster
-        .ready_pods_of(variant)
-        .iter()
-        .filter_map(|p| pods.get(&p.id).map(|ps| (p.id, ps)))
-        .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
-        .map(|(id, _)| id)
-}
-
-/// Any ready pod at all (fallback when the chosen variant has none yet).
-fn any_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>) -> Option<u64> {
-    cluster
-        .pods()
-        .iter()
-        .filter(|p| p.is_ready() && pods.contains_key(&p.id))
-        .map(|p| p.id)
-        .min_by(|a, b| pods[a].load().total_cmp(&pods[b].load()))
 }
 
 #[cfg(test)]
@@ -619,6 +96,7 @@ mod tests {
     use super::*;
     use crate::baselines::StaticPolicy;
     use crate::workload::Trace;
+    use std::collections::BTreeMap;
 
     fn engine(seed: u64) -> SimEngine {
         SimEngine::new(

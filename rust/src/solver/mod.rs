@@ -394,6 +394,31 @@ pub trait Solver {
     fn solve(&self, problem: &Problem) -> Option<Allocation>;
 }
 
+/// Per-budget value curve for the fleet arbiter: `out[g]` is the best
+/// achievable objective when the core budget is capped at `g`, for
+/// `g in 0..=cap` (`cap ≤ problem.budget` so the per-variant tables cover
+/// every sub-budget).  Re-solves the same ILP once per candidate grant —
+/// only the budget bound shrinks, the tables are shared.  With an exact
+/// solver the curve is monotone nondecreasing: any allocation feasible at
+/// `g` is feasible at `g + 1`.
+pub fn value_curve(problem: &Problem, solver: &dyn Solver, cap: usize) -> Vec<f64> {
+    debug_assert!(
+        cap <= problem.budget,
+        "curve cap {cap} exceeds the table budget {}",
+        problem.budget
+    );
+    let mut sub = problem.clone();
+    (0..=cap)
+        .map(|g| {
+            sub.budget = g;
+            solver
+                .solve(&sub)
+                .map(|a| a.objective)
+                .unwrap_or(f64::NEG_INFINITY)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -528,6 +553,31 @@ mod tests {
             let (u, _) = score_fast(&unb, &cores).unwrap();
             let (b, _) = score_fast(&bat, &cores).unwrap();
             assert!(b >= u - 1e-9, "cores {cores:?}: batched {b} < unbatched {u}");
+        }
+    }
+
+    #[test]
+    fn value_curve_is_monotone_and_ends_at_the_full_solve() {
+        let p = problem(75.0, 20, 0.05);
+        let curve = value_curve(&p, &BruteForceSolver, 20);
+        assert_eq!(curve.len(), 21);
+        for w in curve.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "curve must be nondecreasing: {curve:?}");
+        }
+        let full = BruteForceSolver.solve(&p).unwrap();
+        assert!((curve[20] - full.objective).abs() < 1e-9);
+        // an infeasible prefix is strictly below the feasible tail
+        assert!(curve[0] < curve[20]);
+    }
+
+    #[test]
+    fn value_curve_supports_sub_caps() {
+        let p = problem(75.0, 20, 0.05);
+        let short = value_curve(&p, &BranchBoundSolver, 8);
+        let long = value_curve(&p, &BranchBoundSolver, 20);
+        assert_eq!(short.len(), 9);
+        for (a, b) in short.iter().zip(&long) {
+            assert!((a - b).abs() < 1e-9, "shared prefix must agree");
         }
     }
 

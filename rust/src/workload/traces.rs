@@ -51,6 +51,80 @@ impl Trace {
         }
     }
 
+    /// A single burst at a chosen phase: steady `base` everywhere except a
+    /// spike window `[start, start + len)` — fast exponential attack to
+    /// `peak` over the first part of the window, hold, then linear decay
+    /// back to `base` over the final 40%.  The fleet experiments interleave
+    /// several of these (one per service, staggered starts) so bursts hit
+    /// the shared cluster at different times.
+    pub fn burst_window(
+        base: f64,
+        peak: f64,
+        seconds: usize,
+        start: usize,
+        len: usize,
+        seed: u64,
+    ) -> RateSeries {
+        let mut rng = Rng::seed_from_u64(seed);
+        let end = (start + len).min(seconds);
+        let decay_from = start + (len as f64 * 0.6) as usize;
+        let rates = (0..seconds)
+            .map(|t| {
+                let shape = if t < start || t >= end {
+                    base
+                } else if t < decay_from {
+                    // fast ramp to the peak within ~20 s, then hold
+                    let dt = (t - start) as f64;
+                    base + (peak - base) * (1.0 - (-dt / 8.0).exp())
+                } else {
+                    let frac = (t - decay_from) as f64 / (end - decay_from).max(1) as f64;
+                    base + (peak - base) * (1.0 - frac)
+                };
+                let noise: f64 = rng.normal() * 0.03 * shape;
+                (shape + noise).max(0.0)
+            })
+            .collect();
+        RateSeries {
+            rates,
+            name: format!("burst-{base}-{peak}@{start}+{len}"),
+        }
+    }
+
+    /// Parse a trace spec string (the CLI / `FleetConfig` grammar):
+    /// `bursty | non-bursty | twitter | steady:<rps> | csv:<path> |
+    /// burst:<start_s>:<len_s>[:<peak_rps>]` — `base` scales the
+    /// generators the same way the CLI's `--base` flag always has
+    /// (`burst` defaults its peak to `2.5 × base`).
+    pub fn from_spec(spec: &str, base: f64, seconds: usize, seed: u64) -> Result<RateSeries> {
+        Ok(match spec {
+            "bursty" => Trace::bursty(base, base * 2.5, seconds, seed),
+            "non-bursty" => Trace::non_bursty(base * 0.5, base * 1.5, seconds, seed),
+            "twitter" => Trace::twitter_like(base, seconds, seed),
+            other => {
+                if let Some(rps) = other.strip_prefix("steady:") {
+                    Trace::steady(rps.parse()?, seconds)
+                } else if let Some(path) = other.strip_prefix("csv:") {
+                    Trace::from_csv(Path::new(path))?
+                } else if let Some(rest) = other.strip_prefix("burst:") {
+                    let parts: Vec<&str> = rest.split(':').collect();
+                    anyhow::ensure!(
+                        parts.len() == 2 || parts.len() == 3,
+                        "burst:<start_s>:<len_s>[:<peak_rps>], got {other}"
+                    );
+                    let start: usize = parts[0].parse()?;
+                    let len: usize = parts[1].parse()?;
+                    let peak: f64 = match parts.get(2) {
+                        Some(p) => p.parse()?,
+                        None => base * 2.5,
+                    };
+                    Trace::burst_window(base, peak, seconds, start, len, seed)
+                } else {
+                    anyhow::bail!("unknown trace spec {other} (see `infadapter` usage)")
+                }
+            }
+        })
+    }
+
     /// Smooth non-bursty oscillation (Figure 8): a slow sinusoid between
     /// `low` and `high` with mild noise.
     pub fn non_bursty(low: f64, high: f64, seconds: usize, seed: u64) -> RateSeries {
@@ -195,6 +269,32 @@ mod tests {
         let t = Trace::twitter_like(40.0, 10_000, 3);
         assert!(t.rates.iter().all(|&r| r >= 0.0));
         assert!((t.mean() - 40.0).abs() < 15.0, "mean {}", t.mean());
+    }
+
+    #[test]
+    fn burst_window_spikes_only_inside_its_window() {
+        let t = Trace::burst_window(30.0, 150.0, 600, 200, 100, 7);
+        let avg = |lo: usize, hi: usize| {
+            t.rates[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        };
+        assert!((avg(0, 190) - 30.0).abs() < 3.0, "pre {}", avg(0, 190));
+        assert!(avg(230, 255) > 120.0, "peak {}", avg(230, 255));
+        assert!((avg(320, 600) - 30.0).abs() < 3.0, "post {}", avg(320, 600));
+        assert_eq!(t.duration_s(), 600);
+    }
+
+    #[test]
+    fn from_spec_parses_the_cli_grammar() {
+        assert_eq!(
+            Trace::from_spec("steady:25", 40.0, 30, 1).unwrap().rates,
+            vec![25.0; 30]
+        );
+        let b = Trace::from_spec("burst:100:50:90", 30.0, 300, 2).unwrap();
+        assert!(b.max() > 70.0);
+        assert!(b.rates[..90].iter().sum::<f64>() / 90.0 < 35.0);
+        assert!(Trace::from_spec("bursty", 40.0, 120, 3).is_ok());
+        assert!(Trace::from_spec("nope", 40.0, 120, 3).is_err());
+        assert!(Trace::from_spec("burst:oops", 40.0, 120, 3).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@ use infadapter::baselines::StaticPolicy;
 use infadapter::config::{BatchingConfig, Config, ObjectiveWeights};
 use infadapter::dispatcher::Dispatcher;
 use infadapter::experiment::{PolicyKind, Scenario};
+use infadapter::fleet::{ArbiterEntry, CoreArbiter};
 use infadapter::profiler::ProfileSet;
 use infadapter::serving::sim::{SimConfig, SimEngine};
 use infadapter::solver::{score, score_fast, BranchBoundSolver, BruteForceSolver, Problem, Solver};
@@ -263,6 +264,66 @@ fn prop_dispatcher_distribution_tracks_weights() {
                 "{name}: got {got:.3}, want {want:.3}"
             );
         }
+    }
+}
+
+#[test]
+fn prop_arbiter_partition_bounded_floored_deterministic() {
+    // The fleet arbiter's partition must (1) never exceed the global
+    // budget, (2) respect every guaranteed-minimum floor, (3) lock
+    // curve-less (fixed-budget) services at exactly their floor, (4) never
+    // grant past a curve's cap, and (5) be a pure function of its inputs —
+    // the same seed regenerates the same entries and the same partition.
+    for case in 0..200u64 {
+        let sub_seed = 10_000 + case;
+        let gen = |rng: &mut Rng| -> (usize, Vec<ArbiterEntry>) {
+            let n = 1 + rng.below(6);
+            let budget = rng.below(64);
+            let entries: Vec<ArbiterEntry> = (0..n)
+                .map(|_| {
+                    // per-service floor ≤ budget / n, so floors always fit
+                    let floor = rng.below(budget / n + 1);
+                    let has_curve = rng.f64() < 0.8;
+                    let cap = floor + rng.below(40);
+                    let mut level = 0.0f64;
+                    let curve: Vec<f64> = (0..=cap)
+                        .map(|_| {
+                            // mostly-rising, occasionally dipping values:
+                            // the arbiter must not assume monotonicity
+                            level += rng.f64() * 2.0 - 0.2;
+                            level
+                        })
+                        .collect();
+                    ArbiterEntry {
+                        priority: 0.1 + rng.f64() * 5.0,
+                        floor,
+                        curve: has_curve.then_some(curve),
+                    }
+                })
+                .collect();
+            (budget, entries)
+        };
+        let (budget, entries) = gen(&mut Rng::seed_from_u64(sub_seed));
+        let arbiter = CoreArbiter::new(budget);
+        let grants = arbiter.partition(&entries);
+        assert_eq!(grants.len(), entries.len());
+        assert!(
+            grants.iter().sum::<usize>() <= budget,
+            "partition {grants:?} exceeds budget {budget}"
+        );
+        for (i, e) in entries.iter().enumerate() {
+            assert!(grants[i] >= e.floor, "grant {} under floor {}", grants[i], e.floor);
+            match &e.curve {
+                None => assert_eq!(grants[i], e.floor, "fixed entry must hold its floor"),
+                Some(c) => assert!(grants[i] < c.len(), "grant past the curve cap"),
+            }
+        }
+        // same seed -> same entries -> same partition, and the call itself
+        // is idempotent on identical inputs
+        let (budget2, entries2) = gen(&mut Rng::seed_from_u64(sub_seed));
+        assert_eq!(budget, budget2);
+        let again = CoreArbiter::new(budget2).partition(&entries2);
+        assert_eq!(grants, again, "partition must be deterministic per seed");
     }
 }
 
