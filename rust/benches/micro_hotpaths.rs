@@ -3,24 +3,36 @@
 //! * dispatcher route()        — per-request cost
 //! * P2 quantile record()      — per-sample monitoring cost
 //! * solvers at paper scale    — per-decision cost (30 s cadence)
+//! * value curves              — single-pass solve_curve vs the per-grant
+//!                               re-solve loop, plus the warm-started
+//!                               steady-state tick
+//! * arbiter partition         — heap water-fill vs the linear scan
 //! * solver ablation           — greedy's optimality gap vs exact
 //! * forecasters               — per-decision prediction cost
 //! * JSON parse                — manifest load path
 //! * sim engine                — virtual-time throughput (events/s)
+//!
+//! `--short` shrinks the per-entry wall budget (CI mode); `--json <path>`
+//! writes the entries + derived speedups (CI uploads BENCH_solver.json so
+//! the perf trajectory accumulates across commits).
 
 use infadapter::baselines::StaticPolicy;
 use infadapter::config::ObjectiveWeights;
 use infadapter::dispatcher::Dispatcher;
+use infadapter::fleet::{ArbiterEntry, CoreArbiter};
 use infadapter::forecaster::{Forecaster, HoltForecaster, LastMaxForecaster};
 use infadapter::monitoring::P2Quantile;
 use infadapter::profiler::ProfileSet;
 use infadapter::serving::sim::{SimConfig, SimEngine};
-use infadapter::solver::{BranchBoundSolver, BruteForceSolver, GreedySolver, Problem, Solver};
-use infadapter::util::benchkit::run_named;
+use infadapter::solver::{
+    value_curve_resolve, BranchBoundSolver, BruteForceSolver, GreedySolver, Problem, Solver,
+};
+use infadapter::util::benchkit::BenchReport;
 use infadapter::workload::Trace;
 use std::collections::BTreeMap;
 
 fn main() {
+    let mut report = BenchReport::from_args();
     let profiles = ProfileSet::paper_like();
     let problem = |lambda: f64, budget: usize| {
         Problem::from_profiles(
@@ -36,31 +48,105 @@ fn main() {
         ("resnet101".into(), 25.0),
         ("resnet152".into(), 45.0),
     ]);
-    run_named("dispatcher.route (3 backends)", || {
+    report.run("dispatcher.route (3 backends)", || {
         std::hint::black_box(d.route());
     });
 
     let mut p2 = P2Quantile::new(0.99);
     let mut x = 0.1f64;
-    run_named("p2_quantile.record", || {
+    report.run("p2_quantile.record", || {
         x = (x * 1.37) % 1.0 + 0.01;
         p2.record(x);
     });
 
     let p20 = problem(75.0, 20);
-    run_named("solver.brute_force (B=20, M=5)", || {
+    report.run("solver.brute_force (B=20, M=5)", || {
         std::hint::black_box(BruteForceSolver.solve(&p20));
     });
-    run_named("solver.branch_bound (B=20, M=5)", || {
+    report.run("solver.branch_bound (B=20, M=5)", || {
         std::hint::black_box(BranchBoundSolver.solve(&p20));
     });
-    run_named("solver.greedy (B=20, M=5)", || {
+    report.run("solver.greedy (B=20, M=5)", || {
         std::hint::black_box(GreedySolver.solve(&p20));
     });
-    let p64 = problem(300.0, 64);
-    run_named("solver.branch_bound (B=64, M=5)", || {
+    let p64 = problem(400.0, 64);
+    report.run("solver.branch_bound (B=64, M=5, λ=400)", || {
         std::hint::black_box(BranchBoundSolver.solve(&p64));
     });
+
+    println!("\n== value curves: single-pass vs per-grant re-solve ==");
+    // One arbiter tick asks each of N services for its whole curve, so
+    // tick cost ~ N x these entries (plus the heap fill below).
+    for (lambda, budget, p) in [(75.0, 20usize, &p20), (400.0, 64usize, &p64)] {
+        let old = report.run(
+            &format!("solver.curve_resolve_loop (B={budget}, M=5, λ={lambda})"),
+            || {
+                std::hint::black_box(value_curve_resolve(p, &BranchBoundSolver, budget));
+            },
+        );
+        let new = report.run(
+            &format!("solver.solve_curve (B={budget}, M=5, λ={lambda})"),
+            || {
+                std::hint::black_box(BranchBoundSolver.solve_curve(p, budget));
+            },
+        );
+        report.derive(
+            &format!("solver.curve_speedup (B={budget}, M=5, λ={lambda})"),
+            old.mean.as_secs_f64() / new.mean.as_secs_f64(),
+        );
+        // steady-state tick: λ̂ wobbled inside the cache's 2% bin, the
+        // previous curve warm-starts the incumbent
+        let mut neighbour = p.clone();
+        neighbour.lambda = lambda * 1.01;
+        let seed = BranchBoundSolver.solve_curve(&neighbour, budget);
+        let warm = report.run(
+            &format!("solver.solve_curve_warm (B={budget}, M=5, λ={lambda})"),
+            || {
+                std::hint::black_box(BranchBoundSolver.solve_curve_seeded(p, budget, Some(&seed)));
+            },
+        );
+        report.derive(
+            &format!("solver.curve_warm_speedup (B={budget}, M=5)"),
+            new.mean.as_secs_f64() / warm.mean.as_secs_f64(),
+        );
+    }
+
+    println!("\n== arbiter: heap water-fill vs linear scan ==");
+    // 8 services, 256 cores: concave utility curves with staggered knees
+    // so the fill genuinely interleaves.
+    let entries: Vec<ArbiterEntry> = (0..8)
+        .map(|i| {
+            let knee = 16 + 24 * i;
+            ArbiterEntry {
+                priority: 1.0 + i as f64 * 0.25,
+                floor: 2,
+                curve: Some(
+                    (0..=256)
+                        .map(|g| {
+                            let x = g.min(knee) as f64 / knee as f64;
+                            80.0 * (2.0 * x - x * x)
+                        })
+                        .collect(),
+                ),
+            }
+        })
+        .collect();
+    let arb = CoreArbiter::new(256);
+    let scan = report.run("arbiter.partition_scan (N=8, B=256)", || {
+        std::hint::black_box(arb.partition_scan(&entries));
+    });
+    let heap = report.run("arbiter.partition (N=8, B=256)", || {
+        std::hint::black_box(arb.partition(&entries));
+    });
+    report.derive(
+        "arbiter.partition_speedup (N=8, B=256)",
+        scan.mean.as_secs_f64() / heap.mean.as_secs_f64(),
+    );
+    assert_eq!(
+        arb.partition(&entries),
+        arb.partition_scan(&entries),
+        "heap fill must match the reference scan"
+    );
 
     let mut lm = LastMaxForecaster::new(120, 1.1);
     let mut holt = HoltForecaster::new(0.3, 0.1, 30.0);
@@ -68,23 +154,23 @@ fn main() {
         lm.observe(40.0 + (i % 7) as f64);
         holt.observe(40.0 + (i % 7) as f64);
     }
-    run_named("forecaster.last_max.predict", || {
+    report.run("forecaster.last_max.predict", || {
         std::hint::black_box(lm.predict_max());
     });
-    run_named("forecaster.holt.predict", || {
+    report.run("forecaster.holt.predict", || {
         std::hint::black_box(holt.predict_max());
     });
 
     let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
     if let Some(text) = manifest_text {
-        run_named("json.parse(manifest.json)", || {
+        report.run("json.parse(manifest.json)", || {
             std::hint::black_box(infadapter::util::json::parse(&text).unwrap());
         });
     }
 
     println!("\n== sim engine throughput ==");
     let trace = Trace::steady(80.0, 120);
-    let stats = run_named("sim: 120s @ 80rps static pod", || {
+    let stats = report.run("sim: 120s @ 80rps static pod", || {
         let sim = SimEngine::new(profiles.clone(), SimConfig::default());
         let mut policy = StaticPolicy::new("resnet18", 6);
         std::hint::black_box(sim.run(&mut policy, &trace));
@@ -106,4 +192,6 @@ fn main() {
             lambda, budget, e.objective, g.objective, e.objective - g.objective
         );
     }
+
+    report.finish();
 }

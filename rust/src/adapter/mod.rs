@@ -12,7 +12,7 @@ use crate::config::{BatchingConfig, ObjectiveWeights};
 use crate::forecaster::Forecaster;
 use crate::profiler::ProfileSet;
 use crate::serving::{Decision, Policy};
-use crate::solver::{Allocation, Problem, Solver};
+use crate::solver::{Allocation, Problem, Solver, ValueCurve};
 use std::collections::BTreeMap;
 
 /// The paper's system, as a [`Policy`].
@@ -88,13 +88,31 @@ impl InfAdapterPolicy {
     /// what the fleet arbiter asks this service for.  Pure solver work: it
     /// touches neither the forecaster nor any RNG, so it may run between
     /// [`Self::observe_and_predict`] and [`Self::decide_with_lambda`]
-    /// without perturbing the decision sequence.
+    /// without perturbing the decision sequence.  One single-pass
+    /// [`Solver::solve_curve`] replaces the old per-grant re-solve loop.
     pub fn value_curve(
         &self,
         lambda_hat: f64,
         committed: &BTreeMap<String, usize>,
         cap: usize,
     ) -> Vec<f64> {
+        self.value_curve_seeded(lambda_hat, committed, cap, None)
+            .into_values()
+    }
+
+    /// [`Self::value_curve`] in full ([`ValueCurve`], incl. the per-cost
+    /// winner vectors) with an optional warm start from a previous tick's
+    /// curve — what the fleet layer's `CurveCache` calls.  Exactness does
+    /// not depend on the seed (winners are re-scored under the current
+    /// problem), so the values are identical whether or not a seed is
+    /// supplied.
+    pub fn value_curve_seeded(
+        &self,
+        lambda_hat: f64,
+        committed: &BTreeMap<String, usize>,
+        cap: usize,
+        seed: Option<&ValueCurve>,
+    ) -> ValueCurve {
         let problem = Problem::from_profiles_batched(
             &self.profiles,
             lambda_hat,
@@ -104,7 +122,7 @@ impl InfAdapterPolicy {
             committed,
             &self.batching,
         );
-        crate::solver::value_curve(&problem, &*self.solver, cap)
+        self.solver.solve_curve_seeded(&problem, cap, seed)
     }
 
     /// Second half of [`Policy::decide`]: solve for the best variant set
@@ -154,7 +172,13 @@ impl InfAdapterPolicy {
             .filter(|(_, &(c, _))| c > 0)
             .map(|(v, &(c, _))| (v.clone(), c))
             .collect();
-        let quotas = allocation.quota_weights();
+        // quota_weights borrows; owned names materialize only here, at the
+        // Decision boundary.
+        let quotas: Vec<(String, f64)> = allocation
+            .quota_weights()
+            .into_iter()
+            .map(|(v, q)| (v.to_string(), q))
+            .collect();
         let batches: BTreeMap<String, usize> = allocation
             .batches
             .iter()

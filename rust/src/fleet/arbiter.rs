@@ -3,15 +3,31 @@
 //!
 //! Every adaptation interval each arbitrated service reports a *value
 //! curve* `v_i(g)` — the best objective `α·AA − (β·RC + γ·LC)` its own
-//! solver can achieve inside a grant of `g` cores, computed by re-solving
-//! the per-service ILP at every candidate budget
-//! ([`crate::solver::value_curve`]).  The arbiter then **water-fills**:
-//! starting every service at its guaranteed-minimum floor, it repeatedly
-//! grants one core to the service with the highest *priority-weighted
-//! marginal utility* `w_i · (v_i(g_i + 1) − v_i(g_i))` until the global
-//! budget is exhausted or every curve is at its cap.  Ties break toward
-//! the lowest service index, so the partition is a pure function of its
-//! inputs — deterministic across runs with the same seed.
+//! solver can achieve inside a grant of `g` cores.  The whole curve is the
+//! output of **one** single-pass solve ([`crate::solver::Solver::solve_curve`]):
+//! the objective depends on the budget only through the feasibility bound,
+//! so the solver bins the best objective by resource cost while it
+//! enumerates and prefix-maxes the bins — with *curve-aware pruning* in
+//! branch-and-bound (a partial assignment survives only if its optimistic
+//! completion bound improves the incumbent curve at some reachable cost),
+//! and cross-tick warm starts from the fleet's `CurveCache` (a previous
+//! curve's winners re-scored under the new problem seed the incumbent, so
+//! steady-state ticks prune almost everything).  This replaces the
+//! original `N × (B+1)`-solves-per-tick decision path with `N` single
+//! passes, exactly — partitions are bit-identical.
+//!
+//! The arbiter then **water-fills**: starting every service at its
+//! guaranteed-minimum floor, it repeatedly grants one core to the service
+//! with the highest *priority-weighted marginal utility*
+//! `w_i · (v_i(g_i + 1) − v_i(g_i))` until the global budget is exhausted
+//! or every curve is at its cap.  Because a service's next marginal
+//! changes only when *its own* grant changes, every service keeps exactly
+//! one live claim in a binary max-heap and each grant is one pop + one
+//! push — `O(B log N)` per tick instead of the old `O(B · N)` linear
+//! rescan ([`CoreArbiter::partition_scan`], kept as the property-test
+//! reference and perf baseline).  Ties break toward the lowest service
+//! index, so the partition is a pure function of its inputs —
+//! deterministic across runs with the same seed.
 //!
 //! Grants are **caps**, not reservations: each service's solver still
 //! decides how many of its granted cores to actually allocate (the β·RC
@@ -20,6 +36,9 @@
 //! Exact solvers make `v_i` monotone nondecreasing (anything feasible at
 //! `g` is feasible at `g + 1`), so the marginals are nonnegative and the
 //! fill order follows genuine utility.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 /// One service's input to [`CoreArbiter::partition`].
 #[derive(Debug, Clone)]
@@ -32,6 +51,33 @@ pub struct ArbiterEntry {
     /// fixed-budget service outside arbitration (e.g. an independent VPA
     /// instance): it is locked at exactly its floor.
     pub curve: Option<Vec<f64>>,
+}
+
+/// One service's standing claim on the next marginal core.  Max-heap
+/// order: highest marginal first, ties to the lowest service index (the
+/// same tie-break as the reference linear scan).
+struct Claim {
+    marginal: f64,
+    idx: usize,
+}
+
+impl PartialEq for Claim {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Claim {}
+impl PartialOrd for Claim {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Claim {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.marginal
+            .total_cmp(&other.marginal)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
 }
 
 /// Water-filling partitioner of the global core budget.
@@ -53,11 +99,57 @@ impl CoreArbiter {
     /// * `grants[i] ≥ entries[i].floor` for every service;
     /// * curve-less entries receive exactly their floor;
     /// * no grant exceeds its curve's cap (`curve.len() − 1`);
-    /// * the result is a pure function of `entries` (deterministic).
+    /// * the result is a pure function of `entries` (deterministic) and
+    ///   equals [`Self::partition_scan`] grant for grant.
     ///
     /// Floors are trusted to fit inside the budget — `FleetConfig`
     /// validation enforces it before a run ever starts.
     pub fn partition(&self, entries: &[ArbiterEntry]) -> Vec<usize> {
+        let mut grants: Vec<usize> = entries.iter().map(|e| e.floor).collect();
+        let floors: usize = grants.iter().sum();
+        debug_assert!(
+            floors <= self.global_budget,
+            "floors {floors} exceed the global budget {}",
+            self.global_budget
+        );
+        let mut remaining = self.global_budget.saturating_sub(floors);
+        let claim_at = |i: usize, g: usize| -> Option<Claim> {
+            let curve = entries[i].curve.as_ref()?;
+            if g + 1 >= curve.len() {
+                return None; // at this curve's cap
+            }
+            let marginal = entries[i].priority * (curve[g + 1] - curve[g]);
+            if marginal.is_nan() {
+                return None; // unsolvable curve (-inf flats): never claims
+            }
+            Some(Claim { marginal, idx: i })
+        };
+        let mut heap: BinaryHeap<Claim> = BinaryHeap::with_capacity(entries.len());
+        for (i, &g) in grants.iter().enumerate() {
+            if let Some(c) = claim_at(i, g) {
+                heap.push(c);
+            }
+        }
+        // Each service holds exactly one claim (its marginal at its
+        // current grant), so a pop is always fresh — no lazy invalidation.
+        while remaining > 0 {
+            let Some(Claim { idx: i, .. }) = heap.pop() else {
+                break;
+            };
+            grants[i] += 1;
+            remaining -= 1;
+            if let Some(c) = claim_at(i, grants[i]) {
+                heap.push(c);
+            }
+        }
+        grants
+    }
+
+    /// Reference implementation: the original `O(budget × N)` linear
+    /// marginal rescan.  Kept as the ground truth the heap-based
+    /// [`Self::partition`] is property-tested against, and as the "old"
+    /// side of the `micro_hotpaths` arbiter comparison.
+    pub fn partition_scan(&self, entries: &[ArbiterEntry]) -> Vec<usize> {
         let mut grants: Vec<usize> = entries.iter().map(|e| e.floor).collect();
         let floors: usize = grants.iter().sum();
         debug_assert!(
@@ -76,6 +168,9 @@ impl CoreArbiter {
                     continue; // at this curve's cap
                 }
                 let marginal = e.priority * (curve[grants[i] + 1] - curve[grants[i]]);
+                if marginal.is_nan() {
+                    continue; // unsolvable curve (-inf flats): never claims
+                }
                 if pick.map_or(true, |(_, m)| marginal > m) {
                     pick = Some((i, marginal));
                 }
@@ -169,5 +264,37 @@ mod tests {
             entry(1.0, 0, Some(kneed(5, 5, 1.0))),
         ]);
         assert_eq!(grants, vec![5, 5]); // 10 cores idle, grants are caps
+    }
+
+    #[test]
+    fn unsolvable_curves_never_claim_marginal_cores() {
+        // An all -inf curve (empty per-service problem) has NaN marginals;
+        // it must hold its floor and starve nothing — identically in the
+        // heap fill and the reference scan.
+        let arb = CoreArbiter::new(12);
+        let entries = [
+            entry(1.0, 0, Some(kneed(8, 8, 1.0))),
+            entry(5.0, 2, Some(vec![f64::NEG_INFINITY; 13])),
+        ];
+        let grants = arb.partition(&entries);
+        assert_eq!(grants, arb.partition_scan(&entries));
+        assert_eq!(grants, vec![8, 2]);
+    }
+
+    #[test]
+    fn heap_fill_ties_break_to_the_lowest_index_like_the_scan() {
+        // Identical linear curves at equal priority: every marginal ties,
+        // so the lowest index must win every single round — in the heap
+        // fill exactly as in the reference scan.
+        let arb = CoreArbiter::new(9);
+        let entries = [
+            entry(1.0, 0, Some(kneed(9, 9, 1.0))),
+            entry(1.0, 0, Some(kneed(9, 9, 1.0))),
+            entry(1.0, 0, Some(kneed(9, 9, 1.0))),
+        ];
+        let heap = arb.partition(&entries);
+        let scan = arb.partition_scan(&entries);
+        assert_eq!(heap, scan);
+        assert_eq!(heap, vec![9, 0, 0]);
     }
 }

@@ -1,0 +1,213 @@
+//! Cross-tick value-curve cache: the arbiter's per-service curves barely
+//! change between adaptation intervals in steady state, so re-deriving
+//! them from scratch every tick wastes the bulk of the fleet's decision
+//! budget.  Each arbitrated service owns one [`CurveCache`] keyed by
+//! (λ̂, current-cores signature, objective weights, grant cap):
+//!
+//! * **Hit** — bit-identical λ̂ and an identical key: the cached curve *is*
+//!   the exact answer (same problem, deterministic solver); zero solver
+//!   work.
+//! * **Warm** — λ̂ moved but stayed inside the same quantization bin (2%
+//!   relative, [`lambda_bin`]) with the same cores signature and weights:
+//!   a fresh exact solve runs, but the previous curve's winner vectors are
+//!   re-scored under the *new* problem to pre-load the incumbent curve
+//!   ([`crate::solver::Solver::solve_curve_seeded`]), so branch-and-bound
+//!   prunes almost everything.  Because only currently-achievable
+//!   objectives enter the incumbent, the values are exactly those of a
+//!   cold solve — warm starts change cost, never results.
+//! * **Cold** — anything else (λ̂ jumped bins, the committed allocation
+//!   changed, first tick): a plain single-pass solve.
+//!
+//! Either way the arbiter sees bit-identical curves to an uncached run,
+//! so fleet partitions — and every downstream headline number — are
+//! unchanged; only the tick cost drops.  [`CurveCacheStats`] counts the
+//! outcomes and surfaces through `SimResult` / the `fleet` CLI.
+
+use crate::adapter::InfAdapterPolicy;
+use crate::config::ObjectiveWeights;
+use crate::solver::ValueCurve;
+use std::collections::BTreeMap;
+
+/// Tick outcome counters (hits + warm + cold = arbitration ticks served).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CurveCacheStats {
+    /// Exact-key hits: curve returned with no solver work.
+    pub hits: u64,
+    /// Warm-started fresh solves (same λ̂ bin / cores / weights).
+    pub warm: u64,
+    /// Cold solves (key changed or first tick).
+    pub cold: u64,
+}
+
+impl CurveCacheStats {
+    pub fn total(&self) -> u64 {
+        self.hits + self.warm + self.cold
+    }
+}
+
+struct CacheEntry {
+    lambda: f64,
+    lambda_bin: i64,
+    committed: BTreeMap<String, usize>,
+    weights: ObjectiveWeights,
+    cap: usize,
+    curve: ValueCurve,
+}
+
+/// One service's cross-tick curve memory (single entry: consecutive ticks
+/// are the only reuse pattern that occurs).
+#[derive(Default)]
+pub struct CurveCache {
+    entry: Option<CacheEntry>,
+    pub stats: CurveCacheStats,
+}
+
+/// 2% relative quantization bin of λ̂ — wide enough that steady-state
+/// forecast wobble stays in one bin (warm start applies), narrow enough
+/// that a real load shift forces a cold solve where the old incumbent
+/// would prune nothing anyway.
+fn lambda_bin(lambda: f64) -> i64 {
+    (lambda.max(1e-9).ln() / 0.02).round() as i64
+}
+
+impl CurveCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The value curve for this tick's (λ̂, committed, cap), served from
+    /// cache when the inputs match, warm-started when they nearly match,
+    /// and solved cold otherwise.  Always exact (see module docs).
+    pub fn curve(
+        &mut self,
+        policy: &InfAdapterPolicy,
+        lambda: f64,
+        committed: &BTreeMap<String, usize>,
+        cap: usize,
+    ) -> Vec<f64> {
+        let weights = policy.weights;
+        if let Some(e) = &self.entry {
+            if e.lambda.to_bits() == lambda.to_bits()
+                && e.cap == cap
+                && e.weights == weights
+                && e.committed == *committed
+            {
+                self.stats.hits += 1;
+                return e.curve.values().to_vec();
+            }
+        }
+        let warm = matches!(
+            &self.entry,
+            Some(e) if e.lambda_bin == lambda_bin(lambda)
+                && e.weights == weights
+                && e.committed == *committed
+        );
+        let seed = if warm {
+            self.entry.as_ref().map(|e| &e.curve)
+        } else {
+            None
+        };
+        let curve = policy.value_curve_seeded(lambda, committed, cap, seed);
+        if warm {
+            self.stats.warm += 1;
+        } else {
+            self.stats.cold += 1;
+        }
+        let values = curve.values().to_vec();
+        self.entry = Some(CacheEntry {
+            lambda,
+            lambda_bin: lambda_bin(lambda),
+            committed: committed.clone(),
+            weights,
+            cap,
+            curve,
+        });
+        values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ObjectiveWeights;
+    use crate::forecaster::LastMaxForecaster;
+    use crate::profiler::ProfileSet;
+    use crate::solver::BranchBoundSolver;
+
+    fn policy() -> InfAdapterPolicy {
+        InfAdapterPolicy::new(
+            ProfileSet::paper_like(),
+            Box::new(LastMaxForecaster::new(120, 1.0)),
+            Box::new(BranchBoundSolver),
+            ObjectiveWeights::default(),
+            0.75,
+            20,
+            1.1,
+        )
+    }
+
+    #[test]
+    fn identical_inputs_hit_without_resolving() {
+        let p = policy();
+        let mut cache = CurveCache::new();
+        let committed = BTreeMap::from([("resnet18".to_string(), 2)]);
+        let a = cache.curve(&p, 75.0, &committed, 20);
+        let b = cache.curve(&p, 75.0, &committed, 20);
+        assert_eq!(a, b);
+        assert_eq!(
+            cache.stats,
+            CurveCacheStats {
+                hits: 1,
+                warm: 0,
+                cold: 1
+            }
+        );
+        // and the cached curve is the uncached answer
+        assert_eq!(a, p.value_curve(75.0, &committed, 20));
+    }
+
+    #[test]
+    fn lambda_wobble_warm_starts_and_stays_exact() {
+        let p = policy();
+        let mut cache = CurveCache::new();
+        let committed = BTreeMap::new();
+        cache.curve(&p, 75.0, &committed, 20);
+        // 75.0 -> 75.5 stays inside the 2% bin: fresh solve, warm-seeded,
+        // values identical to an uncached solve
+        let warm = cache.curve(&p, 75.5, &committed, 20);
+        assert_eq!(warm, p.value_curve(75.5, &committed, 20));
+        // 75.5 -> 150.0 jumps bins: cold solve
+        let cold = cache.curve(&p, 150.0, &committed, 20);
+        assert_eq!(cold, p.value_curve(150.0, &committed, 20));
+        assert_eq!(
+            cache.stats,
+            CurveCacheStats {
+                hits: 0,
+                warm: 1,
+                cold: 2
+            }
+        );
+    }
+
+    #[test]
+    fn committed_cores_change_invalidates() {
+        let p = policy();
+        let mut cache = CurveCache::new();
+        let before = BTreeMap::from([("resnet18".to_string(), 2)]);
+        let after = BTreeMap::from([("resnet50".to_string(), 4)]);
+        cache.curve(&p, 75.0, &before, 20);
+        // same λ̂, different current cores: loading costs shift, so the
+        // curve must be re-solved (cold — the old incumbent is not even
+        // warm-start keyed)
+        let fresh = cache.curve(&p, 75.0, &after, 20);
+        assert_eq!(fresh, p.value_curve(75.0, &after, 20));
+        assert_eq!(
+            cache.stats,
+            CurveCacheStats {
+                hits: 0,
+                warm: 0,
+                cold: 2
+            }
+        );
+    }
+}

@@ -8,9 +8,16 @@
 //!
 //! * [`arbiter::CoreArbiter`] — re-partitions the global core budget
 //!   across services every adaptation interval by water-filling on
-//!   priority-weighted marginal utility, with guaranteed-minimum floors.
-//!   Utility comes from each service's own ILP re-solved at every
-//!   candidate grant ([`crate::solver::value_curve`]).
+//!   priority-weighted marginal utility, with guaranteed-minimum floors:
+//!   a binary heap of per-service claims, `O(B log N)` per tick.  Utility
+//!   comes from each service's own ILP, whose whole per-grant value curve
+//!   is the output of *one* single-pass solve
+//!   ([`crate::solver::Solver::solve_curve`]).
+//! * [`curve_cache::CurveCache`] — cross-tick curve memory keyed by
+//!   (quantized λ̂, current-cores signature, weights): identical inputs
+//!   skip the solve entirely, near-identical inputs warm-start the
+//!   incumbent curve so steady-state ticks prune almost everything.
+//!   Always exact — partitions are bit-identical to uncached runs.
 //! * [`sim::FleetSimEngine`] — drives N services' event streams against
 //!   one shared [`crate::cluster::Cluster`] in virtual time, with
 //!   per-service RNG streams (deterministic under a fixed seed); the
@@ -21,9 +28,11 @@
 //!   `benches/fig_fleet.rs`.
 
 pub mod arbiter;
+pub mod curve_cache;
 pub mod sim;
 
 pub use arbiter::{ArbiterEntry, CoreArbiter};
+pub use curve_cache::{CurveCache, CurveCacheStats};
 pub use sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 
 use crate::adapter::InfAdapterPolicy;
@@ -338,6 +347,23 @@ pub fn print_fleet(title: &str, out: &FleetRunOutput) {
         a.worst_p99_latency_s * 1000.0,
         a.dropped
     );
+    let cc = out
+        .per_service
+        .iter()
+        .fold(CurveCacheStats::default(), |acc, r| CurveCacheStats {
+            hits: acc.hits + r.curve_cache.hits,
+            warm: acc.warm + r.curve_cache.warm,
+            cold: acc.cold + r.curve_cache.cold,
+        });
+    if cc.total() > 0 {
+        println!(
+            "curve cache: {} hits / {} warm / {} cold over {} arbitration solves",
+            cc.hits,
+            cc.warm,
+            cc.cold,
+            cc.total()
+        );
+    }
 }
 
 #[cfg(test)]

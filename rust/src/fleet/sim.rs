@@ -18,11 +18,14 @@
 //! * **Arbitration** — when the engine holds a [`CoreArbiter`], every
 //!   adaptation interval runs a three-phase protocol: (1) each arbitrated
 //!   service observes its rate history and predicts λ̂, (2) it reports a
-//!   value curve over candidate core grants
-//!   ([`InfAdapterPolicy::value_curve`]), and (3) the arbiter water-fills
-//!   the global budget, each service then solving its own variant/batch
-//!   selection inside its grant.  Without an arbiter every service keeps
-//!   its configured budget (the "static split" baseline).
+//!   value curve over candidate core grants — one single-pass solve
+//!   ([`InfAdapterPolicy::value_curve_seeded`]) behind a per-service
+//!   cross-tick [`CurveCache`] (exact hits skip the solve, same-bin λ̂
+//!   wobble warm-starts it; values are bit-identical either way), and
+//!   (3) the arbiter water-fills the global budget, each service then
+//!   solving its own variant/batch selection inside its grant.  Without
+//!   an arbiter every service keeps its configured budget (the "static
+//!   split" baseline).
 //!
 //! **Bit-identity invariant:** a single-service fleet performs the same
 //! cluster operations, heap pushes, and RNG draws in the same order as the
@@ -33,6 +36,7 @@
 //! below pins this.
 
 use super::arbiter::{ArbiterEntry, CoreArbiter};
+use super::curve_cache::CurveCache;
 use crate::adapter::InfAdapterPolicy;
 use crate::cluster::{Cluster, ClusterEvent};
 use crate::dispatcher::Dispatcher;
@@ -194,6 +198,9 @@ struct SvcState {
     decisions: Vec<(f64, Decision)>,
     /// λ̂ carried from the arbitration phase into the decision phase.
     pending_lambda: f64,
+    /// Cross-tick value-curve memory (arbitrated services only): exact
+    /// hits skip the solve outright, near-hits warm-start it.
+    curve_cache: CurveCache,
 }
 
 /// The multi-service engine.
@@ -257,6 +264,7 @@ impl FleetSimEngine {
                     current_batches: BTreeMap::new(),
                     decisions: Vec::new(),
                     pending_lambda: 0.0,
+                    curve_cache: CurveCache::new(),
                 }
             })
             .collect();
@@ -660,6 +668,7 @@ impl FleetSimEngine {
                 metrics: s.metrics,
                 duration_s: s.duration,
                 decisions: s.decisions,
+                curve_cache: s.curve_cache.stats,
             })
             .collect()
     }
@@ -695,7 +704,10 @@ impl FleetSimEngine {
                     // The most this service could ever be granted: the
                     // whole budget minus everyone else's floors.
                     let cap = arb.global_budget.saturating_sub(floors_sum - floor);
-                    let curve = p.value_curve(lambda, &committed[i], cap);
+                    // Cross-tick cache: exact hit skips the solve, a
+                    // same-bin λ̂ wobble warm-starts it; the curve values
+                    // are bit-identical to an uncached solve either way.
+                    let curve = st[i].curve_cache.curve(&**p, lambda, &committed[i], cap);
                     ArbiterEntry {
                         priority,
                         floor,
@@ -1129,6 +1141,60 @@ mod tests {
         let long = results[1].metrics.summary("long", results[1].duration_s);
         assert!((short.avg_cost_cores - 4.0).abs() < 0.5, "{short:?}");
         assert!((long.avg_cost_cores - 4.0).abs() < 0.5, "{long:?}");
+    }
+
+    #[test]
+    fn steady_state_ticks_reuse_cached_curves() {
+        // Two steady services under arbitration: one curve solve per
+        // service per arbitration tick (t=0 plus every interval), and the
+        // stable λ̂ / committed cores must produce exact hits or warm
+        // starts — the steady-state tick must not re-solve cold forever.
+        let profiles = ProfileSet::paper_like();
+        let ta = Trace::steady(30.0, 600);
+        let tb = Trace::steady(20.0, 600);
+        let mut pa = inf_policy(6);
+        let mut pb = inf_policy(6);
+        let mut services = [
+            FleetService {
+                name: "a".into(),
+                trace: &ta,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 1,
+                policy: FleetPolicyRef::Arbitrated(&mut pa),
+            },
+            FleetService {
+                name: "b".into(),
+                trace: &tb,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                floor_cores: 1,
+                policy: FleetPolicyRef::Arbitrated(&mut pb),
+            },
+        ];
+        let cfg = SimConfig {
+            seed: 5,
+            ..Default::default()
+        };
+        let results = FleetSimEngine::new(cfg, Some(CoreArbiter::new(12))).run(&mut services);
+        // arbitration runs at t=0 and every 30 s tick inside (0, 600)
+        let ticks = 1 + (600.0f64 / 30.0).ceil() as u64 - 1;
+        for r in &results {
+            let cc = &r.curve_cache;
+            assert_eq!(cc.total(), ticks, "{cc:?}");
+            assert!(cc.cold >= 1, "first tick is always cold: {cc:?}");
+            assert!(
+                cc.hits + cc.warm > 0,
+                "steady state must reuse curves: {cc:?}"
+            );
+        }
+        // the plain single-service path never touches the cache
+        let mut p = inf_policy(20);
+        let single = SimEngine::new(ProfileSet::paper_like(), SimConfig::default())
+            .run(&mut p, &Trace::steady(30.0, 120));
+        assert_eq!(single.curve_cache.total(), 0);
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //! * [`monitoring`] — arrival-rate windows and latency percentile tracking.
 //! * [`profiler`] — variant profiling + linear-regression throughput models.
 //! * [`forecaster`] — AOT LSTM + classical baselines.
-//! * [`solver`] — the ILP: brute-force, branch & bound, greedy.
+//! * [`solver`] — the ILP: brute-force, branch & bound, greedy; whole
+//!   per-budget value curves from one single-pass solve.
 //! * [`dispatcher`] — weighted round-robin over per-variant quotas.
 //! * [`cluster`] — simulated Kubernetes substrate (pods, readiness,
 //!   create-before-remove).
@@ -25,8 +26,9 @@
 //! * [`adapter`] — the control loop: monitor → forecast → solve → enforce.
 //! * [`fleet`] — multi-service layer: N independent adapter instances on
 //!   one shared cluster, with a top-level core arbiter re-partitioning the
-//!   global budget every interval by water-filling on priority-weighted
-//!   marginal utility (per-service ILP value curves).
+//!   global budget every interval by heap water-filling on
+//!   priority-weighted marginal utility (per-service ILP value curves,
+//!   cached and warm-started across ticks).
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 

@@ -17,6 +17,7 @@
 //! rate-accounting semantics, which are unchanged.
 
 use super::{Decision, Policy};
+use crate::fleet::curve_cache::CurveCacheStats;
 use crate::fleet::sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 use crate::metrics::MetricsCollector;
 use crate::profiler::ProfileSet;
@@ -64,6 +65,9 @@ pub struct SimResult {
     pub duration_s: f64,
     /// (t, decision) log for ablation inspection.
     pub decisions: Vec<(f64, Decision)>,
+    /// Value-curve cache outcomes (nonzero only for arbitrated fleet
+    /// services; the plain single-service path never solves curves).
+    pub curve_cache: CurveCacheStats,
 }
 
 impl SimEngine {

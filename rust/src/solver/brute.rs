@@ -1,6 +1,6 @@
 //! Exact brute-force enumeration over core vectors (the paper's solver).
 
-use super::{score, Allocation, Problem, Solver};
+use super::{score, Allocation, CurveAcc, Problem, Solver, ValueCurve};
 
 /// Enumerates every weak composition of ≤ B cores over the variants, with
 /// two prunings that keep exactness:
@@ -72,6 +72,55 @@ impl Solver for BruteForceSolver {
 
         recurse(problem, &caps, &mut cores, 0, problem.budget, &mut best);
         best.and_then(|(_, cores)| score(problem, &cores))
+    }
+
+    /// Curve-native: the existing enumeration already visits every
+    /// undominated core vector of cost ≤ `cap`; recording the best
+    /// objective *per exact cost* during that one pass (instead of the
+    /// single global best) and prefix-maxing the bins yields `v(g)` for
+    /// every grant — `cap + 1` solves collapse into one enumeration.
+    fn solve_curve(&self, problem: &Problem, cap: usize) -> ValueCurve {
+        debug_assert!(
+            cap <= problem.budget,
+            "curve cap {cap} exceeds the table budget {}",
+            problem.budget
+        );
+        if problem.variants.is_empty() {
+            return ValueCurve::unsolvable(cap);
+        }
+        let m = problem.variants.len();
+        let caps: Vec<usize> = (0..m).map(|i| problem.useful_max_cores(i)).collect();
+        let mut cores = vec![0usize; m];
+        let mut acc = CurveAcc::new(cap);
+
+        fn recurse(
+            problem: &Problem,
+            caps: &[usize],
+            cores: &mut Vec<usize>,
+            i: usize,
+            left: usize,
+            spent: usize,
+            acc: &mut CurveAcc,
+        ) {
+            if i == cores.len() {
+                if let Some((objective, _feasible)) = super::score_fast(problem, cores) {
+                    acc.offer(spent, objective, cores);
+                }
+                return;
+            }
+            let cap = caps[i].min(left);
+            for n in 0..=cap {
+                if !problem.slo_ok(i, n) {
+                    continue;
+                }
+                cores[i] = n;
+                recurse(problem, caps, cores, i + 1, left - n, spent + n, acc);
+            }
+            cores[i] = 0;
+        }
+
+        recurse(problem, &caps, &mut cores, 0, cap, 0, &mut acc);
+        acc.finish()
     }
 }
 

@@ -41,6 +41,20 @@
 //! * [`BranchBoundSolver`] — exact, prunes with an accuracy upper bound
 //!   (the paper's "scalability with ML" future-work axis, solved exactly).
 //! * [`GreedySolver`] — fast heuristic baseline for the ablation bench.
+//!
+//! ## Value curves in one pass
+//!
+//! The fleet arbiter needs the *whole* per-budget value curve `v(g)`, not
+//! one optimum.  The objective of a core vector depends on the budget only
+//! through the feasibility bound `Σ n_m ≤ B`, so a single enumeration can
+//! bin the best objective by resource cost `c = Σ n_m` and prefix-max the
+//! bins into `v(g)` for every `g` at once ([`Solver::solve_curve`]) — the
+//! exact solvers implement this natively instead of re-solving at each of
+//! the `cap + 1` candidate grants ([`value_curve_resolve`], the old loop,
+//! kept as the property-test reference).  [`Solver::solve_curve_seeded`]
+//! additionally warm-starts the incumbent curve from a previous solve's
+//! winner vectors, re-scored under the current problem so exactness is
+//! preserved no matter how stale the seed is.
 
 mod branch_bound;
 mod brute;
@@ -238,13 +252,15 @@ impl Allocation {
         self.assignments.values().map(|&(c, _)| c).sum()
     }
 
-    /// Quota weights for the dispatcher, normalized to sum 1.
-    pub fn quota_weights(&self) -> Vec<(String, f64)> {
+    /// Quota weights for the dispatcher, normalized to sum 1.  Names are
+    /// borrowed — the decision path materializes owned strings only at
+    /// the `Decision` boundary, not once per solve.
+    pub fn quota_weights(&self) -> Vec<(&str, f64)> {
         let total: f64 = self.assignments.values().map(|&(_, q)| q).sum();
         self.assignments
             .iter()
             .filter(|(_, &(_, q))| q > 0.0)
-            .map(|(n, &(_, q))| (n.clone(), if total > 0.0 { q / total } else { 0.0 }))
+            .map(|(n, &(_, q))| (n.as_str(), if total > 0.0 { q / total } else { 0.0 }))
             .collect()
     }
 }
@@ -257,6 +273,11 @@ impl Allocation {
 pub fn score_fast(problem: &Problem, cores: &[usize]) -> Option<(f64, bool)> {
     debug_assert_eq!(cores.len(), problem.variants.len());
     let m = cores.len();
+    if m > 64 {
+        // The selection scratch below is a u64 visited bitmask; wider
+        // problems take the materializing path instead of panicking.
+        return score(problem, cores).map(|a| (a.objective, a.feasible));
+    }
     let mut capacity = 0.0;
     for (i, &n) in cores.iter().enumerate() {
         if !problem.slo_ok(i, n) {
@@ -264,35 +285,39 @@ pub fn score_fast(problem: &Problem, cores: &[usize]) -> Option<(f64, bool)> {
         }
         capacity += problem.variants[i].throughput[n];
     }
-    // Greedy quota fill in descending accuracy (selection loop, no sort
-    // allocation; M is small).
+    // Greedy quota fill in descending accuracy (selection loop over a
+    // bitmask of still-unfilled active variants; no sort, no stack array).
     let mut remaining = problem.lambda;
     let mut acc_weighted = 0.0;
-    let mut used = [false; 64];
-    debug_assert!(m <= 64, "more than 64 variants needs a heap scratch");
+    let mut active: u64 = 0;
+    for (i, &n) in cores.iter().enumerate() {
+        if n > 0 {
+            active |= 1u64 << i;
+        }
+    }
     let mut best_active_acc: f64 = 0.0;
     let mut any_active = false;
-    loop {
-        let mut pick: Option<usize> = None;
-        for i in 0..m {
-            if cores[i] == 0 || used[i] {
-                continue;
-            }
-            if pick.map_or(true, |j| {
-                problem.variants[i].accuracy > problem.variants[j].accuracy
-            }) {
-                pick = Some(i);
+    while active != 0 {
+        let mut pick = usize::MAX;
+        let mut pick_acc = 0.0f64;
+        let mut rest = active;
+        while rest != 0 {
+            let i = rest.trailing_zeros() as usize;
+            rest &= rest - 1;
+            let acc = problem.variants[i].accuracy;
+            if pick == usize::MAX || acc > pick_acc {
+                pick = i;
+                pick_acc = acc;
             }
         }
-        let Some(i) = pick else { break };
-        used[i] = true;
+        active &= !(1u64 << pick);
         if !any_active {
-            best_active_acc = problem.variants[i].accuracy;
+            best_active_acc = problem.variants[pick].accuracy;
             any_active = true;
         }
-        let q = remaining.min(problem.variants[i].throughput[cores[i]]);
+        let q = remaining.min(problem.variants[pick].throughput[cores[pick]]);
         remaining -= q;
-        acc_weighted += q * problem.variants[i].accuracy;
+        acc_weighted += q * problem.variants[pick].accuracy;
     }
     let feasible = remaining <= 1e-9 && capacity >= problem.lambda - 1e-9;
     let average_accuracy = if problem.lambda > 0.0 {
@@ -387,21 +412,187 @@ pub fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
     })
 }
 
+/// A whole value curve from one solve: `values()[g]` is the best
+/// achievable objective when the core budget is capped at `g`, for
+/// `g in 0..=cap`.  Alongside the values it carries the best core vector
+/// found *at each exact resource cost* — achievable allocations that a
+/// later solve on a near-identical problem can re-score to warm-start its
+/// incumbent curve ([`Solver::solve_curve_seeded`]) without giving up
+/// exactness.  Winners stay index-space core vectors (problem variant
+/// order); names are materialized only at the [`Allocation`] boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValueCurve {
+    /// `values[g]` = best objective over allocations costing ≤ g cores.
+    values: Vec<f64>,
+    /// `winners[c]` = best core vector of total cost exactly `c`, where
+    /// the search recorded one (pruned-away costs stay `None`; the curve
+    /// value at such a cost comes from a cheaper winner via prefix-max).
+    winners: Vec<Option<Vec<usize>>>,
+}
+
+impl ValueCurve {
+    pub(crate) fn from_parts(values: Vec<f64>, winners: Vec<Option<Vec<usize>>>) -> Self {
+        debug_assert_eq!(values.len(), winners.len());
+        Self { values, winners }
+    }
+
+    /// The curve of an unsolvable (empty) problem: `-inf` everywhere.
+    pub(crate) fn unsolvable(cap: usize) -> Self {
+        Self {
+            values: vec![f64::NEG_INFINITY; cap + 1],
+            winners: vec![None; cap + 1],
+        }
+    }
+
+    /// Largest grant the curve covers (`values().len() - 1`).
+    pub fn cap(&self) -> usize {
+        self.values.len() - 1
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn into_values(self) -> Vec<f64> {
+        self.values
+    }
+
+    pub fn winners(&self) -> &[Option<Vec<usize>>] {
+        &self.winners
+    }
+}
+
+/// Shared accumulator for curve-native solvers: bins the best objective by
+/// exact resource cost and maintains the running prefix-max (`inc[c]` =
+/// best objective at cost ≤ c), which doubles as the incumbent curve that
+/// branch-and-bound prunes against.
+pub(crate) struct CurveAcc {
+    /// Best objective at *exact* cost c (winner bookkeeping).
+    best_at: Vec<f64>,
+    /// Prefix-max of `best_at`: the incumbent value curve.
+    inc: Vec<f64>,
+    winners: Vec<Option<Vec<usize>>>,
+}
+
+impl CurveAcc {
+    pub(crate) fn new(cap: usize) -> Self {
+        Self {
+            best_at: vec![f64::NEG_INFINITY; cap + 1],
+            inc: vec![f64::NEG_INFINITY; cap + 1],
+            winners: vec![None; cap + 1],
+        }
+    }
+
+    /// Record an achievable (cost, objective, core-vector) triple.
+    pub(crate) fn offer(&mut self, cost: usize, objective: f64, cores: &[usize]) {
+        if objective > self.best_at[cost] {
+            self.best_at[cost] = objective;
+            self.winners[cost] = Some(cores.to_vec());
+        }
+        for c in cost..self.inc.len() {
+            if self.inc[c] < objective {
+                self.inc[c] = objective;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Incumbent curve value at grant `c` (what a new entry of cost `c`
+    /// must strictly beat to matter).
+    pub(crate) fn incumbent_at(&self, c: usize) -> f64 {
+        self.inc[c.min(self.inc.len() - 1)]
+    }
+
+    pub(crate) fn finish(self) -> ValueCurve {
+        ValueCurve::from_parts(self.inc, self.winners)
+    }
+}
+
 /// Common solver interface.
 pub trait Solver {
     fn name(&self) -> &'static str;
     /// Best allocation for the problem; None only if the problem is empty.
     fn solve(&self, problem: &Problem) -> Option<Allocation>;
+
+    /// The whole per-budget value curve in one call: `values()[g]` is the
+    /// best objective achievable with the core budget capped at `g`, for
+    /// `g in 0..=cap` (`cap ≤ problem.budget` so the per-variant tables
+    /// cover every sub-budget).
+    ///
+    /// Default implementation: the per-grant re-solve loop (one `solve`
+    /// per candidate budget), so heuristic solvers keep today's semantics
+    /// verbatim.  The exact solvers override it with single-pass
+    /// curve-native searches: the objective depends on the budget only
+    /// through the feasibility bound, so one enumeration can bin the best
+    /// objective by resource cost and prefix-max the bins into the curve
+    /// (cross-checked against this loop by
+    /// `prop_solve_curve_matches_resolve_loop`).
+    fn solve_curve(&self, problem: &Problem, cap: usize) -> ValueCurve {
+        debug_assert!(
+            cap <= problem.budget,
+            "curve cap {cap} exceeds the table budget {}",
+            problem.budget
+        );
+        let mut acc = CurveAcc::new(cap);
+        let mut values = Vec::with_capacity(cap + 1);
+        let mut sub = problem.clone();
+        for g in 0..=cap {
+            sub.budget = g;
+            match self.solve(&sub) {
+                Some(a) => {
+                    let cores: Vec<usize> = problem
+                        .variants
+                        .iter()
+                        .map(|v| a.cores_of(&v.name))
+                        .collect();
+                    let cost: usize = cores.iter().sum();
+                    if cost <= cap {
+                        acc.offer(cost, a.objective, &cores);
+                    }
+                    values.push(a.objective);
+                }
+                None => values.push(f64::NEG_INFINITY),
+            }
+        }
+        // Keep the loop's per-grant values verbatim (a heuristic solver's
+        // curve need not be monotone); the accumulator only contributes
+        // the achievable winner vectors for future warm starts.
+        let winners = acc.finish().winners;
+        ValueCurve::from_parts(values, winners)
+    }
+
+    /// [`Self::solve_curve`] with an optional warm start: `seed` is a
+    /// previously solved curve whose winner vectors are *re-scored under
+    /// this problem* to pre-load the incumbent curve — sound regardless of
+    /// how stale the seed is, because only currently-achievable objectives
+    /// enter the incumbent.  Solvers that cannot exploit a warm start
+    /// (enumeration, heuristics) ignore it.
+    fn solve_curve_seeded(
+        &self,
+        problem: &Problem,
+        cap: usize,
+        seed: Option<&ValueCurve>,
+    ) -> ValueCurve {
+        let _ = seed;
+        self.solve_curve(problem, cap)
+    }
 }
 
-/// Per-budget value curve for the fleet arbiter: `out[g]` is the best
-/// achievable objective when the core budget is capped at `g`, for
-/// `g in 0..=cap` (`cap ≤ problem.budget` so the per-variant tables cover
-/// every sub-budget).  Re-solves the same ILP once per candidate grant —
-/// only the budget bound shrinks, the tables are shared.  With an exact
-/// solver the curve is monotone nondecreasing: any allocation feasible at
-/// `g` is feasible at `g + 1`.
+/// Per-budget value curve for the fleet arbiter (see
+/// [`Solver::solve_curve`], which this delegates to — single-pass for the
+/// exact solvers, the re-solve loop for heuristics).
 pub fn value_curve(problem: &Problem, solver: &dyn Solver, cap: usize) -> Vec<f64> {
+    solver.solve_curve(problem, cap).into_values()
+}
+
+/// The pre-curve-native reference: re-solves the same ILP once per
+/// candidate grant `g in 0..=cap` — `N × (B+1)` branch-and-bound solves
+/// per fleet tick, the quadratic decision path this module's single-pass
+/// curves replace.  Kept as the ground truth for
+/// `prop_solve_curve_matches_resolve_loop` and as the "old" side of the
+/// `micro_hotpaths` value-curve comparison.
+pub fn value_curve_resolve(problem: &Problem, solver: &dyn Solver, cap: usize) -> Vec<f64> {
     debug_assert!(
         cap <= problem.budget,
         "curve cap {cap} exceeds the table budget {}",
@@ -568,6 +759,23 @@ mod tests {
         assert!((curve[20] - full.objective).abs() < 1e-9);
         // an infeasible prefix is strictly below the feasible tail
         assert!(curve[0] < curve[20]);
+    }
+
+    #[test]
+    fn solve_curve_matches_the_resolve_loop_on_paper_problems() {
+        for p in [problem(75.0, 20, 0.05), problem_batched(250.0, 16, 0.05, 8)] {
+            for s in [&BruteForceSolver as &dyn Solver, &BranchBoundSolver as &dyn Solver] {
+                let reference = value_curve_resolve(&p, s, p.budget);
+                let curve = s.solve_curve(&p, p.budget);
+                assert_eq!(curve.values().len(), reference.len());
+                for (g, (a, b)) in curve.values().iter().zip(&reference).enumerate() {
+                    assert!((a - b).abs() < 1e-9, "{} g={g}: {a} vs {b}", s.name());
+                }
+                // warm-starting from its own output changes nothing
+                let warm = s.solve_curve_seeded(&p, p.budget, Some(&curve));
+                assert_eq!(warm.values(), curve.values(), "{}", s.name());
+            }
+        }
     }
 
     #[test]

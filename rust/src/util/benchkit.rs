@@ -3,7 +3,12 @@
 //!
 //! [`bench`] warms up, runs timed iterations until a wall budget or
 //! iteration cap, and reports mean / p50 / p99 per-iteration time.
+//! [`BenchReport`] wraps it for whole-bench runs: it honors `--short`
+//! (small per-entry wall budget, for CI) and `--json <path>` (machine-
+//! readable emission of every entry plus derived ratios — the perf
+//! trajectory artifact CI uploads as `BENCH_solver.json`).
 
+use super::json::Value;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy)]
@@ -70,6 +75,105 @@ pub fn run_named<F: FnMut()>(name: &str, f: F) -> BenchStats {
     let stats = bench(2, Duration::from_secs(2), 10_000, f);
     println!("{name:<40} {stats}");
     stats
+}
+
+/// Named-entry collector for a whole bench binary.
+///
+/// * `--short` — 200 ms wall budget per entry instead of 2 s (CI mode).
+/// * `--json <path>` / `--json=<path>` — write every entry
+///   (`{mean_ns, p50_ns, p99_ns, min_ns, iters, per_sec}`) plus the
+///   [`Self::derive`]d scalars to `path` on [`Self::finish`].
+///
+/// Unknown flags are ignored (`cargo bench` injects `--bench` into the
+/// harness args).
+pub struct BenchReport {
+    budget: Duration,
+    json_path: Option<String>,
+    entries: Vec<(String, BenchStats)>,
+    derived: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    /// Parse `--short` / `--json` from the process arguments.
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut short = false;
+        let mut json_path = None;
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--short" => short = true,
+                "--json" => {
+                    json_path = args.get(i + 1).cloned();
+                    i += 1;
+                }
+                other => {
+                    if let Some(p) = other.strip_prefix("--json=") {
+                        json_path = Some(p.to_string());
+                    }
+                }
+            }
+            i += 1;
+        }
+        Self {
+            budget: if short {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            json_path,
+            entries: Vec::new(),
+            derived: Vec::new(),
+        }
+    }
+
+    /// Time + print + record one named entry.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> BenchStats {
+        let stats = bench(2, self.budget, 10_000, f);
+        println!("{name:<44} {stats}");
+        self.entries.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Record a derived scalar (e.g. an old/new speedup ratio).
+    pub fn derive(&mut self, name: &str, value: f64) {
+        println!("{name:<44} {value:.2}");
+        self.derived.push((name.to_string(), value));
+    }
+
+    /// Emit the JSON report if `--json` was requested.
+    pub fn finish(&self) {
+        let Some(path) = &self.json_path else { return };
+        let entries: Vec<(&str, Value)> = self
+            .entries
+            .iter()
+            .map(|(name, s)| {
+                (
+                    name.as_str(),
+                    Value::obj(vec![
+                        ("mean_ns", Value::Num(s.mean.as_nanos() as f64)),
+                        ("p50_ns", Value::Num(s.p50.as_nanos() as f64)),
+                        ("p99_ns", Value::Num(s.p99.as_nanos() as f64)),
+                        ("min_ns", Value::Num(s.min.as_nanos() as f64)),
+                        ("iters", Value::Num(s.iters as f64)),
+                        ("per_sec", Value::Num(s.per_sec())),
+                    ]),
+                )
+            })
+            .collect();
+        let derived: Vec<(&str, Value)> = self
+            .derived
+            .iter()
+            .map(|(name, v)| (name.as_str(), Value::Num(*v)))
+            .collect();
+        let report = Value::obj(vec![
+            ("schema", Value::Str("benchkit-v1".to_string())),
+            ("entries", Value::obj(entries)),
+            ("derived", Value::obj(derived)),
+        ]);
+        std::fs::write(path, report.to_string_pretty()).expect("write bench json");
+        println!("bench report -> {path}");
+    }
 }
 
 #[cfg(test)]

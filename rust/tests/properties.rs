@@ -8,7 +8,9 @@ use infadapter::experiment::{PolicyKind, Scenario};
 use infadapter::fleet::{ArbiterEntry, CoreArbiter};
 use infadapter::profiler::ProfileSet;
 use infadapter::serving::sim::{SimConfig, SimEngine};
-use infadapter::solver::{score, score_fast, BranchBoundSolver, BruteForceSolver, Problem, Solver};
+use infadapter::solver::{
+    score, score_fast, value_curve_resolve, BranchBoundSolver, BruteForceSolver, Problem, Solver,
+};
 use infadapter::util::rng::Rng;
 use infadapter::workload::{ArrivalProcess, Trace};
 use std::collections::BTreeMap;
@@ -119,6 +121,95 @@ fn prop_score_fast_matches_score() {
                 ),
             }
         }
+    }
+}
+
+#[test]
+fn prop_solve_curve_matches_resolve_loop() {
+    // The single-pass curve (bin best objective by cost, prefix-max) must
+    // be pointwise equal to the old per-grant re-solve loop for both exact
+    // solvers, monotone nondecreasing, deterministic, and unchanged by
+    // warm-starting from any previous curve.
+    let mut rng = Rng::seed_from_u64(109);
+    for case in 0..30 {
+        let p = if case % 2 == 0 {
+            random_problem(&mut rng)
+        } else {
+            random_problem_general(&mut rng)
+        };
+        let check = |s: &dyn Solver, cap: usize| {
+            let reference = value_curve_resolve(&p, s, cap);
+            let curve = s.solve_curve(&p, cap);
+            assert_eq!(curve.values().len(), cap + 1);
+            for (g, (a, b)) in curve.values().iter().zip(&reference).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "case {case} {} g={g}/{cap}: curve {a} vs loop {b} (λ={}, B={})",
+                    s.name(),
+                    p.lambda,
+                    p.budget
+                );
+            }
+            for w in curve.values().windows(2) {
+                assert!(w[1] >= w[0] - 1e-9, "curve must be nondecreasing");
+            }
+            // pure function of its inputs
+            assert_eq!(curve, s.solve_curve(&p, cap), "case {case} {}", s.name());
+            // warm starts change cost, never values
+            let warm = s.solve_curve_seeded(&p, cap, Some(&curve));
+            assert_eq!(
+                warm.values(),
+                curve.values(),
+                "case {case} {} warm-seeded values drifted",
+                s.name()
+            );
+        };
+        // small caps for both exact solvers (the brute reference loop is
+        // the expensive side)…
+        let cap = rng.below(p.budget.min(16) + 1);
+        check(&BruteForceSolver, cap);
+        check(&BranchBoundSolver, cap);
+        // …and periodically the whole budget for branch-and-bound, whose
+        // reference loop prunes well enough to stay cheap
+        if case % 5 == 0 {
+            check(&BranchBoundSolver, p.budget);
+        }
+    }
+}
+
+#[test]
+fn prop_score_fast_wide_problems_fall_back_to_score() {
+    // Past 64 variants the u64 visited bitmask cannot cover the selection
+    // loop; score_fast must fall back to the materializing path instead of
+    // panicking (the seed code debug_assert!'d and corrupted in release).
+    let mut rng = Rng::seed_from_u64(110);
+    let entries: Vec<(String, f64, f64, f64)> = (0..70)
+        .map(|i| {
+            (
+                format!("v{i}"),
+                50.0 + rng.f64() * 45.0,
+                0.02 + rng.f64() * 0.3,
+                1.0 + rng.f64() * 20.0,
+            )
+        })
+        .collect();
+    let profiles = ProfileSet::from_service_times(&entries, 0.9);
+    let p = Problem::from_profiles(
+        &profiles,
+        150.0,
+        0.75,
+        12,
+        ObjectiveWeights::default(),
+        &BTreeMap::new(),
+    );
+    for _ in 0..32 {
+        let cores: Vec<usize> = (0..p.variants.len())
+            .map(|_| if rng.f64() < 0.9 { 0 } else { 1 + rng.below(4) })
+            .collect();
+        let fast = score_fast(&p, &cores).expect("scoreable");
+        let full = score(&p, &cores).expect("scoreable");
+        assert!((fast.0 - full.objective).abs() < 1e-9);
+        assert_eq!(fast.1, full.feasible);
     }
 }
 
@@ -324,6 +415,13 @@ fn prop_arbiter_partition_bounded_floored_deterministic() {
         assert_eq!(budget, budget2);
         let again = CoreArbiter::new(budget2).partition(&entries2);
         assert_eq!(grants, again, "partition must be deterministic per seed");
+        // (6) the O(B log N) heap water-fill must reproduce the reference
+        // O(B·N) linear scan grant for grant, ties included
+        assert_eq!(
+            grants,
+            arbiter.partition_scan(&entries),
+            "heap fill diverged from the reference scan (case {case})"
+        );
     }
 }
 
