@@ -35,6 +35,12 @@ fn main() -> Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(3.0f64);
+    // E2E_ADMISSION=1 turns on the request-path admission gate: the live
+    // engine then sheds offered load beyond each decision's supply
+    // (Σ th_m) at the door instead of queueing it past the SLO.
+    let admission_on = std::env::var("E2E_ADMISSION")
+        .map(|v| v == "1" || v == "on")
+        .unwrap_or(false);
 
     // Host-scaled budget: this machine has ONE physical core, so scale-out
     // is not a real lever here — budget = 1 puts the system in the paper's
@@ -85,6 +91,10 @@ fn main() -> Result<()> {
             batch: 1,
             seed: config.seed,
             max_workers_per_variant: 1,
+            admission: infadapter::config::AdmissionConfig {
+                enabled: admission_on,
+                ..Default::default()
+            },
         },
     )?;
 
@@ -100,6 +110,11 @@ fn main() -> Result<()> {
     println!("wall time            : {wall:?}");
     println!("requests served      : {}", summary.total_requests);
     println!("dropped              : {}", summary.dropped);
+    println!(
+        "shed at admission    : {} (gate {})",
+        summary.shed,
+        if admission_on { "on" } else { "off" }
+    );
     println!(
         "throughput           : {:.1} rps",
         summary.total_requests as f64 / seconds as f64

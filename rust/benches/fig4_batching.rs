@@ -100,6 +100,7 @@ fn main() {
                 bucket_s: 10.0,
                 queue_timeout_s: 10.0,
                 batch_max_wait_s: 0.05,
+                admission: Default::default(),
             },
         );
         let mut policy = StaticPolicy::with_batch(variant, cores, batch);
@@ -139,6 +140,7 @@ fn main() {
             bucket_s: 10.0,
             queue_timeout_s: 10.0,
             batch_max_wait_s: 0.05,
+            admission: Default::default(),
         },
     );
     let mut policy = StaticPolicy::with_batch(variant, cores, 8);

@@ -1,34 +1,54 @@
 //! Fleet experiment — multi-service serving on one shared cluster.
 //!
-//! Two services with different latency SLOs (750 ms and 400 ms) ride
-//! interleaved 5x bursts on a 12-core cluster.  Three sharing disciplines
-//! compete:
-//! * **fleet-arbiter** — the tentpole: a top-level core arbiter
-//!   re-partitions the global budget every interval by water-filling on
-//!   priority-weighted marginal utility (per-service ILP value curves);
+//! **Part A (interleaved bursts):** two services with different latency
+//! SLOs (750 ms and 400 ms) ride interleaved 5x bursts on a 12-core
+//! cluster.  Three sharing disciplines compete:
+//! * **fleet-arbiter** — a top-level core arbiter re-partitions the
+//!   global budget every interval by water-filling on priority-weighted
+//!   marginal utility (per-service ILP value curves);
 //! * **even-split** — each service runs its own InfAdapter on a static
 //!   half of the budget (no cross-service movement);
 //! * **vpa-50** — two independent VPA+ instances pinned to ResNet50, one
 //!   half-share each (no accuracy scaling, no arbitration).
+//! Because bursts never overlap, the arbiter serves each burst with most
+//! of the cluster while the quiet service keeps its floor — lower
+//! aggregate SLO violations at the same total core budget.
 //!
-//! The headline: because bursts never overlap, the arbiter serves each
-//! burst with most of the cluster while the quiet service keeps its floor
-//! — lower aggregate SLO violations at the same total core budget,
-//! where the static split strands half the cores on the quiet service.
+//! **Part B (overload × admission × tiers):** both services burst at the
+//! *same* time on an 8-core cluster, so no arbitration can cover the
+//! summed demand — the regime PR 4's admission gate and priority tiers
+//! exist for.  A 2×2 matrix {admission off/on} × {tiers off/on} (tiers
+//! bring the arbiter's lexicographic pre-pass + the SLO-burn boost)
+//! shows the headline: admission+tiers cut the high-tier service's SLO
+//! violations at equal cost, shedding lowest-tier-first instead of
+//! letting queues blow through every request.
+//!
+//! `--short` shrinks the traces for CI; `--json <path>` writes the
+//! Part B matrix + headline (uploaded as the BENCH_fleet.json artifact).
 //! Timeline CSVs land in target/figures/fig_fleet_<mode>_<service>.csv.
 
 use infadapter::config::Config;
 use infadapter::experiment::SaturationProbe;
-use infadapter::fleet::{print_fleet, FleetMode, FleetScenario};
+use infadapter::fleet::{print_fleet, FleetMode, FleetRunOutput, FleetScenario};
 use infadapter::profiler::ProfileSet;
 use infadapter::runtime::artifacts_dir;
+use infadapter::util::json::Value;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let short = args.iter().any(|a| a == "--short");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let seconds = if short { 420 } else { 1200 };
+
     let dir = artifacts_dir();
     let profiles = ProfileSet::paper_like();
     let mut config = Config::default();
     config.adapter.forecaster = "last_max".into();
-    let scenario = FleetScenario::synthetic(2, 30.0, 1200, 12, &config, &profiles);
+    let scenario = FleetScenario::synthetic(2, 30.0, seconds, 12, &config, &profiles);
 
     // Capacity context: what one resnet18 pod on the even-split share (6
     // cores) actually sustains at each service's SLO — both sit far below
@@ -52,7 +72,7 @@ fn main() {
     std::fs::create_dir_all("target/figures").ok();
     for mode in &modes {
         let out = scenario.run(mode, &dir);
-        print_fleet("Fleet: interleaved 5x bursts, 2 services, B=12", &out);
+        print_fleet("Fleet A: interleaved 5x bursts, 2 services, B=12", &out);
         for (r, s) in out.per_service.iter().zip(&scenario.services) {
             let path = format!(
                 "target/figures/fig_fleet_{}_{}.csv",
@@ -69,7 +89,7 @@ fn main() {
     println!("\ntimelines -> target/figures/fig_fleet_*.csv");
 
     let arb = &outs[0].summary;
-    println!("\n# headline (fleet-arbiter vs static sharing)");
+    println!("\n# Part A headline (fleet-arbiter vs static sharing)");
     for out in &outs[1..] {
         let s = &out.summary;
         let viol_red = if s.slo_violation_rate > 0.0 {
@@ -85,5 +105,134 @@ fn main() {
             cost_delta,
             s.avg_accuracy_loss - arb.avg_accuracy_loss
         );
+    }
+
+    // --- Part B: shared overload, admission × tiers -------------------
+    println!("\n# Part B: simultaneous 5x bursts, 2 services, B=8 (overload)");
+    let overload_budget = 8;
+    let cell = |admission: bool, tiers: bool| -> FleetRunOutput {
+        let mut c = Config::default();
+        c.adapter.forecaster = "last_max".into();
+        c.admission.enabled = admission;
+        // the burn boost rides with the tier machinery
+        c.fleet.burn_boost = if tiers { 1.0 } else { 0.0 };
+        let s = FleetScenario::synthetic_overload(
+            2,
+            30.0,
+            seconds,
+            overload_budget,
+            tiers,
+            &c,
+            &profiles,
+        );
+        s.run(&FleetMode::Arbiter, &dir)
+    };
+    let cells = [
+        ("baseline", cell(false, false)),
+        ("tiers", cell(false, true)),
+        ("admission", cell(true, false)),
+        ("admission+tiers", cell(true, true)),
+    ];
+    println!(
+        "{:<16} {:>9} {:>10} {:>10} {:>9} {:>9} {:>9}",
+        "cell", "SLOviol%", "hi-viol%", "cost(avg)", "shed", "shed-t0", "shed-t1"
+    );
+    for (label, out) in &cells {
+        let s = &out.summary;
+        // "high tier" = svc0 (tier 0 in the tiered cells)
+        let hi = &s.services[0];
+        let shed_t = |t: u8| {
+            s.tiers
+                .iter()
+                .find(|x| x.tier == t)
+                .map(|x| x.shed)
+                .unwrap_or(0)
+        };
+        println!(
+            "{:<16} {:>9.2} {:>10.2} {:>10.2} {:>9} {:>9} {:>9}",
+            label,
+            s.slo_violation_rate * 100.0,
+            hi.slo_violation_rate * 100.0,
+            s.avg_cost_cores,
+            s.shed,
+            shed_t(0),
+            shed_t(1)
+        );
+    }
+    let base = &cells[0].1.summary;
+    let full = &cells[3].1.summary;
+    let hi_base = base.services[0].slo_violation_rate;
+    let hi_full = full.services[0].slo_violation_rate;
+    let hi_red = if hi_base > 0.0 {
+        (1.0 - hi_full / hi_base) * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "\n# Part B headline: admission+tiers cut the high-tier service's SLO \
+         violations by {:.1}% ({:.2}% -> {:.2}%) at cost delta {:+.2} cores",
+        hi_red,
+        hi_base * 100.0,
+        hi_full * 100.0,
+        full.avg_cost_cores - base.avg_cost_cores
+    );
+
+    if let Some(path) = json_path {
+        let cell_json = |label: &str, admission: bool, tiers: bool, out: &FleetRunOutput| {
+            let s = &out.summary;
+            Value::obj(vec![
+                ("cell", Value::Str(label.to_string())),
+                ("admission", Value::Bool(admission)),
+                ("tiers", Value::Bool(tiers)),
+                ("slo_violation_rate", Value::Num(s.slo_violation_rate)),
+                (
+                    "high_tier_violation_rate",
+                    Value::Num(s.services[0].slo_violation_rate),
+                ),
+                ("avg_cost_cores", Value::Num(s.avg_cost_cores)),
+                ("shed", Value::Num(s.shed as f64)),
+                (
+                    "shed_by_tier",
+                    Value::Arr(
+                        s.tiers
+                            .iter()
+                            .map(|t| {
+                                Value::Arr(vec![
+                                    Value::Num(t.tier as f64),
+                                    Value::Num(t.shed as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        let flags = [(false, false), (false, true), (true, false), (true, true)];
+        let json = Value::obj(vec![
+            ("seconds", Value::Num(seconds as f64)),
+            ("overload_budget", Value::Num(overload_budget as f64)),
+            (
+                "cells",
+                Value::Arr(
+                    cells
+                        .iter()
+                        .zip(flags)
+                        .map(|((label, out), (a, t))| cell_json(label, a, t, out))
+                        .collect(),
+                ),
+            ),
+            (
+                "headline",
+                Value::obj(vec![
+                    ("high_tier_violation_reduction_pct", Value::Num(hi_red)),
+                    (
+                        "cost_delta_cores",
+                        Value::Num(full.avg_cost_cores - base.avg_cost_cores),
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, json.to_string_pretty()).expect("write json");
+        println!("matrix -> {path}");
     }
 }

@@ -1,6 +1,7 @@
 //! Microbenchmarks for the Layer-3 hot paths + the solver ablation.
 //!
-//! * dispatcher route()        — per-request cost
+//! * dispatcher route()        — per-request cost (interned Arc<str>
+//!                               vs the old owned-String materialization)
 //! * P2 quantile record()      — per-sample monitoring cost
 //! * solvers at paper scale    — per-decision cost (30 s cadence)
 //! * value curves              — single-pass solve_curve vs the per-grant
@@ -48,9 +49,19 @@ fn main() {
         ("resnet101".into(), 25.0),
         ("resnet152".into(), 45.0),
     ]);
-    report.run("dispatcher.route (3 backends)", || {
+    // Interned hot path: route() returns an Arc<str> clone (refcount
+    // bump).  The "pre-interning" entry adds the owned-String
+    // materialization every route used to pay per request.
+    let interned = report.run("dispatcher.route (3 backends)", || {
         std::hint::black_box(d.route());
     });
+    let materialized = report.run("dispatcher.route + String clone (pre-interning)", || {
+        std::hint::black_box(d.route().map(|v| v.to_string()));
+    });
+    report.derive(
+        "dispatcher.route_intern_speedup",
+        materialized.mean.as_secs_f64() / interned.mean.as_secs_f64(),
+    );
 
     let mut p2 = P2Quantile::new(0.99);
     let mut x = 0.1f64;
@@ -119,6 +130,8 @@ fn main() {
             let knee = 16 + 24 * i;
             ArbiterEntry {
                 priority: 1.0 + i as f64 * 0.25,
+                tier: 0,
+                burn: 1.0,
                 floor: 2,
                 curve: Some(
                     (0..=256)

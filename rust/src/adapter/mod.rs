@@ -190,6 +190,9 @@ impl InfAdapterPolicy {
             quotas,
             batches,
             predicted_lambda: lambda_hat,
+            // Σ th_m(n, b) of the decided allocation: the admission
+            // gate's supply signal on the real engine.
+            supply_rps: allocation.capacity,
         };
         self.last_allocation = Some(allocation);
         decision

@@ -61,6 +61,7 @@ impl Policy for StaticPolicy {
             quotas: vec![(self.variant.clone(), 1.0)],
             batches: BTreeMap::from([(self.variant.clone(), self.batch)]),
             predicted_lambda: observed,
+            supply_rps: 0.0, // static policy: no throughput model
         }
     }
 }

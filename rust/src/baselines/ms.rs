@@ -89,6 +89,7 @@ impl Policy for MsPlusPolicy {
                     quotas: vec![(name, 1.0)],
                     batches: BTreeMap::new(),
                     predicted_lambda: lambda_hat,
+                    supply_rps: problem.variants[i].throughput[n],
                 }
             }
             None => Decision {
@@ -96,6 +97,7 @@ impl Policy for MsPlusPolicy {
                 quotas: vec![],
                 batches: BTreeMap::new(),
                 predicted_lambda: lambda_hat,
+                supply_rps: 0.0,
             },
         }
     }

@@ -85,6 +85,11 @@ impl Policy for VpaPolicy {
                 .take(60)
                 .cloned()
                 .fold(0.0, f64::max),
+            supply_rps: self
+                .profiles
+                .get(&self.variant)
+                .map(|p| p.throughput(cores))
+                .unwrap_or(0.0),
         }
     }
 }

@@ -81,6 +81,42 @@ impl Default for AdapterConfig {
     }
 }
 
+/// Admission-control knobs for the request path's token-bucket gate
+/// (see [`crate::dispatcher::AdmissionGate`]).
+///
+/// The gate refills at the service's *granted supply* — Σ per-variant
+/// `th_m(n, b)` of the committed allocation, refreshed by the adapter
+/// every tick — and sheds arrivals that find no token, so overload is
+/// refused at the door instead of queueing every request past its SLO.
+/// With multiple priority tiers the gate sheds the numerically highest
+/// (least important) tiers first via an adaptive tier cutoff.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// Master switch; disabled (the default) keeps the request path
+    /// bit-identical to the pre-admission pipeline.
+    pub enabled: bool,
+    /// Bucket depth in seconds of supply — how much burst the gate
+    /// absorbs before shedding.
+    pub burst_s: f64,
+    /// Multiplicative slack on the measured supply before shedding
+    /// (1.0 = shed exactly past capacity).
+    pub slack: f64,
+    /// Cadence (seconds) of the tier-cutoff adaptation: one tier is
+    /// dropped or readmitted at most once per window.
+    pub ctl_window_s: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            burst_s: 1.0,
+            slack: 1.0,
+            ctl_window_s: 1.0,
+        }
+    }
+}
+
 /// Server-side batching parameters (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchingConfig {
@@ -130,6 +166,18 @@ pub struct FleetServiceConfig {
     pub name: String,
     /// Arbitration weight (> 0): higher claims marginal cores first.
     pub priority: f64,
+    /// Strict priority tier (0 = most important).  Tiers outrank weights:
+    /// the arbiter grants tier-0 marginal utility lexicographically before
+    /// any tier-1 weight, and the admission gate sheds the numerically
+    /// highest tiers first under overload.
+    pub tier: u8,
+    /// Allowed SLO-violation fraction: the denominator of the service's
+    /// SLO-burn-rate signal (rolling violation rate / budget) that boosts
+    /// its marginal utility in the arbiter while it is burning.
+    pub error_budget: f64,
+    /// Optional per-request class mix `[(tier, weight)]` applied to the
+    /// service's trace; empty = every request at the service `tier`.
+    pub class_mix: Vec<(u8, f64)>,
     /// Guaranteed-minimum core grant.
     pub floor_cores: usize,
     /// Per-service latency SLO, milliseconds.
@@ -146,6 +194,9 @@ impl Default for FleetServiceConfig {
         Self {
             name: String::new(),
             priority: 1.0,
+            tier: 0,
+            error_budget: 0.01,
+            class_mix: Vec::new(),
             floor_cores: 0,
             slo_latency_ms: 750.0,
             trace: "bursty".into(),
@@ -161,6 +212,12 @@ impl Default for FleetServiceConfig {
 pub struct FleetConfig {
     /// Shared core budget the arbiter partitions; 0 = use `cluster.budget`.
     pub global_budget: usize,
+    /// Strength of the arbiter's SLO-burn boost: a service burning its
+    /// error budget has its marginal utility multiplied by up to
+    /// `1 + burn_boost × overshoot` (overshoot clamped).  0 (default)
+    /// disables the boost and keeps partitions bit-identical to the
+    /// burn-unaware arbiter.
+    pub burn_boost: f64,
     /// Empty = fleet serving disabled (single-service mode).
     pub services: Vec<FleetServiceConfig>,
 }
@@ -184,6 +241,8 @@ pub struct Config {
     pub adapter: AdapterConfig,
     pub cluster: ClusterConfig,
     pub batching: BatchingConfig,
+    /// Request-path admission control (disabled by default).
+    pub admission: AdmissionConfig,
     /// Multi-service fleet definition (empty services = disabled).
     pub fleet: FleetConfig,
     /// Variants eligible for selection; empty = all in the manifest.
@@ -268,9 +327,22 @@ impl Config {
             },
             None => d.batching,
         };
+        let admission = match v.get("admission") {
+            Some(a) => AdmissionConfig {
+                enabled: match a.get("enabled") {
+                    Some(x) => x.as_bool()?,
+                    None => d.admission.enabled,
+                },
+                burst_s: f64_or(a, "burst_s", d.admission.burst_s)?,
+                slack: f64_or(a, "slack", d.admission.slack)?,
+                ctl_window_s: f64_or(a, "ctl_window_s", d.admission.ctl_window_s)?,
+            },
+            None => d.admission,
+        };
         let fleet = match v.get("fleet") {
             Some(f) => FleetConfig {
                 global_budget: usize_or(f, "global_budget", 0)?,
+                burn_boost: f64_or(f, "burn_boost", 0.0)?,
                 services: match f.get("services") {
                     Some(svcs) => svcs
                         .as_arr()?
@@ -280,6 +352,31 @@ impl Config {
                             Ok(FleetServiceConfig {
                                 name: str_or(s, "name", &d.name)?,
                                 priority: f64_or(s, "priority", d.priority)?,
+                                tier: usize_or(s, "tier", d.tier as usize)?
+                                    .try_into()
+                                    .map_err(|_| anyhow::anyhow!("tier must fit in u8"))?,
+                                error_budget: f64_or(s, "error_budget", d.error_budget)?,
+                                class_mix: match s.get("class_mix") {
+                                    Some(m) => m
+                                        .as_arr()?
+                                        .iter()
+                                        .map(|pair| -> Result<(u8, f64)> {
+                                            let p = pair.as_arr()?;
+                                            anyhow::ensure!(
+                                                p.len() == 2,
+                                                "class_mix entries are [tier, weight] pairs"
+                                            );
+                                            let tier: u8 = p[0]
+                                                .as_usize()?
+                                                .try_into()
+                                                .map_err(|_| {
+                                                    anyhow::anyhow!("class_mix tier must fit in u8")
+                                                })?;
+                                            Ok((tier, p[1].as_f64()?))
+                                        })
+                                        .collect::<Result<Vec<_>>>()?,
+                                    None => Vec::new(),
+                                },
                                 floor_cores: usize_or(s, "floor_cores", d.floor_cores)?,
                                 slo_latency_ms: f64_or(s, "slo_latency_ms", d.slo_latency_ms)?,
                                 trace: str_or(s, "trace", &d.trace)?,
@@ -369,12 +466,22 @@ impl Config {
                 ]),
             ),
             (
+                "admission",
+                Value::obj(vec![
+                    ("enabled", Value::Bool(self.admission.enabled)),
+                    ("burst_s", Value::Num(self.admission.burst_s)),
+                    ("slack", Value::Num(self.admission.slack)),
+                    ("ctl_window_s", Value::Num(self.admission.ctl_window_s)),
+                ]),
+            ),
+            (
                 "fleet",
                 Value::obj(vec![
                     (
                         "global_budget",
                         Value::Num(self.fleet.global_budget as f64),
                     ),
+                    ("burn_boost", Value::Num(self.fleet.burn_boost)),
                     (
                         "services",
                         Value::Arr(
@@ -385,6 +492,22 @@ impl Config {
                                     Value::obj(vec![
                                         ("name", Value::Str(s.name.clone())),
                                         ("priority", Value::Num(s.priority)),
+                                        ("tier", Value::Num(s.tier as f64)),
+                                        ("error_budget", Value::Num(s.error_budget)),
+                                        (
+                                            "class_mix",
+                                            Value::Arr(
+                                                s.class_mix
+                                                    .iter()
+                                                    .map(|&(t, w)| {
+                                                        Value::Arr(vec![
+                                                            Value::Num(t as f64),
+                                                            Value::Num(w),
+                                                        ])
+                                                    })
+                                                    .collect(),
+                                            ),
+                                        ),
                                         (
                                             "floor_cores",
                                             Value::Num(s.floor_cores as f64),
@@ -450,6 +573,24 @@ impl Config {
             self.weights.alpha >= 0.0 && self.weights.beta >= 0.0 && self.weights.gamma >= 0.0,
             "objective weights must be non-negative"
         );
+        anyhow::ensure!(
+            self.admission.burst_s > 0.0,
+            "admission burst_s must be positive"
+        );
+        anyhow::ensure!(
+            self.admission.slack > 0.0,
+            "admission slack must be positive"
+        );
+        anyhow::ensure!(
+            self.admission.ctl_window_s > 0.0,
+            "admission ctl_window_s must be positive"
+        );
+        // validated outside the fleet-services block: the CLI can set it
+        // on synthetic fleets whose `services` list is empty
+        anyhow::ensure!(
+            self.fleet.burn_boost >= 0.0,
+            "fleet burn_boost must be non-negative"
+        );
         let node_total: usize = self.cluster.node_cores.iter().sum();
         anyhow::ensure!(
             self.cluster.budget <= node_total,
@@ -484,6 +625,16 @@ impl Config {
                 anyhow::ensure!(
                     s.priority > 0.0,
                     "fleet service {} needs a positive priority",
+                    s.name
+                );
+                anyhow::ensure!(
+                    s.error_budget > 0.0 && s.error_budget <= 1.0,
+                    "fleet service {} needs an error budget in (0, 1]",
+                    s.name
+                );
+                anyhow::ensure!(
+                    s.class_mix.iter().all(|&(_, w)| w > 0.0),
+                    "fleet service {} class_mix weights must be positive",
                     s.name
                 );
                 anyhow::ensure!(
@@ -538,10 +689,20 @@ mod tests {
         c.batching.max_batch = 4;
         c.seed = 7;
         c.fleet.global_budget = 24;
+        c.fleet.burn_boost = 1.5;
+        c.admission = AdmissionConfig {
+            enabled: true,
+            burst_s: 2.0,
+            slack: 1.1,
+            ctl_window_s: 0.5,
+        };
         c.fleet.services = vec![
             FleetServiceConfig {
                 name: "search".into(),
                 priority: 2.0,
+                tier: 0,
+                error_budget: 0.02,
+                class_mix: vec![(0, 0.7), (1, 0.3)],
                 floor_cores: 4,
                 slo_latency_ms: 400.0,
                 trace: "burst:100:200".into(),
@@ -549,6 +710,7 @@ mod tests {
             },
             FleetServiceConfig {
                 name: "feed".into(),
+                tier: 1,
                 ..Default::default()
             },
         ];
@@ -584,12 +746,54 @@ mod tests {
             ..Default::default()
         }];
         assert!(c.validate().is_err());
+        // zero error budget (burn rate would divide by zero)
+        let mut c = Config::default();
+        c.fleet.services = vec![FleetServiceConfig {
+            name: "a".into(),
+            error_budget: 0.0,
+            ..Default::default()
+        }];
+        assert!(c.validate().is_err());
+        // non-positive class-mix weight
+        let mut c = Config::default();
+        c.fleet.services = vec![FleetServiceConfig {
+            name: "a".into(),
+            class_mix: vec![(0, 0.0)],
+            ..Default::default()
+        }];
+        assert!(c.validate().is_err());
+        // negative burn boost — rejected even with no declared services
+        // (the CLI sets it on synthetic fleets)
+        let mut c = Config::default();
+        c.fleet.services = vec![svc("a", 0)];
+        c.fleet.burn_boost = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.fleet.burn_boost = -0.1;
+        assert!(c.validate().is_err());
         // a well-formed fleet passes, explicit global budget respected
         let mut c = Config::default();
         c.fleet.global_budget = 30;
         c.fleet.services = vec![svc("a", 10), svc("b", 10)];
         c.validate().unwrap();
         assert_eq!(c.fleet.resolved_budget(&c.cluster), 30);
+    }
+
+    #[test]
+    fn admission_validation_catches_bad_values() {
+        let mut c = Config::default();
+        assert!(!c.admission.enabled, "admission must default off");
+        c.admission.burst_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.admission.slack = -0.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.admission.ctl_window_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.admission.enabled = true;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,453 @@
+//! Admission gate + the composed request path.
+//!
+//! The serving pipeline used to be "dispatch, then hope": when the
+//! arbiter cannot grant a service enough cores for its λ̂, the queues blow
+//! through *every* request's SLO.  [`AdmissionGate`] sheds the excess at
+//! the door instead:
+//!
+//! * **Token bucket sized from supply.**  The bucket refills at the
+//!   service's granted capacity — Σ per-variant `th_m(n, b)` over the
+//!   committed allocation ([`crate::profiler::ProfileSet::supply_rps`]) —
+//!   refreshed by the adapter each tick via [`AdmissionGate::set_supply`].
+//!   An arrival that finds no token is refused with an explicit shed
+//!   outcome (the client gets an immediate reject, not a blown SLO).
+//! * **Lowest-tier-first shedding.**  Requests carry a [`Tier`]
+//!   (0 = most important).  The gate keeps an adaptive *tier cutoff*:
+//!   when a tier it intends to serve is shed for lack of tokens, the
+//!   cutoff drops by one — the numerically highest admitted tier is
+//!   excluded outright, reserving the whole token stream for the tiers
+//!   above it.  When a control window passes with no pressure and spare
+//!   tokens, the cutoff readmits one tier.  Under *sustained* overload
+//!   this converges to strict lowest-tier-first shedding within one
+//!   control window per tier (see `prop_admission_tiers_shed_lowest_first`
+//!   in `tests/properties.rs`); during transitions a lower tier may ride
+//!   the residual burst for at most one window.
+//!
+//! The gate is pure bookkeeping: admitting everything (disabled, the
+//! default) touches no RNG and no shared state, so the default request
+//! path stays bit-identical to the pre-admission pipeline.
+
+use super::{Dispatcher, NoRoute, Tier};
+use crate::config::AdmissionConfig;
+use std::sync::Arc;
+
+/// Float-dust tolerance on the one-token admit threshold: refills
+/// accumulate `Δt · rate` terms whose rounding error must never shed a
+/// request that conformed to the supply exactly.
+const ADMIT_EPS: f64 = 1e-9;
+
+/// Token-bucket admission gate with an adaptive priority-tier cutoff.
+#[derive(Debug, Clone)]
+pub struct AdmissionGate {
+    enabled: bool,
+    /// Token refill rate: the granted supply, requests/second.
+    rate_rps: f64,
+    /// Bucket depth in seconds of supply.
+    burst_s: f64,
+    /// Multiplicative slack on the supply.
+    slack: f64,
+    /// Tier-cutoff adaptation cadence, seconds.
+    ctl_window_s: f64,
+    tokens: f64,
+    last_s: f64,
+    /// Whether the adapter has ever reported a supply.  An enabled gate
+    /// with no supply signal (e.g. a policy without a throughput model on
+    /// the real engine) admits everything rather than shedding blind —
+    /// only a *reported* supply of 0 means "no capacity granted".
+    supplied: bool,
+    /// Numerically highest tier currently admitted.
+    cutoff: Tier,
+    /// Lowest tier this gate's traffic carries (cutoff floor).
+    min_tier: Tier,
+    /// Highest tier this gate ever admits (cutoff ceiling).
+    max_tier: Tier,
+    window_start_s: f64,
+    /// A tier the gate intended to serve (≤ cutoff) was shed this window.
+    pressured: bool,
+    /// Lifetime admit count (diagnostics).
+    pub admitted: u64,
+    /// Lifetime shed count (diagnostics).
+    pub shed: u64,
+}
+
+impl AdmissionGate {
+    /// A gate that admits everything (the default request path).
+    pub fn disabled() -> Self {
+        Self::new(&AdmissionConfig::default(), 0, 0)
+    }
+
+    /// `min_tier..=max_tier` is the range of tiers this gate's traffic
+    /// can actually carry; the adaptive cutoff moves inside it.  The
+    /// floor matters: a service whose *lowest* arriving tier is 1 must
+    /// never drop its cutoff to 0 — that would black out the service's
+    /// only tier and oscillate between all-shed and burst-readmit
+    /// windows instead of plain token-bucket shedding.
+    pub fn new(cfg: &AdmissionConfig, min_tier: Tier, max_tier: Tier) -> Self {
+        let max_tier = max_tier.max(min_tier);
+        Self {
+            enabled: cfg.enabled,
+            rate_rps: 0.0,
+            burst_s: cfg.burst_s,
+            slack: cfg.slack,
+            ctl_window_s: cfg.ctl_window_s,
+            tokens: 0.0,
+            last_s: 0.0,
+            supplied: false,
+            cutoff: max_tier,
+            min_tier,
+            max_tier,
+            window_start_s: 0.0,
+            pressured: false,
+            admitted: 0,
+            shed: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The supply the bucket currently refills at, rps.
+    pub fn supply_rps(&self) -> f64 {
+        self.rate_rps
+    }
+
+    /// Numerically highest tier currently admitted (diagnostics).
+    pub fn tier_cutoff(&self) -> Tier {
+        self.cutoff
+    }
+
+    fn burst_tokens(&self) -> f64 {
+        (self.rate_rps * self.slack * self.burst_s).max(1.0)
+    }
+
+    fn refill(&mut self, now_s: f64) {
+        if now_s > self.last_s {
+            self.tokens = (self.tokens + (now_s - self.last_s) * self.rate_rps * self.slack)
+                .min(self.burst_tokens());
+            self.last_s = now_s;
+        }
+    }
+
+    /// Re-size the bucket from the service's granted capacity (the
+    /// adapter calls this every tick with Σ `th_m(n, b)` of the committed
+    /// allocation).  A supply of 0 means the service holds no capacity:
+    /// the gate sheds everything until capacity returns.
+    pub fn set_supply(&mut self, now_s: f64, supply_rps: f64) {
+        self.refill(now_s);
+        self.rate_rps = supply_rps.max(0.0);
+        // a revoked supply empties the bucket outright — the burst floor
+        // of one token must not let a zero-capacity service admit one
+        // more request
+        self.tokens = if self.rate_rps > 0.0 {
+            self.tokens.min(self.burst_tokens())
+        } else {
+            0.0
+        };
+        self.supplied = true;
+    }
+
+    fn roll_windows(&mut self, now_s: f64) {
+        // Spare-token level that counts as recovered: half the bucket,
+        // but never above one token — a tiny supply caps its bucket at
+        // exactly 1.0, and a strict `> 1.0` test would make readmission
+        // unreachable there.
+        let recovered = (self.burst_tokens() / 2.0).min(1.0);
+        while now_s - self.window_start_s >= self.ctl_window_s {
+            if self.pressured {
+                // a tier we meant to serve was shed: exclude the lowest
+                // admitted tier (never the gate's own floor tier) so its
+                // tokens flow upward
+                if self.cutoff > self.min_tier {
+                    self.cutoff -= 1;
+                }
+            } else if self.tokens >= recovered && self.cutoff < self.max_tier {
+                // a full quiet window with spare tokens: readmit one tier
+                self.cutoff += 1;
+            }
+            self.pressured = false;
+            self.window_start_s += self.ctl_window_s;
+        }
+    }
+
+    /// Admit or shed one arrival at `now_s`.  O(1), no allocation, no RNG.
+    pub fn admit(&mut self, now_s: f64, tier: Tier) -> bool {
+        if !self.enabled || !self.supplied {
+            return true;
+        }
+        self.refill(now_s);
+        self.roll_windows(now_s);
+        if tier > self.cutoff {
+            // excluded tier: shed at the door without touching the bucket
+            // (and without counting as pressure — door sheds are the
+            // cutoff working, not the cutoff failing)
+            self.shed += 1;
+            return false;
+        }
+        if self.tokens + ADMIT_EPS >= 1.0 {
+            self.tokens = (self.tokens - 1.0).max(0.0);
+            self.admitted += 1;
+            true
+        } else {
+            self.shed += 1;
+            self.pressured = true;
+            false
+        }
+    }
+}
+
+/// Why one arrival left the request path the way it did.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouteOutcome {
+    /// Admitted and routed to the named backend.
+    Routed(Arc<str>),
+    /// Refused at the admission gate (carries the request's tier).
+    Shed(Tier),
+    /// Admitted, but the router had nowhere to send it.
+    Denied(NoRoute),
+}
+
+/// The unified request path: admission gate → priority tiers → smooth-WRR
+/// quota routing.  Admitted traffic flows through the exact pre-existing
+/// dispatcher; the gate only decides who gets to reach it.
+#[derive(Debug, Clone)]
+pub struct RequestPath {
+    gate: AdmissionGate,
+    dispatcher: Dispatcher,
+}
+
+impl RequestPath {
+    pub fn new(gate: AdmissionGate) -> Self {
+        Self {
+            gate,
+            dispatcher: Dispatcher::new(),
+        }
+    }
+
+    pub fn dispatcher(&self) -> &Dispatcher {
+        &self.dispatcher
+    }
+
+    pub fn gate(&self) -> &AdmissionGate {
+        &self.gate
+    }
+
+    /// Admission step only — engines that need custom post-route pod
+    /// placement call this, then route on [`Self::dispatcher`].
+    pub fn admit(&mut self, now_s: f64, tier: Tier) -> bool {
+        self.gate.admit(now_s, tier)
+    }
+
+    /// Refresh the gate's supply (adapter tick).
+    pub fn set_supply(&mut self, now_s: f64, supply_rps: f64) {
+        self.gate.set_supply(now_s, supply_rps);
+    }
+
+    /// Swap the router's quota table (adapter tick).
+    pub fn set_weights(&self, weights: &[(String, f64)]) {
+        self.dispatcher.set_weights(weights);
+    }
+
+    /// The whole pipeline for one arrival.
+    pub fn handle(&mut self, now_s: f64, tier: Tier) -> RouteOutcome {
+        if !self.gate.admit(now_s, tier) {
+            return RouteOutcome::Shed(tier);
+        }
+        match self.dispatcher.try_route() {
+            Ok(v) => RouteOutcome::Routed(v),
+            Err(e) => RouteOutcome::Denied(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(burst_s: f64) -> AdmissionConfig {
+        AdmissionConfig {
+            enabled: true,
+            burst_s,
+            slack: 1.0,
+            ctl_window_s: 1.0,
+        }
+    }
+
+    /// Offer `seconds` of deterministic arrivals at `rps` with tiers
+    /// cycling through `pattern`; returns (admitted, shed) per tier index.
+    fn drive(gate: &mut AdmissionGate, rps: f64, seconds: f64, pattern: &[Tier]) -> Vec<(u64, u64)> {
+        let max_tier = *pattern.iter().max().unwrap() as usize;
+        let mut stats = vec![(0u64, 0u64); max_tier + 1];
+        let n = (rps * seconds) as usize;
+        for i in 0..n {
+            let t = (i + 1) as f64 / rps;
+            let tier = pattern[i % pattern.len()];
+            if gate.admit(t, tier) {
+                stats[tier as usize].0 += 1;
+            } else {
+                stats[tier as usize].1 += 1;
+            }
+        }
+        stats
+    }
+
+    #[test]
+    fn disabled_gate_admits_everything() {
+        let mut g = AdmissionGate::disabled();
+        assert!(!g.enabled());
+        for i in 0..1000 {
+            assert!(g.admit(i as f64 * 0.001, (i % 3) as Tier));
+        }
+        assert_eq!(g.shed, 0);
+    }
+
+    #[test]
+    fn under_capacity_nothing_is_shed() {
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 1);
+        g.set_supply(0.0, 100.0);
+        let stats = drive(&mut g, 80.0, 30.0, &[0, 1]);
+        assert_eq!(stats[0].1 + stats[1].1, 0, "{stats:?}");
+        assert_eq!(g.admitted, 80 * 30);
+    }
+
+    #[test]
+    fn overload_sheds_roughly_the_excess() {
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 0);
+        g.set_supply(0.0, 100.0);
+        let stats = drive(&mut g, 200.0, 30.0, &[0]);
+        let shed_frac = stats[0].1 as f64 / (stats[0].0 + stats[0].1) as f64;
+        // 2x overload: ~half shed (burst absorption gives a little slack)
+        assert!((0.40..=0.55).contains(&shed_frac), "{shed_frac}");
+    }
+
+    #[test]
+    fn zero_supply_sheds_everything() {
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 0);
+        g.set_supply(0.0, 0.0);
+        let stats = drive(&mut g, 50.0, 5.0, &[0]);
+        assert_eq!(stats[0].0, 0, "{stats:?}");
+        // revoking a supply must also drain a previously full bucket —
+        // not even the one-token burst floor may leak through
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 0);
+        g.set_supply(0.0, 100.0);
+        let _ = drive(&mut g, 10.0, 5.0, &[0]); // bucket refills to burst
+        g.set_supply(5.0, 0.0);
+        assert!(!g.admit(5.1, 0), "revoked supply must shed immediately");
+    }
+
+    #[test]
+    fn sustained_overload_converges_to_lowest_tier_first() {
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 1);
+        g.set_supply(0.0, 100.0);
+        // 3x overload, tiers alternating: after the first control window
+        // the cutoff excludes tier 1 entirely
+        let _warmup = drive(&mut g, 300.0, 2.0, &[0, 1]);
+        assert_eq!(g.tier_cutoff(), 0);
+        let mut after = vec![(0u64, 0u64); 2];
+        for i in 0..(300 * 10) {
+            let t = 2.0 + (i + 1) as f64 / 300.0;
+            let tier = (i % 2) as Tier;
+            if g.admit(t, tier) {
+                after[tier as usize].0 += 1;
+            } else {
+                after[tier as usize].1 += 1;
+            }
+        }
+        assert_eq!(after[1].0, 0, "tier 1 must starve while tier 0 sheds: {after:?}");
+        assert!(after[0].0 > 0, "tier 0 keeps serving: {after:?}");
+        assert!(after[0].1 > 0, "tier 0 still sheds its own excess: {after:?}");
+    }
+
+    #[test]
+    fn cutoff_recovers_when_pressure_lifts() {
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 1);
+        g.set_supply(0.0, 100.0);
+        let _ = drive(&mut g, 300.0, 3.0, &[0, 1]);
+        assert_eq!(g.tier_cutoff(), 0);
+        // quiet spell: well under capacity for several control windows
+        for i in 0..50 {
+            let t = 3.0 + (i + 1) as f64 * 0.1;
+            let _ = g.admit(t, 0);
+        }
+        assert_eq!(g.tier_cutoff(), 1, "tier 1 must be readmitted");
+    }
+
+    #[test]
+    fn tiny_supply_can_still_readmit_a_tier() {
+        // Regression: at supply ≤ 1/burst_s the bucket caps at exactly
+        // 1.0 token, and a strict `tokens > 1.0` recovery test could
+        // never pass — a single transient burst would exclude the lower
+        // tier forever.
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 1);
+        g.set_supply(0.0, 0.8);
+        // overload burst: drop the cutoff to 0
+        for i in 0..20 {
+            let _ = g.admit(0.1 * (i + 1) as f64, if i % 2 == 0 { 0 } else { 1 });
+        }
+        assert_eq!(g.tier_cutoff(), 0);
+        // long quiet spell: the bucket refills to its (1-token) cap and
+        // the excluded tier must come back
+        for i in 0..10 {
+            let _ = g.admit(2.0 + 10.0 * (i + 1) as f64, 0);
+        }
+        assert_eq!(g.tier_cutoff(), 1, "tiny-supply gate must recover");
+    }
+
+    #[test]
+    fn cutoff_never_drops_below_the_gates_lowest_tier() {
+        // Regression: a service whose only tier is 1 (ladder 1..=1) must
+        // behave as a plain token bucket — the cutoff cannot black out
+        // the service's whole stream.
+        let mut g = AdmissionGate::new(&cfg(1.0), 1, 1);
+        g.set_supply(0.0, 100.0);
+        let stats = drive(&mut g, 300.0, 10.0, &[1]);
+        assert_eq!(g.tier_cutoff(), 1);
+        // plain 3x-overload bucket: ~1/3 admitted, the rest shed — no
+        // all-shed blackout windows
+        let frac = stats[1].0 as f64 / (stats[1].0 + stats[1].1) as f64;
+        assert!((0.25..0.45).contains(&frac), "admitted fraction {frac}");
+    }
+
+    #[test]
+    fn supply_refresh_rescales_the_bucket() {
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 0);
+        g.set_supply(0.0, 10.0);
+        let _ = drive(&mut g, 40.0, 5.0, &[0]);
+        let shed_small = g.shed;
+        assert!(shed_small > 0);
+        // the adapter grants 4x the capacity: the same offered load fits
+        g.set_supply(5.0, 40.0);
+        let before = g.shed;
+        for i in 0..(40 * 5) {
+            let t = 5.0 + (i + 1) as f64 / 40.0;
+            let _ = g.admit(t, 0);
+        }
+        assert_eq!(g.shed, before, "no sheds at the refreshed supply");
+    }
+
+    #[test]
+    fn request_path_composes_gate_and_router() {
+        let mut path = RequestPath::new(AdmissionGate::new(&cfg(1.0), 0, 0));
+        // admitted but unconfigured: Denied(Unconfigured)
+        path.set_supply(0.0, 10.0);
+        assert_eq!(
+            path.handle(0.5, 0),
+            RouteOutcome::Denied(NoRoute::Unconfigured)
+        );
+        path.set_weights(&[("resnet18".into(), 1.0)]);
+        match path.handle(0.6, 0) {
+            RouteOutcome::Routed(v) => assert_eq!(v.as_ref(), "resnet18"),
+            other => panic!("expected a route, got {other:?}"),
+        }
+        // zero supply: shed before the router is consulted
+        path.set_supply(1.0, 0.0);
+        assert_eq!(path.handle(10.0, 2), RouteOutcome::Shed(2));
+        // a zeroed quota table is NoCapacity, distinct from Unconfigured
+        path.set_supply(10.0, 10.0);
+        path.set_weights(&[]);
+        assert_eq!(
+            path.handle(10.5, 0),
+            RouteOutcome::Denied(NoRoute::NoCapacity)
+        );
+    }
+}

@@ -1,4 +1,5 @@
-//! Dispatcher: weighted round-robin load balancing over model variants.
+//! Dispatcher: the request path — admission gate, priority tiers, and
+//! weighted round-robin load balancing over model variants.
 //!
 //! The paper's dispatcher "load balances the incoming workload among the
 //! models based on the weighted round-robin algorithm using the models'
@@ -7,22 +8,56 @@
 //! smoothest possible interleaving, avoiding the burst-to-one-backend
 //! behaviour of naive WRR — which matters for per-variant queue depth.
 //!
+//! [`RequestPath`] (see [`admission`]) composes an [`AdmissionGate`] in
+//! front of the router: a token bucket sized from the service's granted
+//! capacity sheds excess arrivals at the door — lowest priority tier
+//! first — instead of queueing them to death.
+//!
 //! Weight tables are swapped atomically by the adapter; `route()` is the
-//! request hot path (lock per call, O(#backends)).
+//! request hot path (lock per call, O(#backends)).  Backend names are
+//! interned as `Arc<str>` so a route returns a reference-count bump, not
+//! a fresh `String` allocation per request (see `micro_hotpaths`).
+
+pub mod admission;
+
+pub use admission::{AdmissionGate, RequestPath, RouteOutcome};
 
 use std::sync::{Arc, Mutex};
 
+/// Priority tier of a request or service; 0 is the most important.
+pub type Tier = u8;
+
+/// Why [`Dispatcher::try_route`] returned no backend: the two states were
+/// previously conflated as `None`, but the admission gate (and operators)
+/// need to tell "nothing was ever configured" apart from "a weight table
+/// was set and granted no capacity".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoRoute {
+    /// `set_weights` has never been called on this dispatcher.
+    Unconfigured,
+    /// A weight table was applied, but it granted no positive-weight
+    /// backend (all quotas zero, or an empty table).
+    NoCapacity,
+}
+
 #[derive(Debug, Clone)]
 struct Backend {
-    name: String,
+    name: Arc<str>,
     weight: f64,
     current: f64,
+}
+
+#[derive(Debug)]
+struct DispatcherState {
+    backends: Vec<Backend>,
+    /// Whether `set_weights` has ever been called (empty-vs-zeroed).
+    configured: bool,
 }
 
 /// Smooth weighted round-robin router.
 #[derive(Debug, Clone)]
 pub struct Dispatcher {
-    inner: Arc<Mutex<Vec<Backend>>>,
+    inner: Arc<Mutex<DispatcherState>>,
 }
 
 impl Default for Dispatcher {
@@ -34,7 +69,10 @@ impl Default for Dispatcher {
 impl Dispatcher {
     pub fn new() -> Self {
         Self {
-            inner: Arc::new(Mutex::new(Vec::new())),
+            inner: Arc::new(Mutex::new(DispatcherState {
+                backends: Vec::new(),
+                configured: false,
+            })),
         }
     }
 
@@ -57,51 +95,69 @@ impl Dispatcher {
             if *w <= 0.0 {
                 continue;
             }
-            let current = inner
-                .iter()
-                .find(|b| &b.name == name)
+            let existing = inner.backends.iter().find(|b| &*b.name == name.as_str());
+            let current = existing
                 .map(|b| b.current.clamp(-total, total))
                 .unwrap_or(0.0);
+            // keep the interned name alive across re-sets: the common
+            // every-tick re-apply allocates nothing per surviving backend
+            let interned = existing
+                .map(|b| b.name.clone())
+                .unwrap_or_else(|| Arc::from(name.as_str()));
             next.push(Backend {
-                name: name.clone(),
+                name: interned,
                 weight: *w,
                 current,
             });
         }
-        *inner = next;
+        inner.backends = next;
+        inner.configured = true;
     }
 
-    /// Pick the next backend (smooth WRR). None if no backend is active.
-    pub fn route(&self) -> Option<String> {
+    /// Pick the next backend (smooth WRR).  The returned name is interned:
+    /// cloning it is a reference-count bump, not a string allocation.
+    pub fn try_route(&self) -> Result<Arc<str>, NoRoute> {
         let mut inner = self.inner.lock().unwrap();
-        if inner.is_empty() {
-            return None;
+        if inner.backends.is_empty() {
+            return Err(if inner.configured {
+                NoRoute::NoCapacity
+            } else {
+                NoRoute::Unconfigured
+            });
         }
-        let total: f64 = inner.iter().map(|b| b.weight).sum();
-        for b in inner.iter_mut() {
+        let total: f64 = inner.backends.iter().map(|b| b.weight).sum();
+        for b in inner.backends.iter_mut() {
             b.current += b.weight;
         }
         let best = inner
+            .backends
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.current.total_cmp(&b.1.current))
             .map(|(i, _)| i)
             .expect("non-empty");
-        inner[best].current -= total;
-        Some(inner[best].name.clone())
+        inner.backends[best].current -= total;
+        Ok(inner.backends[best].name.clone())
+    }
+
+    /// [`Self::try_route`] without the reason (legacy callers that treat
+    /// both empty states as "drop the request").
+    pub fn route(&self) -> Option<Arc<str>> {
+        self.try_route().ok()
     }
 
     /// Current active backends and their weights (diagnostics).
     pub fn snapshot(&self) -> Vec<(String, f64)> {
         self.inner
             .lock().unwrap()
+            .backends
             .iter()
-            .map(|b| (b.name.clone(), b.weight))
+            .map(|b| (b.name.to_string(), b.weight))
             .collect()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().is_empty()
+        self.inner.lock().unwrap().backends.is_empty()
     }
 }
 
@@ -113,7 +169,7 @@ mod tests {
     fn distribution(d: &Dispatcher, n: usize) -> HashMap<String, usize> {
         let mut counts = HashMap::new();
         for _ in 0..n {
-            *counts.entry(d.route().unwrap()).or_insert(0) += 1;
+            *counts.entry(d.route().unwrap().to_string()).or_insert(0) += 1;
         }
         counts
     }
@@ -137,7 +193,7 @@ mod tests {
         let d = Dispatcher::new();
         d.set_weights(&[("a".into(), 5.0), ("b".into(), 1.0)]);
         // in any window of 6, b appears exactly once (smooth WRR property)
-        let seq: Vec<String> = (0..60).map(|_| d.route().unwrap()).collect();
+        let seq: Vec<String> = (0..60).map(|_| d.route().unwrap().to_string()).collect();
         for w in seq.chunks(6) {
             assert_eq!(w.iter().filter(|s| *s == "b").count(), 1, "{seq:?}");
         }
@@ -161,6 +217,34 @@ mod tests {
     }
 
     #[test]
+    fn unconfigured_and_zero_capacity_are_distinct() {
+        // Regression: `route()` used to conflate "never configured" with
+        // "configured but granted nothing" — both were `None`.
+        let d = Dispatcher::new();
+        assert_eq!(d.try_route(), Err(NoRoute::Unconfigured));
+        // an all-zero table is a decision that grants no capacity
+        d.set_weights(&[("a".into(), 0.0)]);
+        assert_eq!(d.try_route(), Err(NoRoute::NoCapacity));
+        // so is an explicitly empty one
+        d.set_weights(&[]);
+        assert_eq!(d.try_route(), Err(NoRoute::NoCapacity));
+        // capacity granted again: routing resumes
+        d.set_weights(&[("a".into(), 1.0)]);
+        assert_eq!(d.try_route().unwrap().as_ref(), "a");
+    }
+
+    #[test]
+    fn routed_names_are_interned_across_resets() {
+        let d = Dispatcher::new();
+        d.set_weights(&[("a".into(), 1.0)]);
+        let first = d.route().unwrap();
+        // the every-tick unchanged re-set must keep the same interned name
+        d.set_weights(&[("a".into(), 1.0)]);
+        let second = d.route().unwrap();
+        assert!(Arc::ptr_eq(&first, &second));
+    }
+
+    #[test]
     fn downweighting_does_not_burst_to_the_shrunk_backend() {
         let d = Dispatcher::new();
         d.set_weights(&[("a".into(), 100.0), ("b".into(), 1.0)]);
@@ -171,7 +255,7 @@ mod tests {
             let _ = d.route();
         }
         d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0)]);
-        let next: Vec<String> = (0..20).map(|_| d.route().unwrap()).collect();
+        let next: Vec<String> = (0..20).map(|_| d.route().unwrap().to_string()).collect();
         let a_count = next.iter().filter(|s| *s == "a").count();
         assert!(
             (8..=12).contains(&a_count),
@@ -190,7 +274,7 @@ mod tests {
         let mut b_count = 0;
         for _ in 0..101 {
             for _ in 0..10 {
-                if d.route().unwrap() == "b" {
+                if d.route().unwrap().as_ref() == "b" {
                     b_count += 1;
                 }
             }

@@ -105,6 +105,7 @@ impl Scenario {
                 bucket_s: 10.0,
                 queue_timeout_s: 10.0,
                 batch_max_wait_s: self.config.batching.max_wait_s,
+                admission: self.config.admission,
             },
         );
         let result: SimResult = sim.run(policy.as_mut(), &self.trace);
@@ -222,6 +223,7 @@ impl SaturationProbe {
                     bucket_s: 10.0,
                     queue_timeout_s: 10.0,
                     batch_max_wait_s: 0.05,
+                    admission: Default::default(),
                 },
             );
             let mut policy = StaticPolicy::with_batch(variant, cores, self.batch);

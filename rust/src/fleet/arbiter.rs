@@ -18,16 +18,33 @@
 //!
 //! The arbiter then **water-fills**: starting every service at its
 //! guaranteed-minimum floor, it repeatedly grants one core to the service
-//! with the highest *priority-weighted marginal utility*
-//! `w_i · (v_i(g_i + 1) − v_i(g_i))` until the global budget is exhausted
-//! or every curve is at its cap.  Because a service's next marginal
-//! changes only when *its own* grant changes, every service keeps exactly
-//! one live claim in a binary max-heap and each grant is one pop + one
-//! push — `O(B log N)` per tick instead of the old `O(B · N)` linear
+//! with the highest *effective marginal utility*
+//! `w_i · burn_i · (v_i(g_i + 1) − v_i(g_i))` until the global budget is
+//! exhausted or every curve is at its cap.  Because a service's next
+//! marginal changes only when *its own* grant changes, every service keeps
+//! exactly one live claim in a binary max-heap and each grant is one pop +
+//! one push — `O(B log N)` per tick instead of the old `O(B · N)` linear
 //! rescan ([`CoreArbiter::partition_scan`], kept as the property-test
 //! reference and perf baseline).  Ties break toward the lowest service
 //! index, so the partition is a pure function of its inputs —
 //! deterministic across runs with the same seed.
+//!
+//! Two priority signals modulate the fill:
+//!
+//! * **Strict tiers** ([`ArbiterEntry::tier`], 0 = most important) are a
+//!   *lexicographic pre-pass*: while any tier-0 service still has positive
+//!   marginal utility, no tier-1 weight — however large — can claim a
+//!   core.  Within a tier the weighted fill is unchanged; leftover budget
+//!   (all positive marginals exhausted) falls through to a final
+//!   tier-blind fill so grants-as-caps keep widening feasible sets.  A
+//!   single-tier fleet takes the heap fill directly and is bit-identical
+//!   to the pre-tier arbiter.
+//! * **SLO burn rate** ([`ArbiterEntry::burn`], from
+//!   [`crate::monitoring::SloBurnMeter`]) boosts the marginals of services
+//!   actively burning their error budget: the multiplier is
+//!   `1 + burn_boost · min(burn − 1, 3)` for `burn > 1`, neutral (exactly
+//!   1.0) otherwise, so a `burn_boost` of 0 — the default — leaves every
+//!   marginal bit-identical to the burn-unaware arbiter.
 //!
 //! Grants are **caps**, not reservations: each service's solver still
 //! decides how many of its granted cores to actually allocate (the β·RC
@@ -37,14 +54,28 @@
 //! `g` is feasible at `g + 1`), so the marginals are nonnegative and the
 //! fill order follows genuine utility.
 
+use crate::dispatcher::Tier;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+/// Cap on how far past its budget a burning service's overshoot can
+/// scale the boost (keeps one melting service from flattening the
+/// weighted order entirely).
+const BURN_OVERSHOOT_CLAMP: f64 = 3.0;
 
 /// One service's input to [`CoreArbiter::partition`].
 #[derive(Debug, Clone)]
 pub struct ArbiterEntry {
     /// Arbitration weight `w_i` (> 0); scales this service's marginals.
     pub priority: f64,
+    /// Strict priority tier (0 = most important): outranks any weight of
+    /// a numerically higher tier while this service has positive marginal
+    /// utility.
+    pub tier: Tier,
+    /// SLO-burn-rate signal: rolling violation rate over the error budget
+    /// (≤ 1 = inside budget, neutral; > 1 = burning, boosts marginals
+    /// when the arbiter's `burn_boost` is enabled).
+    pub burn: f64,
     /// Guaranteed-minimum core grant, handed out before water-filling.
     pub floor: usize,
     /// `v(g)` for `g in 0..=cap` (length `cap + 1`).  `None` marks a
@@ -85,11 +116,36 @@ impl Ord for Claim {
 pub struct CoreArbiter {
     /// Total cores the fleet may grant across all services.
     pub global_budget: usize,
+    /// Strength of the SLO-burn marginal boost; 0 (default) disables it
+    /// and keeps partitions bit-identical to the burn-unaware arbiter.
+    pub burn_boost: f64,
 }
 
 impl CoreArbiter {
     pub fn new(global_budget: usize) -> Self {
-        Self { global_budget }
+        Self {
+            global_budget,
+            burn_boost: 0.0,
+        }
+    }
+
+    /// Enable the SLO-burn marginal boost (builder style).
+    pub fn with_burn_boost(mut self, burn_boost: f64) -> Self {
+        self.burn_boost = burn_boost;
+        self
+    }
+
+    /// Effective arbitration weight of one entry: priority, scaled by the
+    /// burn boost when the service is past its error budget.  With
+    /// `burn_boost == 0` this returns `priority` itself (no float op), so
+    /// the default arbiter multiplies nothing.
+    fn weight(&self, e: &ArbiterEntry) -> f64 {
+        if self.burn_boost == 0.0 {
+            e.priority
+        } else {
+            let overshoot = (e.burn - 1.0).clamp(0.0, BURN_OVERSHOOT_CLAMP);
+            e.priority * (1.0 + self.burn_boost * overshoot)
+        }
     }
 
     /// Partition the global budget into per-service core grants.
@@ -113,12 +169,45 @@ impl CoreArbiter {
             self.global_budget
         );
         let mut remaining = self.global_budget.saturating_sub(floors);
+        let mut tiers: Vec<Tier> = entries.iter().map(|e| e.tier).collect();
+        tiers.sort_unstable();
+        tiers.dedup();
+        if tiers.len() > 1 {
+            // Lexicographic pre-pass: each tier drains its positive
+            // marginals before any lower tier sees a core.
+            for &t in &tiers {
+                remaining = self.heap_fill(entries, &mut grants, remaining, Some(t), true);
+            }
+        }
+        // Tier-blind fill of whatever is left (the single-tier fast path
+        // runs only this, bit-identical to the pre-tier arbiter).
+        self.heap_fill(entries, &mut grants, remaining, None, false);
+        grants
+    }
+
+    /// One water-fill round over `entries`, restricted to `tier` when
+    /// given.  With `positive_only` the fill stops as soon as the best
+    /// live claim has no positive marginal (so a saturated high tier
+    /// cannot absorb budget a lower tier still has real utility for);
+    /// otherwise it runs to budget/cap exhaustion.  Returns the budget
+    /// left over.
+    fn heap_fill(
+        &self,
+        entries: &[ArbiterEntry],
+        grants: &mut [usize],
+        mut remaining: usize,
+        tier: Option<Tier>,
+        positive_only: bool,
+    ) -> usize {
         let claim_at = |i: usize, g: usize| -> Option<Claim> {
+            if tier.is_some_and(|t| entries[i].tier != t) {
+                return None;
+            }
             let curve = entries[i].curve.as_ref()?;
             if g + 1 >= curve.len() {
                 return None; // at this curve's cap
             }
-            let marginal = entries[i].priority * (curve[g + 1] - curve[g]);
+            let marginal = self.weight(&entries[i]) * (curve[g + 1] - curve[g]);
             if marginal.is_nan() {
                 return None; // unsolvable curve (-inf flats): never claims
             }
@@ -133,22 +222,27 @@ impl CoreArbiter {
         // Each service holds exactly one claim (its marginal at its
         // current grant), so a pop is always fresh — no lazy invalidation.
         while remaining > 0 {
-            let Some(Claim { idx: i, .. }) = heap.pop() else {
+            let Some(claim) = heap.pop() else {
                 break;
             };
+            if positive_only && claim.marginal <= 0.0 {
+                break;
+            }
+            let i = claim.idx;
             grants[i] += 1;
             remaining -= 1;
             if let Some(c) = claim_at(i, grants[i]) {
                 heap.push(c);
             }
         }
-        grants
+        remaining
     }
 
     /// Reference implementation: the original `O(budget × N)` linear
-    /// marginal rescan.  Kept as the ground truth the heap-based
-    /// [`Self::partition`] is property-tested against, and as the "old"
-    /// side of the `micro_hotpaths` arbiter comparison.
+    /// marginal rescan (with the same tier pre-pass structure).  Kept as
+    /// the ground truth the heap-based [`Self::partition`] is
+    /// property-tested against, and as the "old" side of the
+    /// `micro_hotpaths` arbiter comparison.
     pub fn partition_scan(&self, entries: &[ArbiterEntry]) -> Vec<usize> {
         let mut grants: Vec<usize> = entries.iter().map(|e| e.floor).collect();
         let floors: usize = grants.iter().sum();
@@ -158,16 +252,39 @@ impl CoreArbiter {
             self.global_budget
         );
         let mut remaining = self.global_budget.saturating_sub(floors);
+        let mut tiers: Vec<Tier> = entries.iter().map(|e| e.tier).collect();
+        tiers.sort_unstable();
+        tiers.dedup();
+        if tiers.len() > 1 {
+            for &t in &tiers {
+                remaining = self.scan_fill(entries, &mut grants, remaining, Some(t), true);
+            }
+        }
+        self.scan_fill(entries, &mut grants, remaining, None, false);
+        grants
+    }
+
+    fn scan_fill(
+        &self,
+        entries: &[ArbiterEntry],
+        grants: &mut [usize],
+        mut remaining: usize,
+        tier: Option<Tier>,
+        positive_only: bool,
+    ) -> usize {
         while remaining > 0 {
-            // Highest priority-weighted marginal utility wins the next
-            // core; strict `>` keeps ties at the lowest index.
+            // Highest effective marginal utility wins the next core;
+            // strict `>` keeps ties at the lowest index.
             let mut pick: Option<(usize, f64)> = None;
             for (i, e) in entries.iter().enumerate() {
+                if tier.is_some_and(|t| e.tier != t) {
+                    continue;
+                }
                 let Some(curve) = &e.curve else { continue };
                 if grants[i] + 1 >= curve.len() {
                     continue; // at this curve's cap
                 }
-                let marginal = e.priority * (curve[grants[i] + 1] - curve[grants[i]]);
+                let marginal = self.weight(e) * (curve[grants[i] + 1] - curve[grants[i]]);
                 if marginal.is_nan() {
                     continue; // unsolvable curve (-inf flats): never claims
                 }
@@ -175,11 +292,14 @@ impl CoreArbiter {
                     pick = Some((i, marginal));
                 }
             }
-            let Some((i, _)) = pick else { break };
+            let Some((i, m)) = pick else { break };
+            if positive_only && m <= 0.0 {
+                break;
+            }
             grants[i] += 1;
             remaining -= 1;
         }
-        grants
+        remaining
     }
 }
 
@@ -190,8 +310,20 @@ mod tests {
     fn entry(priority: f64, floor: usize, curve: Option<Vec<f64>>) -> ArbiterEntry {
         ArbiterEntry {
             priority,
+            tier: 0,
+            burn: 1.0,
             floor,
             curve,
+        }
+    }
+
+    fn tiered(tier: Tier, priority: f64, curve: Vec<f64>) -> ArbiterEntry {
+        ArbiterEntry {
+            priority,
+            tier,
+            burn: 1.0,
+            floor: 0,
+            curve: Some(curve),
         }
     }
 
@@ -296,5 +428,102 @@ mod tests {
         let scan = arb.partition_scan(&entries);
         assert_eq!(heap, scan);
         assert_eq!(heap, vec![9, 0, 0]);
+    }
+
+    #[test]
+    fn strict_tier_outranks_any_weight() {
+        // The ISSUE's semantics: tier 0 at weight 1 beats tier 1 at
+        // weight 100 for every core tier 0 has positive marginal for.
+        let arb = CoreArbiter::new(8);
+        let grants = arb.partition(&[
+            tiered(1, 100.0, kneed(8, 8, 1.0)),
+            tiered(0, 1.0, kneed(8, 8, 1.0)),
+        ]);
+        assert_eq!(grants, vec![0, 8]);
+    }
+
+    #[test]
+    fn saturated_high_tier_passes_the_leftover_down() {
+        // Tier 0 saturates at 3 cores; the rest must flow to tier 1, not
+        // pile up as zero-marginal grants on tier 0.
+        let arb = CoreArbiter::new(10);
+        let entries = [
+            tiered(0, 1.0, kneed(10, 3, 1.0)),
+            tiered(1, 1.0, kneed(10, 7, 1.0)),
+        ];
+        let grants = arb.partition(&entries);
+        assert_eq!(grants, arb.partition_scan(&entries));
+        assert_eq!(grants[0], 3);
+        assert_eq!(grants[1], 7);
+    }
+
+    #[test]
+    fn tiers_fill_lexicographically_across_three_levels() {
+        let arb = CoreArbiter::new(9);
+        let entries = [
+            tiered(2, 10.0, kneed(9, 4, 1.0)),
+            tiered(0, 1.0, kneed(9, 4, 1.0)),
+            tiered(1, 5.0, kneed(9, 4, 1.0)),
+        ];
+        let grants = arb.partition(&entries);
+        assert_eq!(grants, arb.partition_scan(&entries));
+        // 9 cores: tier 0 fills its knee (4), tier 1 next (4), tier 2
+        // gets the single leftover
+        assert_eq!(grants, vec![1, 4, 4]);
+    }
+
+    #[test]
+    fn burn_boost_shifts_contended_cores_to_the_burning_service() {
+        // Identical curves and weights; service 1 is burning at 3x its
+        // error budget.  With the boost off the tie goes to index 0
+        // everywhere; with it on, service 1's marginals win.
+        let mk = || {
+            [
+                ArbiterEntry {
+                    priority: 1.0,
+                    tier: 0,
+                    burn: 0.5,
+                    floor: 0,
+                    curve: Some(kneed(8, 8, 1.0)),
+                },
+                ArbiterEntry {
+                    priority: 1.0,
+                    tier: 0,
+                    burn: 3.0,
+                    floor: 0,
+                    curve: Some(kneed(8, 8, 1.0)),
+                },
+            ]
+        };
+        let neutral = CoreArbiter::new(8).partition(&mk());
+        assert_eq!(neutral, vec![8, 0]);
+        let boosted_arb = CoreArbiter::new(8).with_burn_boost(1.0);
+        let boosted = boosted_arb.partition(&mk());
+        assert_eq!(boosted, boosted_arb.partition_scan(&mk()));
+        assert_eq!(boosted, vec![0, 8]);
+    }
+
+    #[test]
+    fn burn_under_budget_is_neutral() {
+        // burn ≤ 1 must not perturb the fill even with the boost enabled.
+        let arb = CoreArbiter::new(8).with_burn_boost(2.0);
+        let entries = [
+            ArbiterEntry {
+                priority: 1.0,
+                tier: 0,
+                burn: 0.0,
+                floor: 0,
+                curve: Some(kneed(8, 8, 1.0)),
+            },
+            ArbiterEntry {
+                priority: 1.0,
+                tier: 0,
+                burn: 1.0,
+                floor: 0,
+                curve: Some(kneed(8, 8, 1.0)),
+            },
+        ];
+        // every marginal still ties -> lowest index wins every round
+        assert_eq!(arb.partition(&entries), vec![8, 0]);
     }
 }

@@ -37,7 +37,8 @@ pub use sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 
 use crate::adapter::InfAdapterPolicy;
 use crate::baselines::VpaPolicy;
-use crate::config::{BatchingConfig, Config, ObjectiveWeights};
+use crate::config::{AdmissionConfig, BatchingConfig, Config, ObjectiveWeights};
+use crate::dispatcher::Tier;
 use crate::forecaster;
 use crate::metrics::{FleetSummary, RunSummary};
 use crate::profiler::ProfileSet;
@@ -65,6 +66,11 @@ pub struct ServiceSpec {
     pub slo_s: f64,
     pub weights: ObjectiveWeights,
     pub priority: f64,
+    /// Strict priority tier (0 = most important); also the default
+    /// per-request tier when the trace carries no class mix.
+    pub tier: Tier,
+    /// Allowed SLO-violation fraction (burn-rate denominator).
+    pub error_budget: f64,
     pub floor_cores: usize,
     pub forecaster: String,
     pub headroom: f64,
@@ -111,6 +117,10 @@ pub struct FleetScenario {
     pub node_cores: Vec<usize>,
     pub adapter_interval_s: f64,
     pub seed: u64,
+    /// Request-path admission control (off by default).
+    pub admission: AdmissionConfig,
+    /// Arbiter SLO-burn boost strength (0 = off).
+    pub burn_boost: f64,
 }
 
 impl FleetScenario {
@@ -134,11 +144,14 @@ impl FleetScenario {
                         s.base_rps,
                         seconds,
                         trace_seed(config.seed, i),
-                    )?,
+                    )?
+                    .with_class_mix(s.class_mix.clone()),
                     profiles: profiles.clone(),
                     slo_s: s.slo_latency_ms / 1000.0,
                     weights: config.weights,
                     priority: s.priority,
+                    tier: s.tier,
+                    error_budget: s.error_budget,
                     floor_cores: s.floor_cores,
                     forecaster: config.adapter.forecaster.clone(),
                     headroom: config.adapter.headroom,
@@ -152,6 +165,8 @@ impl FleetScenario {
             node_cores: config.cluster.node_cores.clone(),
             adapter_interval_s: config.adapter.interval_s,
             seed: config.seed,
+            admission: config.admission,
+            burn_boost: config.fleet.burn_boost,
         })
     }
 
@@ -188,6 +203,8 @@ impl FleetScenario {
                     slo_s: if i % 2 == 0 { 0.75 } else { 0.4 },
                     weights: config.weights,
                     priority: 1.0,
+                    tier: 0,
+                    error_budget: 0.01,
                     floor_cores: floor,
                     forecaster: config.adapter.forecaster.clone(),
                     headroom: config.adapter.headroom,
@@ -201,6 +218,61 @@ impl FleetScenario {
             node_cores: config.cluster.node_cores.clone(),
             adapter_interval_s: config.adapter.interval_s,
             seed: config.seed,
+            admission: config.admission,
+            burn_boost: config.fleet.burn_boost,
+        }
+    }
+
+    /// A synthetic N-service *overload* fleet: every service bursts to
+    /// `5 × base` in the **same** window, so for that stretch the summed
+    /// demand exceeds anything the arbiter can grant — the admission /
+    /// priority-tier experiment's workload (`fig_fleet` §Shedding).  With
+    /// `tiered`, service `i` rides tier `i % 2` (alternating
+    /// high-priority / best-effort); otherwise everyone shares tier 0.
+    pub fn synthetic_overload(
+        n: usize,
+        base: f64,
+        seconds: usize,
+        global_budget: usize,
+        tiered: bool,
+        config: &Config,
+        profiles: &ProfileSet,
+    ) -> Self {
+        assert!(n >= 1, "a fleet needs at least one service");
+        let floor = (global_budget / (2 * n).max(1)).min(2);
+        let start = seconds / 4;
+        let len = seconds / 2;
+        let services = (0..n)
+            .map(|i| ServiceSpec {
+                name: format!("svc{i}"),
+                trace: Trace::burst_window(
+                    base,
+                    base * 5.0,
+                    seconds,
+                    start,
+                    len,
+                    trace_seed(config.seed, i),
+                ),
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                weights: config.weights,
+                priority: 1.0,
+                tier: if tiered { (i % 2) as Tier } else { 0 },
+                error_budget: 0.01,
+                floor_cores: floor,
+                forecaster: config.adapter.forecaster.clone(),
+                headroom: config.adapter.headroom,
+                batching: config.batching,
+            })
+            .collect();
+        Self {
+            services,
+            global_budget,
+            node_cores: config.cluster.node_cores.clone(),
+            adapter_interval_s: config.adapter.interval_s,
+            seed: config.seed,
+            admission: config.admission,
+            burn_boost: config.fleet.burn_boost,
         }
     }
 
@@ -228,9 +300,12 @@ impl FleetScenario {
                     .first()
                     .map(|s| s.batching.max_wait_s)
                     .unwrap_or(0.05),
+                admission: self.admission,
             },
             match mode {
-                FleetMode::Arbiter => Some(CoreArbiter::new(self.global_budget)),
+                FleetMode::Arbiter => {
+                    Some(CoreArbiter::new(self.global_budget).with_burn_boost(self.burn_boost))
+                }
                 _ => None,
             },
         )
@@ -274,6 +349,8 @@ impl FleetScenario {
                         profiles: s.profiles.clone(),
                         slo_s: s.slo_s,
                         priority: s.priority,
+                        tier: s.tier,
+                        error_budget: s.error_budget,
                         floor_cores: s.floor_cores,
                         policy: FleetPolicyRef::Arbitrated(p),
                     })
@@ -295,6 +372,8 @@ impl FleetScenario {
                         profiles: s.profiles.clone(),
                         slo_s: s.slo_s,
                         priority: s.priority,
+                        tier: s.tier,
+                        error_budget: s.error_budget,
                         floor_cores: share,
                         policy: FleetPolicyRef::Plain(p),
                     })
@@ -321,32 +400,46 @@ impl FleetScenario {
 pub fn print_fleet(title: &str, out: &FleetRunOutput) {
     println!("\n== {title} [{}] ==", out.mode);
     println!(
-        "{:<10} {:>9} {:>8} {:>10} {:>10} {:>10} {:>9}",
-        "service", "requests", "SLOviol%", "acc.loss", "cost(avg)", "P99(ms)", "dropped"
+        "{:<10} {:>9} {:>8} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "service", "requests", "SLOviol%", "acc.loss", "cost(avg)", "P99(ms)", "dropped", "shed"
     );
     for s in &out.summary.services {
         println!(
-            "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9}",
+            "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9} {:>9}",
             s.policy,
             s.total_requests,
             s.slo_violation_rate * 100.0,
             s.avg_accuracy_loss,
             s.avg_cost_cores,
             s.p99_latency_s * 1000.0,
-            s.dropped
+            s.dropped,
+            s.shed
         );
     }
     let a = &out.summary;
     println!(
-        "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9}",
+        "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9} {:>9}",
         "TOTAL",
         a.total_requests,
         a.slo_violation_rate * 100.0,
         a.avg_accuracy_loss,
         a.avg_cost_cores,
         a.worst_p99_latency_s * 1000.0,
-        a.dropped
+        a.dropped,
+        a.shed
     );
+    // Per-tier breakdown whenever the run was actually tiered or shed.
+    if a.shed > 0 || a.tiers.len() > 1 {
+        for t in &a.tiers {
+            println!(
+                "  tier {}: {} requests, {:.2}% SLO-violation (admitted), {} shed",
+                t.tier,
+                t.total,
+                t.slo_violation_rate * 100.0,
+                t.shed
+            );
+        }
+    }
     let cc = out
         .per_service
         .iter()
@@ -441,6 +534,75 @@ mod tests {
             "arbiter {} !< vpa {}",
             arb.summary.slo_violation_rate,
             vpa.summary.slo_violation_rate
+        );
+    }
+
+    /// The ISSUE's overload acceptance criterion: with the cluster
+    /// genuinely oversubscribed (both services burst at once), admission +
+    /// strict tiers cut the high-tier service's SLO violations at equal or
+    /// lower cost than the PR 3 baseline, with the shedding pushed onto
+    /// the low tier.
+    #[test]
+    fn admission_and_tiers_protect_the_high_tier_under_overload() {
+        let mut config = Config::default();
+        config.adapter.forecaster = "last_max".into();
+        config.seed = 17;
+        let dir = Path::new("/nonexistent");
+        // Baseline: PR 3 semantics — no admission, single tier.
+        let base = FleetScenario::synthetic_overload(
+            2,
+            30.0,
+            600,
+            8,
+            false,
+            &config,
+            &ProfileSet::paper_like(),
+        );
+        let base_out = base.run(&FleetMode::Arbiter, dir);
+        // Treatment: admission on, tiers on (svc0 = tier 0), burn boost on.
+        config.admission.enabled = true;
+        config.fleet.burn_boost = 1.0;
+        let treated = FleetScenario::synthetic_overload(
+            2,
+            30.0,
+            600,
+            8,
+            true,
+            &config,
+            &ProfileSet::paper_like(),
+        );
+        assert_eq!(treated.services[0].tier, 0);
+        assert_eq!(treated.services[1].tier, 1);
+        let treated_out = treated.run(&FleetMode::Arbiter, dir);
+
+        // the baseline's high-priority service drowns in the shared burst
+        let base_high = &base_out.summary.services[0];
+        assert!(
+            base_high.slo_violation_rate > 0.10,
+            "overload baseline must violate: {base_high:?}"
+        );
+        // admission + tiers: the tier-0 service is protected...
+        let treated_high = &treated_out.summary.services[0];
+        assert!(
+            treated_high.slo_violation_rate < base_high.slo_violation_rate * 0.5,
+            "high tier must improve: {} vs baseline {}",
+            treated_high.slo_violation_rate,
+            base_high.slo_violation_rate
+        );
+        // ...by shedding, mostly at the low tier
+        assert!(treated_out.summary.shed > 0);
+        let tiers = &treated_out.summary.tiers;
+        assert_eq!(tiers.len(), 2, "{tiers:?}");
+        assert!(
+            tiers[1].shed > tiers[0].shed,
+            "shedding must land lowest-tier-first: {tiers:?}"
+        );
+        // at equal or lower cost (same budget, admission adds no cores)
+        assert!(
+            treated_out.summary.avg_cost_cores <= base_out.summary.avg_cost_cores + 1.0,
+            "cost {} vs baseline {}",
+            treated_out.summary.avg_cost_cores,
+            base_out.summary.avg_cost_cores
         );
     }
 

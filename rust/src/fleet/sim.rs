@@ -39,15 +39,19 @@ use super::arbiter::{ArbiterEntry, CoreArbiter};
 use super::curve_cache::CurveCache;
 use crate::adapter::InfAdapterPolicy;
 use crate::cluster::{Cluster, ClusterEvent};
-use crate::dispatcher::Dispatcher;
+use crate::dispatcher::{AdmissionGate, RequestPath, RouteOutcome, Tier};
 use crate::metrics::{MetricsCollector, RequestRecord};
+use crate::monitoring::SloBurnMeter;
 use crate::profiler::ProfileSet;
 use crate::serving::sim::{SimConfig, SimResult};
 use crate::serving::{Decision, Policy};
 use crate::util::rng::Rng;
-use crate::workload::{ArrivalProcess, RateSeries};
+use crate::workload::{ArrivalProcess, ClassMixer, RateSeries};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+
+/// Adaptation intervals the SLO-burn meter's rolling window covers.
+const BURN_WINDOW_INTERVALS: usize = 4;
 
 /// Seed of service `i`'s RNG stream.  Service 0 uses the base seed
 /// unchanged — a single-service fleet reproduces the single-adapter engine
@@ -141,6 +145,8 @@ struct RequestSim {
     arrival: f64,
     accuracy: f64,
     svc: usize,
+    /// Priority tier the request arrived with (per-tier accounting).
+    tier: Tier,
 }
 
 /// One service of a fleet run: the adaptation policy plus everything it
@@ -157,6 +163,12 @@ pub struct FleetService<'a> {
     pub slo_s: f64,
     /// Arbitration weight (higher claims marginal cores first).
     pub priority: f64,
+    /// Strict priority tier (0 = most important): a lexicographic
+    /// pre-pass in the arbiter, and the default per-request tier when the
+    /// trace carries no class mix.
+    pub tier: Tier,
+    /// Allowed SLO-violation fraction — the burn-rate signal denominator.
+    pub error_budget: f64,
     /// Guaranteed-minimum core grant under arbitration; also the fixed
     /// reservation of a [`FleetPolicyRef::Plain`] service.
     pub floor_cores: usize,
@@ -183,7 +195,15 @@ struct SvcState {
     /// `"<name>/"`, or empty for the unprefixed single-service path.
     prefix: String,
     duration: f64,
-    dispatcher: Dispatcher,
+    /// The admission-controlled request path: gate → tiers → smooth-WRR.
+    path: RequestPath,
+    /// Deterministic per-request tier assignment (no RNG).
+    tier_mixer: ClassMixer,
+    /// Rolling SLO-burn meter feeding the arbiter.
+    burn: SloBurnMeter,
+    /// Collector counts already folded into the burn meter.
+    seen_violations: u64,
+    seen_admitted: u64,
     metrics: MetricsCollector,
     rng: Rng,
     rate_history: Vec<f64>,
@@ -247,6 +267,26 @@ impl FleetSimEngine {
                     .iter()
                     .map(|p| p.accuracy)
                     .fold(0.0, f64::max);
+                // Cutoff ladder of this service's gate: the range of
+                // tiers its trace can actually emit — the class mix when
+                // one is set, the service tier otherwise.  The floor
+                // matters: a tier-1-only service must never cut off
+                // tier 1 (its whole stream).
+                let mix: Vec<Tier> = s
+                    .trace
+                    .class_mix
+                    .iter()
+                    .filter(|&&(_, w)| w > 0.0)
+                    .map(|&(t, _)| t)
+                    .collect();
+                let (min_tier, max_tier) = if mix.is_empty() {
+                    (s.tier, s.tier)
+                } else {
+                    (
+                        mix.iter().copied().min().expect("non-empty"),
+                        mix.iter().copied().max().expect("non-empty"),
+                    )
+                };
                 SvcState {
                     prefix: if s.name.is_empty() {
                         String::new()
@@ -254,7 +294,15 @@ impl FleetSimEngine {
                         format!("{}/", s.name)
                     },
                     duration: s.trace.duration_s() as f64,
-                    dispatcher: Dispatcher::new(),
+                    path: RequestPath::new(AdmissionGate::new(
+                        &cfg.admission,
+                        min_tier,
+                        max_tier,
+                    )),
+                    tier_mixer: ClassMixer::new(&s.trace.class_mix, s.tier),
+                    burn: SloBurnMeter::new(s.error_budget, BURN_WINDOW_INTERVALS),
+                    seen_violations: 0,
+                    seen_admitted: 0,
                     metrics: MetricsCollector::new(cfg.bucket_s, s.slo_s, top_acc),
                     rng: Rng::seed_from_u64(service_seed(cfg.seed, i)),
                     rate_history: Vec::new(),
@@ -285,7 +333,7 @@ impl FleetSimEngine {
         cluster.tick(0.0);
         for (i, d) in decisions0.iter().enumerate() {
             let s = &mut st[i];
-            s.dispatcher.set_weights(&d.quotas);
+            s.path.set_weights(&d.quotas);
             s.metrics.record_prediction(0.0, d.predicted_lambda);
             s.current_batches = d
                 .target
@@ -296,6 +344,7 @@ impl FleetSimEngine {
                 s.metrics.record_batch_decision(0.0, v, b);
             }
         }
+        refresh_gates(&cluster, services, &mut st, 0.0);
         record_costs(&cluster, &mut st, 0.0);
 
         // --- Event queue.
@@ -381,9 +430,25 @@ impl FleetSimEngine {
                 EventKind::Arrival { svc } => {
                     st[svc].arrivals_this_second += 1;
                     let rid = requests.len();
-                    // Route: the service's dispatcher picks the variant;
-                    // its least-loaded ready pod takes the request.
-                    let variant = st[svc].dispatcher.route();
+                    let tier = st[svc].tier_mixer.next();
+                    // The unified request path: admission gate (sheds
+                    // excess offered load at the door — recorded, never
+                    // enqueued; a disabled gate admits unconditionally,
+                    // the pre-admission behaviour) → smooth-WRR variant
+                    // routing.  The least-loaded ready pod of the routed
+                    // variant then takes the request.
+                    let variant = match st[svc].path.handle(now, tier) {
+                        RouteOutcome::Shed(t) => {
+                            st[svc]
+                                .metrics
+                                .record_request(RequestRecord::shed(now, t));
+                            continue;
+                        }
+                        RouteOutcome::Routed(v) => Some(v),
+                        // unconfigured / zero-capacity: fall through to
+                        // the any-pod fallback, then drop
+                        RouteOutcome::Denied(_) => None,
+                    };
                     let pod_id = variant.as_deref().and_then(|v| {
                         pick_pod(&cluster, &pods, &namespaced(&st[svc].prefix, v))
                             .or_else(|| any_pod(&cluster, &pods, svc))
@@ -393,12 +458,14 @@ impl FleetSimEngine {
                             arrival: now,
                             accuracy: 0.0,
                             svc,
+                            tier,
                         });
-                        st[svc].metrics.record_request(RequestRecord {
-                            arrival_s: now,
-                            latency_s: f64::INFINITY,
-                            accuracy: 0.0,
-                        });
+                        st[svc].metrics.record_request(RequestRecord::new(
+                            now,
+                            f64::INFINITY,
+                            0.0,
+                            tier,
+                        ));
                         continue;
                     };
                     let accuracy = acc_of(&services[svc].profiles, &pods[&pid].variant);
@@ -406,6 +473,7 @@ impl FleetSimEngine {
                         arrival: now,
                         accuracy,
                         svc,
+                        tier,
                     });
                     enqueue_request(
                         &services[svc].profiles,
@@ -423,11 +491,12 @@ impl FleetSimEngine {
                 EventKind::Completion { pod_id, batch } => {
                     for &rid in &batches[batch] {
                         let r = &requests[rid];
-                        st[r.svc].metrics.record_request(RequestRecord {
-                            arrival_s: r.arrival,
-                            latency_s: now - r.arrival,
-                            accuracy: r.accuracy,
-                        });
+                        st[r.svc].metrics.record_request(RequestRecord::new(
+                            r.arrival,
+                            now - r.arrival,
+                            r.accuracy,
+                            r.tier,
+                        ));
                     }
                     if let Some(pod) = pods.get_mut(&pod_id) {
                         pod.busy = pod.busy.saturating_sub(1);
@@ -440,11 +509,12 @@ impl FleetSimEngine {
                                 let waited = now - requests[rid].arrival;
                                 if waited > self.config.queue_timeout_s {
                                     st[requests[rid].svc].metrics.record_request(
-                                        RequestRecord {
-                                            arrival_s: requests[rid].arrival,
-                                            latency_s: f64::INFINITY,
-                                            accuracy: requests[rid].accuracy,
-                                        },
+                                        RequestRecord::new(
+                                            requests[rid].arrival,
+                                            f64::INFINITY,
+                                            requests[rid].accuracy,
+                                            requests[rid].tier,
+                                        ),
                                     );
                                 } else {
                                     live.push(rid);
@@ -533,8 +603,11 @@ impl FleetSimEngine {
                                     }
                                     orphans.append(&mut dead.forming);
                                     for rid in orphans {
+                                        // already-admitted requests are
+                                        // re-routed, never re-gated
                                         if let Some(target) = st[svc]
-                                            .dispatcher
+                                            .path
+                                            .dispatcher()
                                             .route()
                                             .and_then(|v| {
                                                 pick_pod(
@@ -562,11 +635,12 @@ impl FleetSimEngine {
                                                 &mut st[svc].rng,
                                             );
                                         } else {
-                                            st[svc].metrics.record_request(RequestRecord {
-                                                arrival_s: requests[rid].arrival,
-                                                latency_s: f64::INFINITY,
-                                                accuracy: requests[rid].accuracy,
-                                            });
+                                            st[svc].metrics.record_request(RequestRecord::new(
+                                                requests[rid].arrival,
+                                                f64::INFINITY,
+                                                requests[rid].accuracy,
+                                                requests[rid].tier,
+                                            ));
                                         }
                                     }
                                 }
@@ -587,6 +661,12 @@ impl FleetSimEngine {
                             s.arrivals_this_second = 0;
                             s.counter_since = now;
                         }
+                        // Fold the interval's (violations, admitted) delta
+                        // into the SLO-burn meter the arbiter reads.
+                        let (v, a) = s.metrics.live_counts();
+                        s.burn.observe(v - s.seen_violations, a - s.seen_admitted);
+                        s.seen_violations = v;
+                        s.seen_admitted = a;
                     }
                     let committed_full = cluster.committed_allocation();
                     let committed: Vec<BTreeMap<String, usize>> = (0..n)
@@ -611,7 +691,7 @@ impl FleetSimEngine {
                     }
                     for (i, d) in decisions.iter().enumerate() {
                         let s = &mut st[i];
-                        s.dispatcher.set_weights(&d.quotas);
+                        s.path.set_weights(&d.quotas);
                         // Propagate batch-size targets to this service's
                         // live and future pods; a shrunk target can
                         // complete a forming batch.  Visit pods in id
@@ -655,6 +735,7 @@ impl FleetSimEngine {
                         }
                         s.metrics.record_prediction(now, d.predicted_lambda);
                     }
+                    refresh_gates(&cluster, services, &mut st, now);
                     record_costs(&cluster, &mut st, now);
                     for (i, d) in decisions.into_iter().enumerate() {
                         st[i].decisions.push((now, d));
@@ -692,9 +773,15 @@ impl FleetSimEngine {
         for (i, s) in services.iter_mut().enumerate() {
             let floor = s.floor_cores;
             let priority = s.priority;
+            let tier = s.tier;
+            // Rolling SLO-burn signal: the arbiter boosts burning
+            // services' marginals (inert at the default burn_boost = 0).
+            let burn = st[i].burn.burn_rate();
             let entry = match &mut s.policy {
                 FleetPolicyRef::Plain(_) => ArbiterEntry {
                     priority,
+                    tier,
+                    burn,
                     floor,
                     curve: None,
                 },
@@ -710,6 +797,8 @@ impl FleetSimEngine {
                     let curve = st[i].curve_cache.curve(&**p, lambda, &committed[i], cap);
                     ArbiterEntry {
                         priority,
+                        tier,
+                        burn,
                         floor,
                         curve: Some(curve),
                     }
@@ -718,6 +807,30 @@ impl FleetSimEngine {
             entries.push(entry);
         }
         arb.partition(&entries).into_iter().map(Some).collect()
+    }
+}
+
+/// Re-size every service's admission gate from its *committed* allocation:
+/// supply = Σ per-variant `th_m(n, b)` over the pods the cluster is
+/// actually holding for the service (Pending + Ready), at the batch sizes
+/// in force — the "granted capacity" the token bucket refills at.  Called
+/// at the warm start and every adaptation tick; a no-op fast path when no
+/// gate is enabled keeps the default run untouched.
+fn refresh_gates(cluster: &Cluster, services: &[FleetService], st: &mut [SvcState], now: f64) {
+    if !st.iter().any(|s| s.path.gate().enabled()) {
+        return;
+    }
+    let committed = cluster.committed_allocation();
+    for i in 0..st.len() {
+        let alloc: BTreeMap<String, usize> = committed
+            .iter()
+            .filter(|(k, _)| owner_of(st, k) == i)
+            .map(|(k, &c)| (k[st[i].prefix.len()..].to_string(), c))
+            .collect();
+        let supply = services[i]
+            .profiles
+            .supply_rps(&alloc, &st[i].current_batches);
+        st[i].path.set_supply(now, supply);
     }
 }
 
@@ -982,6 +1095,8 @@ mod tests {
             profiles: profiles.clone(),
             slo_s: 0.75,
             priority: 1.0,
+            tier: 0,
+            error_budget: 0.01,
             floor_cores: 0,
             policy: FleetPolicyRef::Arbitrated(&mut p2),
         }];
@@ -1020,6 +1135,8 @@ mod tests {
                     profiles: profiles.clone(),
                     slo_s: 0.75,
                     priority: 1.0,
+                    tier: 0,
+                    error_budget: 0.01,
                     floor_cores: 1,
                     policy: FleetPolicyRef::Arbitrated(&mut pa),
                 },
@@ -1029,6 +1146,8 @@ mod tests {
                     profiles: profiles.clone(),
                     slo_s: 0.4,
                     priority: 1.0,
+                    tier: 0,
+                    error_budget: 0.01,
                     floor_cores: 1,
                     policy: FleetPolicyRef::Arbitrated(&mut pb),
                 },
@@ -1067,6 +1186,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 4,
                 policy: FleetPolicyRef::Plain(&mut pa),
             },
@@ -1076,6 +1197,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 4,
                 policy: FleetPolicyRef::Plain(&mut pb),
             },
@@ -1119,6 +1242,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 4,
                 policy: FleetPolicyRef::Plain(&mut pa),
             },
@@ -1128,6 +1253,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 4,
                 policy: FleetPolicyRef::Plain(&mut pb),
             },
@@ -1161,6 +1288,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 1,
                 policy: FleetPolicyRef::Arbitrated(&mut pa),
             },
@@ -1170,6 +1299,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 1,
                 policy: FleetPolicyRef::Arbitrated(&mut pb),
             },
@@ -1198,6 +1329,161 @@ mod tests {
     }
 
     #[test]
+    fn admission_off_is_the_default_and_admitting_gates_are_bit_identical() {
+        // Two pins in one: (1) a run with the gate *enabled but never
+        // binding* (offered load far under the granted supply) performs
+        // the same event sequence and RNG draws as the default
+        // admission-off run — summaries equal field for field; (2) it
+        // sheds nothing.
+        use crate::config::AdmissionConfig;
+        let profiles = ProfileSet::paper_like();
+        let trace = Trace::steady(40.0, 180);
+        let run = |admission: AdmissionConfig| {
+            let mut policy = StaticPolicy::new("resnet18", 4);
+            let mut services = [FleetService {
+                name: "svc".into(),
+                trace: &trace,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
+                floor_cores: 4,
+                policy: FleetPolicyRef::Plain(&mut policy),
+            }];
+            let cfg = SimConfig {
+                seed: 33,
+                admission,
+                ..Default::default()
+            };
+            FleetSimEngine::new(cfg, None)
+                .run(&mut services)
+                .pop()
+                .unwrap()
+        };
+        let off = run(AdmissionConfig::default());
+        let on = run(AdmissionConfig {
+            enabled: true,
+            ..Default::default()
+        });
+        let a = off.metrics.summary("off", off.duration_s);
+        let b = on.metrics.summary("on", on.duration_s);
+        assert_eq!(b.shed, 0, "under-capacity gate must not shed: {b:?}");
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.p99_latency_s, b.p99_latency_s);
+        assert_eq!(a.mean_latency_s, b.mean_latency_s);
+        assert_eq!(a.slo_violation_rate, b.slo_violation_rate);
+        assert_eq!(a.avg_accuracy, b.avg_accuracy);
+        assert_eq!(a.core_seconds, b.core_seconds);
+    }
+
+    #[test]
+    fn admission_sheds_overload_instead_of_violating_every_slo() {
+        // A static pod holding ~92 rps of supply is offered 250 rps.
+        // Without admission the queue blows through (nearly) every
+        // request's SLO; with the gate the excess is shed at the door and
+        // the admitted stream keeps meeting its SLO.
+        use crate::config::AdmissionConfig;
+        let profiles = ProfileSet::paper_like();
+        let trace = Trace::steady(250.0, 240);
+        let run = |enabled: bool| {
+            let mut policy = StaticPolicy::new("resnet18", 4);
+            let mut services = [FleetService {
+                name: "svc".into(),
+                trace: &trace,
+                profiles: profiles.clone(),
+                slo_s: 0.75,
+                priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
+                floor_cores: 4,
+                policy: FleetPolicyRef::Plain(&mut policy),
+            }];
+            let cfg = SimConfig {
+                seed: 44,
+                admission: AdmissionConfig {
+                    enabled,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let r = FleetSimEngine::new(cfg, None)
+                .run(&mut services)
+                .pop()
+                .unwrap();
+            r.metrics.summary(if enabled { "on" } else { "off" }, r.duration_s)
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.shed, 0);
+        assert!(
+            off.slo_violation_rate > 0.5,
+            "unshed overload must drown: {off:?}"
+        );
+        assert!(on.shed > 0, "{on:?}");
+        // the gate admits ~supply/offered ≈ 37%: the rest is refused
+        let shed_frac = on.shed as f64 / on.total_requests as f64;
+        assert!((0.4..0.9).contains(&shed_frac), "shed {shed_frac}");
+        assert!(
+            on.slo_violation_rate < 0.2,
+            "admitted stream must be protected: {on:?}"
+        );
+        assert!(
+            on.goodput_admitted_rps > off.goodput_rps,
+            "shedding must raise useful throughput: {} vs {}",
+            on.goodput_admitted_rps,
+            off.goodput_rps
+        );
+    }
+
+    #[test]
+    fn class_mix_sheds_lower_tier_requests_first() {
+        // One service, 70% tier-0 / 30% tier-1 requests, 2.5x overload:
+        // the gate's cutoff must push the shedding onto tier 1.
+        use crate::config::AdmissionConfig;
+        let profiles = ProfileSet::paper_like();
+        let trace =
+            Trace::steady(250.0, 240).with_class_mix(vec![(0, 7.0), (1, 3.0)]);
+        let mut policy = StaticPolicy::new("resnet18", 4);
+        let mut services = [FleetService {
+            name: "svc".into(),
+            trace: &trace,
+            profiles: profiles.clone(),
+            slo_s: 0.75,
+            priority: 1.0,
+            tier: 0,
+            error_budget: 0.01,
+            floor_cores: 4,
+            policy: FleetPolicyRef::Plain(&mut policy),
+        }];
+        let cfg = SimConfig {
+            seed: 45,
+            admission: AdmissionConfig {
+                enabled: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = FleetSimEngine::new(cfg, None)
+            .run(&mut services)
+            .pop()
+            .unwrap();
+        let s = r.metrics.summary("mix", r.duration_s);
+        assert_eq!(s.tiers.len(), 2, "{:?}", s.tiers);
+        let t0 = &s.tiers[0];
+        let t1 = &s.tiers[1];
+        // tier 1 (30% of 250 = 75 rps offered) is shed almost entirely;
+        // tier 0 (175 rps offered vs ~92 rps supply) sheds only its own
+        // excess — a strictly smaller *fraction* than tier 1
+        let f0 = t0.shed as f64 / t0.total.max(1) as f64;
+        let f1 = t1.shed as f64 / t1.total.max(1) as f64;
+        assert!(f1 > 0.9, "tier 1 shed fraction {f1}: {t1:?}");
+        assert!(f0 < f1, "lowest tier must shed first: {f0} vs {f1}");
+        assert!(t0.served > 0);
+    }
+
+    #[test]
     fn arbiter_shifts_cores_toward_the_bursting_service() {
         // Service a bursts in [60, 180); b stays quiet.  Under arbitration
         // a's grant during its burst must exceed the even share, and its
@@ -1214,6 +1500,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 2,
                 policy: FleetPolicyRef::Arbitrated(&mut pa),
             },
@@ -1223,6 +1511,8 @@ mod tests {
                 profiles: profiles.clone(),
                 slo_s: 0.75,
                 priority: 1.0,
+                tier: 0,
+                error_budget: 0.01,
                 floor_cores: 2,
                 policy: FleetPolicyRef::Arbitrated(&mut pb),
             },

@@ -18,7 +18,10 @@
 //! * [`forecaster`] — AOT LSTM + classical baselines.
 //! * [`solver`] — the ILP: brute-force, branch & bound, greedy; whole
 //!   per-budget value curves from one single-pass solve.
-//! * [`dispatcher`] — weighted round-robin over per-variant quotas.
+//! * [`dispatcher`] — the admission-controlled request path: a
+//!   token-bucket gate sized from granted capacity (sheds overload at the
+//!   door, lowest priority tier first) in front of weighted round-robin
+//!   over per-variant quotas.
 //! * [`cluster`] — simulated Kubernetes substrate (pods, readiness,
 //!   create-before-remove).
 //! * [`serving`] — backend engines: real (PJRT worker pools) and simulated
@@ -28,7 +31,9 @@
 //!   one shared cluster, with a top-level core arbiter re-partitioning the
 //!   global budget every interval by heap water-filling on
 //!   priority-weighted marginal utility (per-service ILP value curves,
-//!   cached and warm-started across ticks).
+//!   cached and warm-started across ticks), honoring strict priority
+//!   tiers lexicographically and boosting services burning their SLO
+//!   error budget.
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 

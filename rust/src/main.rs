@@ -37,15 +37,20 @@ COMMANDS:
                                      measure real service/readiness times
   solve    --lambda RPS [--budget B] [--beta X] [--max-batch N]
            [--solver brute|bnb|greedy]
-                                     one-shot ILP solve
+                                     one-shot ILP solve (also prints the
+                                     admission-gate supply Σ th_m(n, b))
   simulate [--trace T] [--policy P] [--seconds N] [--base RPS] [--out CSV]
+           [--admission on|off]
                                      virtual-time experiment
   fleet    [--services N] [--mode M] [--seconds N] [--base RPS] [--budget B]
-           [--out PREFIX]
+           [--admission on|off] [--burn-boost F] [--tiers 0,1,..]
+           [--overload on] [--out PREFIX]
                                      multi-service serving on one shared
                                      cluster (config.fleet when present,
                                      else N synthetic services with
-                                     interleaved bursts)
+                                     interleaved bursts; --overload makes
+                                     every service burst simultaneously —
+                                     the admission/tier experiment)
   serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
                                      live serving on the real PJRT engine
 
@@ -53,6 +58,8 @@ COMMANDS:
             | burst:<start_s>:<len_s>[:<peak_rps>]
   policies: infadapter | ms+ | vpa:<variant> | static:<variant>:<cores>
   fleet modes: arbiter | even | vpa:<variant>
+  tiers: 0 is the most important; the arbiter honors tiers before weights
+         and the admission gate sheds the highest tier numbers first
 ";
 
 /// `--flag value` / `--flag=value` parser.
@@ -109,6 +116,14 @@ fn parse_trace(spec: &str, base: f64, seconds: usize, seed: u64) -> Result<RateS
     Trace::from_spec(spec, base, seconds, seed)
 }
 
+fn parse_onoff(v: &str) -> Result<bool> {
+    match v {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("expected on|off, got {other}"),
+    }
+}
+
 fn parse_policy(spec: &str) -> Result<PolicyKind> {
     Ok(match spec {
         "infadapter" => PolicyKind::InfAdapter,
@@ -145,10 +160,17 @@ fn main() -> Result<()> {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(infadapter::runtime::artifacts_dir);
-    let config = match args.get("config") {
+    let mut config = match args.get("config") {
         Some(p) => Config::load(std::path::Path::new(p))?,
         None => Config::default(),
     };
+    // Global overrides shared by simulate/fleet.
+    if let Some(v) = args.get("admission") {
+        config.admission.enabled = parse_onoff(v)?;
+    }
+    if let Some(v) = args.get("burn-boost") {
+        config.fleet.burn_boost = v.parse().with_context(|| format!("--burn-boost {v:?}"))?;
+    }
     config.validate()?;
 
     match command {
@@ -251,6 +273,10 @@ fn main() -> Result<()> {
                 alloc.loading_cost,
                 alloc.feasible
             );
+            println!(
+                "admission-gate supply: {:.1} rps (Σ th_m(n, b) of this allocation)",
+                alloc.capacity
+            );
             for (v, (c, q)) in &alloc.assignments {
                 println!(
                     "  {v:<12} cores={c:<3} quota={q:.1} rps batch={}",
@@ -280,16 +306,46 @@ fn main() -> Result<()> {
                 anyhow::ensure!(
                     args.get("services").is_none()
                         && args.get("budget").is_none()
-                        && args.get("base").is_none(),
-                    "--services/--budget/--base conflict with the config file's \
-                     fleet section; edit config.fleet or drop the flags"
+                        && args.get("base").is_none()
+                        && args.get("tiers").is_none()
+                        && args.get("overload").is_none(),
+                    "--services/--budget/--base/--tiers/--overload conflict with \
+                     the config file's fleet section; edit config.fleet or drop \
+                     the flags"
                 );
                 FleetScenario::from_config(&config, &profiles, seconds)?
             } else {
                 let n = args.get_usize("services", 2)?;
                 anyhow::ensure!(n >= 1, "--services must be at least 1");
                 let budget = args.get_usize("budget", config.cluster.budget)?;
-                FleetScenario::synthetic(n, base, seconds, budget, &config, &profiles)
+                let mut scenario = if args
+                    .get("overload")
+                    .map(parse_onoff)
+                    .transpose()?
+                    .unwrap_or(false)
+                {
+                    FleetScenario::synthetic_overload(
+                        n, base, seconds, budget, false, &config, &profiles,
+                    )
+                } else {
+                    FleetScenario::synthetic(n, base, seconds, budget, &config, &profiles)
+                };
+                if let Some(spec) = args.get("tiers") {
+                    let tiers: Vec<u8> = spec
+                        .split(',')
+                        .map(|t| t.trim().parse().with_context(|| format!("--tiers {spec:?}")))
+                        .collect::<Result<Vec<_>>>()?;
+                    anyhow::ensure!(
+                        tiers.len() == scenario.services.len(),
+                        "--tiers needs one tier per service ({} given, {} services)",
+                        tiers.len(),
+                        scenario.services.len()
+                    );
+                    for (svc, t) in scenario.services.iter_mut().zip(tiers) {
+                        svc.tier = t;
+                    }
+                }
+                scenario
             };
             let mode = match args.get("mode").unwrap_or("arbiter") {
                 "arbiter" => FleetMode::Arbiter,

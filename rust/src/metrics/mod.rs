@@ -4,30 +4,130 @@
 //! accuracy minus served weighted-average accuracy), cost (billed CPU
 //! cores), and P99 latency, plus SLO-violation rates for the headline
 //! claims ("reduces SLO violations up to 65%, cost up to 33%").
+//!
+//! With the admission-controlled request path, every request resolves to
+//! one of three [`RequestOutcome`]s: **served** (completed within the
+//! SLO), **violated** (completed late, or dropped inside the serving
+//! path), or **shed** (refused at the admission gate — an immediate
+//! reject, deliberately *not* an SLO violation: shedding is the system
+//! keeping its promise to the traffic it admitted).  Violation rates are
+//! therefore normalized by *admitted* requests; when nothing is shed this
+//! is exactly the historical total-request denominator, so pre-admission
+//! summaries are bit-identical.
 
+use crate::dispatcher::Tier;
 use std::collections::BTreeMap;
+
+/// How one request resolved (see the module docs for semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Completed within the SLO.
+    Served,
+    /// Admitted but completed late or dropped in the serving path.
+    Violated,
+    /// Refused at the admission gate; never entered a queue.
+    Shed,
+}
 
 /// One completed request.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestRecord {
     pub arrival_s: f64,
-    /// End-to-end latency in seconds. `f64::INFINITY` = dropped.
+    /// End-to-end latency in seconds. `f64::INFINITY` = dropped or shed.
     pub latency_s: f64,
     /// Accuracy metadata of the variant that served it.
     pub accuracy: f64,
+    /// Priority tier the request carried (0 = most important).
+    pub tier: Tier,
+    /// Normalized against the collector's SLO at record time.
+    pub outcome: RequestOutcome,
 }
 
 impl RequestRecord {
+    /// A request that entered the serving path (latency `INFINITY` =
+    /// dropped).  The collector judges served-vs-violated against its SLO
+    /// when the record lands.
+    pub fn new(arrival_s: f64, latency_s: f64, accuracy: f64, tier: Tier) -> Self {
+        Self {
+            arrival_s,
+            latency_s,
+            accuracy,
+            tier,
+            outcome: RequestOutcome::Violated, // normalized on record
+        }
+    }
+
+    /// A request refused at the admission gate.
+    pub fn shed(arrival_s: f64, tier: Tier) -> Self {
+        Self {
+            arrival_s,
+            latency_s: f64::INFINITY,
+            accuracy: 0.0,
+            tier,
+            outcome: RequestOutcome::Shed,
+        }
+    }
+
+    /// No finite latency: dropped in the serving path or shed at the gate.
     pub fn dropped(&self) -> bool {
         !self.latency_s.is_finite()
     }
+}
+
+/// Per-tier outcome counts (one row of the tier breakdown).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierStats {
+    pub tier: Tier,
+    /// All arrivals at this tier, including shed ones.
+    pub total: u64,
+    /// Refused at the admission gate.
+    pub shed: u64,
+    /// Admitted but dropped inside the serving path.
+    pub dropped: u64,
+    /// Admitted and violated (dropped + completed late).
+    pub violations: u64,
+    /// Completed within the SLO.
+    pub served: u64,
+    /// `violations / (total - shed)` — violation rate of admitted traffic.
+    pub slo_violation_rate: f64,
+}
+
+impl TierStats {
+    fn finish(mut self) -> Self {
+        let admitted = self.total - self.shed;
+        self.slo_violation_rate = if admitted == 0 {
+            0.0
+        } else {
+            self.violations as f64 / admitted as f64
+        };
+        self
+    }
+}
+
+/// Merge per-service tier breakdowns (rates recomputed from counts).
+fn merge_tiers<'a>(breakdowns: impl Iterator<Item = &'a [TierStats]>) -> Vec<TierStats> {
+    let mut by_tier: BTreeMap<Tier, TierStats> = BTreeMap::new();
+    for stats in breakdowns {
+        for s in stats {
+            let e = by_tier.entry(s.tier).or_insert(TierStats {
+                tier: s.tier,
+                ..Default::default()
+            });
+            e.total += s.total;
+            e.shed += s.shed;
+            e.dropped += s.dropped;
+            e.violations += s.violations;
+            e.served += s.served;
+        }
+    }
+    by_tier.into_values().map(TierStats::finish).collect()
 }
 
 /// One row of the experiment timeseries (fixed-width buckets).
 #[derive(Debug, Clone)]
 pub struct IntervalRow {
     pub t_start: f64,
-    /// Observed arrival rate (completed + dropped), rps.
+    /// Observed arrival rate (completed + dropped + shed), rps.
     pub observed_rps: f64,
     /// λ̂ the policy predicted for this interval (0 before first decision).
     pub predicted_rps: f64,
@@ -39,23 +139,43 @@ pub struct IntervalRow {
     pub accuracy_loss: f64,
     pub p99_latency_s: f64,
     pub mean_latency_s: f64,
-    /// Fraction of requests in this bucket above the SLO (dropped count).
+    /// Fraction of *admitted* requests in this bucket above the SLO
+    /// (dropped count; shed do not).
     pub slo_violation_rate: f64,
     pub dropped: u64,
     pub completed: u64,
+    /// Refused at the admission gate in this bucket.
+    pub shed: u64,
+    /// Per-tier shed counts in this bucket (empty when nothing shed).
+    pub shed_by_tier: Vec<(Tier, u64)>,
 }
 
 /// Whole-run summary (one figure box/bar).
 #[derive(Debug, Clone)]
 pub struct RunSummary {
     pub policy: String,
+    /// All arrivals, including shed ones.
     pub total_requests: u64,
+    /// Admitted requests dropped inside the serving path.
     pub dropped: u64,
-    /// Overall SLO violation fraction (dropped requests count as violations).
+    /// Requests refused at the admission gate.
+    pub shed: u64,
+    /// SLO violation fraction of *admitted* requests (dropped requests
+    /// count as violations; shed requests count in neither side).  With
+    /// admission disabled this is the historical all-requests rate.
     pub slo_violation_rate: f64,
     /// Requests completed *within* the SLO per second of the run — the
     /// sustained useful throughput the batching experiments compare.
     pub goodput_rps: f64,
+    /// Admitted arrivals per second (the door throughput; equals the
+    /// offered rate with admission disabled).
+    pub admitted_rps: f64,
+    /// Goodput of the *admitted* stream: admitted requests completed
+    /// within the SLO per second of the run.  Sheds never complete, so
+    /// this equals `goodput_rps`; it is kept as its own field so
+    /// admission on/off comparisons plot the (offered, admitted) pair
+    /// explicitly.
+    pub goodput_admitted_rps: f64,
     /// Request-weighted average accuracy over the run.
     pub avg_accuracy: f64,
     pub avg_accuracy_loss: f64,
@@ -66,6 +186,8 @@ pub struct RunSummary {
     pub p99_latency_s: f64,
     pub p50_latency_s: f64,
     pub mean_latency_s: f64,
+    /// Per-tier outcome breakdown, lowest tier number first.
+    pub tiers: Vec<TierStats>,
 }
 
 /// Aggregate of a multi-service fleet run: the per-service [`RunSummary`]s
@@ -79,7 +201,9 @@ pub struct FleetSummary {
     pub services: Vec<RunSummary>,
     pub total_requests: u64,
     pub dropped: u64,
-    /// Request-weighted SLO-violation fraction across services.
+    /// Requests refused at admission gates across the fleet.
+    pub shed: u64,
+    /// Admitted-request-weighted SLO-violation fraction across services.
     pub slo_violation_rate: f64,
     /// Sum of per-service goodput (each a rate over its *own* active
     /// window and its own SLO — per-service sustained useful throughput,
@@ -95,6 +219,8 @@ pub struct FleetSummary {
     pub core_seconds: f64,
     /// Worst per-service P99 latency.
     pub worst_p99_latency_s: f64,
+    /// Fleet-wide per-tier breakdown (merged across services).
+    pub tiers: Vec<TierStats>,
 }
 
 impl FleetSummary {
@@ -103,24 +229,33 @@ impl FleetSummary {
     pub fn from_services(services: Vec<RunSummary>, horizon_s: f64) -> Self {
         let total_requests: u64 = services.iter().map(|s| s.total_requests).sum();
         let dropped: u64 = services.iter().map(|s| s.dropped).sum();
+        let shed: u64 = services.iter().map(|s| s.shed).sum();
+        let admitted: u64 = services
+            .iter()
+            .map(|s| s.total_requests - s.shed)
+            .sum();
         let completed: f64 = services
             .iter()
-            .map(|s| (s.total_requests - s.dropped) as f64)
+            .map(|s| (s.total_requests - s.shed - s.dropped) as f64)
             .sum();
         let slo_violation_rate = services
             .iter()
-            .map(|s| s.slo_violation_rate * s.total_requests as f64)
+            .map(|s| s.slo_violation_rate * (s.total_requests - s.shed) as f64)
             .sum::<f64>()
-            / (total_requests.max(1) as f64);
+            / (admitted.max(1) as f64);
         let avg_accuracy_loss = services
             .iter()
-            .map(|s| s.avg_accuracy_loss * (s.total_requests - s.dropped) as f64)
+            .map(|s| {
+                s.avg_accuracy_loss * (s.total_requests - s.shed - s.dropped) as f64
+            })
             .sum::<f64>()
             / completed.max(1.0);
         let core_seconds: f64 = services.iter().map(|s| s.core_seconds).sum();
+        let tiers = merge_tiers(services.iter().map(|s| s.tiers.as_slice()));
         Self {
             total_requests,
             dropped,
+            shed,
             slo_violation_rate,
             goodput_rps: services.iter().map(|s| s.goodput_rps).sum(),
             avg_accuracy_loss,
@@ -130,6 +265,7 @@ impl FleetSummary {
                 .iter()
                 .map(|s| s.p99_latency_s)
                 .fold(0.0, f64::max),
+            tiers,
             services,
         }
     }
@@ -149,6 +285,10 @@ pub struct MetricsCollector {
     predictions: Vec<(f64, f64)>,
     /// (time, variant, batch size) from policy decisions (batching audit).
     batch_decisions: Vec<(f64, String, usize)>,
+    /// Running violation count of admitted requests (burn-rate signal).
+    live_violations: u64,
+    /// Running admitted count (burn-rate signal denominator).
+    live_admitted: u64,
 }
 
 impl MetricsCollector {
@@ -161,11 +301,37 @@ impl MetricsCollector {
             cost_samples: Vec::new(),
             predictions: Vec::new(),
             batch_decisions: Vec::new(),
+            live_violations: 0,
+            live_admitted: 0,
         }
     }
 
-    pub fn record_request(&mut self, r: RequestRecord) {
+    /// Record one resolved request.  Non-shed records are normalized
+    /// against the collector's SLO here, so `outcome` is authoritative on
+    /// everything stored.
+    pub fn record_request(&mut self, mut r: RequestRecord) {
+        if r.outcome != RequestOutcome::Shed {
+            r.outcome = if r.latency_s.is_finite() && r.latency_s <= self.slo_s {
+                RequestOutcome::Served
+            } else {
+                RequestOutcome::Violated
+            };
+        }
+        match r.outcome {
+            RequestOutcome::Served => self.live_admitted += 1,
+            RequestOutcome::Violated => {
+                self.live_admitted += 1;
+                self.live_violations += 1;
+            }
+            RequestOutcome::Shed => {}
+        }
         self.records.push(r);
+    }
+
+    /// Running (violations, admitted) counts — the SLO-burn-rate feed the
+    /// fleet engine snapshots every adaptation interval.
+    pub fn live_counts(&self) -> (u64, u64) {
+        (self.live_violations, self.live_admitted)
     }
 
     pub fn record_cost(&mut self, t: f64, billed_cores: usize) {
@@ -215,9 +381,19 @@ impl MetricsCollector {
             .enumerate()
             .map(|(b, reqs)| {
                 let t_start = b as f64 * self.bucket_s;
+                let shed_recs: Vec<&&RequestRecord> = reqs
+                    .iter()
+                    .filter(|r| r.outcome == RequestOutcome::Shed)
+                    .collect();
+                let shed = shed_recs.len() as u64;
+                let mut shed_by_tier: BTreeMap<Tier, u64> = BTreeMap::new();
+                for r in &shed_recs {
+                    *shed_by_tier.entry(r.tier).or_insert(0) += 1;
+                }
                 let completed: Vec<&&RequestRecord> =
                     reqs.iter().filter(|r| !r.dropped()).collect();
-                let dropped = (reqs.len() - completed.len()) as u64;
+                let dropped = reqs.len() as u64 - completed.len() as u64 - shed;
+                let admitted = reqs.len() as u64 - shed;
                 let mut lats: Vec<f64> = completed.iter().map(|r| r.latency_s).collect();
                 lats.sort_by(f64::total_cmp);
                 let q = |p: f64| -> f64 {
@@ -235,7 +411,7 @@ impl MetricsCollector {
                 };
                 let violations = reqs
                     .iter()
-                    .filter(|r| r.dropped() || r.latency_s > self.slo_s)
+                    .filter(|r| r.outcome == RequestOutcome::Violated)
                     .count();
                 // time-average cost via sub-sampling the step function
                 let cost = (0..10)
@@ -255,13 +431,15 @@ impl MetricsCollector {
                     } else {
                         lats.iter().sum::<f64>() / lats.len() as f64
                     },
-                    slo_violation_rate: if reqs.is_empty() {
+                    slo_violation_rate: if admitted == 0 {
                         0.0
                     } else {
-                        violations as f64 / reqs.len() as f64
+                        violations as f64 / admitted as f64
                     },
                     dropped,
                     completed: completed.len() as u64,
+                    shed,
+                    shed_by_tier: shed_by_tier.into_iter().collect(),
                 }
             })
             .collect()
@@ -270,9 +448,15 @@ impl MetricsCollector {
     /// Whole-run summary.
     pub fn summary(&self, policy: &str, duration_s: f64) -> RunSummary {
         let total = self.records.len() as u64;
+        let shed = self
+            .records
+            .iter()
+            .filter(|r| r.outcome == RequestOutcome::Shed)
+            .count() as u64;
+        let admitted = total - shed;
         let completed: Vec<&RequestRecord> =
             self.records.iter().filter(|r| !r.dropped()).collect();
-        let dropped = total - completed.len() as u64;
+        let dropped = admitted - completed.len() as u64;
         let mut lats: Vec<f64> = completed.iter().map(|r| r.latency_s).collect();
         lats.sort_by(f64::total_cmp);
         let q = |p: f64| -> f64 {
@@ -286,7 +470,7 @@ impl MetricsCollector {
         let violations = self
             .records
             .iter()
-            .filter(|r| r.dropped() || r.latency_s > self.slo_s)
+            .filter(|r| r.outcome == RequestOutcome::Violated)
             .count();
         let avg_acc = if completed.is_empty() {
             0.0
@@ -301,20 +485,47 @@ impl MetricsCollector {
         if let Some(&(t_last, c_last)) = self.cost_samples.last() {
             core_seconds += c_last as f64 * (duration_s - t_last).max(0.0);
         }
-        let within_slo = completed
+        let within_slo = self
+            .records
             .iter()
-            .filter(|r| r.latency_s <= self.slo_s)
+            .filter(|r| r.outcome == RequestOutcome::Served)
             .count();
+        let mut tier_map: BTreeMap<Tier, TierStats> = BTreeMap::new();
+        for r in &self.records {
+            let e = tier_map.entry(r.tier).or_insert(TierStats {
+                tier: r.tier,
+                ..Default::default()
+            });
+            e.total += 1;
+            match r.outcome {
+                RequestOutcome::Shed => e.shed += 1,
+                RequestOutcome::Served => e.served += 1,
+                RequestOutcome::Violated => {
+                    e.violations += 1;
+                    if r.dropped() {
+                        e.dropped += 1;
+                    }
+                }
+            }
+        }
+        let tiers: Vec<TierStats> = tier_map.into_values().map(TierStats::finish).collect();
+        // Offered-side and admitted-side goodput coincide by construction
+        // (sheds never complete), so compute once and expose both names —
+        // the invariant is documented on the fields.
+        let goodput = within_slo as f64 / duration_s.max(1e-9);
         RunSummary {
             policy: policy.to_string(),
             total_requests: total,
             dropped,
-            slo_violation_rate: if total == 0 {
+            shed,
+            slo_violation_rate: if admitted == 0 {
                 0.0
             } else {
-                violations as f64 / total as f64
+                violations as f64 / admitted as f64
             },
-            goodput_rps: within_slo as f64 / duration_s.max(1e-9),
+            goodput_rps: goodput,
+            admitted_rps: admitted as f64 / duration_s.max(1e-9),
+            goodput_admitted_rps: goodput,
             avg_accuracy: avg_acc,
             avg_accuracy_loss: self.top_accuracy - avg_acc,
             avg_cost_cores: core_seconds / duration_s.max(1e-9),
@@ -326,6 +537,7 @@ impl MetricsCollector {
             } else {
                 lats.iter().sum::<f64>() / lats.len() as f64
             },
+            tiers,
         }
     }
 
@@ -338,11 +550,11 @@ impl MetricsCollector {
 pub fn rows_to_csv(rows: &[IntervalRow]) -> String {
     let mut out = String::from(
         "t,observed_rps,predicted_rps,cost_cores,avg_accuracy,accuracy_loss,\
-         p99_latency_s,mean_latency_s,slo_violation_rate,dropped,completed\n",
+         p99_latency_s,mean_latency_s,slo_violation_rate,dropped,completed,shed\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "{:.0},{:.2},{:.2},{:.2},{:.3},{:.3},{:.4},{:.4},{:.4},{},{}\n",
+            "{:.0},{:.2},{:.2},{:.2},{:.3},{:.3},{:.4},{:.4},{:.4},{},{},{}\n",
             r.t_start,
             r.observed_rps,
             r.predicted_rps,
@@ -353,7 +565,8 @@ pub fn rows_to_csv(rows: &[IntervalRow]) -> String {
             r.mean_latency_s,
             r.slo_violation_rate,
             r.dropped,
-            r.completed
+            r.completed,
+            r.shed
         ));
     }
     out
@@ -385,23 +598,65 @@ mod tests {
     fn summary_counts_violations_and_drops() {
         let mut m = collector();
         for i in 0..100 {
-            m.record_request(RequestRecord {
-                arrival_s: i as f64 * 0.1,
-                latency_s: if i < 90 { 0.1 } else { 1.0 },
-                accuracy: 76.13,
-            });
+            m.record_request(RequestRecord::new(
+                i as f64 * 0.1,
+                if i < 90 { 0.1 } else { 1.0 },
+                76.13,
+                0,
+            ));
         }
-        m.record_request(RequestRecord {
-            arrival_s: 5.0,
-            latency_s: f64::INFINITY,
-            accuracy: 76.13,
-        });
+        m.record_request(RequestRecord::new(5.0, f64::INFINITY, 76.13, 0));
         let s = m.summary("test", 10.0);
         assert_eq!(s.total_requests, 101);
         assert_eq!(s.dropped, 1);
+        assert_eq!(s.shed, 0);
         assert!((s.slo_violation_rate - 11.0 / 101.0).abs() < 1e-9);
         assert!((s.avg_accuracy - 76.13).abs() < 1e-9);
         assert!((s.avg_accuracy_loss - 2.18).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shed_requests_are_not_slo_violations() {
+        let mut m = collector();
+        // 8 served, 2 violated, 10 shed
+        for i in 0..10 {
+            m.record_request(RequestRecord::new(
+                i as f64,
+                if i < 8 { 0.1 } else { 2.0 },
+                76.13,
+                0,
+            ));
+        }
+        for i in 0..10 {
+            m.record_request(RequestRecord::shed(i as f64, 1));
+        }
+        let s = m.summary("t", 10.0);
+        assert_eq!(s.total_requests, 20);
+        assert_eq!(s.shed, 10);
+        assert_eq!(s.dropped, 0);
+        // violations normalized by the 10 admitted, not the 20 offered
+        assert!((s.slo_violation_rate - 0.2).abs() < 1e-9, "{s:?}");
+        assert!((s.admitted_rps - 1.0).abs() < 1e-9);
+        assert!((s.goodput_admitted_rps - 0.8).abs() < 1e-9);
+        // per-tier: tier 0 took the violations, tier 1 took the sheds
+        assert_eq!(s.tiers.len(), 2);
+        assert_eq!(s.tiers[0].tier, 0);
+        assert_eq!(s.tiers[0].violations, 2);
+        assert_eq!(s.tiers[0].shed, 0);
+        assert!((s.tiers[0].slo_violation_rate - 0.2).abs() < 1e-9);
+        assert_eq!(s.tiers[1].tier, 1);
+        assert_eq!(s.tiers[1].shed, 10);
+        assert_eq!(s.tiers[1].slo_violation_rate, 0.0);
+    }
+
+    #[test]
+    fn live_counts_feed_the_burn_meter() {
+        let mut m = collector();
+        m.record_request(RequestRecord::new(0.0, 0.1, 76.13, 0)); // served
+        m.record_request(RequestRecord::new(0.1, 2.0, 76.13, 0)); // violated
+        m.record_request(RequestRecord::shed(0.2, 1)); // shed: neither
+        let (v, a) = m.live_counts();
+        assert_eq!((v, a), (1, 2));
     }
 
     #[test]
@@ -418,17 +673,18 @@ mod tests {
     fn rows_bucket_by_arrival_time() {
         let mut m = collector();
         for t in [1.0, 2.0, 11.0, 12.0, 13.0] {
-            m.record_request(RequestRecord {
-                arrival_s: t,
-                latency_s: 0.2,
-                accuracy: 69.76,
-            });
+            m.record_request(RequestRecord::new(t, 0.2, 69.76, 0));
         }
+        m.record_request(RequestRecord::shed(3.0, 1));
         m.record_cost(0.0, 8);
         let rows = m.rows(20.0);
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].completed, 2);
+        assert_eq!(rows[0].shed, 1);
+        assert_eq!(rows[0].shed_by_tier, vec![(1, 1)]);
+        assert_eq!(rows[0].dropped, 0);
         assert_eq!(rows[1].completed, 3);
+        assert_eq!(rows[1].shed, 0);
         assert!((rows[0].cost_cores - 8.0).abs() < 1e-9);
         assert!((rows[0].accuracy_loss - (78.31 - 69.76)).abs() < 1e-6);
     }
@@ -437,17 +693,14 @@ mod tests {
     fn goodput_counts_only_within_slo_completions() {
         let mut m = collector();
         for i in 0..100 {
-            m.record_request(RequestRecord {
-                arrival_s: i as f64 * 0.1,
-                latency_s: if i < 80 { 0.2 } else { 2.0 },
-                accuracy: 76.13,
-            });
+            m.record_request(RequestRecord::new(
+                i as f64 * 0.1,
+                if i < 80 { 0.2 } else { 2.0 },
+                76.13,
+                0,
+            ));
         }
-        m.record_request(RequestRecord {
-            arrival_s: 1.0,
-            latency_s: f64::INFINITY,
-            accuracy: 0.0,
-        });
+        m.record_request(RequestRecord::new(1.0, f64::INFINITY, 0.0, 0));
         let s = m.summary("t", 10.0);
         // 80 of 101 finished within the 0.75 s SLO over 10 s
         assert!((s.goodput_rps - 8.0).abs() < 1e-9, "{}", s.goodput_rps);
@@ -469,8 +722,11 @@ mod tests {
                 policy: "svc".into(),
                 total_requests: total,
                 dropped,
+                shed: 0,
                 slo_violation_rate: viol,
                 goodput_rps: 10.0,
+                admitted_rps: 10.0,
+                goodput_admitted_rps: 10.0,
                 avg_accuracy: 0.0,
                 avg_accuracy_loss: loss,
                 avg_cost_cores: cost,
@@ -478,6 +734,7 @@ mod tests {
                 p99_latency_s: p99,
                 p50_latency_s: 0.1,
                 mean_latency_s: 0.1,
+                tiers: Vec::new(),
             }
         };
         let f = FleetSummary::from_services(
@@ -489,6 +746,7 @@ mod tests {
         );
         assert_eq!(f.total_requests, 400);
         assert_eq!(f.dropped, 100);
+        assert_eq!(f.shed, 0);
         // (0.10·300 + 0.30·100) / 400
         assert!((f.slo_violation_rate - 0.15).abs() < 1e-9);
         // loss weighted by completed requests only: (1.0·300 + 0.0·0)/300
@@ -508,14 +766,57 @@ mod tests {
     }
 
     #[test]
+    fn fleet_summary_merges_tier_breakdowns() {
+        let svc = |tiers: Vec<TierStats>, total: u64, shed: u64| RunSummary {
+            policy: "svc".into(),
+            total_requests: total,
+            dropped: 0,
+            shed,
+            slo_violation_rate: 0.0,
+            goodput_rps: 0.0,
+            admitted_rps: 0.0,
+            goodput_admitted_rps: 0.0,
+            avg_accuracy: 0.0,
+            avg_accuracy_loss: 0.0,
+            avg_cost_cores: 0.0,
+            core_seconds: 0.0,
+            p99_latency_s: 0.0,
+            p50_latency_s: 0.0,
+            mean_latency_s: 0.0,
+            tiers,
+        };
+        let t = |tier: Tier, total: u64, shed: u64, violations: u64| TierStats {
+            tier,
+            total,
+            shed,
+            dropped: 0,
+            violations,
+            served: total - shed - violations,
+            slo_violation_rate: 0.0,
+        };
+        let f = FleetSummary::from_services(
+            vec![
+                svc(vec![t(0, 100, 0, 10)], 100, 0),
+                svc(vec![t(0, 50, 0, 0), t(1, 50, 40, 0)], 100, 40),
+            ],
+            100.0,
+        );
+        assert_eq!(f.shed, 40);
+        assert_eq!(f.tiers.len(), 2);
+        assert_eq!(f.tiers[0].tier, 0);
+        assert_eq!(f.tiers[0].total, 150);
+        assert_eq!(f.tiers[0].violations, 10);
+        assert!((f.tiers[0].slo_violation_rate - 10.0 / 150.0).abs() < 1e-9);
+        assert_eq!(f.tiers[1].shed, 40);
+        assert_eq!(f.tiers[1].total, 50);
+        assert_eq!(f.tiers[1].slo_violation_rate, 0.0);
+    }
+
+    #[test]
     fn p99_matches_exact_rank() {
         let mut m = collector();
         for i in 1..=200 {
-            m.record_request(RequestRecord {
-                arrival_s: 0.5,
-                latency_s: i as f64 / 1000.0,
-                accuracy: 78.31,
-            });
+            m.record_request(RequestRecord::new(0.5, i as f64 / 1000.0, 78.31, 0));
         }
         let s = m.summary("t", 10.0);
         assert!((s.p99_latency_s - 0.198).abs() < 1e-9);

@@ -1,0 +1,107 @@
+//! SLO-burn-rate tracking: rolling violation rate against an error budget.
+//!
+//! SRE-style burn accounting for the fleet arbiter: every service declares
+//! an *error budget* — the SLO-violation fraction it is allowed to run at
+//! (e.g. 1%).  [`SloBurnMeter`] keeps a rolling window of per-interval
+//! (violations, admitted) counts and reports the **burn rate**: the
+//! windowed violation rate divided by the budget.  ≤ 1 means the service
+//! is inside its budget; > 1 means it is actively burning — the arbiter
+//! boosts the marginal utility of burning services so the water-fill
+//! moves cores toward the fire (see [`crate::fleet::arbiter`]).
+
+use std::collections::VecDeque;
+
+/// Rolling (violations, admitted) window with burn-rate readout.
+#[derive(Debug, Clone)]
+pub struct SloBurnMeter {
+    error_budget: f64,
+    window: VecDeque<(u64, u64)>,
+    cap: usize,
+    sum_violations: u64,
+    sum_admitted: u64,
+}
+
+impl SloBurnMeter {
+    /// `error_budget` is the allowed violation fraction (clamped away from
+    /// zero so the burn ratio stays finite); `window_intervals` is how
+    /// many adaptation intervals the rolling rate covers.
+    pub fn new(error_budget: f64, window_intervals: usize) -> Self {
+        Self {
+            error_budget: error_budget.max(1e-6),
+            window: VecDeque::with_capacity(window_intervals.max(1)),
+            cap: window_intervals.max(1),
+            sum_violations: 0,
+            sum_admitted: 0,
+        }
+    }
+
+    /// Record one adaptation interval's (violations, admitted) counts.
+    /// Shed requests are *not* violations and must not be counted here —
+    /// shedding is the system keeping its promise to admitted traffic.
+    pub fn observe(&mut self, violations: u64, admitted: u64) {
+        if self.window.len() == self.cap {
+            if let Some((v, a)) = self.window.pop_front() {
+                self.sum_violations -= v;
+                self.sum_admitted -= a;
+            }
+        }
+        self.window.push_back((violations, admitted));
+        self.sum_violations += violations;
+        self.sum_admitted += admitted;
+    }
+
+    /// Windowed violation fraction (0 with no admitted traffic).
+    pub fn violation_rate(&self) -> f64 {
+        if self.sum_admitted == 0 {
+            0.0
+        } else {
+            self.sum_violations as f64 / self.sum_admitted as f64
+        }
+    }
+
+    /// Windowed violation rate over the error budget: ≤ 1 inside budget,
+    /// > 1 burning, 0 before any traffic.
+    pub fn burn_rate(&self) -> f64 {
+        self.violation_rate() / self.error_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_meter_reads_zero() {
+        let m = SloBurnMeter::new(0.01, 4);
+        assert_eq!(m.violation_rate(), 0.0);
+        assert_eq!(m.burn_rate(), 0.0);
+    }
+
+    #[test]
+    fn burn_rate_is_rate_over_budget() {
+        let mut m = SloBurnMeter::new(0.01, 4);
+        m.observe(2, 100); // 2% violations on a 1% budget
+        assert!((m.violation_rate() - 0.02).abs() < 1e-12);
+        assert!((m.burn_rate() - 2.0).abs() < 1e-9);
+        m.observe(0, 100); // rolling: 2/200 = 1% -> burn 1.0
+        assert!((m.burn_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_evicts_old_intervals() {
+        let mut m = SloBurnMeter::new(0.10, 2);
+        m.observe(50, 100);
+        m.observe(0, 100);
+        m.observe(0, 100); // the 50-violation interval ages out
+        assert_eq!(m.violation_rate(), 0.0);
+        assert_eq!(m.burn_rate(), 0.0);
+    }
+
+    #[test]
+    fn zero_budget_is_clamped_not_infinite() {
+        let mut m = SloBurnMeter::new(0.0, 4);
+        m.observe(1, 100);
+        assert!(m.burn_rate().is_finite());
+        assert!(m.burn_rate() > 1.0);
+    }
+}

@@ -6,12 +6,16 @@
 //! * [`LatencyReservoir`] — exact windowed latencies (experiment reporting),
 //! * [`P2Quantile`] — O(1)-per-sample streaming percentile estimator (the
 //!   hot-path P99 used by the live dashboards; pinned against the exact
-//!   reservoir in tests).
+//!   reservoir in tests),
+//! * [`SloBurnMeter`] — rolling SLO-violation rate against an error
+//!   budget (the arbiter's burn-rate signal).
 
+mod burn;
 mod p2;
 mod rate_window;
 mod reservoir;
 
+pub use burn::SloBurnMeter;
 pub use p2::P2Quantile;
 pub use rate_window::RateWindow;
 pub use reservoir::LatencyReservoir;

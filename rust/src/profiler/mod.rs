@@ -153,6 +153,26 @@ impl ProfileSet {
         v
     }
 
+    /// Aggregate sustainable throughput Σ `th_m(n, b)` of an allocation —
+    /// the admission gate's supply signal.  `alloc` maps variant → cores,
+    /// `batches` the in-force batch sizes (absent = 1); unknown variants
+    /// contribute nothing.
+    pub fn supply_rps(
+        &self,
+        alloc: &std::collections::BTreeMap<String, usize>,
+        batches: &std::collections::BTreeMap<String, usize>,
+    ) -> f64 {
+        alloc
+            .iter()
+            .filter(|&(_, &n)| n > 0)
+            .filter_map(|(v, &n)| {
+                self.get(v)
+                    .ok()
+                    .map(|p| p.throughput_batched(n, batches.get(v).copied().unwrap_or(1)))
+            })
+            .sum()
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj(vec![(
             "profiles",
@@ -398,6 +418,23 @@ mod tests {
         let p = set.get("resnet152").unwrap();
         assert_eq!(p.min_cores_for_slo(0.75, 32), Some(1));
         assert_eq!(p.min_cores_for_slo(0.01, 32), None);
+    }
+
+    #[test]
+    fn supply_rps_sums_batched_throughputs() {
+        use std::collections::BTreeMap;
+        let set = ProfileSet::paper_like();
+        let alloc = BTreeMap::from([
+            ("resnet18".to_string(), 4usize),
+            ("resnet50".to_string(), 2),
+            ("unknown".to_string(), 8), // ignored
+            ("resnet101".to_string(), 0), // zero cores contribute nothing
+        ]);
+        let batches = BTreeMap::from([("resnet50".to_string(), 4usize)]);
+        let expect = set.get("resnet18").unwrap().throughput_batched(4, 1)
+            + set.get("resnet50").unwrap().throughput_batched(2, 4);
+        assert!((set.supply_rps(&alloc, &batches) - expect).abs() < 1e-9);
+        assert_eq!(set.supply_rps(&BTreeMap::new(), &BTreeMap::new()), 0.0);
     }
 
     #[test]

@@ -28,6 +28,12 @@ pub struct Decision {
     pub batches: BTreeMap<String, usize>,
     /// λ̂ the policy planned for (reporting).
     pub predicted_lambda: f64,
+    /// Aggregate sustainable throughput Σ th_m(n, b) of the decided
+    /// allocation, rps — what the real engine sizes its admission gate
+    /// from (the sim engines recompute supply from the *committed*
+    /// allocation instead).  0 = unknown (policy has no throughput
+    /// model); the gate then keeps its previous supply.
+    pub supply_rps: f64,
 }
 
 impl Decision {

@@ -12,7 +12,8 @@
 //! Python absent; the figure-scale experiments use the virtual-time
 //! simulator (see DESIGN.md §4 for the 1-core-host substitution).
 
-use crate::dispatcher::Dispatcher;
+use crate::config::AdmissionConfig;
+use crate::dispatcher::{AdmissionGate, Dispatcher};
 use crate::metrics::{MetricsCollector, RequestRecord};
 use crate::monitoring::RateWindow;
 use crate::runtime::{Manifest, WorkerPool};
@@ -38,6 +39,10 @@ pub struct RealConfig {
     pub seed: u64,
     /// Cap on per-variant worker counts (host protection).
     pub max_workers_per_variant: usize,
+    /// Request-path admission control (disabled by default).  The live
+    /// gate runs single-tier and is sized from each decision's
+    /// `supply_rps` (Σ th_m of the decided allocation).
+    pub admission: AdmissionConfig,
 }
 
 impl Default for RealConfig {
@@ -48,6 +53,7 @@ impl Default for RealConfig {
             batch: 1,
             seed: 0,
             max_workers_per_variant: 4,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -258,9 +264,20 @@ impl RealEngine {
             .map(|v| (v.name.clone(), v.accuracy))
             .collect();
 
-        // Warm start.
+        // Warm start.  The live engine composes the gate with its
+        // long-lived `self.dispatcher` directly rather than through
+        // `RequestPath`: the dispatcher is shared with pool-builder
+        // threads (create-before-remove re-points it on swap-in), while
+        // the gate is exclusively the serve loop's — bundling them would
+        // force a lock around the gate for no concurrency gain.  The
+        // composition order (admit, then route) matches
+        // `RequestPath::handle`, which the virtual-time engines use.
+        let mut gate = AdmissionGate::new(&self.config.admission, 0, 0);
         let first_rate = trace.rates.first().copied().unwrap_or(0.0);
         let d0 = policy.decide(0.0, &[first_rate], &BTreeMap::new());
+        if d0.supply_rps > 0.0 {
+            gate.set_supply(0.0, d0.supply_rps);
+        }
         *self.desired_batches.lock().unwrap() = d0.batches.clone();
         self.apply(&d0.target, true)?; // warm start: block until ready
         self.set_quotas(&d0.quotas);
@@ -283,35 +300,46 @@ impl RealEngine {
             // Adapter ticks interleaved with arrivals.
             while next_adapt <= t_arr && next_adapt < duration {
                 wait_until(started, next_adapt);
-                self.adapter_tick(policy, next_adapt, &metrics)?;
+                self.adapter_tick(policy, next_adapt, &metrics, &mut gate)?;
                 next_adapt += self.config.adapter_interval_s;
             }
             wait_until(started, t_arr);
             let now_s = started.elapsed().as_secs_f64();
             self.rate_window.lock().unwrap().record(now_s);
 
+            // Admission: shed excess offered load at the door (an
+            // immediate reject) instead of queueing it past the SLO.
+            if !gate.admit(now_s, 0) {
+                metrics
+                    .lock()
+                    .unwrap()
+                    .record_request(RequestRecord::shed(now_s, 0));
+                continue;
+            }
             let variant = match self.dispatcher.route() {
                 Some(v) => v,
                 None => {
-                    metrics.lock().unwrap().record_request(RequestRecord {
-                        arrival_s: now_s,
-                        latency_s: f64::INFINITY,
-                        accuracy: 0.0,
-                    });
+                    metrics.lock().unwrap().record_request(RequestRecord::new(
+                        now_s,
+                        f64::INFINITY,
+                        0.0,
+                        0,
+                    ));
                     continue;
                 }
             };
-            let pool = self.pools.read().unwrap().get(&variant).cloned();
+            let pool = self.pools.read().unwrap().get(&*variant).cloned();
             let Some(pool) = pool else {
-                metrics.lock().unwrap().record_request(RequestRecord {
-                    arrival_s: now_s,
-                    latency_s: f64::INFINITY,
-                    accuracy: 0.0,
-                });
+                metrics.lock().unwrap().record_request(RequestRecord::new(
+                    now_s,
+                    f64::INFINITY,
+                    0.0,
+                    0,
+                ));
                 continue;
             };
             let metrics_cb = metrics.clone();
-            let accuracy = acc_by_variant.get(&variant).copied().unwrap_or(0.0);
+            let accuracy = acc_by_variant.get(&*variant).copied().unwrap_or(0.0);
             let inflight_cb = inflight.clone();
             let image = image_cache
                 .entry(pool.batch)
@@ -324,30 +352,32 @@ impl RealEngine {
                 .clone();
             inflight.fetch_add(1, Ordering::SeqCst);
             let submitted = pool.submit(image, move |result, elapsed| {
-                metrics_cb.lock().unwrap().record_request(RequestRecord {
-                    arrival_s: now_s,
-                    latency_s: if result.is_ok() {
+                metrics_cb.lock().unwrap().record_request(RequestRecord::new(
+                    now_s,
+                    if result.is_ok() {
                         elapsed.as_secs_f64()
                     } else {
                         f64::INFINITY
                     },
                     accuracy,
-                });
+                    0,
+                ));
                 inflight_cb.fetch_sub(1, Ordering::SeqCst);
             });
             if submitted.is_err() {
                 inflight.fetch_sub(1, Ordering::SeqCst);
-                metrics.lock().unwrap().record_request(RequestRecord {
-                    arrival_s: now_s,
-                    latency_s: f64::INFINITY,
+                metrics.lock().unwrap().record_request(RequestRecord::new(
+                    now_s,
+                    f64::INFINITY,
                     accuracy,
-                });
+                    0,
+                ));
             }
         }
         // Remaining adapter ticks until the trace ends, then drain.
         while next_adapt < duration {
             wait_until(started, next_adapt);
-            self.adapter_tick(policy, next_adapt, &metrics)?;
+            self.adapter_tick(policy, next_adapt, &metrics, &mut gate)?;
             next_adapt += self.config.adapter_interval_s;
         }
         let drain_deadline = Instant::now() + Duration::from_secs(60);
@@ -363,6 +393,7 @@ impl RealEngine {
         policy: &mut dyn Policy,
         now: f64,
         metrics: &Arc<Mutex<MetricsCollector>>,
+        gate: &mut AdmissionGate,
     ) -> Result<()> {
         let history = {
             let w = self.rate_window.lock().unwrap();
@@ -370,6 +401,9 @@ impl RealEngine {
         };
         let committed = self.committed();
         let d = policy.decide(now, &history, &committed);
+        if d.supply_rps > 0.0 {
+            gate.set_supply(now, d.supply_rps);
+        }
         *self.desired_batches.lock().unwrap() = d.batches.clone();
         self.apply(&d.target, false)?; // non-blocking: builders swap in when ready
         self.set_quotas(&d.quotas);

@@ -17,6 +17,7 @@
 //! rate-accounting semantics, which are unchanged.
 
 use super::{Decision, Policy};
+use crate::config::AdmissionConfig;
 use crate::fleet::curve_cache::CurveCacheStats;
 use crate::fleet::sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 use crate::metrics::MetricsCollector;
@@ -37,6 +38,10 @@ pub struct SimConfig {
     /// Batch-formation wait cap: a pod dispatches a partial batch once its
     /// oldest member has waited this long.  Irrelevant at batch size 1.
     pub batch_max_wait_s: f64,
+    /// Request-path admission control (disabled by default: the gate
+    /// admits everything and the run is bit-identical to the
+    /// pre-admission engine).
+    pub admission: AdmissionConfig,
 }
 
 impl Default for SimConfig {
@@ -49,6 +54,7 @@ impl Default for SimConfig {
             bucket_s: 10.0,
             queue_timeout_s: 10.0,
             batch_max_wait_s: 0.05,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -85,6 +91,8 @@ impl SimEngine {
             profiles: self.profiles.clone(),
             slo_s: self.config.slo_s,
             priority: 1.0,
+            tier: 0,
+            error_budget: 0.01,
             floor_cores: 0,
             policy: FleetPolicyRef::Plain(policy),
         }];

@@ -20,15 +20,29 @@ mod traces;
 pub use arrivals::ArrivalProcess;
 pub use traces::Trace;
 
+use crate::dispatcher::Tier;
+
 /// Per-second request rates plus bookkeeping.
 #[derive(Debug, Clone)]
 pub struct RateSeries {
     /// requests/second, one entry per second.
     pub rates: Vec<f64>,
     pub name: String,
+    /// Optional per-request priority-class mix `[(tier, weight)]`: the
+    /// share of requests arriving at each tier (0 = most important).
+    /// Empty (the default) means every request carries its service's
+    /// tier.  Assignment is deterministic ([`ClassMixer`]) so enabling a
+    /// mix never perturbs a seeded run's RNG draw sequence.
+    pub class_mix: Vec<(Tier, f64)>,
 }
 
 impl RateSeries {
+    /// Attach a per-request class mix (builder style).
+    pub fn with_class_mix(mut self, class_mix: Vec<(Tier, f64)>) -> Self {
+        self.class_mix = class_mix;
+        self
+    }
+
     pub fn duration_s(&self) -> usize {
         self.rates.len()
     }
@@ -54,6 +68,7 @@ impl RateSeries {
         Self {
             rates: self.rates.iter().map(|r| r * k).collect(),
             name: format!("{}*{k:.3}", self.name),
+            class_mix: self.class_mix.clone(),
         }
     }
 
@@ -62,6 +77,90 @@ impl RateSeries {
         Self {
             rates: self.rates[..seconds.min(self.rates.len())].to_vec(),
             name: self.name.clone(),
+            class_mix: self.class_mix.clone(),
         }
+    }
+}
+
+/// Deterministic per-request tier assignment from a class mix: smooth
+/// weighted round-robin over the tiers, so a 70/30 mix emits the exact
+/// proportions with the smoothest interleaving — and, crucially, without
+/// consuming any RNG (a seeded simulation's draw sequence is identical
+/// with and without a mix).
+#[derive(Debug, Clone)]
+pub struct ClassMixer {
+    /// (tier, weight, smoothing credit); empty = constant fallback tier.
+    entries: Vec<(Tier, f64, f64)>,
+    fallback: Tier,
+}
+
+impl ClassMixer {
+    /// Non-positive-weight entries are dropped; an empty (or fully
+    /// dropped) mix emits `fallback` forever.
+    pub fn new(mix: &[(Tier, f64)], fallback: Tier) -> Self {
+        Self {
+            entries: mix
+                .iter()
+                .filter(|&&(_, w)| w > 0.0)
+                .map(|&(t, w)| (t, w, 0.0))
+                .collect(),
+            fallback,
+        }
+    }
+
+    /// The next arrival's tier.
+    pub fn next(&mut self) -> Tier {
+        if self.entries.is_empty() {
+            return self.fallback;
+        }
+        let total: f64 = self.entries.iter().map(|e| e.1).sum();
+        for e in self.entries.iter_mut() {
+            e.2 += e.1;
+        }
+        let best = self
+            .entries
+            .iter()
+            .enumerate()
+            // ties go to the lower (more important) tier
+            .max_by(|a, b| a.1 .2.total_cmp(&b.1 .2).then_with(|| b.1 .0.cmp(&a.1 .0)))
+            .map(|(i, _)| i)
+            .expect("non-empty");
+        self.entries[best].2 -= total;
+        self.entries[best].0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_mix_emits_the_fallback_tier() {
+        let mut m = ClassMixer::new(&[], 3);
+        assert!((0..100).all(|_| m.next() == 3));
+        let mut z = ClassMixer::new(&[(1, 0.0)], 2);
+        assert_eq!(z.next(), 2);
+    }
+
+    #[test]
+    fn mix_proportions_are_exact_and_smooth() {
+        // integer weights: every credit update is exact in f64
+        let mut m = ClassMixer::new(&[(0, 7.0), (1, 3.0)], 0);
+        let seq: Vec<Tier> = (0..1000).map(|_| m.next()).collect();
+        let t0 = seq.iter().filter(|&&t| t == 0).count();
+        assert_eq!(t0, 700);
+        // smooth: every window of 10 carries the exact 7/3 split
+        for w in seq.chunks(10) {
+            assert_eq!(w.iter().filter(|&&t| t == 0).count(), 7, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn mixer_is_deterministic() {
+        let mk = || {
+            let mut m = ClassMixer::new(&[(0, 1.0), (1, 1.0), (2, 2.0)], 0);
+            (0..64).map(|_| m.next()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
     }
 }

@@ -14,6 +14,7 @@ impl Trace {
         RateSeries {
             rates: vec![rps; seconds],
             name: format!("steady-{rps}rps"),
+            class_mix: Vec::new(),
         }
     }
 
@@ -48,6 +49,7 @@ impl Trace {
         RateSeries {
             rates,
             name: format!("bursty-{base}-{peak}"),
+            class_mix: Vec::new(),
         }
     }
 
@@ -87,6 +89,7 @@ impl Trace {
         RateSeries {
             rates,
             name: format!("burst-{base}-{peak}@{start}+{len}"),
+            class_mix: Vec::new(),
         }
     }
 
@@ -142,6 +145,7 @@ impl Trace {
         RateSeries {
             rates,
             name: format!("non-bursty-{low}-{high}"),
+            class_mix: Vec::new(),
         }
     }
 
@@ -189,6 +193,7 @@ impl Trace {
         RateSeries {
             rates,
             name: format!("twitter-like-{base}"),
+            class_mix: Vec::new(),
         }
     }
 
@@ -214,6 +219,7 @@ impl Trace {
         Ok(RateSeries {
             rates,
             name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+            class_mix: Vec::new(),
         })
     }
 

@@ -2,8 +2,8 @@
 //! the offline build has no proptest — `util::rng` drives the cases).
 
 use infadapter::baselines::StaticPolicy;
-use infadapter::config::{BatchingConfig, Config, ObjectiveWeights};
-use infadapter::dispatcher::Dispatcher;
+use infadapter::config::{AdmissionConfig, BatchingConfig, Config, ObjectiveWeights};
+use infadapter::dispatcher::{AdmissionGate, Dispatcher, Tier};
 use infadapter::experiment::{PolicyKind, Scenario};
 use infadapter::fleet::{ArbiterEntry, CoreArbiter};
 use infadapter::profiler::ProfileSet;
@@ -345,7 +345,7 @@ fn prop_dispatcher_distribution_tracks_weights() {
         let n = 20_000;
         let mut counts: BTreeMap<String, usize> = BTreeMap::new();
         for _ in 0..n {
-            *counts.entry(d.route().unwrap()).or_insert(0) += 1;
+            *counts.entry(d.route().unwrap().to_string()).or_insert(0) += 1;
         }
         for (name, w) in &weights {
             let got = counts.get(name).copied().unwrap_or(0) as f64 / n as f64;
@@ -387,6 +387,11 @@ fn prop_arbiter_partition_bounded_floored_deterministic() {
                         .collect();
                     ArbiterEntry {
                         priority: 0.1 + rng.f64() * 5.0,
+                        // random strict tiers and burn signals: the
+                        // invariants hold across the lexicographic
+                        // pre-pass and the burn boost too
+                        tier: rng.below(3) as u8,
+                        burn: rng.f64() * 4.0,
                         floor,
                         curve: has_curve.then_some(curve),
                     }
@@ -395,7 +400,8 @@ fn prop_arbiter_partition_bounded_floored_deterministic() {
             (budget, entries)
         };
         let (budget, entries) = gen(&mut Rng::seed_from_u64(sub_seed));
-        let arbiter = CoreArbiter::new(budget);
+        let boost = (case % 3) as f64; // 0 (off), 1, 2
+        let arbiter = CoreArbiter::new(budget).with_burn_boost(boost);
         let grants = arbiter.partition(&entries);
         assert_eq!(grants.len(), entries.len());
         assert!(
@@ -413,7 +419,9 @@ fn prop_arbiter_partition_bounded_floored_deterministic() {
         // is idempotent on identical inputs
         let (budget2, entries2) = gen(&mut Rng::seed_from_u64(sub_seed));
         assert_eq!(budget, budget2);
-        let again = CoreArbiter::new(budget2).partition(&entries2);
+        let again = CoreArbiter::new(budget2)
+            .with_burn_boost(boost)
+            .partition(&entries2);
         assert_eq!(grants, again, "partition must be deterministic per seed");
         // (6) the O(B log N) heap water-fill must reproduce the reference
         // O(B·N) linear scan grant for grant, ties included
@@ -422,6 +430,125 @@ fn prop_arbiter_partition_bounded_floored_deterministic() {
             arbiter.partition_scan(&entries),
             "heap fill diverged from the reference scan (case {case})"
         );
+    }
+}
+
+/// Drive a gate with `seconds` of deterministic arrivals at `rps`, tiers
+/// cycling through `pattern`; returns per-second (admitted, shed) counts
+/// per tier.  Deterministic spacing makes "offered ≤ supply" exact — the
+/// token bucket's own conformance definition — so the properties below
+/// are sharp, not probabilistic.
+fn drive_gate(
+    gate: &mut AdmissionGate,
+    rps: f64,
+    seconds: usize,
+    pattern: &[Tier],
+) -> Vec<Vec<(u64, u64)>> {
+    let tiers = *pattern.iter().max().unwrap() as usize + 1;
+    let mut windows = vec![vec![(0u64, 0u64); tiers]; seconds];
+    let n = (rps * seconds as f64).round() as usize;
+    for i in 0..n {
+        let t = (i + 1) as f64 / rps;
+        let sec = (t.ceil() as usize - 1).min(seconds - 1);
+        let tier = pattern[i % pattern.len()];
+        if gate.admit(t, tier) {
+            windows[sec][tier as usize].0 += 1;
+        } else {
+            windows[sec][tier as usize].1 += 1;
+        }
+    }
+    windows
+}
+
+fn admission_cfg() -> AdmissionConfig {
+    AdmissionConfig {
+        enabled: true,
+        burst_s: 1.0,
+        slack: 1.0,
+        ctl_window_s: 1.0,
+    }
+}
+
+#[test]
+fn prop_admission_never_sheds_under_capacity() {
+    // (a) offered ≤ granted capacity -> zero sheds, for any supply,
+    // utilization, and tier mix.
+    for case in 0..100u64 {
+        let mut rng = Rng::seed_from_u64(40_000 + case);
+        let supply = 10.0 + rng.f64() * 190.0;
+        let util = 0.3 + rng.f64() * 0.65; // ≤ 0.95: strictly conformant
+        let pattern: Vec<Tier> = (0..1 + rng.below(4))
+            .map(|_| rng.below(3) as u8)
+            .collect();
+        let mut gate = AdmissionGate::new(&admission_cfg(), 0, 2);
+        gate.set_supply(0.0, supply);
+        let windows = drive_gate(&mut gate, supply * util, 20, &pattern);
+        let shed: u64 = windows.iter().flatten().map(|&(_, s)| s).sum();
+        assert_eq!(
+            shed, 0,
+            "under-capacity shed (case {case}: supply {supply:.1}, util {util:.2})"
+        );
+    }
+}
+
+#[test]
+fn prop_admission_shed_fraction_monotone_in_overload() {
+    // (b) at a fixed supply, the shed fraction is monotone nondecreasing
+    // in the offered load.
+    for case in 0..50u64 {
+        let mut rng = Rng::seed_from_u64(41_000 + case);
+        let supply = 20.0 + rng.f64() * 180.0;
+        let mut last = 0.0f64;
+        for factor in [0.8, 1.0, 1.3, 1.8, 2.5, 4.0] {
+            let mut gate = AdmissionGate::new(&admission_cfg(), 0, 0);
+            gate.set_supply(0.0, supply);
+            let windows = drive_gate(&mut gate, supply * factor, 30, &[0]);
+            let (adm, shed) = windows
+                .iter()
+                .flatten()
+                .fold((0u64, 0u64), |(a, s), &(x, y)| (a + x, s + y));
+            let frac = shed as f64 / (adm + shed).max(1) as f64;
+            assert!(
+                frac >= last - 1e-9,
+                "shed fraction not monotone (case {case}: {frac} < {last} at x{factor})"
+            );
+            last = frac;
+        }
+        assert!(last > 0.5, "4x overload must shed most (case {case}: {last})");
+    }
+}
+
+#[test]
+fn prop_admission_tiers_shed_lowest_first() {
+    // (c) under sustained overload with tiers enabled, once the gate's
+    // cutoff has adapted (≤ one control window per tier), a lower tier is
+    // never served in an interval where a higher tier is being shed.
+    for case in 0..50u64 {
+        let mut rng = Rng::seed_from_u64(42_000 + case);
+        let supply = 40.0 + rng.f64() * 160.0;
+        // 2.4x–4x: the high tier alone stays strictly over supply, so the
+        // gate is pressured in *every* control window and the cutoff
+        // cannot flap (at ~2x the high tier exactly fits the supply and a
+        // recovered cutoff could briefly readmit tier 1 mid-window)
+        let factor = 2.4 + rng.f64() * 1.6;
+        let mut gate = AdmissionGate::new(&admission_cfg(), 0, 1);
+        gate.set_supply(0.0, supply);
+        let windows = drive_gate(&mut gate, supply * factor, 30, &[0, 1]);
+        // skip the adaptation transient: 2 control windows
+        for (sec, w) in windows.iter().enumerate().skip(2) {
+            let (t0_adm, t0_shed) = w[0];
+            let (t1_adm, _) = w[1];
+            if t0_shed > 0 {
+                assert_eq!(
+                    t1_adm, 0,
+                    "tier 1 served while tier 0 shed (case {case}, second {sec}: \
+                     t0 {t0_adm}+{t0_shed} shed, t1 admitted {t1_adm})"
+                );
+            }
+        }
+        // and the high tier keeps serving throughout
+        let t0_total: u64 = windows.iter().skip(2).map(|w| w[0].0).sum();
+        assert!(t0_total > 0, "tier 0 starved (case {case})");
     }
 }
 

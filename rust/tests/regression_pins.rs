@@ -1,0 +1,154 @@
+//! Regression pins for the PR 4 acceptance criterion: **with defaults
+//! (admission disabled, single tier, burn boost off) the admission-
+//! controlled request path is an exact no-op** — single-service and fleet
+//! runs perform the same event sequence and RNG draws as the pre-admission
+//! pipeline, so every summary statistic is bit-identical.
+//!
+//! The knobs are pinned from both sides: a default run is compared against
+//! a run with every new knob set to a *neutral but non-default* value
+//! (admission config present but disabled, an explicit single-tier class
+//! mix, a non-default error budget with the burn boost off, equal non-zero
+//! tiers).  Any code path that let one of those knobs leak into routing,
+//! shedding, arbitration, or RNG draws breaks these exact equalities.
+
+use infadapter::adapter::InfAdapterPolicy;
+use infadapter::config::{AdmissionConfig, Config, ObjectiveWeights};
+use infadapter::fleet::{FleetMode, FleetScenario};
+use infadapter::forecaster::LastMaxForecaster;
+use infadapter::metrics::RunSummary;
+use infadapter::profiler::ProfileSet;
+use infadapter::serving::sim::{SimConfig, SimEngine};
+use infadapter::solver::BranchBoundSolver;
+use infadapter::workload::Trace;
+use std::path::Path;
+
+fn inf_policy(budget: usize) -> InfAdapterPolicy {
+    InfAdapterPolicy::new(
+        ProfileSet::paper_like(),
+        Box::new(LastMaxForecaster::new(120, 1.0)),
+        Box::new(BranchBoundSolver),
+        ObjectiveWeights::default(),
+        0.75,
+        budget,
+        1.1,
+    )
+}
+
+fn assert_summaries_identical(a: &RunSummary, b: &RunSummary) {
+    assert_eq!(a.total_requests, b.total_requests);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.slo_violation_rate, b.slo_violation_rate);
+    assert_eq!(a.goodput_rps, b.goodput_rps);
+    assert_eq!(a.avg_accuracy, b.avg_accuracy);
+    assert_eq!(a.avg_accuracy_loss, b.avg_accuracy_loss);
+    assert_eq!(a.core_seconds, b.core_seconds);
+    assert_eq!(a.p99_latency_s, b.p99_latency_s);
+    assert_eq!(a.p50_latency_s, b.p50_latency_s);
+    assert_eq!(a.mean_latency_s, b.mean_latency_s);
+}
+
+#[test]
+fn single_service_neutral_knobs_are_bit_identical() {
+    let profiles = ProfileSet::paper_like();
+    let trace = Trace::bursty(40.0, 100.0, 420, 9);
+    // explicit single-tier class mix: must assign tier 0 to every request
+    // without touching any RNG stream
+    let mixed_trace = trace.clone().with_class_mix(vec![(0, 1.0)]);
+
+    let mut p1 = inf_policy(20);
+    let default_cfg = SimConfig {
+        seed: 9,
+        ..Default::default()
+    };
+    let base = SimEngine::new(profiles.clone(), default_cfg.clone()).run(&mut p1, &trace);
+
+    // a present-but-disabled admission config with non-default knobs
+    let mut p2 = inf_policy(20);
+    let neutral_cfg = SimConfig {
+        seed: 9,
+        admission: AdmissionConfig {
+            enabled: false,
+            burst_s: 7.0,
+            slack: 2.0,
+            ctl_window_s: 0.25,
+        },
+        ..Default::default()
+    };
+    let neutral = SimEngine::new(profiles.clone(), neutral_cfg).run(&mut p2, &mixed_trace);
+
+    let a = base.metrics.summary("default", base.duration_s);
+    let b = neutral.metrics.summary("neutral", neutral.duration_s);
+    assert_summaries_identical(&a, &b);
+    assert_eq!(base.decisions.len(), neutral.decisions.len());
+    for ((t1, d1), (t2, d2)) in base.decisions.iter().zip(&neutral.decisions) {
+        assert_eq!(t1, t2);
+        assert_eq!(d1.target, d2.target);
+        assert_eq!(d1.quotas, d2.quotas);
+        assert_eq!(d1.batches, d2.batches);
+        assert_eq!(d1.predicted_lambda, d2.predicted_lambda);
+    }
+}
+
+#[test]
+fn fleet_neutral_knobs_are_bit_identical() {
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 17;
+    let base_scenario =
+        FleetScenario::synthetic(2, 30.0, 600, 12, &config, &profiles);
+
+    // neutral variants of every new knob: equal non-zero tiers (the
+    // arbiter's single-tier fast path), non-default error budgets with
+    // the burn boost off, disabled admission with non-default shape
+    let mut neutral_scenario = base_scenario.clone();
+    neutral_scenario.admission = AdmissionConfig {
+        enabled: false,
+        burst_s: 3.0,
+        slack: 1.5,
+        ctl_window_s: 0.5,
+    };
+    neutral_scenario.burn_boost = 0.0;
+    for s in neutral_scenario.services.iter_mut() {
+        s.tier = 3;
+        s.error_budget = 0.5;
+    }
+
+    let dir = Path::new("/nonexistent");
+    let base = base_scenario.run(&FleetMode::Arbiter, dir);
+    let neutral = neutral_scenario.run(&FleetMode::Arbiter, dir);
+    assert_eq!(base.summary.total_requests, neutral.summary.total_requests);
+    assert_eq!(base.summary.shed, 0);
+    assert_eq!(neutral.summary.shed, 0);
+    assert_eq!(
+        base.summary.slo_violation_rate,
+        neutral.summary.slo_violation_rate
+    );
+    assert_eq!(base.summary.core_seconds, neutral.summary.core_seconds);
+    for (x, y) in base.summary.services.iter().zip(&neutral.summary.services) {
+        assert_summaries_identical(x, y);
+    }
+}
+
+#[test]
+fn burn_boost_zero_matches_burning_fleet_partitions() {
+    // Even with services *actually burning* their SLO budget, burn_boost=0
+    // must leave the arbiter's partitions untouched: an overloaded fleet
+    // run is bit-identical whether the error budgets are tight or loose.
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    let tight = FleetScenario::synthetic_overload(2, 30.0, 420, 8, false, &config, &profiles);
+    let mut loose = tight.clone();
+    for s in loose.services.iter_mut() {
+        s.error_budget = 1.0;
+    }
+    let dir = Path::new("/nonexistent");
+    let a = tight.run(&FleetMode::Arbiter, dir);
+    let b = loose.run(&FleetMode::Arbiter, dir);
+    for (x, y) in a.summary.services.iter().zip(&b.summary.services) {
+        assert_summaries_identical(x, y);
+    }
+}
