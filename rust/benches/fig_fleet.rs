@@ -14,14 +14,20 @@
 //! of the cluster while the quiet service keeps its floor — lower
 //! aggregate SLO violations at the same total core budget.
 //!
-//! **Part B (overload × admission × tiers):** both services burst at the
-//! *same* time on an 8-core cluster, so no arbitration can cover the
-//! summed demand — the regime PR 4's admission gate and priority tiers
-//! exist for.  A 2×2 matrix {admission off/on} × {tiers off/on} (tiers
-//! bring the arbiter's lexicographic pre-pass + the SLO-burn boost)
-//! shows the headline: admission+tiers cut the high-tier service's SLO
-//! violations at equal cost, shedding lowest-tier-first instead of
-//! letting queues blow through every request.
+//! **Part B (overload × admission × tiers × shed pricing):** both
+//! services burst at the *same* time on an 8-core cluster, so no
+//! arbitration can cover the summed demand — the regime PR 4's admission
+//! gate and priority tiers exist for.  A 2×2 matrix {admission off/on} ×
+//! {tiers off/on} (tiers bring the arbiter's lexicographic pre-pass +
+//! the SLO-burn boost) shows the headline: admission+tiers cut the
+//! high-tier service's SLO violations at equal cost, shedding
+//! lowest-tier-first instead of letting queues blow through every
+//! request.  PR 5 adds a third axis {shed price off/on}: with
+//! value-asymmetric traffic (svc0 all tier-0 requests, svc1 all tier-1)
+//! on a single arbiter tier and `burn_boost = 0`, pricing shed traffic
+//! into the per-service ILPs (`fleet.shed_penalty`) makes the arbiter
+//! shift contended cores toward the costlier shedder within the tick —
+//! tier-0 shed drops at the same budget, with no burn signal involved.
 //!
 //! `--short` shrinks the traces for CI; `--json <path>` writes the
 //! Part B matrix + headline (uploaded as the BENCH_fleet.json artifact).
@@ -107,16 +113,24 @@ fn main() {
         );
     }
 
-    // --- Part B: shared overload, admission × tiers -------------------
+    // --- Part B: shared overload, admission × tiers × shed pricing ----
     println!("\n# Part B: simultaneous 5x bursts, 2 services, B=8 (overload)");
     let overload_budget = 8;
-    let cell = |admission: bool, tiers: bool| -> FleetRunOutput {
+    // One Part B cell: {admission} × {arbiter tiers + burn boost} ×
+    // {shed pricing}.  `mixed` is the third axis's workload shape: it
+    // swaps the service-level tier split for per-request class mixes —
+    // svc0 all tier-0 requests (shed weight 1.0), svc1 all tier-1
+    // (weight 0.5) — on ONE arbiter tier, so with burn_boost = 0 any
+    // core movement in the priced cells is the ILP pricing its shed
+    // traffic, not the strict-tier pre-pass or the burn signal.
+    let cell = |admission: bool, tiers: bool, shed_penalty: f64, mixed: bool| -> FleetRunOutput {
         let mut c = Config::default();
         c.adapter.forecaster = "last_max".into();
         c.admission.enabled = admission;
         // the burn boost rides with the tier machinery
         c.fleet.burn_boost = if tiers { 1.0 } else { 0.0 };
-        let s = FleetScenario::synthetic_overload(
+        c.fleet.shed_penalty = shed_penalty;
+        let mut s = FleetScenario::synthetic_overload(
             2,
             30.0,
             seconds,
@@ -125,19 +139,31 @@ fn main() {
             &c,
             &profiles,
         );
+        if mixed {
+            s.services[0].trace = s.services[0].trace.clone().with_class_mix(vec![(0, 1.0)]);
+            s.services[1].trace = s.services[1].trace.clone().with_class_mix(vec![(1, 1.0)]);
+        }
         s.run(&FleetMode::Arbiter, &dir)
     };
+    // (label, admission, arbiter tiers, shed_penalty, mixed classes, run) —
+    // one source of truth per row: the flags that run the cell are the
+    // flags the table and BENCH_fleet.json report.
+    let row = |label: &'static str, admission: bool, tiers: bool, penalty: f64, mixed: bool| {
+        (label, admission, tiers, penalty, mixed, cell(admission, tiers, penalty, mixed))
+    };
     let cells = [
-        ("baseline", cell(false, false)),
-        ("tiers", cell(false, true)),
-        ("admission", cell(true, false)),
-        ("admission+tiers", cell(true, true)),
+        row("baseline", false, false, 0.0, false),
+        row("tiers", false, true, 0.0, false),
+        row("admission", true, false, 0.0, false),
+        row("admission+tiers", true, true, 0.0, false),
+        row("mixed, price off", true, false, 0.0, true),
+        row("mixed, price on", true, false, 1.0, true),
     ];
     println!(
-        "{:<16} {:>9} {:>10} {:>10} {:>9} {:>9} {:>9}",
-        "cell", "SLOviol%", "hi-viol%", "cost(avg)", "shed", "shed-t0", "shed-t1"
+        "{:<16} {:>7} {:>9} {:>10} {:>10} {:>9} {:>9} {:>9}",
+        "cell", "price", "SLOviol%", "hi-viol%", "cost(avg)", "shed", "shed-t0", "shed-t1"
     );
-    for (label, out) in &cells {
+    for (label, _, _, penalty, _, out) in &cells {
         let s = &out.summary;
         // "high tier" = svc0 (tier 0 in the tiered cells)
         let hi = &s.services[0];
@@ -149,8 +175,9 @@ fn main() {
                 .unwrap_or(0)
         };
         println!(
-            "{:<16} {:>9.2} {:>10.2} {:>10.2} {:>9} {:>9} {:>9}",
+            "{:<16} {:>7.2} {:>9.2} {:>10.2} {:>10.2} {:>9} {:>9} {:>9}",
             label,
+            penalty,
             s.slo_violation_rate * 100.0,
             hi.slo_violation_rate * 100.0,
             s.avg_cost_cores,
@@ -159,8 +186,8 @@ fn main() {
             shed_t(1)
         );
     }
-    let base = &cells[0].1.summary;
-    let full = &cells[3].1.summary;
+    let base = &cells[0].5.summary;
+    let full = &cells[3].5.summary;
     let hi_base = base.services[0].slo_violation_rate;
     let hi_full = full.services[0].slo_violation_rate;
     let hi_red = if hi_base > 0.0 {
@@ -177,13 +204,52 @@ fn main() {
         full.avg_cost_cores - base.avg_cost_cores
     );
 
+    // Third-axis headline: shed pricing cuts the *high-value* (tier-0)
+    // shed at the same budget with the burn boost off — the arbiter is
+    // shifting cores toward the costlier shedder inside the tick, on the
+    // priced value curves alone.
+    let t0_shed = |s: &infadapter::metrics::FleetSummary| {
+        s.tiers
+            .iter()
+            .find(|t| t.tier == 0)
+            .map(|t| t.shed)
+            .unwrap_or(0)
+    };
+    let price_off = &cells[4].5.summary;
+    let price_on = &cells[5].5.summary;
+    let shed_off = t0_shed(price_off);
+    let shed_on = t0_shed(price_on);
+    let shed_red = if shed_off > 0 {
+        (1.0 - shed_on as f64 / shed_off as f64) * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "# Part B third axis: pricing shed traffic into the ILP cuts tier-0 \
+         (high-value) shed by {:.1}% ({} -> {}) at cost delta {:+.2} cores, \
+         burn_boost = 0",
+        shed_red,
+        shed_off,
+        shed_on,
+        price_on.avg_cost_cores - price_off.avg_cost_cores
+    );
+
     if let Some(path) = json_path {
-        let cell_json = |label: &str, admission: bool, tiers: bool, out: &FleetRunOutput| {
+        let cell_json = |label: &str,
+                         admission: bool,
+                         tiers: bool,
+                         penalty: f64,
+                         mixed: bool,
+                         out: &FleetRunOutput| {
             let s = &out.summary;
             Value::obj(vec![
                 ("cell", Value::Str(label.to_string())),
                 ("admission", Value::Bool(admission)),
                 ("tiers", Value::Bool(tiers)),
+                ("shed_penalty", Value::Num(penalty)),
+                // the third axis's workload shape: per-request class
+                // mixes (svc0 tier-0, svc1 tier-1) on one arbiter tier
+                ("mixed_classes", Value::Bool(mixed)),
                 ("slo_violation_rate", Value::Num(s.slo_violation_rate)),
                 (
                     "high_tier_violation_rate",
@@ -207,7 +273,6 @@ fn main() {
                 ),
             ])
         };
-        let flags = [(false, false), (false, true), (true, false), (true, true)];
         let json = Value::obj(vec![
             ("seconds", Value::Num(seconds as f64)),
             ("overload_budget", Value::Num(overload_budget as f64)),
@@ -216,8 +281,7 @@ fn main() {
                 Value::Arr(
                     cells
                         .iter()
-                        .zip(flags)
-                        .map(|((label, out), (a, t))| cell_json(label, a, t, out))
+                        .map(|(label, a, t, p, m, out)| cell_json(label, *a, *t, *p, *m, out))
                         .collect(),
                 ),
             ),
@@ -228,6 +292,11 @@ fn main() {
                     (
                         "cost_delta_cores",
                         Value::Num(full.avg_cost_cores - base.avg_cost_cores),
+                    ),
+                    ("tier0_shed_reduction_pct", Value::Num(shed_red)),
+                    (
+                        "shed_price_cost_delta_cores",
+                        Value::Num(price_on.avg_cost_cores - price_off.avg_cost_cores),
                     ),
                 ]),
             ),

@@ -33,6 +33,16 @@ pub struct InfAdapterPolicy {
     pub hysteresis: f64,
     /// Server-side batching knobs (default: disabled, `max_batch = 1`).
     pub batching: BatchingConfig,
+    /// Per-request lost-goodput price the ILP charges on offered load its
+    /// capacity cannot cover (`shed_penalty · max(0, λ̂_offered −
+    /// capacity)`); already tier-weighted by the fleet layer (see
+    /// `fleet::shed_value_weight`).  0 (the default) disables the term
+    /// and keeps every solve bit-identical to the unpriced objective.
+    pub shed_penalty: f64,
+    /// Raw predicted offered rate from the last
+    /// [`Self::observe_and_predict`] (pre-headroom, pre-floor) — what the
+    /// shed pricing charges against.
+    last_offered: f64,
     last_allocation: Option<Allocation>,
 }
 
@@ -57,6 +67,8 @@ impl InfAdapterPolicy {
             min_lambda: 1.0,
             hysteresis: 0.5,
             batching: BatchingConfig::default(),
+            shed_penalty: 0.0,
+            last_offered: 0.0,
             last_allocation: None,
         }
     }
@@ -65,6 +77,19 @@ impl InfAdapterPolicy {
     pub fn with_batching(mut self, batching: BatchingConfig) -> Self {
         self.batching = batching;
         self
+    }
+
+    /// Price shed traffic into every solve (builder style); the penalty
+    /// is the per-request lost-goodput price, tier-weighted by the caller.
+    pub fn with_shed_pricing(mut self, shed_penalty: f64) -> Self {
+        self.shed_penalty = shed_penalty.max(0.0);
+        self
+    }
+
+    /// Raw predicted offered rate from the last observation (diagnostics
+    /// and the `CurveCache` key).
+    pub fn last_offered(&self) -> f64 {
+        self.last_offered
     }
 
     /// Last solved allocation (diagnostics / benches).
@@ -81,7 +106,36 @@ impl InfAdapterPolicy {
         for &r in rate_history {
             self.forecaster.observe(r);
         }
-        (self.forecaster.predict_max() * self.headroom).max(self.min_lambda)
+        let raw = self.forecaster.predict_max();
+        // The raw forecast is the *offered* rate shed pricing charges
+        // against; the returned planning λ̂ adds headroom and the floor.
+        self.last_offered = raw.max(0.0);
+        (raw * self.headroom).max(self.min_lambda)
+    }
+
+    /// Build the ILP instance for one solve: profiles + batching as
+    /// before, with shed pricing injected when a penalty is configured
+    /// (the guard keeps unpriced problems bit-identical to PR 4).
+    fn build_problem(
+        &self,
+        lambda_hat: f64,
+        committed: &BTreeMap<String, usize>,
+        budget: usize,
+    ) -> Problem {
+        let problem = Problem::from_profiles_batched(
+            &self.profiles,
+            lambda_hat,
+            self.slo_s,
+            budget,
+            self.weights,
+            committed,
+            &self.batching,
+        );
+        if self.shed_penalty != 0.0 {
+            problem.with_shed_pricing(self.last_offered, self.shed_penalty)
+        } else {
+            problem
+        }
     }
 
     /// Best-objective value curve over candidate core grants `0..=cap` —
@@ -90,6 +144,10 @@ impl InfAdapterPolicy {
     /// [`Self::observe_and_predict`] and [`Self::decide_with_lambda`]
     /// without perturbing the decision sequence.  One single-pass
     /// [`Solver::solve_curve`] replaces the old per-grant re-solve loop.
+    /// With shed pricing configured the curve is priced against
+    /// [`Self::last_offered`] (set by the preceding observation), so a
+    /// shedding service's marginal utility rises in the *same tick* the
+    /// forecast sees the overload — before its burn meter trips.
     pub fn value_curve(
         &self,
         lambda_hat: f64,
@@ -113,15 +171,7 @@ impl InfAdapterPolicy {
         cap: usize,
         seed: Option<&ValueCurve>,
     ) -> ValueCurve {
-        let problem = Problem::from_profiles_batched(
-            &self.profiles,
-            lambda_hat,
-            self.slo_s,
-            cap,
-            self.weights,
-            committed,
-            &self.batching,
-        );
+        let problem = self.build_problem(lambda_hat, committed, cap);
         self.solver.solve_curve_seeded(&problem, cap, seed)
     }
 
@@ -133,15 +183,7 @@ impl InfAdapterPolicy {
         lambda_hat: f64,
         committed: &BTreeMap<String, usize>,
     ) -> Decision {
-        let problem = Problem::from_profiles_batched(
-            &self.profiles,
-            lambda_hat,
-            self.slo_s,
-            self.budget,
-            self.weights,
-            committed,
-            &self.batching,
-        );
+        let problem = self.build_problem(lambda_hat, committed, self.budget);
         let mut allocation = self
             .solver
             .solve(&problem)
@@ -343,6 +385,58 @@ mod tests {
         solver_view.decide_with_lambda(77.0, &BTreeMap::new());
         let best = solver_view.last_allocation().unwrap().objective;
         assert!((curve[20] - best).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shed_pricing_steepens_the_overloaded_value_curve() {
+        // An overloaded service (λ̂ far beyond what 8 cores can carry):
+        // the priced curve must sit below the unpriced one wherever
+        // capacity falls short of the offered load, with the *gap
+        // shrinking* as the grant grows — that widening marginal is what
+        // pulls arbiter cores toward shedding services.
+        let mut plain = policy(0.05, 8);
+        let mut priced = policy(0.05, 8).with_shed_pricing(2.0);
+        let history = vec![400.0; 60];
+        let l1 = plain.observe_and_predict(&history);
+        let l2 = priced.observe_and_predict(&history);
+        assert_eq!(l1, l2, "pricing must not perturb the forecast");
+        assert!((priced.last_offered() - 400.0).abs() < 1e-9);
+        let u = plain.value_curve(l1, &BTreeMap::new(), 8);
+        let p = priced.value_curve(l2, &BTreeMap::new(), 8);
+        // priced ≤ unpriced pointwise; strictly below while shedding
+        for (g, (&a, &b)) in p.iter().zip(&u).enumerate() {
+            assert!(a <= b + 1e-9, "g={g}: priced {a} above unpriced {b}");
+        }
+        assert!(p[1] < u[1] - 1.0, "shedding grant must be priced down");
+        // the priced marginal at low grants exceeds the unpriced one
+        assert!(
+            (p[2] - p[1]) > (u[2] - u[1]) + 1e-9,
+            "priced marginal {} !> unpriced {}",
+            p[2] - p[1],
+            u[2] - u[1]
+        );
+        // penalty 0 reproduces the unpriced curve bit-for-bit
+        let mut zero = policy(0.05, 8).with_shed_pricing(0.0);
+        let l0 = zero.observe_and_predict(&history);
+        assert_eq!(zero.value_curve(l0, &BTreeMap::new(), 8), u);
+    }
+
+    #[test]
+    fn priced_split_decide_matches_decide_exactly() {
+        // The fleet protocol (observe → curve → decide) must stay an
+        // exact factoring of decide() when shed pricing is on.
+        let mut whole = policy(0.05, 12).with_shed_pricing(1.5);
+        let mut split = policy(0.05, 12).with_shed_pricing(1.5);
+        let history = vec![250.0; 60];
+        let committed = BTreeMap::from([("resnet18".to_string(), 4)]);
+        let d1 = whole.decide(0.0, &history, &committed);
+        let lambda = split.observe_and_predict(&history);
+        let _ = split.value_curve(lambda, &committed, 12);
+        let d2 = split.decide_with_lambda(lambda, &committed);
+        assert_eq!(d1.predicted_lambda, d2.predicted_lambda);
+        assert_eq!(d1.target, d2.target);
+        assert_eq!(d1.quotas, d2.quotas);
+        assert_eq!(d1.supply_rps, d2.supply_rps);
     }
 
     #[test]

@@ -218,6 +218,15 @@ pub struct FleetConfig {
     /// disables the boost and keeps partitions bit-identical to the
     /// burn-unaware arbiter.
     pub burn_boost: f64,
+    /// Per-request lost-goodput price the per-service ILPs charge on
+    /// offered load their capacity cannot cover (admission-aware value
+    /// curves): each service's effective penalty is this price weighted
+    /// by its traffic's tier mix (`fleet::shed_value_weight`), so the
+    /// arbiter trades cores against shedding explicitly — high-value
+    /// shed costs more than best-effort shed.  0 (default) disables the
+    /// pricing and keeps every solve bit-identical to the unpriced
+    /// objective.
+    pub shed_penalty: f64,
     /// Empty = fleet serving disabled (single-service mode).
     pub services: Vec<FleetServiceConfig>,
 }
@@ -343,6 +352,7 @@ impl Config {
             Some(f) => FleetConfig {
                 global_budget: usize_or(f, "global_budget", 0)?,
                 burn_boost: f64_or(f, "burn_boost", 0.0)?,
+                shed_penalty: f64_or(f, "shed_penalty", 0.0)?,
                 services: match f.get("services") {
                     Some(svcs) => svcs
                         .as_arr()?
@@ -482,6 +492,7 @@ impl Config {
                         Value::Num(self.fleet.global_budget as f64),
                     ),
                     ("burn_boost", Value::Num(self.fleet.burn_boost)),
+                    ("shed_penalty", Value::Num(self.fleet.shed_penalty)),
                     (
                         "services",
                         Value::Arr(
@@ -591,6 +602,10 @@ impl Config {
             self.fleet.burn_boost >= 0.0,
             "fleet burn_boost must be non-negative"
         );
+        anyhow::ensure!(
+            self.fleet.shed_penalty >= 0.0 && self.fleet.shed_penalty.is_finite(),
+            "fleet shed_penalty must be finite and non-negative"
+        );
         let node_total: usize = self.cluster.node_cores.iter().sum();
         anyhow::ensure!(
             self.cluster.budget <= node_total,
@@ -690,6 +705,7 @@ mod tests {
         c.seed = 7;
         c.fleet.global_budget = 24;
         c.fleet.burn_boost = 1.5;
+        c.fleet.shed_penalty = 0.75;
         c.admission = AdmissionConfig {
             enabled: true,
             burst_s: 2.0,
@@ -771,6 +787,17 @@ mod tests {
         let mut c = Config::default();
         c.fleet.burn_boost = -0.1;
         assert!(c.validate().is_err());
+        // negative or non-finite shed penalty — rejected even with no
+        // declared services (the CLI sets it on synthetic fleets)
+        let mut c = Config::default();
+        c.fleet.shed_penalty = -0.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.fleet.shed_penalty = f64::INFINITY;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.fleet.shed_penalty = 1.25;
+        c.validate().unwrap();
         // a well-formed fleet passes, explicit global budget respected
         let mut c = Config::default();
         c.fleet.global_budget = 30;

@@ -17,7 +17,12 @@
 //!   cutoff drops by one — the numerically highest admitted tier is
 //!   excluded outright, reserving the whole token stream for the tiers
 //!   above it.  When a control window passes with no pressure and spare
-//!   tokens, the cutoff readmits one tier.  Under *sustained* overload
+//!   tokens, the cutoff readmits one tier.  A *zero-supply blackout*
+//!   (the service holds no capacity at all, e.g. an empty committed
+//!   allocation) shuts the gate but is not tier pressure: the cutoff
+//!   holds its ladder, so the gate reopens at the full tier range within
+//!   one control window of the supply returning instead of crawling back
+//!   one tier per quiet window.  Under *sustained* overload
 //!   this converges to strict lowest-tier-first shedding within one
 //!   control window per tier (see `prop_admission_tiers_shed_lowest_first`
 //!   in `tests/properties.rs`); during transitions a lower tier may ride
@@ -190,7 +195,17 @@ impl AdmissionGate {
             true
         } else {
             self.shed += 1;
-            self.pressured = true;
+            // A zero-supply blackout (service holds no capacity at all —
+            // e.g. its committed allocation is empty) is not *tier*
+            // pressure: there is no token stream for the cutoff to
+            // reapportion, and dropping it would make recovery crawl
+            // back one tier per quiet window after the supply returns.
+            // The gate shuts outright and keeps its ladder, so it
+            // reopens at the full tier range within one control window
+            // of capacity coming back.
+            if self.rate_rps > 0.0 {
+                self.pressured = true;
+            }
             false
         }
     }
@@ -333,6 +348,44 @@ mod tests {
         let _ = drive(&mut g, 10.0, 5.0, &[0]); // bucket refills to burst
         g.set_supply(5.0, 0.0);
         assert!(!g.admit(5.1, 0), "revoked supply must shed immediately");
+    }
+
+    #[test]
+    fn zero_supply_blackout_shuts_and_recovers_within_one_window() {
+        // A gate whose service lost its whole committed allocation
+        // (supply refreshed to 0) must SHUT — shedding every tier, unlike
+        // the never-configured gate, which admits everything — without
+        // burning its tier cutoff down: a blackout is not tier pressure,
+        // and recovery must not crawl back one tier per quiet window.
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 3);
+        assert!(g.admit(0.05, 3), "an unconfigured enabled gate admits");
+        g.set_supply(0.1, 100.0);
+        assert!(g.admit(0.2, 3), "supplied and under capacity: admit");
+        // the allocation is revoked: several control windows of blackout
+        g.set_supply(1.0, 0.0);
+        for i in 0..50 {
+            let t = 1.0 + 0.1 * (i + 1) as f64;
+            assert!(!g.admit(t, (i % 4) as Tier), "blackout must shed all tiers");
+        }
+        // the cutoff held its full ladder through the blackout...
+        assert_eq!(g.tier_cutoff(), 3, "blackout must not burn the cutoff");
+        // ...so one supply refresh reopens every tier within a single
+        // control window — the lowest tier is admitted immediately
+        g.set_supply(6.5, 100.0);
+        assert!(g.admit(7.0, 3), "lowest tier must be admitted right away");
+        assert!(g.admit(7.1, 0));
+        assert_eq!(g.tier_cutoff(), 3);
+    }
+
+    #[test]
+    fn genuine_overload_still_pressures_the_cutoff() {
+        // The zero-supply carve-out must not weaken real tier adaptation:
+        // a tiny-but-positive supply under overload still drops the
+        // cutoff (the DAGOR path is unchanged whenever tokens exist).
+        let mut g = AdmissionGate::new(&cfg(1.0), 0, 1);
+        g.set_supply(0.0, 5.0);
+        let _ = drive(&mut g, 50.0, 5.0, &[0, 1]);
+        assert_eq!(g.tier_cutoff(), 0, "overload must still adapt the cutoff");
     }
 
     #[test]

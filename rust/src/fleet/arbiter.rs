@@ -46,6 +46,14 @@
 //!   1.0) otherwise, so a `burn_boost` of 0 — the default — leaves every
 //!   marginal bit-identical to the burn-unaware arbiter.
 //!
+//! With **admission-aware value curves** (PR 5, `fleet.shed_penalty`)
+//! the curves themselves already price shed traffic: an overloaded
+//! service's `v_i` carries `−shed_penalty_i · max(0, λ̂_offered −
+//! capacity)`, so its marginals steepen by the tier-weighted value of
+//! the traffic it would otherwise shed — the arbiter trades cores
+//! against shedding *within the tick that forecasts it*, instead of
+//! waiting for the rolling burn signal above to cross its budget.
+//!
 //! Grants are **caps**, not reservations: each service's solver still
 //! decides how many of its granted cores to actually allocate (the β·RC
 //! term makes unused grant free), so handing out the whole budget never

@@ -2,7 +2,8 @@
 //! change between adaptation intervals in steady state, so re-deriving
 //! them from scratch every tick wastes the bulk of the fleet's decision
 //! budget.  Each arbitrated service owns one [`CurveCache`] keyed by
-//! (λ̂, current-cores signature, objective weights, grant cap):
+//! (λ̂, current-cores signature, objective weights, grant cap, and — when
+//! shed pricing is on — the shed penalty and offered rate; see PR 5):
 //!
 //! * **Hit** — bit-identical λ̂ and an identical key: the cached curve *is*
 //!   the exact answer (same problem, deterministic solver); zero solver
@@ -51,6 +52,14 @@ struct CacheEntry {
     committed: BTreeMap<String, usize>,
     weights: ObjectiveWeights,
     cap: usize,
+    /// Shed-pricing key: the penalty the curve was solved under, and the
+    /// offered rate it was priced against.  A hit must never cross
+    /// penalties (or, when priced, offered rates) — the curves are
+    /// genuinely different functions; warm starts may (re-scoring makes
+    /// any seed sound), but the key keeps them to the same-penalty case
+    /// where the incumbent actually prunes.
+    shed_penalty: f64,
+    offered: f64,
     curve: ValueCurve,
 }
 
@@ -86,11 +95,25 @@ impl CurveCache {
         cap: usize,
     ) -> Vec<f64> {
         let weights = policy.weights;
+        let shed_penalty = policy.shed_penalty;
+        // The curve depends on the offered rate only through the penalty:
+        // an unpriced solve ignores it entirely, so keying it there would
+        // spuriously miss on every forecast wobble.
+        let offered = if shed_penalty != 0.0 {
+            policy.last_offered()
+        } else {
+            0.0
+        };
+        let price_matches = |e: &CacheEntry| {
+            e.shed_penalty.to_bits() == shed_penalty.to_bits()
+                && (shed_penalty == 0.0 || e.offered.to_bits() == offered.to_bits())
+        };
         if let Some(e) = &self.entry {
             if e.lambda.to_bits() == lambda.to_bits()
                 && e.cap == cap
                 && e.weights == weights
                 && e.committed == *committed
+                && price_matches(e)
             {
                 self.stats.hits += 1;
                 return e.curve.values().to_vec();
@@ -101,6 +124,9 @@ impl CurveCache {
             Some(e) if e.lambda_bin == lambda_bin(lambda)
                 && e.weights == weights
                 && e.committed == *committed
+                && e.shed_penalty.to_bits() == shed_penalty.to_bits()
+                && (shed_penalty == 0.0
+                    || lambda_bin(e.offered) == lambda_bin(offered))
         );
         let seed = if warm {
             self.entry.as_ref().map(|e| &e.curve)
@@ -120,6 +146,8 @@ impl CurveCache {
             committed: committed.clone(),
             weights,
             cap,
+            shed_penalty,
+            offered,
             curve,
         });
         values
@@ -187,6 +215,41 @@ mod tests {
                 cold: 2
             }
         );
+    }
+
+    #[test]
+    fn penalty_change_invalidates_and_never_hits_across_prices() {
+        let mut p = policy().with_shed_pricing(1.0);
+        // overload λ̂ so the penalty genuinely changes the curve values
+        p.observe_and_predict(&vec![300.0; 60]);
+        let mut cache = CurveCache::new();
+        let committed = BTreeMap::new();
+        let a = cache.curve(&p, 330.0, &committed, 20);
+        // same inputs, same penalty: exact hit
+        let a2 = cache.curve(&p, 330.0, &committed, 20);
+        assert_eq!(a, a2);
+        assert_eq!(cache.stats.hits, 1);
+        // the penalty changes: the cached curve is for a different
+        // objective and must not be returned (not even as a warm start —
+        // the incumbent would be for the wrong prices)
+        p.shed_penalty = 0.25;
+        let b = cache.curve(&p, 330.0, &committed, 20);
+        assert_eq!(
+            cache.stats,
+            CurveCacheStats {
+                hits: 1,
+                warm: 0,
+                cold: 2
+            }
+        );
+        assert_eq!(b, p.value_curve(330.0, &committed, 20));
+        assert_ne!(a, b, "different penalties must price the curve differently");
+        // a changed offered rate under the same penalty also invalidates
+        // (120 quiet samples push the 300s out of the forecast window)
+        p.observe_and_predict(&vec![150.0; 120]);
+        let c = cache.curve(&p, 330.0, &committed, 20);
+        assert_eq!(cache.stats.cold, 3);
+        assert_eq!(c, p.value_curve(330.0, &committed, 20));
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //!   skip the solve entirely, near-identical inputs warm-start the
 //!   incumbent curve so steady-state ticks prune almost everything.
 //!   Always exact — partitions are bit-identical to uncached runs.
+//! * **Admission-aware value curves** (PR 5) — with
+//!   `FleetConfig::shed_penalty` set, each service's ILP prices the
+//!   offered load its capacity cannot cover (tier-weighted by
+//!   [`shed_value_weight`]), so the value curves the arbiter water-fills
+//!   already carry the cost of shedding: a service facing overload sees
+//!   its marginal utility rise in the same tick the forecast does —
+//!   before the lagging `SloBurnMeter` signal trips — and contended
+//!   cores flow toward the highest-value shed first.
 //! * [`sim::FleetSimEngine`] — drives N services' event streams against
 //!   one shared [`crate::cluster::Cluster`] in virtual time, with
 //!   per-service RNG streams (deterministic under a fixed seed); the
@@ -54,6 +62,32 @@ use std::path::Path;
 /// a service's trace noise would replay another stream's draws exactly.
 fn trace_seed(base: u64, i: usize) -> u64 {
     sim::service_seed(base, i).wrapping_add(2)
+}
+
+/// Value weight of one shed request under a service's traffic mix: tier
+/// `t` traffic is worth `2^-t` (tier 0 full price, each lower priority
+/// tier half the one above), and a class mix prices the *expected* tier
+/// of a shed request — `Σ share_t · 2^-t`.  An empty (or fully
+/// non-positive) mix prices everything at the service's own tier, exactly
+/// like the request-path [`crate::workload::ClassMixer`] fallback.  The
+/// fleet multiplies `FleetConfig::shed_penalty` by this weight per
+/// service, so the arbiter sees high-value shed as costlier than
+/// best-effort shed.
+pub fn shed_value_weight(class_mix: &[(Tier, f64)], default_tier: Tier) -> f64 {
+    fn tier_value(t: Tier) -> f64 {
+        0.5f64.powi(t as i32)
+    }
+    let total: f64 = class_mix.iter().filter(|&&(_, w)| w > 0.0).map(|&(_, w)| w).sum();
+    if total <= 0.0 {
+        tier_value(default_tier)
+    } else {
+        class_mix
+            .iter()
+            .filter(|&&(_, w)| w > 0.0)
+            .map(|&(t, w)| w * tier_value(t))
+            .sum::<f64>()
+            / total
+    }
 }
 
 /// Everything one service of a fleet scenario needs (owned; the sim-facing
@@ -121,6 +155,9 @@ pub struct FleetScenario {
     pub admission: AdmissionConfig,
     /// Arbiter SLO-burn boost strength (0 = off).
     pub burn_boost: f64,
+    /// Per-request lost-goodput price for admission-aware value curves
+    /// (0 = off); weighted per service by [`shed_value_weight`].
+    pub shed_penalty: f64,
 }
 
 impl FleetScenario {
@@ -167,6 +204,7 @@ impl FleetScenario {
             seed: config.seed,
             admission: config.admission,
             burn_boost: config.fleet.burn_boost,
+            shed_penalty: config.fleet.shed_penalty,
         })
     }
 
@@ -220,6 +258,7 @@ impl FleetScenario {
             seed: config.seed,
             admission: config.admission,
             burn_boost: config.fleet.burn_boost,
+            shed_penalty: config.fleet.shed_penalty,
         }
     }
 
@@ -273,6 +312,7 @@ impl FleetScenario {
             seed: config.seed,
             admission: config.admission,
             burn_boost: config.fleet.burn_boost,
+            shed_penalty: config.fleet.shed_penalty,
         }
     }
 
@@ -338,6 +378,12 @@ impl FleetScenario {
                             s.headroom,
                         )
                         .with_batching(s.batching)
+                        // tier-weighted lost-goodput price (0 = off): the
+                        // ILP sees shed traffic, so the arbiter trades
+                        // cores against shedding within the same tick
+                        .with_shed_pricing(
+                            self.shed_penalty * shed_value_weight(&s.trace.class_mix, s.tier),
+                        )
                     })
                     .collect();
                 let mut services: Vec<FleetService> = policies
@@ -603,6 +649,85 @@ mod tests {
             "cost {} vs baseline {}",
             treated_out.summary.avg_cost_cores,
             base_out.summary.avg_cost_cores
+        );
+    }
+
+    #[test]
+    fn shed_value_weight_prices_tiers_and_mixes() {
+        // pure tiers halve per level
+        assert!((shed_value_weight(&[], 0) - 1.0).abs() < 1e-12);
+        assert!((shed_value_weight(&[], 1) - 0.5).abs() < 1e-12);
+        assert!((shed_value_weight(&[], 3) - 0.125).abs() < 1e-12);
+        // a mix prices the expected tier of a shed request
+        let w = shed_value_weight(&[(0, 7.0), (1, 3.0)], 0);
+        assert!((w - (0.7 + 0.3 * 0.5)).abs() < 1e-12, "{w}");
+        // non-positive weights are dropped, like the ClassMixer
+        let w = shed_value_weight(&[(0, 0.0), (2, 1.0)], 0);
+        assert!((w - 0.25).abs() < 1e-12, "{w}");
+        // a fully-dropped mix falls back to the service tier
+        assert!((shed_value_weight(&[(0, 0.0)], 2) - 0.25).abs() < 1e-12);
+    }
+
+    /// The ISSUE's acceptance criterion: with both services drowning in
+    /// the same burst and NO strict tiers and NO burn boost in the
+    /// arbiter, pricing shed traffic into the value curves shifts
+    /// contended cores toward the service whose shed is most valuable
+    /// (tier-0 traffic) — its shed drops vs the unpriced run, at the same
+    /// global budget.
+    #[test]
+    fn shed_pricing_shifts_cores_toward_the_high_value_shedder() {
+        let mk = |shed_penalty: f64| {
+            let mut config = Config::default();
+            config.adapter.forecaster = "last_max".into();
+            config.seed = 23;
+            config.admission.enabled = true;
+            config.fleet.shed_penalty = shed_penalty;
+            // tiered=false: both services share arbiter tier 0 — any core
+            // movement is the pricing, not the lexicographic pre-pass
+            let mut s = FleetScenario::synthetic_overload(
+                2,
+                30.0,
+                420,
+                8,
+                false,
+                &config,
+                &ProfileSet::paper_like(),
+            );
+            // value-asymmetric traffic: svc0 carries tier-0 requests
+            // (weight 1.0), svc1 tier-1 (weight 0.5)
+            s.services[0].trace = s.services[0].trace.clone().with_class_mix(vec![(0, 1.0)]);
+            s.services[1].trace = s.services[1].trace.clone().with_class_mix(vec![(1, 1.0)]);
+            s
+        };
+        let dir = Path::new("/nonexistent");
+        let off = mk(0.0).run(&FleetMode::Arbiter, dir);
+        let on = mk(1.0).run(&FleetMode::Arbiter, dir);
+        // same offered traffic either way
+        assert_eq!(
+            off.summary.total_requests, on.summary.total_requests,
+            "pricing must not touch the arrival streams"
+        );
+        let t0_shed = |out: &FleetRunOutput| {
+            out.summary
+                .tiers
+                .iter()
+                .find(|t| t.tier == 0)
+                .map(|t| t.shed)
+                .unwrap_or(0)
+        };
+        assert!(t0_shed(&off) > 0, "the overload must shed: {:?}", off.summary.tiers);
+        assert!(
+            t0_shed(&on) < t0_shed(&off),
+            "pricing must cut high-value shed: on {} !< off {}",
+            t0_shed(&on),
+            t0_shed(&off)
+        );
+        // at (essentially) equal cost: same budget, pricing adds no cores
+        assert!(
+            on.summary.avg_cost_cores <= off.summary.avg_cost_cores + 1.0,
+            "cost {} vs {}",
+            on.summary.avg_cost_cores,
+            off.summary.avg_cost_cores
         );
     }
 

@@ -60,8 +60,10 @@ const BURN_WINDOW_INTERVALS: usize = 4;
 /// (`service_seed(base, i)` for service-time noise,
 /// `service_seed(base, i) + 1` for arrivals); anything else deriving
 /// per-service seeds from the same base (e.g. trace generators, see
-/// [`super::FleetScenario`]) must offset past that pair.
-pub(crate) fn service_seed(base: u64, i: usize) -> u64 {
+/// [`super::FleetScenario`]) must offset past that pair.  Public so
+/// conservation tests can regenerate a service's exact arrival stream
+/// (`prop_shed_conservation` counts ground-truth arrivals from it).
+pub fn service_seed(base: u64, i: usize) -> u64 {
     base.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 

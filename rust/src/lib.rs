@@ -17,7 +17,8 @@
 //! * [`profiler`] — variant profiling + linear-regression throughput models.
 //! * [`forecaster`] — AOT LSTM + classical baselines.
 //! * [`solver`] — the ILP: brute-force, branch & bound, greedy; whole
-//!   per-budget value curves from one single-pass solve.
+//!   per-budget value curves from one single-pass solve; optional shed
+//!   pricing charges the offered load an allocation cannot cover.
 //! * [`dispatcher`] — the admission-controlled request path: a
 //!   token-bucket gate sized from granted capacity (sheds overload at the
 //!   door, lowest priority tier first) in front of weighted round-robin
@@ -32,8 +33,9 @@
 //!   global budget every interval by heap water-filling on
 //!   priority-weighted marginal utility (per-service ILP value curves,
 //!   cached and warm-started across ticks), honoring strict priority
-//!   tiers lexicographically and boosting services burning their SLO
-//!   error budget.
+//!   tiers lexicographically, boosting services burning their SLO
+//!   error budget, and — with shed pricing on — trading cores against
+//!   tier-weighted shedding within the tick that forecasts it.
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 

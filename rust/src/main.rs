@@ -43,14 +43,18 @@ COMMANDS:
            [--admission on|off]
                                      virtual-time experiment
   fleet    [--services N] [--mode M] [--seconds N] [--base RPS] [--budget B]
-           [--admission on|off] [--burn-boost F] [--tiers 0,1,..]
-           [--overload on] [--out PREFIX]
+           [--admission on|off] [--burn-boost F] [--shed-penalty F]
+           [--tiers 0,1,..] [--overload on] [--out PREFIX]
                                      multi-service serving on one shared
                                      cluster (config.fleet when present,
                                      else N synthetic services with
                                      interleaved bursts; --overload makes
                                      every service burst simultaneously —
-                                     the admission/tier experiment)
+                                     the admission/tier experiment;
+                                     --shed-penalty prices shed traffic
+                                     into the per-service ILPs so the
+                                     arbiter trades cores against
+                                     shedding explicitly)
   serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
                                      live serving on the real PJRT engine
 
@@ -170,6 +174,11 @@ fn main() -> Result<()> {
     }
     if let Some(v) = args.get("burn-boost") {
         config.fleet.burn_boost = v.parse().with_context(|| format!("--burn-boost {v:?}"))?;
+    }
+    if let Some(v) = args.get("shed-penalty") {
+        config.fleet.shed_penalty = v
+            .parse()
+            .with_context(|| format!("--shed-penalty {v:?}"))?;
     }
     config.validate()?;
 

@@ -28,11 +28,18 @@
 //! gap (with the same 1e-9 feasibility tolerance the scorer uses — an
 //! exactly-covered load must not be penalized for a 1-ulp residue).
 //! `LC_partial` (max readiness among decided fresh variants) is a valid
-//! loading-cost floor because LC is a max that only grows.  The sweep
-//! stops once capacity covers the gap *and* the accuracy term saturates:
-//! past that cost the bound only falls while the incumbent only rises.
-//! A node is pruned only when *no* completion could improve the output
-//! curve at *any* cost, so exactness is preserved.
+//! loading-cost floor because LC is a max that only grows.  On priced
+//! problems ([`Problem::with_shed_pricing`]) the bound additionally
+//! charges the *optimistic* shed — the smallest possible priced
+//! shortfall `shed_penalty · max(0, offered − (committed capacity +
+//! addmax))` any completion at that cost could pay — which keeps it
+//! admissible because real completions add at most `addmax` capacity.
+//! The sweep stops once capacity covers the gap, the accuracy term
+//! saturates, *and* (when pricing) the offered load is coverable so the
+//! shed charge is pinned at zero: past that cost the bound only falls
+//! while the incumbent only rises.  A node is pruned only when *no*
+//! completion could improve the output curve at *any* cost, so exactness
+//! is preserved.
 //!
 //! [`Solver::solve_curve_seeded`] warm-starts the incumbent curve from a
 //! previous curve's winner vectors, **re-scored under the current
@@ -206,7 +213,7 @@ impl BranchBoundSolver {
             acc,
             visited: 0,
         };
-        dfs_curve(&mut ctx, &mut vec![0usize; m], 0, cap, 0.0, 0.0, 0.0);
+        dfs_curve(&mut ctx, &mut vec![0usize; m], 0, cap, 0.0, 0.0, 0.0, 0.0);
         (ctx.acc.finish(), ctx.visited)
     }
 
@@ -251,6 +258,10 @@ fn dfs(
     //    accuracy, so that is order[depth]);
     //  * cost — at least the committed cores plus the cheapest completion
     //    that could close the capacity gap at the best per-core rate.
+    // Loading cost, the infeasibility penalty, and the shed-pricing
+    // charge are all nonpositive contributions omitted here, so the bound
+    // stays an upper bound (admissible) on priced problems too — only
+    // looser; the curve search below carries the tighter shed-aware form.
     let lambda = ctx.problem.lambda;
     let committed: usize = cores.iter().sum();
     let gap = (lambda - filled).max(0.0);
@@ -308,7 +319,11 @@ struct CurveCtx<'a> {
 /// exact cost and pruning tests the optimistic bound against the incumbent
 /// curve at every reachable completion cost (see the module docs).
 /// `lc_partial` is the loading cost already locked in by decided fresh
-/// variants — a valid floor on any completion's LC.
+/// variants — a valid floor on any completion's LC.  `cap_committed` is
+/// the raw capacity Σ th of decided variants (distinct from `filled`,
+/// which is capped at λ): the shed-pricing bound needs it because the
+/// priced shortfall is measured against the *offered* load, which
+/// committed capacity beyond λ's absorption still reduces.
 #[allow(clippy::too_many_arguments)]
 fn dfs_curve(
     ctx: &mut CurveCtx,
@@ -318,6 +333,7 @@ fn dfs_curve(
     filled: f64,
     acc_sum: f64,
     lc_partial: f64,
+    cap_committed: f64,
 ) {
     ctx.visited += 1;
     let committed = ctx.cap - left;
@@ -331,6 +347,8 @@ fn dfs_curve(
     let gap = (lambda - filled).max(0.0);
     let next_acc = ctx.problem.variants[ctx.order[depth]].accuracy;
     let w = ctx.problem.weights;
+    let w_shed = ctx.problem.shed_penalty;
+    let offered = ctx.problem.offered_lambda;
     // Sweep candidate completion costs.  While `filled < λ` the decided
     // capacity is fully absorbed, so `gap` is exactly the remaining
     // capacity shortfall; `addmax` bounds how much k extra cores can close
@@ -353,15 +371,31 @@ fn dfs_curve(
         } else {
             1e3 + (gap - add)
         };
-        let bound = w.alpha * opt_aa - w.beta * c as f64 - w.gamma * lc_partial - pen;
+        // Optimistic (smallest admissible) shed charge: any completion
+        // with k extra cores adds at most `add` capacity, so its priced
+        // shortfall vs the offered load is at least this.
+        let shed = if w_shed != 0.0 {
+            w_shed * (offered - (cap_committed + add)).max(0.0)
+        } else {
+            0.0
+        };
+        let bound = w.alpha * opt_aa - w.beta * c as f64 - w.gamma * lc_partial - pen - shed;
         if bound > ctx.acc.incumbent_at(c) {
             promising = true;
             break;
         }
         // Past this cost the bound only falls (accuracy saturated at
-        // gap·next_acc, cost keeps growing) while the incumbent curve
-        // only rises — nothing further can flip the decision.
-        if add >= gap - 1e-9 && ctx.accmax[depth][k] >= gap * next_acc {
+        // gap·next_acc, infeasibility penalty gone, and — when pricing —
+        // the offered load covered so the shed charge is pinned at 0,
+        // the only term that could still have risen with k) while the
+        // incumbent curve only rises — nothing further can flip the
+        // decision.  The shed comparison is exact (no 1e-9 slack): the
+        // scorer's shed term carries no feasibility tolerance, so an
+        // early stop with an ε of shed still unpaid could out-prune it.
+        if add >= gap - 1e-9
+            && ctx.accmax[depth][k] >= gap * next_acc
+            && (w_shed == 0.0 || cap_committed + add >= offered)
+        {
             break;
         }
     }
@@ -375,7 +409,8 @@ fn dfs_curve(
             continue;
         }
         cores[i] = n;
-        let q = (lambda - filled).max(0.0).min(ctx.problem.variants[i].throughput[n]);
+        let th = ctx.problem.variants[i].throughput[n];
+        let q = (lambda - filled).max(0.0).min(th);
         let lc_next = if n > 0 && ctx.problem.variants[i].current_cores == 0 {
             lc_partial.max(ctx.problem.variants[i].readiness_s)
         } else {
@@ -390,6 +425,7 @@ fn dfs_curve(
             filled + q,
             acc_sum + acc_gain,
             lc_next,
+            cap_committed + th,
         );
     }
     cores[i] = 0;
@@ -497,6 +533,54 @@ mod tests {
             warm_nodes * 2 <= curve_nodes,
             "warm {warm_nodes} nodes should prune at least half of cold {curve_nodes}"
         );
+    }
+
+    #[test]
+    fn priced_curve_search_stays_exact() {
+        // Shed pricing adds a capacity-dependent term to every score; the
+        // curve-aware pruning (optimistic shed in the bound, shed-pinned
+        // sweep cutoff) must stay pointwise exact against the per-grant
+        // re-solve loop, including at an offered rate *above* λ (the
+        // dominance caps widen to cover it).
+        for (lambda, offered, penalty, budget) in [
+            (300.0, 272.0, 1.5, 24),
+            (120.0, 119.0, 0.3, 16),
+            (80.0, 180.0, 2.0, 12),
+            (400.0, 360.0, 5.0, 20),
+        ] {
+            let p = problem(lambda, budget, 0.05).with_shed_pricing(offered, penalty);
+            let reference = value_curve_resolve(&p, &BranchBoundSolver, budget);
+            let curve = BranchBoundSolver.solve_curve(&p, budget);
+            for (g, (a, b)) in curve.values().iter().zip(&reference).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "λ={lambda} offered={offered} pen={penalty} g={g}: {a} vs {b}"
+                );
+            }
+            // brute force agrees on the full-budget optimum
+            let bb = BranchBoundSolver.solve(&p).unwrap();
+            let bf = BruteForceSolver.solve(&p).unwrap();
+            assert!((bb.objective - bf.objective).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn stale_priced_seeds_never_corrupt_the_curve() {
+        // Seeds solved under a *different* shed penalty are re-scored
+        // under the current problem, so they can only prune, never drift
+        // the values.
+        let p = problem(250.0, 16, 0.05).with_shed_pricing(227.0, 2.0);
+        let cold = BranchBoundSolver.solve_curve(&p, 16);
+        for stale in [
+            BranchBoundSolver.solve_curve(&problem(250.0, 16, 0.05), 16),
+            BranchBoundSolver.solve_curve(
+                &problem(40.0, 16, 0.2).with_shed_pricing(36.0, 0.1),
+                16,
+            ),
+        ] {
+            let warm = BranchBoundSolver.solve_curve_seeded(&p, 16, Some(&stale));
+            assert_eq!(warm.values(), cold.values());
+        }
     }
 
     #[test]

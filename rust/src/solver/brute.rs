@@ -79,6 +79,8 @@ impl Solver for BruteForceSolver {
     /// objective *per exact cost* during that one pass (instead of the
     /// single global best) and prefix-maxing the bins yields `v(g)` for
     /// every grant — `cap + 1` solves collapse into one enumeration.
+    /// Shed pricing rides along for free: the leaf scorer charges it and
+    /// the dominance caps already widen to the offered load when priced.
     fn solve_curve(&self, problem: &Problem, cap: usize) -> ValueCurve {
         debug_assert!(
             cap <= problem.budget,

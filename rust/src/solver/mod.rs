@@ -35,6 +35,24 @@
 //! unbatched tables bit-for-bit, so batching off is behaviourally identical
 //! to the pre-batching solver.
 //!
+//! ## Shed pricing (admission-aware objective)
+//!
+//! With admission control the serving path refuses offered load beyond
+//! the allocation's supply — lost goodput the plain objective never sees.
+//! [`Problem::with_shed_pricing`] adds the term
+//! `− shed_penalty · max(0, λ̂_offered − capacity)` to every score, where
+//! `offered_lambda` is the *raw* predicted offered rate (the planning
+//! `lambda` carries headroom on top) and `shed_penalty` is the
+//! per-request lost-goodput price, tier-weighted by the caller.  The term
+//! depends on a core vector only through its aggregate capacity, so all
+//! the structural facts above survive: greedy quota fills stay optimal,
+//! the per-(variant, cores) batch choice stays pointwise optimal, the
+//! single-pass value curves stay exact (the branch-and-bound curve bound
+//! charges the *optimistic* shed of each completion — see
+//! [`BranchBoundSolver`]), and `shed_penalty = 0` (the default) skips the
+//! term outright, keeping every score bit-identical to the unpriced
+//! objective.
+//!
 //! Three solvers share the scoring code:
 //! * [`BruteForceSolver`] — exact enumeration of all weak compositions
 //!   (the paper's approach; with dominance pruning).
@@ -102,6 +120,18 @@ pub struct Problem {
     pub max_batch: usize,
     /// Batch-formation wait cap charged against the SLO when batching.
     pub max_wait_s: f64,
+    /// Predicted *offered* rate λ̂ the shed pricing charges against —
+    /// the raw forecast, while [`Self::lambda`] is the planning load
+    /// (forecast × headroom, floored).  Equal to `lambda` when built
+    /// without explicit shed pricing ([`Self::with_shed_pricing`]).
+    pub offered_lambda: f64,
+    /// Per-request lost-goodput price: the objective is charged
+    /// `shed_penalty · max(0, offered_lambda − capacity)` — what the
+    /// admission gate will shed at the door when the allocation's supply
+    /// falls short of the offered load.  0 (the default) skips the term
+    /// entirely, keeping every score bit-identical to the unpriced
+    /// objective.
+    pub shed_penalty: f64,
 }
 
 impl Problem {
@@ -193,15 +223,38 @@ impl Problem {
             weights,
             max_batch,
             max_wait_s: batching.max_wait_s,
+            offered_lambda: lambda,
+            shed_penalty: 0.0,
         }
     }
 
+    /// Price shed traffic into the objective (builder style): every score
+    /// is additionally charged `shed_penalty · max(0, offered − capacity)`
+    /// — the lost goodput the admission gate would refuse at the door.
+    /// The caller weights the per-request price by tier (class mix)
+    /// before passing it in; see `fleet::shed_value_weight`.
+    pub fn with_shed_pricing(mut self, offered_lambda: f64, shed_penalty: f64) -> Self {
+        self.offered_lambda = offered_lambda.max(0.0);
+        self.shed_penalty = shed_penalty.max(0.0);
+        self
+    }
+
     /// Max cores worth giving variant i: beyond the point where throughput
-    /// already covers λ, additional cores only add cost (dominance pruning).
+    /// already covers the demand, additional cores only add cost
+    /// (dominance pruning).  The demand is the planning load λ — joined
+    /// with the offered load when shed pricing is active, so capacity
+    /// that still reduces priced shed is never pruned away; with the
+    /// penalty at 0 the offered rate is ignored outright and the search
+    /// space is the historical one, comparison for comparison.
     pub(crate) fn useful_max_cores(&self, i: usize) -> usize {
+        let demand = if self.shed_penalty != 0.0 {
+            self.lambda.max(self.offered_lambda)
+        } else {
+            self.lambda
+        };
         let v = &self.variants[i];
         for n in 0..=self.budget {
-            if v.throughput[n] >= self.lambda {
+            if v.throughput[n] >= demand {
                 return n;
             }
         }
@@ -336,9 +389,15 @@ pub fn score_fast(problem: &Problem, cores: &[usize]) -> Option<(f64, bool)> {
     }
     let w = problem.weights;
     let shortfall = (problem.lambda - capacity).max(0.0);
-    let objective = w.alpha * average_accuracy
+    let mut objective = w.alpha * average_accuracy
         - (w.beta * resource_cost as f64 + w.gamma * loading_cost)
         - if feasible { 0.0 } else { 1e3 + shortfall };
+    // Shed pricing: charge the lost goodput the admission gate would
+    // refuse at this capacity.  Guarded so the default (penalty 0) never
+    // touches the objective's bit pattern.
+    if problem.shed_penalty != 0.0 {
+        objective -= problem.shed_penalty * (problem.offered_lambda - capacity).max(0.0);
+    }
     Some((objective, feasible))
 }
 
@@ -397,9 +456,12 @@ pub fn score(problem: &Problem, cores: &[usize]) -> Option<Allocation> {
     // budget can serve (the paper's "even the least accurate variant cannot
     // respond" regime).
     let shortfall = (problem.lambda - capacity).max(0.0);
-    let objective = w.alpha * average_accuracy
+    let mut objective = w.alpha * average_accuracy
         - (w.beta * resource_cost as f64 + w.gamma * loading_cost)
         - if feasible { 0.0 } else { 1e3 + shortfall };
+    if problem.shed_penalty != 0.0 {
+        objective -= problem.shed_penalty * (problem.offered_lambda - capacity).max(0.0);
+    }
     Some(Allocation {
         assignments,
         batches,
@@ -787,6 +849,75 @@ mod tests {
         for (a, b) in short.iter().zip(&long) {
             assert!((a - b).abs() < 1e-9, "shared prefix must agree");
         }
+    }
+
+    #[test]
+    fn shed_pricing_charges_exactly_the_uncovered_offered_load() {
+        let base = problem(300.0, 8, 0.05);
+        let priced = base.clone().with_shed_pricing(260.0, 2.0);
+        // 4 cores of resnet18 cover ~92 rps: shortfall vs the 260 rps
+        // offered load is priced at 2.0 per rps on top of the unpriced
+        // objective (which already carries the λ-infeasibility penalty).
+        let cores = vec![4, 0, 0, 0, 0];
+        let (u, uf) = score_fast(&base, &cores).unwrap();
+        let (p, pf) = score_fast(&priced, &cores).unwrap();
+        assert_eq!(uf, pf, "pricing must not change feasibility");
+        let capacity = score(&base, &cores).unwrap().capacity;
+        let expect = u - 2.0 * (260.0 - capacity).max(0.0);
+        assert!((p - expect).abs() < 1e-9, "{p} vs {expect}");
+        // a capacity at/above the offered load is never charged
+        let covered = problem(50.0, 20, 0.05).with_shed_pricing(45.0, 2.0);
+        let (a, _) = score_fast(&problem(50.0, 20, 0.05), &[4, 0, 0, 0, 0]).unwrap();
+        let (b, _) = score_fast(&covered, &[4, 0, 0, 0, 0]).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        // and score() agrees with score_fast() on priced problems
+        let full = score(&priced, &cores).unwrap();
+        assert!((full.objective - p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_penalty_is_bit_identical_whatever_the_offered_rate() {
+        let base = problem(120.0, 12, 0.05);
+        let neutral = base.clone().with_shed_pricing(700.0, 0.0);
+        for cores in [vec![4, 0, 0, 0, 8], vec![0, 0, 12, 0, 0], vec![1, 1, 1, 1, 1]] {
+            let (a, af) = score_fast(&base, &cores).unwrap();
+            let (b, bf) = score_fast(&neutral, &cores).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "cores {cores:?}");
+            assert_eq!(af, bf);
+        }
+        // dominance caps only widen when the offered load is priced in
+        for i in 0..base.variants.len() {
+            assert_eq!(base.useful_max_cores(i), neutral.useful_max_cores(i));
+        }
+    }
+
+    #[test]
+    fn priced_value_curves_stay_monotone_and_match_the_loop() {
+        let p = problem(300.0, 12, 0.05).with_shed_pricing(272.0, 1.5);
+        for s in [&BruteForceSolver as &dyn Solver, &BranchBoundSolver as &dyn Solver] {
+            let reference = value_curve_resolve(&p, s, p.budget);
+            let curve = s.solve_curve(&p, p.budget);
+            for (g, (a, b)) in curve.values().iter().zip(&reference).enumerate() {
+                assert!((a - b).abs() < 1e-9, "{} g={g}: {a} vs {b}", s.name());
+            }
+            for w in curve.values().windows(2) {
+                assert!(w[1] >= w[0] - 1e-9, "{}: nondecreasing", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn shed_pricing_prefers_higher_capacity_under_overload() {
+        // At λ far past the 6-core capacity, the unpriced solver already
+        // maximizes capacity via the infeasibility shortfall; a strictly
+        // positive penalty must never choose *less* capacity, and the
+        // solved objective falls by exactly the priced shed.
+        let base = problem(400.0, 6, 0.05);
+        let priced = base.clone().with_shed_pricing(360.0, 3.0);
+        let a = BruteForceSolver.solve(&base).unwrap();
+        let b = BruteForceSolver.solve(&priced).unwrap();
+        assert!(b.capacity >= a.capacity - 1e-9, "{} vs {}", b.capacity, a.capacity);
+        assert!(b.objective <= a.objective, "penalty only subtracts");
     }
 
     #[test]

@@ -5,7 +5,8 @@ use infadapter::baselines::StaticPolicy;
 use infadapter::config::{AdmissionConfig, BatchingConfig, Config, ObjectiveWeights};
 use infadapter::dispatcher::{AdmissionGate, Dispatcher, Tier};
 use infadapter::experiment::{PolicyKind, Scenario};
-use infadapter::fleet::{ArbiterEntry, CoreArbiter};
+use infadapter::fleet::sim::service_seed;
+use infadapter::fleet::{ArbiterEntry, CoreArbiter, FleetMode, FleetScenario};
 use infadapter::profiler::ProfileSet;
 use infadapter::serving::sim::{SimConfig, SimEngine};
 use infadapter::solver::{
@@ -91,9 +92,9 @@ fn prop_score_fast_matches_score() {
     let mut rng = Rng::seed_from_u64(108);
     for case in 0..300 {
         let p = if case % 2 == 0 {
-            random_problem(&mut rng)
+            maybe_priced(random_problem(&mut rng), &mut rng)
         } else {
-            random_problem_general(&mut rng)
+            maybe_priced(random_problem_general(&mut rng), &mut rng)
         };
         for _ in 0..16 {
             let cores: Vec<usize> = (0..p.variants.len())
@@ -124,18 +125,32 @@ fn prop_score_fast_matches_score() {
     }
 }
 
+/// Randomly price shed traffic into a problem: a tier-weighted penalty
+/// and an offered rate anywhere up to 1.25 × λ (the dominance caps must
+/// widen to cover an offered load above the planning λ).  Roughly half
+/// the cases stay unpriced so the PR 3/4 paths keep their coverage.
+fn maybe_priced(mut p: Problem, rng: &mut Rng) -> Problem {
+    if rng.f64() < 0.6 {
+        p.shed_penalty = [0.25, 1.0, 4.0][rng.below(3)];
+        p.offered_lambda = rng.f64() * p.lambda * 1.25;
+    }
+    p
+}
+
 #[test]
 fn prop_solve_curve_matches_resolve_loop() {
     // The single-pass curve (bin best objective by cost, prefix-max) must
     // be pointwise equal to the old per-grant re-solve loop for both exact
     // solvers, monotone nondecreasing, deterministic, and unchanged by
-    // warm-starting from any previous curve.
+    // warm-starting from any previous curve — including under randomized
+    // shed pricing, which re-proves the B&B curve pruning (optimistic
+    // shed charge + shed-pinned sweep cutoff) exact for the new term.
     let mut rng = Rng::seed_from_u64(109);
     for case in 0..30 {
         let p = if case % 2 == 0 {
-            random_problem(&mut rng)
+            maybe_priced(random_problem(&mut rng), &mut rng)
         } else {
-            random_problem_general(&mut rng)
+            maybe_priced(random_problem_general(&mut rng), &mut rng)
         };
         let check = |s: &dyn Solver, cap: usize| {
             let reference = value_curve_resolve(&p, s, cap);
@@ -173,6 +188,69 @@ fn prop_solve_curve_matches_resolve_loop() {
         // reference loop prunes well enough to stay cheap
         if case % 5 == 0 {
             check(&BranchBoundSolver, p.budget);
+        }
+    }
+}
+
+#[test]
+fn prop_priced_curve_matches_unpriced_at_zero() {
+    // shed_penalty = 0 must reproduce the PR 3 curves pointwise — bit for
+    // bit — no matter what offered rate rides along: an unpriced problem
+    // ignores the offered load entirely (scorer guard + dominance caps).
+    let mut rng = Rng::seed_from_u64(111);
+    for case in 0..20 {
+        let p = if case % 2 == 0 {
+            random_problem(&mut rng)
+        } else {
+            random_problem_general(&mut rng)
+        };
+        let mut q = p.clone();
+        q.shed_penalty = 0.0;
+        q.offered_lambda = rng.f64() * 500.0;
+        let cap = rng.below(p.budget.min(12) + 1);
+        for s in [&BruteForceSolver as &dyn Solver, &BranchBoundSolver as &dyn Solver] {
+            let a = s.solve_curve(&p, cap);
+            let b = s.solve_curve(&q, cap);
+            for (g, (x, y)) in a.values().iter().zip(b.values()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "case {case} {} g={g}: zero-penalty curve drifted ({x} vs {y})",
+                    s.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_priced_value_curves_stay_monotone() {
+    // v(g) stays nondecreasing in g under shed pricing for the exact
+    // solvers: anything achievable inside grant g is achievable inside
+    // g+1, and the priced objective of a fixed allocation does not
+    // depend on the grant.
+    let mut rng = Rng::seed_from_u64(112);
+    for case in 0..25 {
+        let base = if case % 2 == 0 {
+            random_problem(&mut rng)
+        } else {
+            random_problem_general(&mut rng)
+        };
+        let mut p = base;
+        p.shed_penalty = [0.25, 1.0, 4.0][rng.below(3)];
+        p.offered_lambda = rng.f64() * p.lambda * 1.25;
+        let cap = rng.below(p.budget.min(12) + 1);
+        for s in [&BruteForceSolver as &dyn Solver, &BranchBoundSolver as &dyn Solver] {
+            let curve = s.solve_curve(&p, cap);
+            for (g, w) in curve.values().windows(2).enumerate() {
+                assert!(
+                    w[1] >= w[0] - 1e-9,
+                    "case {case} {} g={g}: priced curve fell ({} -> {})",
+                    s.name(),
+                    w[0],
+                    w[1]
+                );
+            }
         }
     }
 }
@@ -576,6 +654,114 @@ fn prop_sim_conserves_requests() {
             s.total_requests, expected,
             "request conservation violated (seed {seed})"
         );
+    }
+}
+
+#[test]
+fn prop_shed_conservation() {
+    // For every fleet run — admission on/off, shed pricing on/off,
+    // overload or staggered bursts, mixed-tier traffic — arrivals are
+    // conserved end to end: `arrivals == served + violated + shed` for
+    // the whole run, per tier, and per metrics interval (cross-checked
+    // against the raw regenerated arrival stream, not the collector's
+    // own totals), and the Run/Fleet summaries equal the sum of their
+    // interval rows.  Catches any double- or under-count a pricing or
+    // admission change introduces between the gate, the router, and the
+    // metrics pipeline.
+    for case in 0..4u64 {
+        let seed = 7_000 + case * 13;
+        let mut config = Config::default();
+        config.adapter.forecaster = "last_max".into();
+        config.seed = seed;
+        // matrix: {admission off (case 1) / on}, {shed pricing off/on},
+        // {staggered (even cases) / simultaneous overload (odd cases)} —
+        // case 3 is the full stack: overload + admission + pricing
+        config.admission.enabled = case != 1;
+        config.fleet.shed_penalty = if case < 2 { 0.0 } else { 1.0 };
+        let profiles = ProfileSet::paper_like();
+        let mut scenario = if case % 2 == 1 {
+            FleetScenario::synthetic_overload(2, 30.0, 240, 8, true, &config, &profiles)
+        } else {
+            FleetScenario::synthetic(2, 30.0, 240, 10, &config, &profiles)
+        };
+        // mixed-tier traffic on service 0 exercises the per-tier books
+        scenario.services[0].trace = scenario.services[0]
+            .trace
+            .clone()
+            .with_class_mix(vec![(0, 3.0), (1, 1.0)]);
+        let out = scenario.run(&FleetMode::Arbiter, std::path::Path::new("/nonexistent"));
+
+        let (mut sum_total, mut sum_shed, mut sum_dropped) = (0u64, 0u64, 0u64);
+        for (i, r) in out.per_service.iter().enumerate() {
+            let s = &out.summary.services[i];
+            // ground truth: regenerate this service's exact arrival stream
+            let arrivals = ArrivalProcess::poisson(
+                &scenario.services[i].trace,
+                service_seed(seed, i).wrapping_add(1),
+            );
+            assert_eq!(
+                s.total_requests,
+                arrivals.len() as u64,
+                "case {case} (seed {seed}) svc {i}: arrival conservation"
+            );
+            // whole-run conservation, from the per-tier books
+            let served: u64 = s.tiers.iter().map(|t| t.served).sum();
+            let violated: u64 = s.tiers.iter().map(|t| t.violations).sum();
+            let shed: u64 = s.tiers.iter().map(|t| t.shed).sum();
+            assert_eq!(
+                served + violated + shed,
+                s.total_requests,
+                "case {case} svc {i}: served {served} + violated {violated} + shed {shed}"
+            );
+            assert_eq!(shed, s.shed, "case {case} svc {i}: tier shed books");
+            for t in &s.tiers {
+                assert_eq!(
+                    t.served + t.violations + t.shed,
+                    t.total,
+                    "case {case} svc {i} tier {}: per-tier conservation",
+                    t.tier
+                );
+                assert!(t.dropped <= t.violations, "case {case} svc {i}: drops are violations");
+            }
+            // per-interval conservation vs the raw arrival stream, using
+            // the collector's own bucketing formula so FP boundaries agree
+            let rows = r.metrics.rows(r.duration_s);
+            let bucket = r.metrics.bucket_s;
+            for (b, row) in rows.iter().enumerate() {
+                let expect = arrivals
+                    .iter()
+                    .filter(|&&t| (t / bucket) as usize == b)
+                    .count() as u64;
+                assert_eq!(
+                    row.completed + row.dropped + row.shed,
+                    expect,
+                    "case {case} svc {i} bucket {b}: interval conservation"
+                );
+                let by_tier: u64 = row.shed_by_tier.iter().map(|&(_, c)| c).sum();
+                assert_eq!(by_tier, row.shed, "case {case} svc {i} bucket {b}: shed tiers");
+            }
+            // the summary equals the sum of its interval rows
+            assert_eq!(rows.iter().map(|r| r.shed).sum::<u64>(), s.shed);
+            assert_eq!(rows.iter().map(|r| r.dropped).sum::<u64>(), s.dropped);
+            assert_eq!(
+                rows.iter().map(|r| r.completed + r.dropped + r.shed).sum::<u64>(),
+                s.total_requests,
+                "case {case} svc {i}: rows must sum to the summary"
+            );
+            sum_total += s.total_requests;
+            sum_shed += s.shed;
+            sum_dropped += s.dropped;
+        }
+        // the fleet aggregate equals the sum of its services
+        assert_eq!(out.summary.total_requests, sum_total, "case {case}");
+        assert_eq!(out.summary.shed, sum_shed, "case {case}");
+        assert_eq!(out.summary.dropped, sum_dropped, "case {case}");
+        let tier_total: u64 = out.summary.tiers.iter().map(|t| t.total).sum();
+        assert_eq!(tier_total, sum_total, "case {case}: merged tier books");
+        // and the priced overload cases must actually exercise shedding
+        if case == 3 {
+            assert!(sum_shed > 0, "case {case}: the overload cell must shed");
+        }
     }
 }
 

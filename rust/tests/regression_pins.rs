@@ -10,6 +10,13 @@
 //! mix, a non-default error budget with the burn boost off, equal non-zero
 //! tiers).  Any code path that let one of those knobs leak into routing,
 //! shedding, arbitration, or RNG draws breaks these exact equalities.
+//!
+//! PR 5 extends the pins to admission-aware value curves: **`shed_penalty
+//! = 0` (the default) is an exact no-op** — the scorer's priced term, the
+//! widened dominance caps, the B&B shed bound, and the `CurveCache`
+//! pricing key must all collapse to the PR 4 behaviour bit for bit on the
+//! single-service, fleet, and overload paths — and a `CurveCache` hit
+//! never returns a curve computed under a different penalty.
 
 use infadapter::adapter::InfAdapterPolicy;
 use infadapter::config::{AdmissionConfig, Config, ObjectiveWeights};
@@ -110,6 +117,7 @@ fn fleet_neutral_knobs_are_bit_identical() {
         ctl_window_s: 0.5,
     };
     neutral_scenario.burn_boost = 0.0;
+    neutral_scenario.shed_penalty = 0.0;
     for s in neutral_scenario.services.iter_mut() {
         s.tier = 3;
         s.error_budget = 0.5;
@@ -129,6 +137,114 @@ fn fleet_neutral_knobs_are_bit_identical() {
     for (x, y) in base.summary.services.iter().zip(&neutral.summary.services) {
         assert_summaries_identical(x, y);
     }
+}
+
+#[test]
+fn shed_penalty_zero_is_bit_identical_on_every_engine_path() {
+    let profiles = ProfileSet::paper_like();
+
+    // (1) single-service path: an explicitly zero-priced policy against
+    // the default — the scorer guard, the dominance caps, and the
+    // decision path must be untouched.
+    let trace = Trace::bursty(40.0, 100.0, 420, 9);
+    let cfg = SimConfig {
+        seed: 9,
+        ..Default::default()
+    };
+    let mut p1 = inf_policy(20);
+    let base = SimEngine::new(profiles.clone(), cfg.clone()).run(&mut p1, &trace);
+    let mut p2 = inf_policy(20).with_shed_pricing(0.0);
+    let neutral = SimEngine::new(profiles.clone(), cfg).run(&mut p2, &trace);
+    assert_summaries_identical(
+        &base.metrics.summary("default", base.duration_s),
+        &neutral.metrics.summary("neutral", neutral.duration_s),
+    );
+    assert_eq!(base.decisions.len(), neutral.decisions.len());
+    for ((t1, d1), (t2, d2)) in base.decisions.iter().zip(&neutral.decisions) {
+        assert_eq!(t1, t2);
+        assert_eq!(d1.target, d2.target);
+        assert_eq!(d1.quotas, d2.quotas);
+        assert_eq!(d1.supply_rps, d2.supply_rps);
+    }
+
+    // (2) arbitrated fleet path: explicit shed_penalty = 0 plus neutral
+    // single-tier class mixes (the tier-weighting path runs, multiplied
+    // by the zero price) vs the plain scenario.
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 17;
+    let base_scenario = FleetScenario::synthetic(2, 30.0, 600, 12, &config, &profiles);
+    let mut neutral_scenario = base_scenario.clone();
+    neutral_scenario.shed_penalty = 0.0;
+    for s in neutral_scenario.services.iter_mut() {
+        s.trace = s.trace.clone().with_class_mix(vec![(s.tier, 1.0)]);
+    }
+    let dir = Path::new("/nonexistent");
+    let a = base_scenario.run(&FleetMode::Arbiter, dir);
+    let b = neutral_scenario.run(&FleetMode::Arbiter, dir);
+    for (x, y) in a.summary.services.iter().zip(&b.summary.services) {
+        assert_summaries_identical(x, y);
+    }
+
+    // (3) overload path with admission shedding for real: the zero price
+    // must not move a single shed, grant, or violation.
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission.enabled = true;
+    let base_scenario =
+        FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    let mut neutral_scenario = base_scenario.clone();
+    neutral_scenario.shed_penalty = 0.0;
+    for s in neutral_scenario.services.iter_mut() {
+        s.trace = s.trace.clone().with_class_mix(vec![(s.tier, 1.0)]);
+    }
+    let a = base_scenario.run(&FleetMode::Arbiter, dir);
+    let b = neutral_scenario.run(&FleetMode::Arbiter, dir);
+    assert!(a.summary.shed > 0, "the overload pin must actually shed");
+    assert_eq!(a.summary.shed, b.summary.shed);
+    for (x, y) in a.summary.services.iter().zip(&b.summary.services) {
+        assert_summaries_identical(x, y);
+    }
+    for (x, y) in a.summary.tiers.iter().zip(&b.summary.tiers) {
+        assert_eq!(x.tier, y.tier);
+        assert_eq!(x.total, y.total);
+        assert_eq!(x.shed, y.shed);
+        assert_eq!(x.violations, y.violations);
+    }
+}
+
+#[test]
+fn curve_cache_hits_never_cross_penalties() {
+    // The ISSUE's cache pin: a CurveCache hit must never return a curve
+    // computed under a different shed penalty (or, when priced, a
+    // different offered rate) — the cached object is a different
+    // function of the grant.
+    use infadapter::fleet::CurveCache;
+    use std::collections::BTreeMap;
+
+    let mut policy = inf_policy(20).with_shed_pricing(1.0);
+    // overload forecast so the pricing genuinely shapes the curve
+    policy.observe_and_predict(&vec![300.0; 60]);
+    let committed = BTreeMap::new();
+    let mut cache = CurveCache::new();
+    let priced = cache.curve(&policy, 330.0, &committed, 20);
+    assert_eq!(cache.stats.hits, 0);
+    // identical pricing: a genuine hit, returning the identical curve
+    let again = cache.curve(&policy, 330.0, &committed, 20);
+    assert_eq!(cache.stats.hits, 1);
+    assert_eq!(priced, again);
+    // a different penalty must re-solve — and produce different values
+    policy.shed_penalty = 0.0;
+    let unpriced = cache.curve(&policy, 330.0, &committed, 20);
+    assert_eq!(cache.stats.hits, 1, "cross-penalty lookups must not hit");
+    assert_eq!(unpriced, policy.value_curve(330.0, &committed, 20));
+    assert_ne!(priced, unpriced, "the two penalties price different curves");
+    // and back: still no stale cross-penalty hit
+    policy.shed_penalty = 1.0;
+    let repriced = cache.curve(&policy, 330.0, &committed, 20);
+    assert_eq!(cache.stats.hits, 1);
+    assert_eq!(repriced, priced, "same inputs re-solve to the same curve");
 }
 
 #[test]
