@@ -101,6 +101,7 @@ fn main() {
                 queue_timeout_s: 10.0,
                 batch_max_wait_s: 0.05,
                 admission: Default::default(),
+                solver_threads: 0,
             },
         );
         let mut policy = StaticPolicy::with_batch(variant, cores, batch);
@@ -141,6 +142,7 @@ fn main() {
             queue_timeout_s: 10.0,
             batch_max_wait_s: 0.05,
             admission: Default::default(),
+            solver_threads: 0,
         },
     );
     let mut policy = StaticPolicy::with_batch(variant, cores, 8);

@@ -29,8 +29,17 @@
 //! shift contended cores toward the costlier shedder within the tick —
 //! tier-0 shed drops at the same budget, with no burn signal involved.
 //!
+//! **Part C (tick throughput vs fleet size):** the PR 6 scaling probe.
+//! Synthetic fleets of N ∈ {8, 64, 256, 1024} services run the same
+//! arbitrated scenario twice — `solver_threads = 1` (the serial reference
+//! path) and `solver_threads = 0` (auto: one worker per core) — and the
+//! table reports service-ticks/second plus the derived speedup and
+//! per-core scaling efficiency.  The two runs are asserted bit-identical
+//! on the way through (the pin in `regression_pins.rs` holds at every N).
+//!
 //! `--short` shrinks the traces for CI; `--json <path>` writes the
-//! Part B matrix + headline (uploaded as the BENCH_fleet.json artifact).
+//! Part B matrix + headline and the Part C scaling table (uploaded as
+//! the BENCH_fleet.json artifact).
 //! Timeline CSVs land in target/figures/fig_fleet_<mode>_<service>.csv.
 
 use infadapter::config::Config;
@@ -234,6 +243,69 @@ fn main() {
         price_on.avg_cost_cores - price_off.avg_cost_cores
     );
 
+    // --- Part C: tick throughput vs fleet size, serial vs parallel ----
+    println!("\n# Part C: tick throughput vs fleet size (solver_threads 1 vs auto)");
+    let part_c_seconds = if short { 60 } else { 120 };
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let part_c_ticks = (part_c_seconds as f64 / 30.0).ceil(); // warm start + interior adapter ticks
+    println!(
+        "{:>6} {:>8} {:>13} {:>13} {:>9} {:>11}",
+        "N", "budget", "serial tk/s", "parallel tk/s", "speedup", "efficiency"
+    );
+    let mut part_c = Vec::new();
+    for n in [8usize, 64, 256, 1024] {
+        let budget = (2 * n).min(256);
+        let mut c = Config::default();
+        c.adapter.forecaster = "last_max".into();
+        // low per-service rate: Part C measures tick protocol overhead
+        // and solve fan-out, not request-path saturation
+        let timed = |threads: usize| {
+            let mut s = FleetScenario::synthetic(n, 2.0, part_c_seconds, budget, &c, &profiles);
+            s.solver_threads = threads;
+            let t0 = std::time::Instant::now();
+            let out = s.run(&FleetMode::Arbiter, &dir);
+            (t0.elapsed().as_secs_f64(), out.summary.total_requests)
+        };
+        let (serial_s, serial_req) = timed(1);
+        let (parallel_s, parallel_req) = timed(0);
+        assert_eq!(
+            serial_req, parallel_req,
+            "solver_threads changed results at N={n}"
+        );
+        let serial_tps = n as f64 * part_c_ticks / serial_s;
+        let parallel_tps = n as f64 * part_c_ticks / parallel_s;
+        let speedup = serial_s / parallel_s;
+        let efficiency = speedup / cores as f64;
+        println!(
+            "{:>6} {:>8} {:>13.1} {:>13.1} {:>8.2}x {:>10.1}%",
+            n,
+            budget,
+            serial_tps,
+            parallel_tps,
+            speedup,
+            efficiency * 100.0
+        );
+        part_c.push((n, budget, serial_s, parallel_s, speedup, efficiency));
+    }
+    // derived scaling-efficiency headline (printed in --short runs too:
+    // everything above runs unconditionally)
+    let n64 = part_c
+        .iter()
+        .find(|r| r.0 == 64)
+        .expect("N=64 is in the sweep");
+    println!(
+        "# Part C headline: parallel solve stage reaches {:.2}x speedup at \
+         N=64 ({:.0}% scaling efficiency on {} cores); N=1024 completes in \
+         {:.1}s parallel / {:.1}s serial",
+        n64.4,
+        n64.5 * 100.0,
+        cores,
+        part_c.last().unwrap().3,
+        part_c.last().unwrap().2
+    );
+
     if let Some(path) = json_path {
         let cell_json = |label: &str,
                          admission: bool,
@@ -297,6 +369,32 @@ fn main() {
                     (
                         "shed_price_cost_delta_cores",
                         Value::Num(price_on.avg_cost_cores - price_off.avg_cost_cores),
+                    ),
+                ]),
+            ),
+            (
+                "part_c",
+                Value::obj(vec![
+                    ("seconds", Value::Num(part_c_seconds as f64)),
+                    ("ticks", Value::Num(part_c_ticks)),
+                    ("cores", Value::Num(cores as f64)),
+                    (
+                        "rows",
+                        Value::Arr(
+                            part_c
+                                .iter()
+                                .map(|(n, budget, serial_s, parallel_s, speedup, eff)| {
+                                    Value::obj(vec![
+                                        ("services", Value::Num(*n as f64)),
+                                        ("budget", Value::Num(*budget as f64)),
+                                        ("serial_wall_s", Value::Num(*serial_s)),
+                                        ("parallel_wall_s", Value::Num(*parallel_s)),
+                                        ("speedup", Value::Num(*speedup)),
+                                        ("scaling_efficiency", Value::Num(*eff)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
                     ),
                 ]),
             ),

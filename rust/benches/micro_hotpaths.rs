@@ -2,6 +2,8 @@
 //!
 //! * dispatcher route()        — per-request cost (interned Arc<str>
 //!                               vs the old owned-String materialization)
+//! * request arena             — per-event request-state cost (free-list
+//!                               slab reuse vs per-event heap boxes)
 //! * P2 quantile record()      — per-sample monitoring cost
 //! * solvers at paper scale    — per-decision cost (30 s cadence)
 //! * value curves              — single-pass solve_curve vs the per-grant
@@ -20,7 +22,7 @@
 use infadapter::baselines::StaticPolicy;
 use infadapter::config::ObjectiveWeights;
 use infadapter::dispatcher::Dispatcher;
-use infadapter::fleet::{ArbiterEntry, CoreArbiter};
+use infadapter::fleet::{ArbiterEntry, CoreArbiter, RequestArena, RequestSim};
 use infadapter::forecaster::{Forecaster, HoltForecaster, LastMaxForecaster};
 use infadapter::monitoring::P2Quantile;
 use infadapter::profiler::ProfileSet;
@@ -62,6 +64,55 @@ fn main() {
         "dispatcher.route_intern_speedup",
         materialized.mean.as_secs_f64() / interned.mean.as_secs_f64(),
     );
+
+    // Arena hot path: the shard event loop allocates one request state
+    // per arrival and frees it on completion/drop.  "before" models the
+    // old engine's per-event heap box; "after" is the free-list slab the
+    // shards use — steady state never touches the allocator.  Both sides
+    // hold a small live window (32 in flight) so the free list genuinely
+    // cycles rather than degenerating to a stack push/pop.
+    {
+        let mut window: Vec<Box<RequestSim>> = Vec::with_capacity(32);
+        let mut t = 0.0f64;
+        let before = report.run("arena.alloc_reuse/before (boxed per event)", || {
+            t += 0.01;
+            window.push(Box::new(RequestSim {
+                arrival: t,
+                accuracy: 76.13,
+                tier: 0,
+            }));
+            if window.len() == 32 {
+                let done = window.swap_remove(0);
+                std::hint::black_box(done.arrival);
+            }
+        });
+        let mut arena = RequestArena::new();
+        let mut live: Vec<u32> = Vec::with_capacity(32);
+        let mut t = 0.0f64;
+        let after = report.run("arena.alloc_reuse/after (free-list slab)", || {
+            t += 0.01;
+            live.push(arena.alloc(RequestSim {
+                arrival: t,
+                accuracy: 76.13,
+                tier: 0,
+            }));
+            if live.len() == 32 {
+                let id = live.swap_remove(0);
+                std::hint::black_box(arena.get(id).arrival);
+                arena.free(id);
+            }
+        });
+        report.derive(
+            "arena.alloc_reuse_speedup",
+            before.mean.as_secs_f64() / after.mean.as_secs_f64(),
+        );
+        let (allocs, reuses) = arena.stats();
+        println!(
+            "  -> arena: {allocs} allocs, {reuses} reused ({:.1}% free-list hits), high water {}",
+            100.0 * reuses as f64 / allocs.max(1) as f64,
+            arena.high_water()
+        );
+    }
 
     let mut p2 = P2Quantile::new(0.99);
     let mut x = 0.1f64;

@@ -19,7 +19,9 @@ use std::collections::BTreeMap;
 pub struct InfAdapterPolicy {
     pub profiles: ProfileSet,
     pub forecaster: Box<dyn Forecaster>,
-    pub solver: Box<dyn Solver + Send>,
+    // `Solver: Send` is a supertrait, so the box is Send without an
+    // explicit `+ Send` here.
+    pub solver: Box<dyn Solver>,
     pub weights: ObjectiveWeights,
     pub slo_s: f64,
     pub budget: usize,
@@ -50,7 +52,7 @@ impl InfAdapterPolicy {
     pub fn new(
         profiles: ProfileSet,
         forecaster: Box<dyn Forecaster>,
-        solver: Box<dyn Solver + Send>,
+        solver: Box<dyn Solver>,
         weights: ObjectiveWeights,
         slo_s: f64,
         budget: usize,

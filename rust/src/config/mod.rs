@@ -227,6 +227,13 @@ pub struct FleetConfig {
     /// pricing and keeps every solve bit-identical to the unpriced
     /// objective.
     pub shed_penalty: f64,
+    /// Worker threads for the fleet engine's parallel stages (advance,
+    /// curve solve, decide).  0 (default) = auto — one worker per
+    /// available core; 1 = the serial reference path.  The count never
+    /// changes results (parallel runs are bit-identical to serial,
+    /// pinned by `parallel_fleet_is_bit_identical_to_serial`), only
+    /// wall-clock.
+    pub solver_threads: usize,
     /// Empty = fleet serving disabled (single-service mode).
     pub services: Vec<FleetServiceConfig>,
 }
@@ -353,6 +360,7 @@ impl Config {
                 global_budget: usize_or(f, "global_budget", 0)?,
                 burn_boost: f64_or(f, "burn_boost", 0.0)?,
                 shed_penalty: f64_or(f, "shed_penalty", 0.0)?,
+                solver_threads: usize_or(f, "solver_threads", 0)?,
                 services: match f.get("services") {
                     Some(svcs) => svcs
                         .as_arr()?
@@ -493,6 +501,10 @@ impl Config {
                     ),
                     ("burn_boost", Value::Num(self.fleet.burn_boost)),
                     ("shed_penalty", Value::Num(self.fleet.shed_penalty)),
+                    (
+                        "solver_threads",
+                        Value::Num(self.fleet.solver_threads as f64),
+                    ),
                     (
                         "services",
                         Value::Arr(
@@ -706,6 +718,7 @@ mod tests {
         c.fleet.global_budget = 24;
         c.fleet.burn_boost = 1.5;
         c.fleet.shed_penalty = 0.75;
+        c.fleet.solver_threads = 4;
         c.admission = AdmissionConfig {
             enabled: true,
             burst_s: 2.0,

@@ -106,6 +106,7 @@ impl Scenario {
                 queue_timeout_s: 10.0,
                 batch_max_wait_s: self.config.batching.max_wait_s,
                 admission: self.config.admission,
+                solver_threads: self.config.fleet.solver_threads,
             },
         );
         let result: SimResult = sim.run(policy.as_mut(), &self.trace);
@@ -224,6 +225,7 @@ impl SaturationProbe {
                     queue_timeout_s: 10.0,
                     batch_max_wait_s: 0.05,
                     admission: Default::default(),
+                    solver_threads: 0,
                 },
             );
             let mut policy = StaticPolicy::with_batch(variant, cores, self.batch);

@@ -1,6 +1,14 @@
 //! The fleet's core arbiter: top-level partitioning of the shared core
 //! budget across services.
 //!
+//! In the sharded tick protocol (PR 6, see [`super::sim`]) the arbiter is
+//! the *serial* stage between the two parallel ones: value curves are
+//! solved per shard in the fan-out solve stage, the arbiter partitions
+//! the budget over all of them in one deterministic index-ordered pass,
+//! and the resulting grants fan back out to the parallel decide stage.
+//! Keeping the partition serial is what makes the whole tick a pure
+//! function of its inputs regardless of thread count.
+//!
 //! Every adaptation interval each arbitrated service reports a *value
 //! curve* `v_i(g)` — the best objective `α·AA − (β·RC + γ·LC)` its own
 //! solver can achieve inside a grant of `g` cores.  The whole curve is the

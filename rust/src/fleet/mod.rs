@@ -26,10 +26,17 @@
 //!   its marginal utility rise in the same tick the forecast does —
 //!   before the lagging `SloBurnMeter` signal trips — and contended
 //!   cores flow toward the highest-value shed first.
-//! * [`sim::FleetSimEngine`] — drives N services' event streams against
-//!   one shared [`crate::cluster::Cluster`] in virtual time, with
-//!   per-service RNG streams (deterministic under a fixed seed); the
-//!   single-service engine is its N = 1 special case.
+//! * [`shard::ServiceShard`] — one service's slice of the data plane
+//!   (trace stream, RNG, gate, dispatcher, pods view, metrics, event
+//!   heap, and arena-backed request state), the unit the engine
+//!   parallelizes over.
+//! * [`sim::FleetSimEngine`] — the orchestrator: drives N shards against
+//!   one shared [`crate::cluster::Cluster`] in virtual time through the
+//!   five-stage tick protocol (observe → solve ∥ → arbitrate → apply →
+//!   advance ∥), with per-service RNG streams (deterministic under a
+//!   fixed seed; parallel stages are bit-identical to serial at every
+//!   `solver_threads` count); the single-service engine is its N = 1
+//!   special case.
 //! * [`FleetScenario`] — the experiment-facing bundle (services + budget +
 //!   modes): utility arbitration vs a static even split vs independent
 //!   VPA+ instances, used by the `fleet` CLI subcommand and
@@ -37,10 +44,12 @@
 
 pub mod arbiter;
 pub mod curve_cache;
+pub mod shard;
 pub mod sim;
 
 pub use arbiter::{ArbiterEntry, CoreArbiter};
 pub use curve_cache::{CurveCache, CurveCacheStats};
+pub use shard::{BatchArena, RequestArena, RequestSim, ServiceShard};
 pub use sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 
 use crate::adapter::InfAdapterPolicy;
@@ -158,6 +167,9 @@ pub struct FleetScenario {
     /// Per-request lost-goodput price for admission-aware value curves
     /// (0 = off); weighted per service by [`shed_value_weight`].
     pub shed_penalty: f64,
+    /// Worker threads for the engine's parallel stages (0 = auto,
+    /// 1 = serial reference path).  Wall-clock only — never results.
+    pub solver_threads: usize,
 }
 
 impl FleetScenario {
@@ -205,6 +217,7 @@ impl FleetScenario {
             admission: config.admission,
             burn_boost: config.fleet.burn_boost,
             shed_penalty: config.fleet.shed_penalty,
+            solver_threads: config.fleet.solver_threads,
         })
     }
 
@@ -259,6 +272,7 @@ impl FleetScenario {
             admission: config.admission,
             burn_boost: config.fleet.burn_boost,
             shed_penalty: config.fleet.shed_penalty,
+            solver_threads: config.fleet.solver_threads,
         }
     }
 
@@ -313,6 +327,7 @@ impl FleetScenario {
             admission: config.admission,
             burn_boost: config.fleet.burn_boost,
             shed_penalty: config.fleet.shed_penalty,
+            solver_threads: config.fleet.solver_threads,
         }
     }
 
@@ -341,6 +356,7 @@ impl FleetScenario {
                     .map(|s| s.batching.max_wait_s)
                     .unwrap_or(0.05),
                 admission: self.admission,
+                solver_threads: self.solver_threads,
             },
             match mode {
                 FleetMode::Arbiter => {

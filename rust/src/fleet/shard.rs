@@ -1,0 +1,906 @@
+//! One service's slice of the fleet data plane: the [`ServiceShard`].
+//!
+//! The fleet engine ([`super::sim::FleetSimEngine`]) used to be a single
+//! serial loop over one global event heap.  This module carves out
+//! everything that is *per-service* — trace stream, RNG, admission gate,
+//! dispatcher, pods view, metrics, rate accounting, and the discrete-event
+//! heap itself — so the engine shrinks to an orchestrator running the
+//! five-stage tick protocol (observe → solve → arbitrate → apply →
+//! advance) over a `Vec<ServiceShard>`.
+//!
+//! **Why sharding preserves bit-identity.**  Between two consecutive
+//! boundaries (cluster ticks and adapter ticks), the global engine's event
+//! handlers for different services touch disjoint state: a service's
+//! arrivals, completions, and batch timeouts read and write only its own
+//! pods, its own RNG stream, its own metrics, and its own per-second rate
+//! counters; the shared [`Cluster`] is only *read* (pod readiness for
+//! routing) and only *mutated* at boundaries.  The global heap's
+//! `(t, seq)` order therefore only matters *within* a service — and a
+//! per-shard heap with a per-shard `seq` counter reproduces exactly that
+//! within-service order, because each shard pushes its events in the same
+//! relative order the global engine did.  Cross-service interleaving at
+//! equal `t` is unobservable.  The one place global `seq` order is
+//! visible is at a boundary itself, where the global engine's init-time
+//! push order (arrivals < cluster ticks < adapter ticks < runtime events)
+//! breaks `t` ties; [`ServiceShard::advance`] encodes that rule directly:
+//! an *arrival* at exactly the boundary time runs before the boundary,
+//! while runtime events (completions, batch timeouts) at that time run
+//! after it.
+//!
+//! **Arena request state.**  The global engine grew a `Vec<RequestSim>`
+//! and a `Vec<Vec<usize>>` batch table for the whole run — every arrival
+//! and every formed batch was a fresh heap cell that lived forever.  The
+//! shard instead owns a [`RequestArena`] (slab + free list: a request's
+//! slot is recycled the moment its terminal record is written) and a
+//! [`BatchArena`] (batch member vectors circulate between the pods'
+//! forming buffers and the batch table by `mem::swap`, so steady state
+//! allocates nothing).  Request/batch ids are internal indices the
+//! simulation never compares across lifetimes, so id reuse is
+//! behavior-neutral; `benches/micro_hotpaths.rs` measures the
+//! alloc-reuse win (`arena.alloc_reuse`).
+
+use super::curve_cache::CurveCache;
+use crate::cluster::Cluster;
+use crate::dispatcher::{AdmissionGate, RequestPath, RouteOutcome, Tier};
+use crate::metrics::{MetricsCollector, RequestRecord};
+use crate::monitoring::SloBurnMeter;
+use crate::profiler::ProfileSet;
+use crate::serving::sim::SimConfig;
+use crate::serving::Decision;
+use crate::util::mpmc;
+use crate::util::rng::Rng;
+use crate::workload::ClassMixer;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+
+use super::sim::{service_seed, FleetService};
+
+/// Adaptation intervals the SLO-burn meter's rolling window covers.
+pub(super) const BURN_WINDOW_INTERVALS: usize = 4;
+
+/// Shortest window a rate sample may be normalized over.  Caps the
+/// extrapolation factor at 4x: an adapter tick at t = 30.001 must not turn
+/// one arrival in a 1 ms sliver into a 1000 rps sample (a max-picking
+/// forecaster would seize on it).  Windows shorter than this merge into
+/// the neighbouring sample instead.
+const MIN_RATE_SAMPLE_SPAN_S: f64 = 0.25;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    Arrival,
+    /// One batched service draw finishing; `batch` indexes the batch arena.
+    Completion { pod_id: u64, batch: u32 },
+    /// Formation wait expired for the batch a pod opened at `forming_seq`.
+    BatchTimeout { pod_id: u64, forming_seq: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+fn push_event(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
+    *seq += 1;
+    heap.push(Reverse(Event { t, seq: *seq, kind }));
+}
+
+/// One simulated pod (M/G/n station) owned by the shard's service.
+struct PodSim {
+    /// Raw (un-namespaced) variant name within the owning service.
+    variant: String,
+    cores: usize,
+    busy: usize,
+    /// Formed batches (ids into the batch arena) awaiting a free core.
+    queue: VecDeque<u32>,
+    /// Requests accumulating toward the next batch (arena ids).
+    forming: Vec<u32>,
+    /// Bumped on every dispatch; stale `BatchTimeout` events don't match.
+    forming_seq: u64,
+    /// Current batch-size target for this pod's variant (1 = no batching).
+    max_batch: usize,
+    /// Requests waiting at this pod (forming + members of queued batches);
+    /// kept as a counter so routing comparisons stay O(1).
+    waiting: usize,
+}
+
+impl PodSim {
+    /// Waiting + in-service requests normalized by cores — the
+    /// least-loaded routing metric.
+    fn load(&self) -> f64 {
+        (self.busy + self.waiting) as f64 / self.cores.max(1) as f64
+    }
+}
+
+/// In-flight request state (the arena element).  The owning service is
+/// implicit — each shard's arena holds only its own requests.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestSim {
+    pub arrival: f64,
+    pub accuracy: f64,
+    /// Priority tier the request arrived with (per-tier accounting).
+    pub tier: Tier,
+}
+
+/// Slab of request state with a free list: a slot is recycled the moment
+/// its request's terminal record (completion, timeout, or drop) is
+/// written, so steady-state arrivals allocate nothing.  Ids are plain
+/// indices the simulation never compares across request lifetimes, which
+/// is what makes reuse behavior-neutral.
+#[derive(Debug, Default)]
+pub struct RequestArena {
+    slots: Vec<RequestSim>,
+    free: Vec<u32>,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl RequestArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size the slab (e.g. for a known arrival count's high-water mark).
+    pub fn reserve(&mut self, additional: usize) {
+        self.slots.reserve(additional);
+    }
+
+    #[inline]
+    pub fn alloc(&mut self, r: RequestSim) -> u32 {
+        self.allocs += 1;
+        if let Some(id) = self.free.pop() {
+            self.reuses += 1;
+            self.slots[id as usize] = r;
+            id
+        } else {
+            let id = self.slots.len() as u32;
+            self.slots.push(r);
+            id
+        }
+    }
+
+    #[inline]
+    pub fn free(&mut self, id: u32) {
+        debug_assert!((id as usize) < self.slots.len(), "freeing unallocated id");
+        self.free.push(id);
+    }
+
+    #[inline]
+    pub fn get(&self, id: u32) -> &RequestSim {
+        &self.slots[id as usize]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: u32) -> &mut RequestSim {
+        &mut self.slots[id as usize]
+    }
+
+    /// (total allocations, allocations served from the free list).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.allocs, self.reuses)
+    }
+
+    /// Slots currently holding a live request.
+    pub fn live(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// High-water mark: slots ever materialized.
+    pub fn high_water(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Batch member table with a free list.  Member vectors circulate between
+/// pods' forming buffers and the table by `mem::swap`, so a formed batch
+/// in steady state reuses a previously-freed vector's capacity instead of
+/// allocating.
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    slots: Vec<Vec<u32>>,
+    free: Vec<u32>,
+}
+
+impl BatchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move `items`'s contents into a (possibly recycled) slot; `items`
+    /// gets the slot's old empty-but-allocated vector back in exchange.
+    #[inline]
+    pub fn alloc_swap(&mut self, items: &mut Vec<u32>) -> u32 {
+        if let Some(id) = self.free.pop() {
+            debug_assert!(self.slots[id as usize].is_empty());
+            std::mem::swap(&mut self.slots[id as usize], items);
+            id
+        } else {
+            let id = self.slots.len() as u32;
+            self.slots.push(std::mem::take(items));
+            id
+        }
+    }
+
+    #[inline]
+    pub fn free(&mut self, id: u32) {
+        self.slots[id as usize].clear();
+        self.free.push(id);
+    }
+
+    #[inline]
+    pub fn get(&self, id: u32) -> &[u32] {
+        &self.slots[id as usize]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: u32) -> &mut Vec<u32> {
+        &mut self.slots[id as usize]
+    }
+}
+
+/// Everything one service of a fleet run owns at runtime: its event heap,
+/// pods view, RNG stream, admission path, metrics, rate accounting, and
+/// the arbitration scratch the five-stage tick protocol writes into
+/// (`pending_*`).  Carved out of the old monolithic engine state; the
+/// orchestrator holds a `Vec<ServiceShard>` indexed like its `services`.
+pub struct ServiceShard {
+    /// `"<name>/"`, or empty for the unprefixed single-service path.
+    pub(crate) prefix: String,
+    pub(crate) duration: f64,
+    /// The admission-controlled request path: gate → tiers → smooth-WRR.
+    pub(crate) path: RequestPath,
+    /// Deterministic per-request tier assignment (no RNG).
+    tier_mixer: ClassMixer,
+    /// Rolling SLO-burn meter feeding the arbiter.
+    pub(crate) burn: SloBurnMeter,
+    /// Collector counts already folded into the burn meter.
+    seen_violations: u64,
+    seen_admitted: u64,
+    pub(crate) metrics: MetricsCollector,
+    rng: Rng,
+    pub(crate) rate_history: Vec<f64>,
+    arrivals_this_second: u64,
+    last_whole_second: u64,
+    /// Start of the window `arrivals_this_second` covers; advances with
+    /// the per-second roll and with partial flushes at adapter ticks so
+    /// every sample is normalized by the span it actually observed.
+    counter_since: f64,
+    /// Raw variant -> batch-size target in force (new pods inherit it).
+    pub(crate) current_batches: BTreeMap<String, usize>,
+    pub(crate) decisions: Vec<(f64, Decision)>,
+    /// λ̂ carried from the solve phase into the decide phase.
+    pub(crate) pending_lambda: f64,
+    /// Value curve carried from the solve phase into the arbitrate phase.
+    pub(crate) pending_curve: Option<Vec<f64>>,
+    /// Decision carried from the decide phase into the apply phase.
+    pub(crate) pending_decision: Option<Decision>,
+    /// Cross-tick value-curve memory (arbitrated services only): exact
+    /// hits skip the solve outright, near-hits warm-start it.
+    pub(crate) curve_cache: CurveCache,
+    /// This service's slice of the discrete-event heap.
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    /// This service's pods (the cluster's authoritative set, projected).
+    pods: HashMap<u64, PodSim>,
+    arena: RequestArena,
+    batches: BatchArena,
+    queue_timeout_s: f64,
+    batch_max_wait_s: f64,
+}
+
+impl ServiceShard {
+    pub(super) fn new(i: usize, s: &FleetService, cfg: &SimConfig) -> Self {
+        let top_acc = s
+            .profiles
+            .profiles
+            .iter()
+            .map(|p| p.accuracy)
+            .fold(0.0, f64::max);
+        // Cutoff ladder of this service's gate: the range of tiers its
+        // trace can actually emit — the class mix when one is set, the
+        // service tier otherwise.  The floor matters: a tier-1-only
+        // service must never cut off tier 1 (its whole stream).
+        let mix: Vec<Tier> = s
+            .trace
+            .class_mix
+            .iter()
+            .filter(|&&(_, w)| w > 0.0)
+            .map(|&(t, _)| t)
+            .collect();
+        let (min_tier, max_tier) = if mix.is_empty() {
+            (s.tier, s.tier)
+        } else {
+            (
+                mix.iter().copied().min().expect("non-empty"),
+                mix.iter().copied().max().expect("non-empty"),
+            )
+        };
+        Self {
+            prefix: if s.name.is_empty() {
+                String::new()
+            } else {
+                format!("{}/", s.name)
+            },
+            duration: s.trace.duration_s() as f64,
+            path: RequestPath::new(AdmissionGate::new(&cfg.admission, min_tier, max_tier)),
+            tier_mixer: ClassMixer::new(&s.trace.class_mix, s.tier),
+            burn: SloBurnMeter::new(s.error_budget, BURN_WINDOW_INTERVALS),
+            seen_violations: 0,
+            seen_admitted: 0,
+            metrics: MetricsCollector::new(cfg.bucket_s, s.slo_s, top_acc),
+            rng: Rng::seed_from_u64(service_seed(cfg.seed, i)),
+            rate_history: Vec::new(),
+            arrivals_this_second: 0,
+            last_whole_second: 0,
+            counter_since: 0.0,
+            current_batches: BTreeMap::new(),
+            decisions: Vec::new(),
+            pending_lambda: 0.0,
+            pending_curve: None,
+            pending_decision: None,
+            curve_cache: CurveCache::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            pods: HashMap::new(),
+            arena: RequestArena::new(),
+            batches: BatchArena::new(),
+            queue_timeout_s: cfg.queue_timeout_s,
+            batch_max_wait_s: cfg.batch_max_wait_s,
+        }
+    }
+
+    /// Load this service's arrival stream into the shard heap (the same
+    /// push order the global engine used, so `(t, seq)` ties resolve
+    /// identically within the service).
+    pub(super) fn seed_arrivals(&mut self, times: &[f64]) {
+        self.arena.reserve(times.len().min(1 << 20));
+        for &t in times {
+            push_event(&mut self.heap, &mut self.seq, t, EventKind::Arrival);
+        }
+    }
+
+    /// Project a cluster pod into this shard (warm start and `PodReady`).
+    pub(super) fn insert_pod(&mut self, pod_id: u64, namespaced_variant: &str, cores: usize) {
+        let raw = namespaced_variant[self.prefix.len()..].to_string();
+        let max_batch = self.current_batches.get(&raw).copied().unwrap_or(1);
+        self.pods.insert(
+            pod_id,
+            PodSim {
+                variant: raw,
+                cores,
+                busy: 0,
+                queue: VecDeque::new(),
+                forming: Vec::new(),
+                forming_seq: 0,
+                max_batch,
+                waiting: 0,
+            },
+        );
+    }
+
+    /// Per-second arrival-counter roll, exactly the global engine's loop
+    /// (the division is by exactly 1.0 — a bit-exact no-op — unless an
+    /// adapter tick partially flushed this second; a sliver left by a
+    /// flush just before the boundary merges into the next second).  The
+    /// roll is a pure catch-up on shard-local state, so rolling lazily at
+    /// this shard's own events plus at every boundary produces the same
+    /// sample stream as the global engine's roll-on-every-event.
+    pub(super) fn roll_to(&mut self, sec: u64) {
+        while self.last_whole_second < sec {
+            let boundary = (self.last_whole_second + 1) as f64;
+            let span = boundary - self.counter_since;
+            if span >= MIN_RATE_SAMPLE_SPAN_S {
+                self.rate_history
+                    .push(self.arrivals_this_second as f64 / span);
+                self.arrivals_this_second = 0;
+                self.counter_since = boundary;
+            }
+            self.last_whole_second += 1;
+        }
+    }
+
+    /// Observe stage at an adapter boundary: flush the in-progress partial
+    /// second so the just-observed load is visible to the policy
+    /// (normalized by the span it actually covers; slivers below the
+    /// minimum span stay in the counter), then fold the interval's
+    /// (violations, admitted) delta into the SLO-burn meter.
+    pub(super) fn flush_rate_window(&mut self, now: f64) {
+        let span = now - self.counter_since;
+        if span >= MIN_RATE_SAMPLE_SPAN_S {
+            self.rate_history
+                .push(self.arrivals_this_second as f64 / span);
+            self.arrivals_this_second = 0;
+            self.counter_since = now;
+        }
+        let (v, a) = self.metrics.live_counts();
+        self.burn.observe(v - self.seen_violations, a - self.seen_admitted);
+        self.seen_violations = v;
+        self.seen_admitted = a;
+    }
+
+    /// Advance stage: process this shard's events up to the next
+    /// arbitration boundary.  The admission rule encodes the global
+    /// heap's `(t, seq)` tie order at a boundary: arrivals (seeded at
+    /// init, before any tick event) run *before* the boundary they
+    /// coincide with; runtime events (completions, batch timeouts, whose
+    /// `seq` always exceeds every init-time push) run *after* it.  Pass
+    /// `f64::INFINITY` to drain (completions may land past the trace end
+    /// and every request must be accounted for — conservation).
+    pub(super) fn advance(&mut self, cluster: &Cluster, profiles: &ProfileSet, until: f64) {
+        while let Some(&Reverse(ev)) = self.heap.peek() {
+            let due = ev.t < until || (ev.t == until && ev.kind == EventKind::Arrival);
+            if !due {
+                break;
+            }
+            self.heap.pop();
+            let now = ev.t;
+            self.roll_to(now as u64);
+            match ev.kind {
+                EventKind::Arrival => self.handle_arrival(cluster, profiles, now),
+                EventKind::Completion { pod_id, batch } => {
+                    self.handle_completion(profiles, now, pod_id, batch)
+                }
+                EventKind::BatchTimeout { pod_id, forming_seq } => {
+                    self.handle_batch_timeout(profiles, now, pod_id, forming_seq)
+                }
+            }
+        }
+    }
+
+    fn handle_arrival(&mut self, cluster: &Cluster, profiles: &ProfileSet, now: f64) {
+        self.arrivals_this_second += 1;
+        let tier = self.tier_mixer.next();
+        // The unified request path: admission gate (sheds excess offered
+        // load at the door — recorded, never enqueued; a disabled gate
+        // admits unconditionally, the pre-admission behaviour) →
+        // smooth-WRR variant routing.  The least-loaded ready pod of the
+        // routed variant then takes the request.
+        let variant = match self.path.handle(now, tier) {
+            RouteOutcome::Shed(t) => {
+                self.metrics.record_request(RequestRecord::shed(now, t));
+                return;
+            }
+            RouteOutcome::Routed(v) => Some(v),
+            // unconfigured / zero-capacity: fall through to the any-pod
+            // fallback, then drop
+            RouteOutcome::Denied(_) => None,
+        };
+        let pod_id = variant.as_deref().and_then(|v| {
+            self.pick_pod(cluster, &namespaced(&self.prefix, v))
+                .or_else(|| self.any_pod(cluster))
+        });
+        let Some(pid) = pod_id else {
+            let rid = self.arena.alloc(RequestSim {
+                arrival: now,
+                accuracy: 0.0,
+                tier,
+            });
+            self.arena.free(rid);
+            self.metrics
+                .record_request(RequestRecord::new(now, f64::INFINITY, 0.0, tier));
+            return;
+        };
+        let accuracy = acc_of(profiles, &self.pods[&pid].variant);
+        let rid = self.arena.alloc(RequestSim {
+            arrival: now,
+            accuracy,
+            tier,
+        });
+        self.enqueue_request(profiles, pid, rid, now);
+    }
+
+    fn handle_completion(&mut self, profiles: &ProfileSet, now: f64, pod_id: u64, batch: u32) {
+        // Terminal records for every member, then recycle their slots and
+        // the batch's member vector.
+        let members = self.batches.get(batch).len();
+        for idx in 0..members {
+            let rid = self.batches.get(batch)[idx];
+            let r = *self.arena.get(rid);
+            self.metrics.record_request(RequestRecord::new(
+                r.arrival,
+                now - r.arrival,
+                r.accuracy,
+                r.tier,
+            ));
+            self.arena.free(rid);
+        }
+        self.batches.free(batch);
+        let Some(pod) = self.pods.get_mut(&pod_id) else {
+            return;
+        };
+        pod.busy = pod.busy.saturating_sub(1);
+        // Start the next formed batch, dropping members that queued past
+        // the client timeout (in-place compaction: no fresh member vec).
+        while let Some(bid) = pod.queue.pop_front() {
+            let count = self.batches.get(bid).len();
+            pod.waiting = pod.waiting.saturating_sub(count);
+            let mut kept = 0usize;
+            for idx in 0..count {
+                let rid = self.batches.get(bid)[idx];
+                let r = *self.arena.get(rid);
+                if now - r.arrival > self.queue_timeout_s {
+                    self.metrics.record_request(RequestRecord::new(
+                        r.arrival,
+                        f64::INFINITY,
+                        r.accuracy,
+                        r.tier,
+                    ));
+                    self.arena.free(rid);
+                } else {
+                    self.batches.get_mut(bid)[kept] = rid;
+                    kept += 1;
+                }
+            }
+            self.batches.get_mut(bid).truncate(kept);
+            if kept == 0 {
+                self.batches.free(bid);
+                continue;
+            }
+            pod.busy += 1;
+            let stime = sample_service_batch(profiles, &pod.variant, kept, &mut self.rng);
+            push_event(
+                &mut self.heap,
+                &mut self.seq,
+                now + stime,
+                EventKind::Completion { pod_id, batch: bid },
+            );
+            break;
+        }
+    }
+
+    fn handle_batch_timeout(
+        &mut self,
+        profiles: &ProfileSet,
+        now: f64,
+        pod_id: u64,
+        forming_seq: u64,
+    ) {
+        let Some(pod) = self.pods.get_mut(&pod_id) else {
+            return;
+        };
+        if pod.forming_seq == forming_seq && !pod.forming.is_empty() {
+            let mut items = std::mem::take(&mut pod.forming);
+            pod.forming_seq += 1;
+            dispatch_batch(
+                profiles,
+                pod,
+                pod_id,
+                &mut items,
+                now,
+                &mut self.batches,
+                &mut self.heap,
+                &mut self.seq,
+                &mut self.rng,
+            );
+            pod.forming = items;
+        }
+    }
+
+    /// Add one routed request to a pod: it joins the forming batch, which
+    /// dispatches when full (immediately at `max_batch = 1`); opening a
+    /// fresh batch arms the formation timeout.
+    fn enqueue_request(&mut self, profiles: &ProfileSet, pod_id: u64, rid: u32, now: f64) {
+        let pod = self.pods.get_mut(&pod_id).expect("routed to unknown pod");
+        pod.forming.push(rid);
+        pod.waiting += 1;
+        if pod.forming.len() >= pod.max_batch {
+            let mut items = std::mem::take(&mut pod.forming);
+            pod.forming_seq += 1;
+            dispatch_batch(
+                profiles,
+                pod,
+                pod_id,
+                &mut items,
+                now,
+                &mut self.batches,
+                &mut self.heap,
+                &mut self.seq,
+                &mut self.rng,
+            );
+            pod.forming = items;
+        } else if pod.forming.len() == 1 {
+            push_event(
+                &mut self.heap,
+                &mut self.seq,
+                now + self.batch_max_wait_s,
+                EventKind::BatchTimeout {
+                    pod_id,
+                    forming_seq: pod.forming_seq,
+                },
+            );
+        }
+    }
+
+    /// `PodRemoved` at a cluster boundary: re-route still-waiting requests
+    /// (queued batches and the forming buffer) within this service.
+    pub(super) fn handle_pod_removed(
+        &mut self,
+        cluster: &Cluster,
+        profiles: &ProfileSet,
+        pod_id: u64,
+        now: f64,
+    ) {
+        let Some(mut dead) = self.pods.remove(&pod_id) else {
+            return;
+        };
+        let mut orphans: Vec<u32> = Vec::new();
+        for bid in dead.queue.drain(..) {
+            orphans.extend_from_slice(self.batches.get(bid));
+            self.batches.free(bid);
+        }
+        orphans.append(&mut dead.forming);
+        for rid in orphans {
+            // already-admitted requests are re-routed, never re-gated
+            if let Some(target) = self
+                .path
+                .dispatcher()
+                .route()
+                .and_then(|v| self.pick_pod(cluster, &namespaced(&self.prefix, &v)))
+                .or_else(|| self.any_pod(cluster))
+            {
+                let acc = acc_of(profiles, &self.pods[&target].variant);
+                self.arena.get_mut(rid).accuracy = acc;
+                self.enqueue_request(profiles, target, rid, now);
+            } else {
+                let r = *self.arena.get(rid);
+                self.metrics.record_request(RequestRecord::new(
+                    r.arrival,
+                    f64::INFINITY,
+                    r.accuracy,
+                    r.tier,
+                ));
+                self.arena.free(rid);
+            }
+        }
+    }
+
+    /// Apply stage: install one decision — dispatcher weights, batch-size
+    /// targets (a shrunk target can complete a forming batch), and the
+    /// prediction/batch metrics records.  Pods are visited in id order —
+    /// HashMap iteration order would make the RNG draw sequence
+    /// nondeterministic across runs.
+    pub(super) fn apply_decision(&mut self, profiles: &ProfileSet, now: f64, d: &Decision) {
+        self.path.set_weights(&d.quotas);
+        self.current_batches = d
+            .target
+            .keys()
+            .map(|v| (v.clone(), d.batch_of(v)))
+            .collect();
+        let mut pod_ids: Vec<u64> = self.pods.keys().copied().collect();
+        pod_ids.sort_unstable();
+        for pid in pod_ids {
+            let pod = self.pods.get_mut(&pid).expect("listed pod");
+            let mb = self.current_batches.get(&pod.variant).copied().unwrap_or(1);
+            if mb != pod.max_batch {
+                pod.max_batch = mb;
+                if pod.forming.len() >= mb {
+                    let mut items = std::mem::take(&mut pod.forming);
+                    pod.forming_seq += 1;
+                    dispatch_batch(
+                        profiles,
+                        pod,
+                        pid,
+                        &mut items,
+                        now,
+                        &mut self.batches,
+                        &mut self.heap,
+                        &mut self.seq,
+                        &mut self.rng,
+                    );
+                    pod.forming = items;
+                }
+            }
+        }
+        for (v, &b) in self.current_batches.iter().filter(|&(_, &b)| b > 1) {
+            self.metrics.record_batch_decision(now, v, b);
+        }
+        self.metrics.record_prediction(now, d.predicted_lambda);
+    }
+
+    /// Least-loaded ready pod of a namespaced variant key.
+    fn pick_pod(&self, cluster: &Cluster, key: &str) -> Option<u64> {
+        cluster
+            .ready_pods_of(key)
+            .iter()
+            .filter_map(|p| self.pods.get(&p.id).map(|ps| (p.id, ps)))
+            .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
+            .map(|(id, _)| id)
+    }
+
+    /// Any ready pod of this service (fallback when the chosen variant has
+    /// none yet).  The shard's pods map holds only its own pods, so the
+    /// cluster-wide scan self-filters.
+    fn any_pod(&self, cluster: &Cluster) -> Option<u64> {
+        cluster
+            .pods()
+            .iter()
+            .filter(|p| p.is_ready())
+            .filter_map(|p| self.pods.get(&p.id).map(|ps| (p.id, ps)))
+            .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
+            .map(|(id, _)| id)
+    }
+
+    /// Arena counters for diagnostics: (allocs, reuses, live, high-water).
+    pub fn arena_stats(&self) -> (u64, u64, usize, usize) {
+        let (a, r) = self.arena.stats();
+        (a, r, self.arena.live(), self.arena.high_water())
+    }
+}
+
+/// Cluster-facing variant key of a service's variant.
+pub(super) fn namespaced(prefix: &str, variant: &str) -> String {
+    if prefix.is_empty() {
+        variant.to_string()
+    } else {
+        format!("{prefix}{variant}")
+    }
+}
+
+fn acc_of(profiles: &ProfileSet, variant: &str) -> f64 {
+    profiles.get(variant).map(|p| p.accuracy).unwrap_or(0.0)
+}
+
+/// Draw one service time for a batch of `batch` requests on a variant
+/// (lognormal around the amortized mean; `batch = 1` is the plain
+/// measured service time).
+fn sample_service_batch(profiles: &ProfileSet, variant: &str, batch: usize, rng: &mut Rng) -> f64 {
+    let p = profiles.get(variant).expect("unknown variant");
+    rng.lognormal_mean(p.service_time_batch(batch), p.service_sigma.max(1e-6))
+}
+
+/// Hand a formed batch to the pod: one service draw on a free core, or
+/// the formed-batch queue when all cores are busy.  `items` comes back
+/// holding the recycled slot's empty vector (capacity circulation).
+#[allow(clippy::too_many_arguments)]
+fn dispatch_batch(
+    profiles: &ProfileSet,
+    pod: &mut PodSim,
+    pod_id: u64,
+    items: &mut Vec<u32>,
+    now: f64,
+    batches: &mut BatchArena,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    rng: &mut Rng,
+) {
+    let bid = batches.alloc_swap(items);
+    let len = batches.get(bid).len();
+    if pod.busy < pod.cores {
+        pod.busy += 1;
+        pod.waiting = pod.waiting.saturating_sub(len);
+        let stime = sample_service_batch(profiles, &pod.variant, len, rng);
+        push_event(heap, seq, now + stime, EventKind::Completion { pod_id, batch: bid });
+    } else {
+        pod.queue.push_back(bid);
+    }
+}
+
+/// Run `f(i, &mut a[i], &mut b[i])` for every index — serially in index
+/// order when `threads <= 1`, otherwise fanned out over a scoped worker
+/// pool fed by the [`mpmc`] channel.  Each task owns a disjoint pair of
+/// `&mut` slots, every result lands in the task's own slot, and callers
+/// read the slots back in index order — so thread scheduling cannot
+/// influence any outcome and the parallel path is bit-identical to the
+/// serial one by construction (pinned by
+/// `parallel_fleet_is_bit_identical_to_serial`).
+pub(crate) fn parallel_zip<A, B, F>(threads: usize, a: &mut [A], b: &mut [B], f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut A, &mut B) + Sync,
+{
+    debug_assert_eq!(a.len(), b.len());
+    let workers = threads.min(a.len());
+    if workers <= 1 {
+        for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+            f(i, x, y);
+        }
+        return;
+    }
+    let (tx, rx) = mpmc::channel();
+    for item in a.iter_mut().zip(b.iter_mut()).enumerate() {
+        tx.send(item).unwrap_or_else(|_| unreachable!("receiver held open"));
+    }
+    drop(tx);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let f = &f;
+            scope.spawn(move || {
+                while let Some((i, (x, y))) = rx.recv() {
+                    f(i, x, y);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_arena_reuses_freed_slots() {
+        let mut arena = RequestArena::new();
+        let a = arena.alloc(RequestSim { arrival: 1.0, accuracy: 0.5, tier: 0 });
+        let b = arena.alloc(RequestSim { arrival: 2.0, accuracy: 0.6, tier: 1 });
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(arena.live(), 2);
+        arena.free(a);
+        assert_eq!(arena.live(), 1);
+        // the freed slot is recycled before the slab grows
+        let c = arena.alloc(RequestSim { arrival: 3.0, accuracy: 0.7, tier: 0 });
+        assert_eq!(c, a);
+        assert_eq!(arena.get(c).arrival, 3.0);
+        assert_eq!(arena.high_water(), 2);
+        let (allocs, reuses) = arena.stats();
+        assert_eq!((allocs, reuses), (3, 1));
+    }
+
+    #[test]
+    fn batch_arena_circulates_capacity_through_swap() {
+        let mut arena = BatchArena::new();
+        let mut forming: Vec<u32> = (0..64).collect();
+        let cap = forming.capacity();
+        let bid = arena.alloc_swap(&mut forming);
+        assert!(forming.is_empty());
+        assert_eq!(arena.get(bid).len(), 64);
+        arena.free(bid);
+        // next alloc reuses the freed slot; the caller's vector gets the
+        // 64-element capacity back in exchange
+        forming.push(7);
+        let bid2 = arena.alloc_swap(&mut forming);
+        assert_eq!(bid2, bid);
+        assert_eq!(arena.get(bid2), &[7]);
+        assert!(forming.capacity() >= cap);
+    }
+
+    #[test]
+    fn parallel_zip_is_bit_identical_to_serial_at_any_thread_count() {
+        let f = |i: usize, x: &mut u64, y: &mut u64| {
+            *x = (i as u64 + 1) * 3;
+            *y = *x ^ 0xDEAD;
+        };
+        let n = 257;
+        let mut a1 = vec![0u64; n];
+        let mut b1 = vec![0u64; n];
+        parallel_zip(1, &mut a1, &mut b1, f);
+        for threads in [2, 4, 8, 64] {
+            let mut a = vec![0u64; n];
+            let mut b = vec![0u64; n];
+            parallel_zip(threads, &mut a, &mut b, f);
+            assert_eq!(a, a1, "threads={threads}");
+            assert_eq!(b, b1, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_zip_handles_more_threads_than_items() {
+        let mut a = vec![1u32; 3];
+        let mut b = vec![2u32; 3];
+        parallel_zip(16, &mut a, &mut b, |_, x, y| {
+            *x += 1;
+            *y += 1;
+        });
+        assert_eq!(a, vec![2, 2, 2]);
+        assert_eq!(b, vec![3, 3, 3]);
+    }
+}

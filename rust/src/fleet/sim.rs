@@ -1,57 +1,79 @@
-//! Multi-service virtual-time serving simulator — the fleet engine.
+//! Multi-service virtual-time serving simulator — the fleet orchestrator.
 //!
 //! Generalizes the single-adapter discrete-event loop (see
-//! [`crate::serving::sim`], which is now a thin single-service wrapper
-//! around this engine) to N independent services sharing one [`Cluster`]:
+//! [`crate::serving::sim`], which is a thin single-service wrapper around
+//! this engine) to N independent services sharing one [`Cluster`].  The
+//! data plane is *sharded*: each service's trace stream, RNG, admission
+//! gate, dispatcher, pods view, metrics, and event heap live in its own
+//! [`ServiceShard`] (see [`super::shard`]), and this module is only the
+//! orchestrator driving the five-stage tick protocol at every adaptation
+//! boundary:
 //!
-//! * **Shared substrate** — one node pool, one event heap, one virtual
-//!   clock.  Pods are namespaced on the cluster as `"<service>/<variant>"`
-//!   so services never collide; placement, readiness, and
-//!   create-before-remove work exactly as before.
-//! * **Per-service everything else** — each service brings its own trace,
-//!   profile set, SLO, dispatcher, metrics collector, rate accounting,
-//!   and policy.  Arrival timestamps and service-time noise come from
-//!   per-service RNG streams: service `i` draws from
-//!   `seed + i·SPLITMIX_GAMMA` (arrivals from that value + 1), so a fixed
-//!   seed is deterministic regardless of how the services' events
-//!   interleave, and service 0's streams equal the single-engine streams.
+//! ```text
+//!             │ shards advance own event heaps to the boundary │
+//!   advance ──┤  (parallel; disjoint per-service state)        │
+//!             ▼
+//!   observe ── flush rate windows + SLO-burn meters  (serial, index order)
+//!             ▼
+//!   solve ──── forecast λ̂ + value-curve solves       (parallel, scoped threads)
+//!             ▼
+//!   arbitrate─ water-fill the global core budget      (serial, index order)
+//!             ▼
+//!   apply ──── decide inside grants, reconcile pods   (decide parallel,
+//!             ▼                                        cluster apply serial)
+//!   advance ── … next interval
+//! ```
+//!
+//! * **Shared substrate** — one node pool and one virtual clock.  Pods are
+//!   namespaced on the cluster as `"<service>/<variant>"` so services
+//!   never collide; placement, readiness, and create-before-remove work
+//!   exactly as before.  Between boundaries the cluster is only *read*
+//!   (routing looks at pod readiness), so shards advance concurrently.
+//! * **Per-service everything else** — arrival timestamps and
+//!   service-time noise come from per-service RNG streams: service `i`
+//!   draws from `seed + i·SPLITMIX_GAMMA` (arrivals from that value + 1),
+//!   so a fixed seed is deterministic regardless of how the services'
+//!   events interleave, and service 0's streams equal the single-engine
+//!   streams.
 //! * **Arbitration** — when the engine holds a [`CoreArbiter`], every
-//!   adaptation interval runs a three-phase protocol: (1) each arbitrated
-//!   service observes its rate history and predicts λ̂, (2) it reports a
-//!   value curve over candidate core grants — one single-pass solve
-//!   ([`InfAdapterPolicy::value_curve_seeded`]) behind a per-service
-//!   cross-tick [`CurveCache`] (exact hits skip the solve, same-bin λ̂
-//!   wobble warm-starts it; values are bit-identical either way), and
-//!   (3) the arbiter water-fills the global budget, each service then
-//!   solving its own variant/batch selection inside its grant.  Without
-//!   an arbiter every service keeps its configured budget (the "static
-//!   split" baseline).
+//!   adaptation interval runs solve → arbitrate → apply: each arbitrated
+//!   service observes its rate history and predicts λ̂, reports a value
+//!   curve over candidate core grants — one single-pass solve
+//!   ([`InfAdapterPolicy::value_curve_seeded`]) behind a per-shard
+//!   cross-tick [`super::CurveCache`] — and the arbiter water-fills the
+//!   global budget, each service then solving its own variant/batch
+//!   selection inside its grant.  Without an arbiter every service keeps
+//!   its configured budget (the "static split" baseline).
 //!
-//! **Bit-identity invariant:** a single-service fleet performs the same
-//! cluster operations, heap pushes, and RNG draws in the same order as the
-//! pre-fleet single-adapter engine — arbitration only inserts pure solver
-//! work between the forecast and the decision (`decide` ≡
-//! `observe_and_predict` + `decide_with_lambda`, and a lone service is
-//! always granted the whole budget).  `single_service_fleet_matches_single_adapter_path`
-//! below pins this.
+//! **Bit-identity invariants.**  (1) A single-service fleet performs the
+//! same cluster operations, heap pushes, and RNG draws in the same order
+//! as the pre-fleet single-adapter engine
+//! (`single_service_fleet_matches_single_adapter_path` pins it).  (2) A
+//! parallel run is bit-identical to the serial run at *every* thread
+//! count: the parallel stages (advance, solve, decide) only touch
+//! disjoint per-shard state, and every fan-in reads results back in
+//! service-index order, never in thread-completion order — so worker
+//! scheduling cannot reach any output
+//! (`parallel_fleet_is_bit_identical_to_serial` in
+//! `tests/regression_pins.rs` pins it).  The old single-heap engine's
+//! global `(t, seq)` event order is reproduced exactly: within a shard by
+//! the shard's own heap, across shards by the boundary admission rule in
+//! [`ServiceShard::advance`] (arrivals at a boundary run before it,
+//! runtime events after it — matching the global engine's init-time vs
+//! runtime sequence numbers), and boundary times themselves by the same
+//! float accumulation (`+= 1.0` / `+= interval`) the old engine used when
+//! seeding its tick events.
 
 use super::arbiter::{ArbiterEntry, CoreArbiter};
-use super::curve_cache::CurveCache;
+use super::shard::{namespaced, parallel_zip, ServiceShard};
 use crate::adapter::InfAdapterPolicy;
 use crate::cluster::{Cluster, ClusterEvent};
-use crate::dispatcher::{AdmissionGate, RequestPath, RouteOutcome, Tier};
-use crate::metrics::{MetricsCollector, RequestRecord};
-use crate::monitoring::SloBurnMeter;
+use crate::dispatcher::Tier;
 use crate::profiler::ProfileSet;
 use crate::serving::sim::{SimConfig, SimResult};
 use crate::serving::{Decision, Policy};
-use crate::util::rng::Rng;
-use crate::workload::{ArrivalProcess, ClassMixer, RateSeries};
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
-
-/// Adaptation intervals the SLO-burn meter's rolling window covers.
-const BURN_WINDOW_INTERVALS: usize = 4;
+use crate::workload::{ArrivalProcess, RateSeries};
+use std::collections::BTreeMap;
 
 /// Seed of service `i`'s RNG stream.  Service 0 uses the base seed
 /// unchanged — a single-service fleet reproduces the single-adapter engine
@@ -65,90 +87,6 @@ const BURN_WINDOW_INTERVALS: usize = 4;
 /// (`prop_shed_conservation` counts ground-truth arrivals from it).
 pub fn service_seed(base: u64, i: usize) -> u64 {
     base.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
-}
-
-/// Shortest window a rate sample may be normalized over.  Caps the
-/// extrapolation factor at 4x: an adapter tick at t = 30.001 must not turn
-/// one arrival in a 1 ms sliver into a 1000 rps sample (a max-picking
-/// forecaster would seize on it).  Windows shorter than this merge into
-/// the neighbouring sample instead.
-const MIN_RATE_SAMPLE_SPAN_S: f64 = 0.25;
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EventKind {
-    Arrival { svc: usize },
-    /// One batched service draw finishing; `batch` indexes the batch table.
-    Completion { pod_id: u64, batch: usize },
-    /// Formation wait expired for the batch a pod opened at `forming_seq`.
-    BatchTimeout { pod_id: u64, forming_seq: u64 },
-    ClusterTick,
-    AdapterTick,
-}
-
-#[derive(Debug, Clone, Copy)]
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
-    }
-}
-
-fn push_event(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
-    *seq += 1;
-    heap.push(Reverse(Event { t, seq: *seq, kind }));
-}
-
-/// One simulated pod (M/G/n station) owned by a service.
-struct PodSim {
-    /// Index of the owning service (RNG stream, metrics, profiles).
-    svc: usize,
-    /// Raw (un-namespaced) variant name within the owning service.
-    variant: String,
-    cores: usize,
-    busy: usize,
-    /// Formed batches (ids into the batch table) awaiting a free core.
-    queue: VecDeque<usize>,
-    /// Requests accumulating toward the next batch (ids).
-    forming: Vec<usize>,
-    /// Bumped on every dispatch; stale `BatchTimeout` events don't match.
-    forming_seq: u64,
-    /// Current batch-size target for this pod's variant (1 = no batching).
-    max_batch: usize,
-    /// Requests waiting at this pod (forming + members of queued batches);
-    /// kept as a counter so routing comparisons stay O(1).
-    waiting: usize,
-}
-
-impl PodSim {
-    /// Waiting + in-service requests normalized by cores — the
-    /// least-loaded routing metric.
-    fn load(&self) -> f64 {
-        (self.busy + self.waiting) as f64 / self.cores.max(1) as f64
-    }
-}
-
-struct RequestSim {
-    arrival: f64,
-    accuracy: f64,
-    svc: usize,
-    /// Priority tier the request arrived with (per-tier accounting).
-    tier: Tier,
 }
 
 /// One service of a fleet run: the adaptation policy plus everything it
@@ -192,44 +130,27 @@ pub enum FleetPolicyRef<'a> {
     Arbitrated(&'a mut InfAdapterPolicy),
 }
 
-/// Per-service runtime state.
-struct SvcState {
-    /// `"<name>/"`, or empty for the unprefixed single-service path.
-    prefix: String,
-    duration: f64,
-    /// The admission-controlled request path: gate → tiers → smooth-WRR.
-    path: RequestPath,
-    /// Deterministic per-request tier assignment (no RNG).
-    tier_mixer: ClassMixer,
-    /// Rolling SLO-burn meter feeding the arbiter.
-    burn: SloBurnMeter,
-    /// Collector counts already folded into the burn meter.
-    seen_violations: u64,
-    seen_admitted: u64,
-    metrics: MetricsCollector,
-    rng: Rng,
-    rate_history: Vec<f64>,
-    arrivals_this_second: u64,
-    last_whole_second: u64,
-    /// Start of the window `arrivals_this_second` covers; advances with
-    /// the per-second roll and with partial flushes at adapter ticks so
-    /// every sample is normalized by the span it actually observed.
-    counter_since: f64,
-    /// Raw variant -> batch-size target in force (new pods inherit it).
-    current_batches: BTreeMap<String, usize>,
-    decisions: Vec<(f64, Decision)>,
-    /// λ̂ carried from the arbitration phase into the decision phase.
-    pending_lambda: f64,
-    /// Cross-tick value-curve memory (arbitrated services only): exact
-    /// hits skip the solve outright, near-hits warm-start it.
-    curve_cache: CurveCache,
-}
-
 /// The multi-service engine.
 pub struct FleetSimEngine {
     pub config: SimConfig,
     /// `None`: every service keeps its own fixed budget (static split).
     pub arbiter: Option<CoreArbiter>,
+}
+
+/// Worker count for the parallel stages: the configured value, with `0`
+/// meaning "auto" (the machine's available parallelism), clamped to the
+/// service count.  `1` is the serial reference path — no threads are ever
+/// spawned (so the N=1 single-adapter wrapper stays thread-free).  The
+/// resolved value never influences results, only wall-clock.
+fn effective_threads(configured: usize, n: usize) -> usize {
+    let t = if configured == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        configured
+    };
+    t.min(n)
 }
 
 impl FleetSimEngine {
@@ -258,512 +179,120 @@ impl FleetSimEngine {
             .map(|s| s.trace.duration_s())
             .max()
             .unwrap_or(0) as f64;
+        let threads = effective_threads(cfg.solver_threads, n);
 
-        let mut st: Vec<SvcState> = services
+        let mut shards: Vec<ServiceShard> = services
             .iter()
             .enumerate()
-            .map(|(i, s)| {
-                let top_acc = s
-                    .profiles
-                    .profiles
-                    .iter()
-                    .map(|p| p.accuracy)
-                    .fold(0.0, f64::max);
-                // Cutoff ladder of this service's gate: the range of
-                // tiers its trace can actually emit — the class mix when
-                // one is set, the service tier otherwise.  The floor
-                // matters: a tier-1-only service must never cut off
-                // tier 1 (its whole stream).
-                let mix: Vec<Tier> = s
-                    .trace
-                    .class_mix
-                    .iter()
-                    .filter(|&&(_, w)| w > 0.0)
-                    .map(|&(t, _)| t)
-                    .collect();
-                let (min_tier, max_tier) = if mix.is_empty() {
-                    (s.tier, s.tier)
-                } else {
-                    (
-                        mix.iter().copied().min().expect("non-empty"),
-                        mix.iter().copied().max().expect("non-empty"),
-                    )
-                };
-                SvcState {
-                    prefix: if s.name.is_empty() {
-                        String::new()
-                    } else {
-                        format!("{}/", s.name)
-                    },
-                    duration: s.trace.duration_s() as f64,
-                    path: RequestPath::new(AdmissionGate::new(
-                        &cfg.admission,
-                        min_tier,
-                        max_tier,
-                    )),
-                    tier_mixer: ClassMixer::new(&s.trace.class_mix, s.tier),
-                    burn: SloBurnMeter::new(s.error_budget, BURN_WINDOW_INTERVALS),
-                    seen_violations: 0,
-                    seen_admitted: 0,
-                    metrics: MetricsCollector::new(cfg.bucket_s, s.slo_s, top_acc),
-                    rng: Rng::seed_from_u64(service_seed(cfg.seed, i)),
-                    rate_history: Vec::new(),
-                    arrivals_this_second: 0,
-                    last_whole_second: 0,
-                    counter_since: 0.0,
-                    current_batches: BTreeMap::new(),
-                    decisions: Vec::new(),
-                    pending_lambda: 0.0,
-                    curve_cache: CurveCache::new(),
-                }
-            })
+            .map(|(i, s)| ServiceShard::new(i, s, cfg))
             .collect();
 
         let mut cluster = Cluster::new(&cfg.node_cores);
 
         // --- Warm start: every service decides at t = 0 and its pods
-        // become ready instantly (as in the paper's experiments).
+        // become ready instantly (as in the paper's experiments).  Same
+        // solve → arbitrate → apply stages as a live boundary, minus the
+        // flush (nothing observed yet) — readiness is forced to zero.
         let first_rates: Vec<Vec<f64>> = services
             .iter()
             .map(|s| vec![s.trace.rates.first().copied().unwrap_or(0.0)])
             .collect();
         let empty_committed: Vec<BTreeMap<String, usize>> = vec![BTreeMap::new(); n];
-        let grants = self.arbitrate(services, &mut st, &first_rates, &empty_committed);
-        let decisions0 = decide_all(0.0, services, &st, &first_rates, &empty_committed, &grants);
-        let merged = merged_target(&st, &decisions0);
+        let grants = self.arbitrate(threads, services, &mut shards, &first_rates, &empty_committed);
+        let decisions0 = decide_all(
+            threads,
+            0.0,
+            services,
+            &mut shards,
+            &first_rates,
+            &empty_committed,
+            &grants,
+        );
+        let merged = merged_target(&shards, &decisions0);
         cluster.apply(&merged, 0.0, |_| 0.0);
         cluster.tick(0.0);
         for (i, d) in decisions0.iter().enumerate() {
-            let s = &mut st[i];
-            s.path.set_weights(&d.quotas);
-            s.metrics.record_prediction(0.0, d.predicted_lambda);
-            s.current_batches = d
-                .target
-                .keys()
-                .map(|v| (v.clone(), d.batch_of(v)))
-                .collect();
-            for (v, &b) in s.current_batches.iter().filter(|&(_, &b)| b > 1) {
-                s.metrics.record_batch_decision(0.0, v, b);
-            }
+            shards[i].apply_decision(&services[i].profiles, 0.0, d);
         }
-        refresh_gates(&cluster, services, &mut st, 0.0);
-        record_costs(&cluster, &mut st, 0.0);
+        refresh_gates(&cluster, services, &mut shards, 0.0);
+        record_costs(&cluster, &mut shards, 0.0);
 
-        // --- Event queue.
-        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
-        let mut seq = 0u64;
-        let arrival_lists: Vec<Vec<f64>> = services
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                ArrivalProcess::poisson(s.trace, service_seed(cfg.seed, i).wrapping_add(1))
-            })
-            .collect();
-        for (i, list) in arrival_lists.iter().enumerate() {
-            for &t in list {
-                push_event(&mut heap, &mut seq, t, EventKind::Arrival { svc: i });
-            }
+        // --- Seed every shard: its arrival stream and its view of the
+        // warm-started pods.
+        for (i, s) in services.iter().enumerate() {
+            let list = ArrivalProcess::poisson(s.trace, service_seed(cfg.seed, i).wrapping_add(1));
+            shards[i].seed_arrivals(&list);
         }
-        let total_arrivals: usize = arrival_lists.iter().map(|l| l.len()).sum();
-        let mut t_next = 1.0;
-        while t_next < max_duration {
-            push_event(&mut heap, &mut seq, t_next, EventKind::ClusterTick);
-            t_next += 1.0;
-        }
-        let mut t_adapt = cfg.adapter_interval_s;
-        while t_adapt < max_duration {
-            push_event(&mut heap, &mut seq, t_adapt, EventKind::AdapterTick);
-            t_adapt += cfg.adapter_interval_s;
-        }
-
-        // --- State.
-        let mut pods: HashMap<u64, PodSim> = HashMap::new();
         for p in cluster.pods() {
-            let svc = owner_of(&st, &p.variant);
-            let raw = p.variant[st[svc].prefix.len()..].to_string();
-            let max_batch = st[svc].current_batches.get(&raw).copied().unwrap_or(1);
-            pods.insert(
-                p.id,
-                PodSim {
-                    svc,
-                    variant: raw,
-                    cores: p.cores,
-                    busy: 0,
-                    queue: VecDeque::new(),
-                    forming: Vec::new(),
-                    forming_seq: 0,
-                    max_batch,
-                    waiting: 0,
-                },
-            );
+            let svc = owner_of(&shards, &p.variant);
+            shards[svc].insert_pod(p.id, &p.variant, p.cores);
         }
-        let mut requests: Vec<RequestSim> = Vec::with_capacity(total_arrivals);
-        // batch id -> member request ids (set at dispatch, pruned of
-        // timed-out members at service start)
-        let mut batches: Vec<Vec<usize>> = Vec::new();
         for (i, d) in decisions0.into_iter().enumerate() {
-            st[i].decisions.push((0.0, d));
+            shards[i].decisions.push((0.0, d));
         }
 
-        // --- Main loop.  Arrivals and ticks all fall inside
-        // [0, max_duration); completions may land past the end and are
-        // drained so every request is accounted for (conservation).
-        while let Some(Reverse(ev)) = heap.pop() {
-            let now = ev.t;
-            // roll every service's per-second arrival counter (the division
-            // is by exactly 1.0 — a bit-exact no-op — unless an adapter
-            // tick partially flushed this second; a sliver left by a flush
-            // just before the boundary merges into the next second)
-            let sec = now as u64;
-            for s in st.iter_mut() {
-                while s.last_whole_second < sec {
-                    let boundary = (s.last_whole_second + 1) as f64;
-                    let span = boundary - s.counter_since;
-                    if span >= MIN_RATE_SAMPLE_SPAN_S {
-                        s.rate_history.push(s.arrivals_this_second as f64 / span);
-                        s.arrivals_this_second = 0;
-                        s.counter_since = boundary;
-                    }
-                    s.last_whole_second += 1;
-                }
+        // --- Main loop: boundary-driven.  Cluster ticks land at every
+        // whole second, adapter ticks at every interval, both strictly
+        // inside [0, max_duration) — the same accumulated times the old
+        // single-heap engine seeded as tick events.  Between boundaries
+        // the shards advance independently (parallel); at a shared time
+        // the cluster boundary runs before the adapter boundary, matching
+        // the old engine's init-push sequence order.
+        let mut next_cluster = 1.0f64;
+        let mut next_adapter = cfg.adapter_interval_s;
+        loop {
+            let cluster_due = next_cluster < max_duration;
+            let adapter_due = next_adapter < max_duration;
+            let t = match (cluster_due, adapter_due) {
+                (true, true) => next_cluster.min(next_adapter),
+                (true, false) => next_cluster,
+                (false, true) => next_adapter,
+                (false, false) => break,
+            };
+            advance_all(threads, services, &mut shards, &cluster, t);
+            // catch every shard's per-second rate accounting up to the
+            // boundary (idle shards included — the old engine rolled all
+            // services at every event pop; the roll is a pure catch-up,
+            // so rolling lazily-then-here yields the same samples)
+            for sh in shards.iter_mut() {
+                sh.roll_to(t as u64);
             }
-
-            match ev.kind {
-                EventKind::Arrival { svc } => {
-                    st[svc].arrivals_this_second += 1;
-                    let rid = requests.len();
-                    let tier = st[svc].tier_mixer.next();
-                    // The unified request path: admission gate (sheds
-                    // excess offered load at the door — recorded, never
-                    // enqueued; a disabled gate admits unconditionally,
-                    // the pre-admission behaviour) → smooth-WRR variant
-                    // routing.  The least-loaded ready pod of the routed
-                    // variant then takes the request.
-                    let variant = match st[svc].path.handle(now, tier) {
-                        RouteOutcome::Shed(t) => {
-                            st[svc]
-                                .metrics
-                                .record_request(RequestRecord::shed(now, t));
-                            continue;
-                        }
-                        RouteOutcome::Routed(v) => Some(v),
-                        // unconfigured / zero-capacity: fall through to
-                        // the any-pod fallback, then drop
-                        RouteOutcome::Denied(_) => None,
-                    };
-                    let pod_id = variant.as_deref().and_then(|v| {
-                        pick_pod(&cluster, &pods, &namespaced(&st[svc].prefix, v))
-                            .or_else(|| any_pod(&cluster, &pods, svc))
-                    });
-                    let Some(pid) = pod_id else {
-                        requests.push(RequestSim {
-                            arrival: now,
-                            accuracy: 0.0,
-                            svc,
-                            tier,
-                        });
-                        st[svc].metrics.record_request(RequestRecord::new(
-                            now,
-                            f64::INFINITY,
-                            0.0,
-                            tier,
-                        ));
-                        continue;
-                    };
-                    let accuracy = acc_of(&services[svc].profiles, &pods[&pid].variant);
-                    requests.push(RequestSim {
-                        arrival: now,
-                        accuracy,
-                        svc,
-                        tier,
-                    });
-                    enqueue_request(
-                        &services[svc].profiles,
-                        cfg.batch_max_wait_s,
-                        pid,
-                        rid,
-                        now,
-                        &mut pods,
-                        &mut batches,
-                        &mut heap,
-                        &mut seq,
-                        &mut st[svc].rng,
-                    );
-                }
-                EventKind::Completion { pod_id, batch } => {
-                    for &rid in &batches[batch] {
-                        let r = &requests[rid];
-                        st[r.svc].metrics.record_request(RequestRecord::new(
-                            r.arrival,
-                            now - r.arrival,
-                            r.accuracy,
-                            r.tier,
-                        ));
-                    }
-                    if let Some(pod) = pods.get_mut(&pod_id) {
-                        pod.busy = pod.busy.saturating_sub(1);
-                        // Start the next formed batch, dropping members
-                        // that queued past the client timeout.
-                        while let Some(bid) = pod.queue.pop_front() {
-                            pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
-                            let mut live = Vec::with_capacity(batches[bid].len());
-                            for &rid in &batches[bid] {
-                                let waited = now - requests[rid].arrival;
-                                if waited > self.config.queue_timeout_s {
-                                    st[requests[rid].svc].metrics.record_request(
-                                        RequestRecord::new(
-                                            requests[rid].arrival,
-                                            f64::INFINITY,
-                                            requests[rid].accuracy,
-                                            requests[rid].tier,
-                                        ),
-                                    );
-                                } else {
-                                    live.push(rid);
-                                }
-                            }
-                            if live.is_empty() {
-                                continue;
-                            }
-                            pod.busy += 1;
-                            let svc = pod.svc;
-                            let stime = sample_service_batch(
-                                &services[svc].profiles,
-                                &pod.variant,
-                                live.len(),
-                                &mut st[svc].rng,
-                            );
-                            batches[bid] = live;
-                            push_event(
-                                &mut heap,
-                                &mut seq,
-                                now + stime,
-                                EventKind::Completion { pod_id, batch: bid },
-                            );
-                            break;
-                        }
-                    }
-                }
-                EventKind::BatchTimeout { pod_id, forming_seq } => {
-                    if let Some(pod) = pods.get_mut(&pod_id) {
-                        if pod.forming_seq == forming_seq && !pod.forming.is_empty() {
-                            let items = std::mem::take(&mut pod.forming);
-                            pod.forming_seq += 1;
-                            let svc = pod.svc;
-                            dispatch_batch(
-                                &services[svc].profiles,
-                                pod,
-                                pod_id,
-                                items,
-                                now,
-                                &mut batches,
-                                &mut heap,
-                                &mut seq,
-                                &mut st[svc].rng,
-                            );
-                        }
-                    }
-                }
-                EventKind::ClusterTick => {
-                    for event in cluster.tick(now) {
-                        match event {
-                            ClusterEvent::PodReady { pod_id, variant } => {
-                                let cores = cluster
-                                    .pods()
-                                    .iter()
-                                    .find(|p| p.id == pod_id)
-                                    .map(|p| p.cores)
-                                    .unwrap_or(0);
-                                let svc = owner_of(&st, &variant);
-                                let raw = variant[st[svc].prefix.len()..].to_string();
-                                let max_batch =
-                                    st[svc].current_batches.get(&raw).copied().unwrap_or(1);
-                                pods.insert(
-                                    pod_id,
-                                    PodSim {
-                                        svc,
-                                        variant: raw,
-                                        cores,
-                                        busy: 0,
-                                        queue: VecDeque::new(),
-                                        forming: Vec::new(),
-                                        forming_seq: 0,
-                                        max_batch,
-                                        waiting: 0,
-                                    },
-                                );
-                            }
-                            ClusterEvent::PodRemoved { pod_id, .. } => {
-                                // Re-route still-waiting requests (queued
-                                // batches and the forming buffer) within
-                                // the owning service.
-                                if let Some(mut dead) = pods.remove(&pod_id) {
-                                    let svc = dead.svc;
-                                    let mut orphans: Vec<usize> = Vec::new();
-                                    for bid in dead.queue.drain(..) {
-                                        orphans.append(&mut batches[bid]);
-                                    }
-                                    orphans.append(&mut dead.forming);
-                                    for rid in orphans {
-                                        // already-admitted requests are
-                                        // re-routed, never re-gated
-                                        if let Some(target) = st[svc]
-                                            .path
-                                            .dispatcher()
-                                            .route()
-                                            .and_then(|v| {
-                                                pick_pod(
-                                                    &cluster,
-                                                    &pods,
-                                                    &namespaced(&st[svc].prefix, &v),
-                                                )
-                                            })
-                                            .or_else(|| any_pod(&cluster, &pods, svc))
-                                        {
-                                            requests[rid].accuracy = acc_of(
-                                                &services[svc].profiles,
-                                                &pods[&target].variant,
-                                            );
-                                            enqueue_request(
-                                                &services[svc].profiles,
-                                                cfg.batch_max_wait_s,
-                                                target,
-                                                rid,
-                                                now,
-                                                &mut pods,
-                                                &mut batches,
-                                                &mut heap,
-                                                &mut seq,
-                                                &mut st[svc].rng,
-                                            );
-                                        } else {
-                                            st[svc].metrics.record_request(RequestRecord::new(
-                                                requests[rid].arrival,
-                                                f64::INFINITY,
-                                                requests[rid].accuracy,
-                                                requests[rid].tier,
-                                            ));
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    record_costs(&cluster, &mut st, now);
-                }
-                EventKind::AdapterTick => {
-                    // Flush every service's in-progress partial second so
-                    // the just-observed load is visible to its policy
-                    // (normalized by the span it actually covers; slivers
-                    // below the minimum span stay in the counter).
-                    for s in st.iter_mut() {
-                        let span = now - s.counter_since;
-                        if span >= MIN_RATE_SAMPLE_SPAN_S {
-                            s.rate_history.push(s.arrivals_this_second as f64 / span);
-                            s.arrivals_this_second = 0;
-                            s.counter_since = now;
-                        }
-                        // Fold the interval's (violations, admitted) delta
-                        // into the SLO-burn meter the arbiter reads.
-                        let (v, a) = s.metrics.live_counts();
-                        s.burn.observe(v - s.seen_violations, a - s.seen_admitted);
-                        s.seen_violations = v;
-                        s.seen_admitted = a;
-                    }
-                    let committed_full = cluster.committed_allocation();
-                    let committed: Vec<BTreeMap<String, usize>> = (0..n)
-                        .map(|i| {
-                            committed_full
-                                .iter()
-                                .filter(|(k, _)| owner_of(&st, k) == i)
-                                .map(|(k, &c)| (k[st[i].prefix.len()..].to_string(), c))
-                                .collect()
-                        })
-                        .collect();
-                    let histories: Vec<Vec<f64>> = st
-                        .iter_mut()
-                        .map(|s| std::mem::take(&mut s.rate_history))
-                        .collect();
-                    let grants = self.arbitrate(services, &mut st, &histories, &committed);
-                    let decisions = decide_all(now, services, &st, &histories, &committed, &grants);
-                    let merged = merged_target(&st, &decisions);
-                    {
-                        let svc_view: &[FleetService] = services;
-                        cluster.apply(&merged, now, |v| readiness_of(svc_view, &st, v));
-                    }
-                    for (i, d) in decisions.iter().enumerate() {
-                        let s = &mut st[i];
-                        s.path.set_weights(&d.quotas);
-                        // Propagate batch-size targets to this service's
-                        // live and future pods; a shrunk target can
-                        // complete a forming batch.  Visit pods in id
-                        // order — HashMap iteration order would make the
-                        // RNG draw sequence nondeterministic across runs.
-                        s.current_batches = d
-                            .target
-                            .keys()
-                            .map(|v| (v.clone(), d.batch_of(v)))
-                            .collect();
-                        let mut pod_ids: Vec<u64> = pods
-                            .iter()
-                            .filter(|(_, p)| p.svc == i)
-                            .map(|(&id, _)| id)
-                            .collect();
-                        pod_ids.sort_unstable();
-                        for pid in pod_ids {
-                            let pod = pods.get_mut(&pid).expect("listed pod");
-                            let mb = s.current_batches.get(&pod.variant).copied().unwrap_or(1);
-                            if mb != pod.max_batch {
-                                pod.max_batch = mb;
-                                if pod.forming.len() >= mb {
-                                    let items = std::mem::take(&mut pod.forming);
-                                    pod.forming_seq += 1;
-                                    dispatch_batch(
-                                        &services[i].profiles,
-                                        pod,
-                                        pid,
-                                        items,
-                                        now,
-                                        &mut batches,
-                                        &mut heap,
-                                        &mut seq,
-                                        &mut s.rng,
-                                    );
-                                }
-                            }
-                        }
-                        for (v, &b) in s.current_batches.iter().filter(|&(_, &b)| b > 1) {
-                            s.metrics.record_batch_decision(now, v, b);
-                        }
-                        s.metrics.record_prediction(now, d.predicted_lambda);
-                    }
-                    refresh_gates(&cluster, services, &mut st, now);
-                    record_costs(&cluster, &mut st, now);
-                    for (i, d) in decisions.into_iter().enumerate() {
-                        st[i].decisions.push((now, d));
-                    }
-                }
+            if cluster_due && next_cluster == t {
+                cluster_boundary(&mut cluster, services, &mut shards, t);
+                next_cluster += 1.0;
+            }
+            if adapter_due && next_adapter == t {
+                self.adapter_boundary(threads, &mut cluster, services, &mut shards, t);
+                next_adapter += cfg.adapter_interval_s;
             }
         }
+        // --- Drain: completions may land past the trace end and every
+        // request must be accounted for (conservation).
+        advance_all(threads, services, &mut shards, &cluster, f64::INFINITY);
 
-        st.into_iter()
-            .map(|s| SimResult {
-                metrics: s.metrics,
-                duration_s: s.duration,
-                decisions: s.decisions,
-                curve_cache: s.curve_cache.stats,
+        shards
+            .into_iter()
+            .map(|sh| SimResult {
+                metrics: sh.metrics,
+                duration_s: sh.duration,
+                decisions: sh.decisions,
+                curve_cache: sh.curve_cache.stats,
             })
             .collect()
     }
 
-    /// Arbitration phase: arbitrated services observe their rate history,
-    /// predict λ̂, and report value curves; the arbiter water-fills the
-    /// global budget.  Returns `None` per service when the engine has no
-    /// arbiter (every policy keeps its own budget).
+    /// Solve + arbitrate stages.  The solve fans out over scoped worker
+    /// threads — each arbitrated service forecasts λ̂ and solves its value
+    /// curve into its own shard's `pending_*` slots — then the arbiter
+    /// water-fills the global budget serially over the entries collected
+    /// in service-index order.  Returns `None` per service when the
+    /// engine has no arbiter (every policy keeps its own budget; the
+    /// solve stage is skipped entirely).
     fn arbitrate(
         &self,
+        threads: usize,
         services: &mut [FleetService],
-        st: &mut [SvcState],
+        shards: &mut [ServiceShard],
         histories: &[Vec<f64>],
         committed: &[BTreeMap<String, usize>],
     ) -> Vec<Option<usize>> {
@@ -771,45 +300,136 @@ impl FleetSimEngine {
             return vec![None; services.len()];
         };
         let floors_sum: usize = services.iter().map(|s| s.floor_cores).sum();
-        let mut entries = Vec::with_capacity(services.len());
-        for (i, s) in services.iter_mut().enumerate() {
-            let floor = s.floor_cores;
-            let priority = s.priority;
-            let tier = s.tier;
-            // Rolling SLO-burn signal: the arbiter boosts burning
-            // services' marginals (inert at the default burn_boost = 0).
-            let burn = st[i].burn.burn_rate();
-            let entry = match &mut s.policy {
-                FleetPolicyRef::Plain(_) => ArbiterEntry {
-                    priority,
-                    tier,
-                    burn,
-                    floor,
-                    curve: None,
-                },
-                FleetPolicyRef::Arbitrated(p) => {
-                    let lambda = p.observe_and_predict(&histories[i]);
-                    st[i].pending_lambda = lambda;
-                    // The most this service could ever be granted: the
-                    // whole budget minus everyone else's floors.
-                    let cap = arb.global_budget.saturating_sub(floors_sum - floor);
-                    // Cross-tick cache: exact hit skips the solve, a
-                    // same-bin λ̂ wobble warm-starts it; the curve values
-                    // are bit-identical to an uncached solve either way.
-                    let curve = st[i].curve_cache.curve(&**p, lambda, &committed[i], cap);
-                    ArbiterEntry {
-                        priority,
-                        tier,
-                        burn,
-                        floor,
-                        curve: Some(curve),
-                    }
-                }
-            };
-            entries.push(entry);
-        }
+        let global_budget = arb.global_budget;
+        // Solve stage (parallel): per-service forecast + curve solve.
+        // Everything written lands in the task's own (service, shard)
+        // pair, so thread scheduling cannot affect any value.
+        parallel_zip(threads, services, shards, |i, s, sh| {
+            if let FleetPolicyRef::Arbitrated(p) = &mut s.policy {
+                let lambda = p.observe_and_predict(&histories[i]);
+                sh.pending_lambda = lambda;
+                // The most this service could ever be granted: the
+                // whole budget minus everyone else's floors.
+                let cap = global_budget.saturating_sub(floors_sum - s.floor_cores);
+                // Cross-tick cache: exact hit skips the solve, a
+                // same-bin λ̂ wobble warm-starts it; the curve values
+                // are bit-identical to an uncached solve either way.
+                let curve = sh.curve_cache.curve(&**p, lambda, &committed[i], cap);
+                sh.pending_curve = Some(curve);
+            }
+        });
+        // Arbitrate stage (serial): fan in strictly by service index.
+        let entries: Vec<ArbiterEntry> = services
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ArbiterEntry {
+                priority: s.priority,
+                tier: s.tier,
+                // Rolling SLO-burn signal: the arbiter boosts burning
+                // services' marginals (inert at the default burn_boost = 0).
+                burn: shards[i].burn.burn_rate(),
+                floor: s.floor_cores,
+                curve: shards[i].pending_curve.take(),
+            })
+            .collect();
         arb.partition(&entries).into_iter().map(Some).collect()
     }
+
+    /// One adapter boundary: observe → solve → arbitrate → apply.
+    fn adapter_boundary(
+        &self,
+        threads: usize,
+        cluster: &mut Cluster,
+        services: &mut [FleetService],
+        shards: &mut [ServiceShard],
+        now: f64,
+    ) {
+        let n = services.len();
+        // Observe stage (serial): flush every shard's in-progress partial
+        // second and fold the interval's SLO-burn delta.
+        for sh in shards.iter_mut() {
+            sh.flush_rate_window(now);
+        }
+        let committed_full = cluster.committed_allocation();
+        let committed: Vec<BTreeMap<String, usize>> = (0..n)
+            .map(|i| {
+                committed_full
+                    .iter()
+                    .filter(|(k, _)| owner_of(shards, k) == i)
+                    .map(|(k, &c)| (k[shards[i].prefix.len()..].to_string(), c))
+                    .collect()
+            })
+            .collect();
+        let histories: Vec<Vec<f64>> = shards
+            .iter_mut()
+            .map(|s| std::mem::take(&mut s.rate_history))
+            .collect();
+        let grants = self.arbitrate(threads, services, shards, &histories, &committed);
+        let decisions = decide_all(threads, now, services, shards, &histories, &committed, &grants);
+        // Apply stage (serial): reconcile the shared cluster against the
+        // union target, then install each decision shard by shard.
+        let merged = merged_target(shards, &decisions);
+        {
+            let svc_view: &[FleetService] = services;
+            cluster.apply(&merged, now, |v| readiness_of(svc_view, shards, v));
+        }
+        for (i, d) in decisions.iter().enumerate() {
+            shards[i].apply_decision(&services[i].profiles, now, d);
+        }
+        refresh_gates(cluster, services, shards, now);
+        record_costs(cluster, shards, now);
+        for (i, d) in decisions.into_iter().enumerate() {
+            shards[i].decisions.push((now, d));
+        }
+    }
+}
+
+/// Advance stage: every shard processes its own events up to `until`
+/// (exclusive, plus arrivals at exactly `until` — see
+/// [`ServiceShard::advance`] for the boundary tie rule).  Parallel over
+/// the worker pool; shards share no mutable state and the cluster is
+/// read-only here, so the fan-out is bit-neutral.
+fn advance_all(
+    threads: usize,
+    services: &mut [FleetService],
+    shards: &mut [ServiceShard],
+    cluster: &Cluster,
+    until: f64,
+) {
+    parallel_zip(threads, services, shards, |_, s, sh| {
+        sh.advance(cluster, &s.profiles, until);
+    });
+}
+
+/// One cluster boundary (every whole second): pods come ready or drain
+/// away, orphaned requests re-route within their shard, and every service
+/// samples its billed cores.  Serial — this is the one place shards touch
+/// the shared cluster's mutations.
+fn cluster_boundary(
+    cluster: &mut Cluster,
+    services: &[FleetService],
+    shards: &mut [ServiceShard],
+    now: f64,
+) {
+    for event in cluster.tick(now) {
+        match event {
+            ClusterEvent::PodReady { pod_id, variant } => {
+                let cores = cluster
+                    .pods()
+                    .iter()
+                    .find(|p| p.id == pod_id)
+                    .map(|p| p.cores)
+                    .unwrap_or(0);
+                let svc = owner_of(shards, &variant);
+                shards[svc].insert_pod(pod_id, &variant, cores);
+            }
+            ClusterEvent::PodRemoved { pod_id, variant } => {
+                let svc = owner_of(shards, &variant);
+                shards[svc].handle_pod_removed(cluster, &services[svc].profiles, pod_id, now);
+            }
+        }
+    }
+    record_costs(cluster, shards, now);
 }
 
 /// Re-size every service's admission gate from its *committed* allocation:
@@ -818,38 +438,45 @@ impl FleetSimEngine {
 /// in force — the "granted capacity" the token bucket refills at.  Called
 /// at the warm start and every adaptation tick; a no-op fast path when no
 /// gate is enabled keeps the default run untouched.
-fn refresh_gates(cluster: &Cluster, services: &[FleetService], st: &mut [SvcState], now: f64) {
-    if !st.iter().any(|s| s.path.gate().enabled()) {
+fn refresh_gates(
+    cluster: &Cluster,
+    services: &[FleetService],
+    shards: &mut [ServiceShard],
+    now: f64,
+) {
+    if !shards.iter().any(|s| s.path.gate().enabled()) {
         return;
     }
     let committed = cluster.committed_allocation();
-    for i in 0..st.len() {
+    for i in 0..shards.len() {
         let alloc: BTreeMap<String, usize> = committed
             .iter()
-            .filter(|(k, _)| owner_of(st, k) == i)
-            .map(|(k, &c)| (k[st[i].prefix.len()..].to_string(), c))
+            .filter(|(k, _)| owner_of(shards, k) == i)
+            .map(|(k, &c)| (k[shards[i].prefix.len()..].to_string(), c))
             .collect();
         let supply = services[i]
             .profiles
-            .supply_rps(&alloc, &st[i].current_batches);
-        st[i].path.set_supply(now, supply);
+            .supply_rps(&alloc, &shards[i].current_batches);
+        shards[i].path.set_supply(now, supply);
     }
 }
 
-/// Decision phase: every service solves inside its grant (arbitrated) or
-/// decides with its own fixed budget (plain / no arbiter).
+/// Decide stage: every service solves inside its grant (arbitrated) or
+/// decides with its own fixed budget (plain / no arbiter).  Parallel —
+/// each decision is a pure function of its own policy and shard state and
+/// lands in its own shard's `pending_decision` slot; the fan-in collects
+/// strictly by service index.
 fn decide_all(
+    threads: usize,
     now: f64,
     services: &mut [FleetService],
-    st: &[SvcState],
+    shards: &mut [ServiceShard],
     histories: &[Vec<f64>],
     committed: &[BTreeMap<String, usize>],
     grants: &[Option<usize>],
 ) -> Vec<Decision> {
-    services
-        .iter_mut()
-        .enumerate()
-        .map(|(i, s)| match &mut s.policy {
+    parallel_zip(threads, services, shards, |i, s, sh| {
+        let d = match &mut s.policy {
             FleetPolicyRef::Plain(p) => {
                 let d = p.decide(now, &histories[i], &committed[i]);
                 // Under arbitration a plain service's floor is its whole
@@ -872,37 +499,34 @@ fn decide_all(
             FleetPolicyRef::Arbitrated(p) => match grants[i] {
                 Some(g) => {
                     p.budget = g;
-                    p.decide_with_lambda(st[i].pending_lambda, &committed[i])
+                    p.decide_with_lambda(sh.pending_lambda, &committed[i])
                 }
                 None => p.decide(now, &histories[i], &committed[i]),
             },
-        })
+        };
+        sh.pending_decision = Some(d);
+    });
+    shards
+        .iter_mut()
+        .map(|sh| sh.pending_decision.take().expect("every service decided"))
         .collect()
-}
-
-/// Cluster-facing variant key of a service's variant.
-fn namespaced(prefix: &str, variant: &str) -> String {
-    if prefix.is_empty() {
-        variant.to_string()
-    } else {
-        format!("{prefix}{variant}")
-    }
 }
 
 /// Which service owns a cluster variant key.  Prefixes end in `/` and
 /// names are slash-free, so matches are unambiguous; the empty prefix
 /// (single-service compatibility path) owns everything.
-fn owner_of(st: &[SvcState], key: &str) -> usize {
-    st.iter()
+fn owner_of(shards: &[ServiceShard], key: &str) -> usize {
+    shards
+        .iter()
         .position(|s| !s.prefix.is_empty() && key.starts_with(&s.prefix))
         .unwrap_or(0)
 }
 
 /// Union of every service's namespaced target (the shared cluster's
 /// reconciliation goal; keys absent from the union are drained).
-fn merged_target(st: &[SvcState], decisions: &[Decision]) -> BTreeMap<String, usize> {
+fn merged_target(shards: &[ServiceShard], decisions: &[Decision]) -> BTreeMap<String, usize> {
     let mut merged = BTreeMap::new();
-    for (s, d) in st.iter().zip(decisions) {
+    for (s, d) in shards.iter().zip(decisions) {
         for (v, &c) in &d.target {
             merged.insert(namespaced(&s.prefix, v), c);
         }
@@ -911,9 +535,9 @@ fn merged_target(st: &[SvcState], decisions: &[Decision]) -> BTreeMap<String, us
 }
 
 /// Readiness time of a namespaced variant key (owner's profile).
-fn readiness_of(services: &[FleetService], st: &[SvcState], key: &str) -> f64 {
-    let i = owner_of(st, key);
-    let raw = &key[st[i].prefix.len()..];
+fn readiness_of(services: &[FleetService], shards: &[ServiceShard], key: &str) -> f64 {
+    let i = owner_of(shards, key);
+    let raw = &key[shards[i].prefix.len()..];
     services[i]
         .profiles
         .get(raw)
@@ -922,11 +546,11 @@ fn readiness_of(services: &[FleetService], st: &[SvcState], key: &str) -> f64 {
 }
 
 /// Cores billed to one service right now (its share of the shared bill).
-fn billed_of(cluster: &Cluster, st: &[SvcState], i: usize) -> usize {
+fn billed_of(cluster: &Cluster, shards: &[ServiceShard], i: usize) -> usize {
     cluster
         .pods()
         .iter()
-        .filter(|p| p.is_billed() && owner_of(st, &p.variant) == i)
+        .filter(|p| p.is_billed() && owner_of(shards, &p.variant) == i)
         .map(|p| p.cores)
         .sum()
 }
@@ -937,121 +561,14 @@ fn billed_of(cluster: &Cluster, st: &[SvcState], i: usize) -> usize {
 /// and a sample past a short service's end would otherwise be integrated
 /// by `MetricsCollector::summary` (which normalizes by the service's own
 /// duration), inflating its average cost.
-fn record_costs(cluster: &Cluster, st: &mut [SvcState], now: f64) {
-    for i in 0..st.len() {
-        if now > st[i].duration {
+fn record_costs(cluster: &Cluster, shards: &mut [ServiceShard], now: f64) {
+    for i in 0..shards.len() {
+        if now > shards[i].duration {
             continue;
         }
-        let billed = billed_of(cluster, st, i);
-        st[i].metrics.record_cost(now, billed);
+        let billed = billed_of(cluster, shards, i);
+        shards[i].metrics.record_cost(now, billed);
     }
-}
-
-fn acc_of(profiles: &ProfileSet, variant: &str) -> f64 {
-    profiles.get(variant).map(|p| p.accuracy).unwrap_or(0.0)
-}
-
-/// Draw one service time for a batch of `batch` requests on a variant
-/// (lognormal around the amortized mean; `batch = 1` is the plain
-/// measured service time).
-fn sample_service_batch(
-    profiles: &ProfileSet,
-    variant: &str,
-    batch: usize,
-    rng: &mut Rng,
-) -> f64 {
-    let p = profiles.get(variant).expect("unknown variant");
-    rng.lognormal_mean(p.service_time_batch(batch), p.service_sigma.max(1e-6))
-}
-
-/// Add one routed request to a pod: it joins the forming batch, which
-/// dispatches when full (immediately at `max_batch = 1`); opening a fresh
-/// batch arms the formation timeout.
-#[allow(clippy::too_many_arguments)]
-fn enqueue_request(
-    profiles: &ProfileSet,
-    batch_max_wait_s: f64,
-    pod_id: u64,
-    rid: usize,
-    now: f64,
-    pods: &mut HashMap<u64, PodSim>,
-    batches: &mut Vec<Vec<usize>>,
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
-    rng: &mut Rng,
-) {
-    let pod = pods.get_mut(&pod_id).expect("routed to unknown pod");
-    pod.forming.push(rid);
-    pod.waiting += 1;
-    if pod.forming.len() >= pod.max_batch {
-        let items = std::mem::take(&mut pod.forming);
-        pod.forming_seq += 1;
-        dispatch_batch(profiles, pod, pod_id, items, now, batches, heap, seq, rng);
-    } else if pod.forming.len() == 1 {
-        push_event(
-            heap,
-            seq,
-            now + batch_max_wait_s,
-            EventKind::BatchTimeout {
-                pod_id,
-                forming_seq: pod.forming_seq,
-            },
-        );
-    }
-}
-
-/// Hand a formed batch to the pod: one service draw on a free core, or
-/// the formed-batch queue when all cores are busy.
-#[allow(clippy::too_many_arguments)]
-fn dispatch_batch(
-    profiles: &ProfileSet,
-    pod: &mut PodSim,
-    pod_id: u64,
-    items: Vec<usize>,
-    now: f64,
-    batches: &mut Vec<Vec<usize>>,
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
-    rng: &mut Rng,
-) {
-    let bid = batches.len();
-    batches.push(items);
-    if pod.busy < pod.cores {
-        pod.busy += 1;
-        pod.waiting = pod.waiting.saturating_sub(batches[bid].len());
-        let stime = sample_service_batch(profiles, &pod.variant, batches[bid].len(), rng);
-        push_event(
-            heap,
-            seq,
-            now + stime,
-            EventKind::Completion { pod_id, batch: bid },
-        );
-    } else {
-        pod.queue.push_back(bid);
-    }
-}
-
-/// Least-loaded ready pod of a namespaced variant key.
-fn pick_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>, key: &str) -> Option<u64> {
-    cluster
-        .ready_pods_of(key)
-        .iter()
-        .filter_map(|p| pods.get(&p.id).map(|ps| (p.id, ps)))
-        .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
-        .map(|(id, _)| id)
-}
-
-/// Any ready pod of the service (fallback when the chosen variant has
-/// none yet).
-fn any_pod(cluster: &Cluster, pods: &HashMap<u64, PodSim>, svc: usize) -> Option<u64> {
-    cluster
-        .pods()
-        .iter()
-        .filter(|p| p.is_ready())
-        .filter_map(|p| pods.get(&p.id).map(|ps| (p.id, ps)))
-        .filter(|(_, ps)| ps.svc == svc)
-        .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
-        .map(|(id, _)| id)
 }
 
 #[cfg(test)]
@@ -1532,5 +1049,66 @@ mod tests {
             .map(|(_, d)| d.target.values().sum::<usize>())
             .expect("a decision inside the burst");
         assert!(in_burst > 6, "burst grant should exceed the even share, got {in_burst}");
+    }
+
+    /// The five-stage protocol's thread knob must be inert: the same fleet
+    /// at solver_threads 1 (serial reference) and 4 produces identical
+    /// decision streams.  (The full summary-level pin lives in
+    /// `tests/regression_pins.rs`; this is the fast in-module guard.)
+    #[test]
+    fn solver_threads_do_not_change_decisions() {
+        let profiles = ProfileSet::paper_like();
+        let ta = Trace::burst_window(30.0, 120.0, 240, 60, 80, 4);
+        let tb = Trace::steady(25.0, 240);
+        let run = |threads: usize| {
+            let mut pa = inf_policy(6);
+            let mut pb = inf_policy(6);
+            let mut services = [
+                FleetService {
+                    name: "a".into(),
+                    trace: &ta,
+                    profiles: profiles.clone(),
+                    slo_s: 0.75,
+                    priority: 1.0,
+                    tier: 0,
+                    error_budget: 0.01,
+                    floor_cores: 1,
+                    policy: FleetPolicyRef::Arbitrated(&mut pa),
+                },
+                FleetService {
+                    name: "b".into(),
+                    trace: &tb,
+                    profiles: profiles.clone(),
+                    slo_s: 0.75,
+                    priority: 1.0,
+                    tier: 0,
+                    error_budget: 0.01,
+                    floor_cores: 1,
+                    policy: FleetPolicyRef::Arbitrated(&mut pb),
+                },
+            ];
+            let cfg = SimConfig {
+                seed: 21,
+                solver_threads: threads,
+                ..Default::default()
+            };
+            FleetSimEngine::new(cfg, Some(CoreArbiter::new(12))).run(&mut services)
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        for (x, y) in serial.iter().zip(&parallel) {
+            assert_eq!(x.decisions.len(), y.decisions.len());
+            for ((t1, d1), (t2, d2)) in x.decisions.iter().zip(&y.decisions) {
+                assert_eq!(t1, t2);
+                assert_eq!(d1.target, d2.target);
+                assert_eq!(d1.quotas, d2.quotas);
+                assert_eq!(d1.predicted_lambda, d2.predicted_lambda);
+            }
+            let sx = x.metrics.summary("s", x.duration_s);
+            let sy = y.metrics.summary("p", y.duration_s);
+            assert_eq!(sx.total_requests, sy.total_requests);
+            assert_eq!(sx.p99_latency_s, sy.p99_latency_s);
+            assert_eq!(sx.core_seconds, sy.core_seconds);
+        }
     }
 }

@@ -28,14 +28,19 @@
 //! * [`serving`] — backend engines: real (PJRT worker pools) and simulated
 //!   (virtual-time M/G/n queues calibrated by real measurements).
 //! * [`adapter`] — the control loop: monitor → forecast → solve → enforce.
-//! * [`fleet`] — multi-service layer: N independent adapter instances on
-//!   one shared cluster, with a top-level core arbiter re-partitioning the
-//!   global budget every interval by heap water-filling on
-//!   priority-weighted marginal utility (per-service ILP value curves,
-//!   cached and warm-started across ticks), honoring strict priority
-//!   tiers lexicographically, boosting services burning their SLO
-//!   error budget, and — with shed pricing on — trading cores against
-//!   tier-weighted shedding within the tick that forecasts it.
+//! * [`fleet`] — multi-service layer, sharded: each service's event loop,
+//!   RNG, gate, dispatcher, pods view, request-state arena, and metrics
+//!   live in a `fleet::shard::ServiceShard`; the orchestrator drives an
+//!   explicit five-stage tick protocol (observe → solve ∥ → arbitrate →
+//!   apply ∥ → advance ∥, parallel stages fanned out over scoped threads,
+//!   bit-identical to the serial path at every `solver_threads`).  The
+//!   top-level core arbiter re-partitions the global budget every
+//!   interval by heap water-filling on priority-weighted marginal utility
+//!   (per-service ILP value curves, cached and warm-started across
+//!   ticks), honoring strict priority tiers lexicographically, boosting
+//!   services burning their SLO error budget, and — with shed pricing on
+//!   — trading cores against tier-weighted shedding within the tick that
+//!   forecasts it.
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 

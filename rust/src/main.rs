@@ -44,7 +44,8 @@ COMMANDS:
                                      virtual-time experiment
   fleet    [--services N] [--mode M] [--seconds N] [--base RPS] [--budget B]
            [--admission on|off] [--burn-boost F] [--shed-penalty F]
-           [--tiers 0,1,..] [--overload on] [--out PREFIX]
+           [--solver-threads K] [--tiers 0,1,..] [--overload on]
+           [--out PREFIX]
                                      multi-service serving on one shared
                                      cluster (config.fleet when present,
                                      else N synthetic services with
@@ -54,7 +55,11 @@ COMMANDS:
                                      --shed-penalty prices shed traffic
                                      into the per-service ILPs so the
                                      arbiter trades cores against
-                                     shedding explicitly)
+                                     shedding explicitly;
+                                     --solver-threads K bounds the
+                                     parallel curve-solve stage: 0 = auto,
+                                     1 = serial reference — results are
+                                     bit-identical at every K)
   serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
                                      live serving on the real PJRT engine
 
@@ -179,6 +184,9 @@ fn main() -> Result<()> {
         config.fleet.shed_penalty = v
             .parse()
             .with_context(|| format!("--shed-penalty {v:?}"))?;
+    }
+    if args.get("solver-threads").is_some() && command != "fleet" {
+        bail!("--solver-threads only applies to the fleet command");
     }
     config.validate()?;
 
@@ -310,6 +318,8 @@ fn main() -> Result<()> {
         "fleet" => {
             let seconds = args.get_usize("seconds", 1200)?;
             let base = args.get_f64("base", 30.0)?;
+            config.fleet.solver_threads =
+                args.get_usize("solver-threads", config.fleet.solver_threads)?;
             let profiles = experiment::load_or_default_profiles(&artifacts);
             let scenario = if !config.fleet.services.is_empty() {
                 anyhow::ensure!(

@@ -124,7 +124,11 @@ fn merge_tiers<'a>(breakdowns: impl Iterator<Item = &'a [TierStats]>) -> Vec<Tie
 }
 
 /// One row of the experiment timeseries (fixed-width buckets).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is field-for-field (float `==`, no tolerance): the
+/// parallel-fleet regression pin compares whole row streams bit-exactly
+/// across `solver_threads` settings.
+#[derive(Debug, Clone, PartialEq)]
 pub struct IntervalRow {
     pub t_start: f64,
     /// Observed arrival rate (completed + dropped + shed), rps.

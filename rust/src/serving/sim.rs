@@ -42,6 +42,12 @@ pub struct SimConfig {
     /// admits everything and the run is bit-identical to the
     /// pre-admission engine).
     pub admission: AdmissionConfig,
+    /// Worker threads for the fleet engine's parallel stages (advance,
+    /// solve, decide).  `0` = auto (available parallelism), `1` = the
+    /// serial reference path.  Never affects results — a parallel run is
+    /// bit-identical to the serial one (pinned) — only wall-clock; the
+    /// N = 1 single-service wrapper always runs serial.
+    pub solver_threads: usize,
 }
 
 impl Default for SimConfig {
@@ -55,6 +61,7 @@ impl Default for SimConfig {
             queue_timeout_s: 10.0,
             batch_max_wait_s: 0.05,
             admission: AdmissionConfig::default(),
+            solver_threads: 0,
         }
     }
 }

@@ -572,7 +572,12 @@ impl CurveAcc {
 }
 
 /// Common solver interface.
-pub trait Solver {
+///
+/// `Send` is a supertrait because boxed solvers ride inside policies that
+/// cross shard-thread boundaries in the fleet's parallel solve stage
+/// (`fleet::shard::parallel_zip`).  Every solver here is a stateless unit
+/// struct, so the bound costs nothing.
+pub trait Solver: Send {
     fn name(&self) -> &'static str;
     /// Best allocation for the problem; None only if the problem is empty.
     fn solve(&self, problem: &Problem) -> Option<Allocation>;

@@ -17,6 +17,12 @@
 //! pricing key must all collapse to the PR 4 behaviour bit for bit on the
 //! single-service, fleet, and overload paths — and a `CurveCache` hit
 //! never returns a curve computed under a different penalty.
+//!
+//! PR 6 pins the sharded, parallel fleet data plane: **`solver_threads`
+//! is a wall-clock knob only** — the parallel solve/decide stages must be
+//! bit-identical to the serial reference path at every thread count
+//! (summaries, per-interval rows, tier breakdowns), and the N=1
+//! single-service wrapper never changes behaviour under the knob.
 
 use infadapter::adapter::InfAdapterPolicy;
 use infadapter::config::{AdmissionConfig, Config, ObjectiveWeights};
@@ -245,6 +251,108 @@ fn curve_cache_hits_never_cross_penalties() {
     let repriced = cache.curve(&policy, 330.0, &committed, 20);
     assert_eq!(cache.stats.hits, 1);
     assert_eq!(repriced, priced, "same inputs re-solve to the same curve");
+}
+
+#[test]
+fn parallel_fleet_is_bit_identical_to_serial() {
+    // The ISSUE 6 invariant: thread count is a wall-clock knob, never a
+    // results knob.  The overload scenario exercises every stage of the
+    // tick protocol — admission shedding, arbitration, per-service curve
+    // solves, tiered class mixes — so a single divergent float anywhere
+    // in the parallel solve/decide fan-out shows up here.
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission.enabled = true;
+    let base = FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    let dir = Path::new("/nonexistent");
+    let run_at = |threads: usize| {
+        let mut s = base.clone();
+        s.solver_threads = threads;
+        s.run(&FleetMode::Arbiter, dir)
+    };
+    let serial = run_at(1);
+    assert!(
+        serial.summary.shed > 0,
+        "the overload pin must actually shed"
+    );
+    for threads in [2usize, 8] {
+        let parallel = run_at(threads);
+        assert_eq!(
+            serial.summary.total_requests,
+            parallel.summary.total_requests
+        );
+        assert_eq!(serial.summary.shed, parallel.summary.shed);
+        assert_eq!(
+            serial.summary.slo_violation_rate,
+            parallel.summary.slo_violation_rate
+        );
+        assert_eq!(serial.summary.core_seconds, parallel.summary.core_seconds);
+        assert_eq!(
+            serial.summary.services.len(),
+            parallel.summary.services.len()
+        );
+        for (x, y) in serial.summary.services.iter().zip(&parallel.summary.services) {
+            assert_summaries_identical(x, y);
+        }
+        assert_eq!(serial.summary.tiers.len(), parallel.summary.tiers.len());
+        for (x, y) in serial.summary.tiers.iter().zip(&parallel.summary.tiers) {
+            assert_eq!(x, y, "tier breakdowns diverge at {threads} threads");
+        }
+        for (a, b) in serial.per_service.iter().zip(&parallel.per_service) {
+            assert_eq!(a.duration_s, b.duration_s);
+            assert_eq!(
+                a.metrics.rows(a.duration_s),
+                b.metrics.rows(b.duration_s),
+                "interval rows diverge at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_service_engine_ignores_solver_threads() {
+    // The N=1 wrapper is always the serial reference path: requesting 8
+    // solver threads on a single-service engine must not change a thing
+    // (one service means one solve — there is nothing to fan out).
+    let profiles = ProfileSet::paper_like();
+    let trace = Trace::bursty(40.0, 100.0, 420, 9);
+    let mut p1 = inf_policy(20);
+    let base = SimEngine::new(
+        profiles.clone(),
+        SimConfig {
+            seed: 9,
+            ..Default::default()
+        },
+    )
+    .run(&mut p1, &trace);
+    let mut p2 = inf_policy(20);
+    let threaded = SimEngine::new(
+        profiles.clone(),
+        SimConfig {
+            seed: 9,
+            solver_threads: 8,
+            ..Default::default()
+        },
+    )
+    .run(&mut p2, &trace);
+    assert_summaries_identical(
+        &base.metrics.summary("serial", base.duration_s),
+        &threaded.metrics.summary("threaded", threaded.duration_s),
+    );
+    assert_eq!(base.decisions.len(), threaded.decisions.len());
+    for ((t1, d1), (t2, d2)) in base.decisions.iter().zip(&threaded.decisions) {
+        assert_eq!(t1, t2);
+        assert_eq!(d1.target, d2.target);
+        assert_eq!(d1.quotas, d2.quotas);
+        assert_eq!(d1.batches, d2.batches);
+        assert_eq!(d1.predicted_lambda, d2.predicted_lambda);
+    }
+    assert_eq!(
+        base.metrics.rows(base.duration_s),
+        threaded.metrics.rows(threaded.duration_s)
+    );
 }
 
 #[test]
