@@ -20,9 +20,11 @@
 //! the perf trajectory accumulates across commits).
 
 use infadapter::baselines::StaticPolicy;
-use infadapter::config::ObjectiveWeights;
+use infadapter::config::{Config, ObjectiveWeights};
 use infadapter::dispatcher::Dispatcher;
-use infadapter::fleet::{ArbiterEntry, CoreArbiter, RequestArena, RequestSim};
+use infadapter::fleet::{
+    ArbiterEntry, CoreArbiter, FleetMode, FleetScenario, RequestArena, RequestSim,
+};
 use infadapter::forecaster::{Forecaster, HoltForecaster, LastMaxForecaster};
 use infadapter::monitoring::P2Quantile;
 use infadapter::profiler::ProfileSet;
@@ -244,6 +246,31 @@ fn main() {
         "  -> ~{:.0}k events/s simulated",
         events / stats.mean.as_secs_f64() / 1000.0
     );
+
+    println!("\n== telemetry plane: on/off overhead ==");
+    // Same overload fleet run as the bit-identity pin, telemetry off vs
+    // on: the plane's whole budget is counter bumps and Instant reads, so
+    // the ratio should stay under ~1.03 (EXPERIMENTS.md §Telemetry).
+    {
+        let mut config = Config::default();
+        config.adapter.forecaster = "last_max".into();
+        config.seed = 5;
+        config.admission.enabled = true;
+        let base = FleetScenario::synthetic_overload(2, 30.0, 180, 8, true, &config, &profiles);
+        let dir = std::path::Path::new("/nonexistent");
+        let off = report.run("fleet.overload_180s (telemetry off)", || {
+            std::hint::black_box(base.run(&FleetMode::Arbiter, dir));
+        });
+        let mut on_scenario = base.clone();
+        on_scenario.telemetry.enabled = true;
+        let on = report.run("fleet.overload_180s (telemetry on)", || {
+            std::hint::black_box(on_scenario.run(&FleetMode::Arbiter, dir));
+        });
+        report.derive(
+            "fleet.telemetry_overhead_ratio",
+            on.mean.as_secs_f64() / off.mean.as_secs_f64(),
+        );
+    }
 
     println!("\n== solver ablation: greedy vs exact (objective gap) ==");
     println!("{:>8} {:>8} {:>12} {:>12} {:>8}", "λ", "B", "exact obj", "greedy obj", "gap");

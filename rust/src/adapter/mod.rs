@@ -12,7 +12,7 @@ use crate::config::{BatchingConfig, ObjectiveWeights};
 use crate::forecaster::Forecaster;
 use crate::profiler::ProfileSet;
 use crate::serving::{Decision, Policy};
-use crate::solver::{Allocation, Problem, Solver, ValueCurve};
+use crate::solver::{Allocation, Problem, SolveStats, Solver, ValueCurve};
 use std::collections::BTreeMap;
 
 /// The paper's system, as a [`Policy`].
@@ -175,6 +175,21 @@ impl InfAdapterPolicy {
     ) -> ValueCurve {
         let problem = self.build_problem(lambda_hat, committed, cap);
         self.solver.solve_curve_seeded(&problem, cap, seed)
+    }
+
+    /// [`Self::value_curve_seeded`] plus the solver's [`SolveStats`] — the
+    /// telemetry plane's entry point.  The curve is identical to the
+    /// unstated variant on the same inputs; the stats only count work the
+    /// solve already does.
+    pub fn value_curve_seeded_stats(
+        &self,
+        lambda_hat: f64,
+        committed: &BTreeMap<String, usize>,
+        cap: usize,
+        seed: Option<&ValueCurve>,
+    ) -> (ValueCurve, SolveStats) {
+        let problem = self.build_problem(lambda_hat, committed, cap);
+        self.solver.solve_curve_stats(&problem, cap, seed)
     }
 
     /// Second half of [`Policy::decide`]: solve for the best variant set

@@ -117,6 +117,32 @@ impl Default for AdmissionConfig {
     }
 }
 
+/// Telemetry plane (see [`crate::telemetry`]): counters, tick-stage
+/// profiling, and the anomaly-triggered flight recorder.  A pure observer
+/// — enabling it never changes a decision, event sequence, or summary
+/// field (pinned in `tests/regression_pins.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryConfig {
+    /// Master switch; disabled (the default) records nothing and skips
+    /// every timing call.
+    pub enabled: bool,
+    /// Tick window the flight recorder retains (last K adapter ticks).
+    pub flight_ticks: usize,
+    /// Per-tick shed fraction (shed / offered, from the admission gates'
+    /// counter deltas) above which the flight recorder marks a trip.
+    pub shed_trip_fraction: f64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            flight_ticks: 16,
+            shed_trip_fraction: 0.2,
+        }
+    }
+}
+
 /// Server-side batching parameters (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchingConfig {
@@ -259,6 +285,8 @@ pub struct Config {
     pub batching: BatchingConfig,
     /// Request-path admission control (disabled by default).
     pub admission: AdmissionConfig,
+    /// Telemetry plane (disabled by default).
+    pub telemetry: TelemetryConfig,
     /// Multi-service fleet definition (empty services = disabled).
     pub fleet: FleetConfig,
     /// Variants eligible for selection; empty = all in the manifest.
@@ -355,6 +383,21 @@ impl Config {
             },
             None => d.admission,
         };
+        let telemetry = match v.get("telemetry") {
+            Some(t) => TelemetryConfig {
+                enabled: match t.get("enabled") {
+                    Some(x) => x.as_bool()?,
+                    None => d.telemetry.enabled,
+                },
+                flight_ticks: usize_or(t, "flight_ticks", d.telemetry.flight_ticks)?,
+                shed_trip_fraction: f64_or(
+                    t,
+                    "shed_trip_fraction",
+                    d.telemetry.shed_trip_fraction,
+                )?,
+            },
+            None => d.telemetry,
+        };
         let fleet = match v.get("fleet") {
             Some(f) => FleetConfig {
                 global_budget: usize_or(f, "global_budget", 0)?,
@@ -421,6 +464,8 @@ impl Config {
             adapter,
             cluster,
             batching,
+            admission,
+            telemetry,
             fleet,
             variants,
             seed: v.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(0),
@@ -490,6 +535,20 @@ impl Config {
                     ("burst_s", Value::Num(self.admission.burst_s)),
                     ("slack", Value::Num(self.admission.slack)),
                     ("ctl_window_s", Value::Num(self.admission.ctl_window_s)),
+                ]),
+            ),
+            (
+                "telemetry",
+                Value::obj(vec![
+                    ("enabled", Value::Bool(self.telemetry.enabled)),
+                    (
+                        "flight_ticks",
+                        Value::Num(self.telemetry.flight_ticks as f64),
+                    ),
+                    (
+                        "shed_trip_fraction",
+                        Value::Num(self.telemetry.shed_trip_fraction),
+                    ),
                 ]),
             ),
             (
@@ -608,6 +667,14 @@ impl Config {
             self.admission.ctl_window_s > 0.0,
             "admission ctl_window_s must be positive"
         );
+        anyhow::ensure!(
+            self.telemetry.flight_ticks >= 1,
+            "telemetry flight_ticks must be at least 1"
+        );
+        anyhow::ensure!(
+            self.telemetry.shed_trip_fraction > 0.0 && self.telemetry.shed_trip_fraction <= 1.0,
+            "telemetry shed_trip_fraction must be in (0, 1]"
+        );
         // validated outside the fleet-services block: the CLI can set it
         // on synthetic fleets whose `services` list is empty
         anyhow::ensure!(
@@ -725,6 +792,11 @@ mod tests {
             slack: 1.1,
             ctl_window_s: 0.5,
         };
+        c.telemetry = TelemetryConfig {
+            enabled: true,
+            flight_ticks: 8,
+            shed_trip_fraction: 0.5,
+        };
         c.fleet.services = vec![
             FleetServiceConfig {
                 name: "search".into(),
@@ -817,6 +889,23 @@ mod tests {
         c.fleet.services = vec![svc("a", 10), svc("b", 10)];
         c.validate().unwrap();
         assert_eq!(c.fleet.resolved_budget(&c.cluster), 30);
+    }
+
+    #[test]
+    fn telemetry_validation_catches_bad_values() {
+        let mut c = Config::default();
+        assert!(!c.telemetry.enabled, "telemetry must default off");
+        c.telemetry.flight_ticks = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.telemetry.shed_trip_fraction = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.telemetry.shed_trip_fraction = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.telemetry.enabled = true;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -26,7 +26,7 @@
 
 use crate::adapter::InfAdapterPolicy;
 use crate::config::ObjectiveWeights;
-use crate::solver::ValueCurve;
+use crate::solver::{SolveStats, ValueCurve};
 use std::collections::BTreeMap;
 
 /// Tick outcome counters (hits + warm + cold = arbitration ticks served).
@@ -69,6 +69,10 @@ struct CacheEntry {
 pub struct CurveCache {
     entry: Option<CacheEntry>,
     pub stats: CurveCacheStats,
+    /// Accumulated solver introspection from warm/cold solves (hits add
+    /// nothing — no solver ran).  Pure observation for the telemetry
+    /// plane; never read on the decision path.
+    pub solve_stats: SolveStats,
 }
 
 /// 2% relative quantization bin of λ̂ — wide enough that steady-state
@@ -133,7 +137,8 @@ impl CurveCache {
         } else {
             None
         };
-        let curve = policy.value_curve_seeded(lambda, committed, cap, seed);
+        let (curve, solve_stats) = policy.value_curve_seeded_stats(lambda, committed, cap, seed);
+        self.solve_stats.add(solve_stats);
         if warm {
             self.stats.warm += 1;
         } else {

@@ -54,13 +54,14 @@ pub use sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 
 use crate::adapter::InfAdapterPolicy;
 use crate::baselines::VpaPolicy;
-use crate::config::{AdmissionConfig, BatchingConfig, Config, ObjectiveWeights};
+use crate::config::{AdmissionConfig, BatchingConfig, Config, ObjectiveWeights, TelemetryConfig};
 use crate::dispatcher::Tier;
 use crate::forecaster;
 use crate::metrics::{FleetSummary, RunSummary};
 use crate::profiler::ProfileSet;
 use crate::serving::sim::{SimConfig, SimResult};
 use crate::solver::BranchBoundSolver;
+use crate::telemetry::FleetTelemetry;
 use crate::workload::{RateSeries, Trace};
 use anyhow::Result;
 use std::path::Path;
@@ -149,6 +150,9 @@ pub struct FleetRunOutput {
     pub mode: String,
     pub per_service: Vec<SimResult>,
     pub summary: FleetSummary,
+    /// Engine-level telemetry (stage profiler, flight recorder, merged
+    /// counters); `None` when the plane is disabled.
+    pub telemetry: Option<FleetTelemetry>,
 }
 
 /// A fully-specified multi-service experiment.
@@ -170,6 +174,8 @@ pub struct FleetScenario {
     /// Worker threads for the engine's parallel stages (0 = auto,
     /// 1 = serial reference path).  Wall-clock only — never results.
     pub solver_threads: usize,
+    /// Telemetry plane (off by default; bit-identical on vs off).
+    pub telemetry: TelemetryConfig,
 }
 
 impl FleetScenario {
@@ -218,6 +224,7 @@ impl FleetScenario {
             burn_boost: config.fleet.burn_boost,
             shed_penalty: config.fleet.shed_penalty,
             solver_threads: config.fleet.solver_threads,
+            telemetry: config.telemetry,
         })
     }
 
@@ -273,6 +280,7 @@ impl FleetScenario {
             burn_boost: config.fleet.burn_boost,
             shed_penalty: config.fleet.shed_penalty,
             solver_threads: config.fleet.solver_threads,
+            telemetry: config.telemetry,
         }
     }
 
@@ -328,6 +336,7 @@ impl FleetScenario {
             burn_boost: config.fleet.burn_boost,
             shed_penalty: config.fleet.shed_penalty,
             solver_threads: config.fleet.solver_threads,
+            telemetry: config.telemetry,
         }
     }
 
@@ -357,6 +366,7 @@ impl FleetScenario {
                     .unwrap_or(0.05),
                 admission: self.admission,
                 solver_threads: self.solver_threads,
+                telemetry: self.telemetry,
             },
             match mode {
                 FleetMode::Arbiter => {
@@ -377,7 +387,7 @@ impl FleetScenario {
     pub fn run(&self, mode: &FleetMode, artifacts: &Path) -> FleetRunOutput {
         let share = self.even_share();
         let engine = self.sim_engine(mode);
-        let results = match mode {
+        let (results, telemetry) = match mode {
             FleetMode::Arbiter | FleetMode::EvenSplit => {
                 let mut policies: Vec<InfAdapterPolicy> = self
                     .services
@@ -417,7 +427,7 @@ impl FleetScenario {
                         policy: FleetPolicyRef::Arbitrated(p),
                     })
                     .collect();
-                engine.run(&mut services)
+                engine.run_with_telemetry(&mut services)
             }
             FleetMode::IndependentVpa(variant) => {
                 let mut policies: Vec<VpaPolicy> = self
@@ -440,19 +450,26 @@ impl FleetScenario {
                         policy: FleetPolicyRef::Plain(p),
                     })
                     .collect();
-                engine.run(&mut services)
+                engine.run_with_telemetry(&mut services)
             }
         };
         let summaries: Vec<RunSummary> = results
             .iter()
             .zip(&self.services)
-            .map(|(r, s)| r.metrics.summary(&s.name, r.duration_s))
+            .map(|(r, s)| {
+                let mut summary = r.metrics.summary(&s.name, r.duration_s);
+                // attach the run's telemetry scalars (None when disabled,
+                // so the summary stays bit-identical to a pre-telemetry one)
+                summary.telemetry = r.telemetry;
+                summary
+            })
             .collect();
         let horizon_s = results.iter().map(|r| r.duration_s).fold(0.0, f64::max);
         FleetRunOutput {
             mode: mode.label(),
             per_service: results,
             summary: FleetSummary::from_services(summaries, horizon_s),
+            telemetry,
         }
     }
 }

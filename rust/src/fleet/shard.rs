@@ -47,6 +47,7 @@ use crate::monitoring::SloBurnMeter;
 use crate::profiler::ProfileSet;
 use crate::serving::sim::SimConfig;
 use crate::serving::Decision;
+use crate::telemetry::ShardTelemetry;
 use crate::util::mpmc;
 use crate::util::rng::Rng;
 use crate::workload::ClassMixer;
@@ -295,6 +296,10 @@ pub struct ServiceShard {
     /// Cross-tick value-curve memory (arbitrated services only): exact
     /// hits skip the solve outright, near-hits warm-start it.
     pub(crate) curve_cache: CurveCache,
+    /// Request-path and stage-timing counters — a pure observer of the
+    /// decision path (no-ops when telemetry is disabled; see
+    /// [`crate::telemetry`] for the bit-identity argument).
+    pub(crate) telem: ShardTelemetry,
     /// This service's slice of the discrete-event heap.
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
@@ -357,6 +362,7 @@ impl ServiceShard {
             pending_curve: None,
             pending_decision: None,
             curve_cache: CurveCache::new(),
+            telem: ShardTelemetry::new(cfg.telemetry.enabled),
             heap: BinaryHeap::new(),
             seq: 0,
             pods: HashMap::new(),
@@ -475,13 +481,21 @@ impl ServiceShard {
         // routed variant then takes the request.
         let variant = match self.path.handle(now, tier) {
             RouteOutcome::Shed(t) => {
+                self.telem.record_shed(t);
                 self.metrics.record_request(RequestRecord::shed(now, t));
                 return;
             }
-            RouteOutcome::Routed(v) => Some(v),
+            RouteOutcome::Routed(v) => {
+                self.telem.record_admit(tier);
+                Some(v)
+            }
             // unconfigured / zero-capacity: fall through to the any-pod
             // fallback, then drop
-            RouteOutcome::Denied(_) => None,
+            RouteOutcome::Denied(r) => {
+                self.telem.record_admit(tier);
+                self.telem.record_noroute(r);
+                None
+            }
         };
         let pod_id = variant.as_deref().and_then(|v| {
             self.pick_pod(cluster, &namespaced(&self.prefix, v))
@@ -589,6 +603,7 @@ impl ServiceShard {
                 &mut self.heap,
                 &mut self.seq,
                 &mut self.rng,
+                &mut self.telem,
             );
             pod.forming = items;
         }
@@ -614,6 +629,7 @@ impl ServiceShard {
                 &mut self.heap,
                 &mut self.seq,
                 &mut self.rng,
+                &mut self.telem,
             );
             pod.forming = items;
         } else if pod.forming.len() == 1 {
@@ -704,6 +720,7 @@ impl ServiceShard {
                         &mut self.heap,
                         &mut self.seq,
                         &mut self.rng,
+                        &mut self.telem,
                     );
                     pod.forming = items;
                 }
@@ -780,9 +797,11 @@ fn dispatch_batch(
     heap: &mut BinaryHeap<Reverse<Event>>,
     seq: &mut u64,
     rng: &mut Rng,
+    telem: &mut ShardTelemetry,
 ) {
     let bid = batches.alloc_swap(items);
     let len = batches.get(bid).len();
+    telem.record_batch(pod.max_batch, len);
     if pod.busy < pod.cores {
         pod.busy += 1;
         pod.waiting = pod.waiting.saturating_sub(len);

@@ -72,8 +72,13 @@ use crate::dispatcher::Tier;
 use crate::profiler::ProfileSet;
 use crate::serving::sim::{SimConfig, SimResult};
 use crate::serving::{Decision, Policy};
+use crate::telemetry::{
+    curve_knee, FleetTelemetry, ServiceTick, TelemetrySummary, TickTrace, STAGE_ADVANCE,
+    STAGE_APPLY, STAGE_ARBITRATE, STAGE_OBSERVE, STAGE_SOLVE,
+};
 use crate::workload::{ArrivalProcess, RateSeries};
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 /// Seed of service `i`'s RNG stream.  Service 0 uses the base seed
 /// unchanged — a single-service fleet reproduces the single-adapter engine
@@ -153,6 +158,38 @@ fn effective_threads(configured: usize, n: usize) -> usize {
     t.min(n)
 }
 
+/// Serial stage stopwatch for the tick profiler: `lap(stage)` charges the
+/// span since the previous lap to that stage.  Inert (never reads the
+/// clock) when telemetry is off, so the disabled path does no timing work
+/// at all — and since timing is only ever *recorded*, never consulted,
+/// the enabled path cannot diverge either.
+struct StageClock {
+    enabled: bool,
+    t: Option<Instant>,
+    ns: [u64; 5],
+}
+
+impl StageClock {
+    fn start(enabled: bool) -> Self {
+        Self {
+            enabled,
+            t: enabled.then(Instant::now),
+            ns: [0; 5],
+        }
+    }
+
+    fn lap(&mut self, stage: usize) {
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        if let Some(prev) = self.t {
+            self.ns[stage] += now.duration_since(prev).as_nanos() as u64;
+        }
+        self.t = Some(now);
+    }
+}
+
 impl FleetSimEngine {
     pub fn new(config: SimConfig, arbiter: Option<CoreArbiter>) -> Self {
         Self { config, arbiter }
@@ -161,6 +198,18 @@ impl FleetSimEngine {
     /// Run every service's event stream against the shared cluster;
     /// returns one [`SimResult`] per service, in input order.
     pub fn run(&self, services: &mut [FleetService]) -> Vec<SimResult> {
+        self.run_with_telemetry(services).0
+    }
+
+    /// [`Self::run`], additionally returning the engine-level telemetry
+    /// (stage profiler, flight recorder, merged counters) when
+    /// `SimConfig::telemetry` enables it.  The returned results are
+    /// bit-identical to a telemetry-off run — the plane is a pure
+    /// observer (pinned by `telemetry_on_is_bit_identical_to_off`).
+    pub fn run_with_telemetry(
+        &self,
+        services: &mut [FleetService],
+    ) -> (Vec<SimResult>, Option<FleetTelemetry>) {
         let cfg = &self.config;
         let n = services.len();
         assert!(n > 0, "a fleet needs at least one service");
@@ -180,6 +229,10 @@ impl FleetSimEngine {
             .max()
             .unwrap_or(0) as f64;
         let threads = effective_threads(cfg.solver_threads, n);
+        let mut telem = cfg
+            .telemetry
+            .enabled
+            .then(|| FleetTelemetry::new(&cfg.telemetry));
 
         let mut shards: Vec<ServiceShard> = services
             .iter()
@@ -198,7 +251,15 @@ impl FleetSimEngine {
             .map(|s| vec![s.trace.rates.first().copied().unwrap_or(0.0)])
             .collect();
         let empty_committed: Vec<BTreeMap<String, usize>> = vec![BTreeMap::new(); n];
-        let grants = self.arbitrate(threads, services, &mut shards, &first_rates, &empty_committed);
+        let mut warm_clock = StageClock::start(false);
+        let grants = self.arbitrate(
+            threads,
+            services,
+            &mut shards,
+            &first_rates,
+            &empty_committed,
+            &mut warm_clock,
+        );
         let decisions0 = decide_all(
             threads,
             0.0,
@@ -240,6 +301,11 @@ impl FleetSimEngine {
         // the old engine's init-push sequence order.
         let mut next_cluster = 1.0f64;
         let mut next_adapter = cfg.adapter_interval_s;
+        // Wall-clock the advance stage spends between adapter boundaries
+        // (folded into the next tick's `advance` slot), and the 1-based
+        // adapter-tick ordinal (the warm start is not traced).
+        let mut pending_advance_ns = 0u64;
+        let mut tick_no = 0u64;
         loop {
             let cluster_due = next_cluster < max_duration;
             let adapter_due = next_adapter < max_duration;
@@ -249,7 +315,11 @@ impl FleetSimEngine {
                 (false, true) => next_adapter,
                 (false, false) => break,
             };
+            let adv_start = telem.is_some().then(Instant::now);
             advance_all(threads, services, &mut shards, &cluster, t);
+            if let Some(s) = adv_start {
+                pending_advance_ns += s.elapsed().as_nanos() as u64;
+            }
             // catch every shard's per-second rate accounting up to the
             // boundary (idle shards included — the old engine rolled all
             // services at every event pop; the roll is a pure catch-up,
@@ -262,7 +332,17 @@ impl FleetSimEngine {
                 next_cluster += 1.0;
             }
             if adapter_due && next_adapter == t {
-                self.adapter_boundary(threads, &mut cluster, services, &mut shards, t);
+                tick_no += 1;
+                self.adapter_boundary(
+                    threads,
+                    &mut cluster,
+                    services,
+                    &mut shards,
+                    t,
+                    &mut telem,
+                    tick_no,
+                    std::mem::take(&mut pending_advance_ns),
+                );
                 next_adapter += cfg.adapter_interval_s;
             }
         }
@@ -270,15 +350,45 @@ impl FleetSimEngine {
         // request must be accounted for (conservation).
         advance_all(threads, services, &mut shards, &cluster, f64::INFINITY);
 
-        shards
+        // Telemetry fan-in, strictly in service-index order (the counters
+        // are plain sums, so this is belt and braces on top of the merge
+        // itself being order-deterministic).
+        if let Some(ft) = telem.as_mut() {
+            for sh in &shards {
+                ft.shard.merge(&sh.telem);
+                ft.cache.hits += sh.curve_cache.stats.hits;
+                ft.cache.warm += sh.curve_cache.stats.warm;
+                ft.cache.cold += sh.curve_cache.stats.cold;
+                ft.solve.add(sh.curve_cache.solve_stats);
+                let (allocs, reuses, _, _) = sh.arena_stats();
+                ft.arena_allocs += allocs;
+                ft.arena_reuses += reuses;
+            }
+        }
+        let summarize = cfg.telemetry.enabled;
+        let results = shards
             .into_iter()
-            .map(|sh| SimResult {
-                metrics: sh.metrics,
-                duration_s: sh.duration,
-                decisions: sh.decisions,
-                curve_cache: sh.curve_cache.stats,
+            .map(|sh| {
+                let telemetry = summarize.then(|| {
+                    let (allocs, reuses, _, _) = sh.arena_stats();
+                    TelemetrySummary::from_shard(
+                        &sh.telem,
+                        sh.curve_cache.stats,
+                        sh.curve_cache.solve_stats,
+                        allocs,
+                        reuses,
+                    )
+                });
+                SimResult {
+                    metrics: sh.metrics,
+                    duration_s: sh.duration,
+                    decisions: sh.decisions,
+                    curve_cache: sh.curve_cache.stats,
+                    telemetry,
+                }
             })
-            .collect()
+            .collect();
+        (results, telem)
     }
 
     /// Solve + arbitrate stages.  The solve fans out over scoped worker
@@ -295,6 +405,7 @@ impl FleetSimEngine {
         shards: &mut [ServiceShard],
         histories: &[Vec<f64>],
         committed: &[BTreeMap<String, usize>],
+        clock: &mut StageClock,
     ) -> Vec<Option<usize>> {
         let Some(arb) = &self.arbiter else {
             return vec![None; services.len()];
@@ -303,7 +414,9 @@ impl FleetSimEngine {
         let global_budget = arb.global_budget;
         // Solve stage (parallel): per-service forecast + curve solve.
         // Everything written lands in the task's own (service, shard)
-        // pair, so thread scheduling cannot affect any value.
+        // pair, so thread scheduling cannot affect any value — the
+        // telemetry records included (each shard's recorder is its own
+        // disjoint state, and timing is observed, never consulted).
         parallel_zip(threads, services, shards, |i, s, sh| {
             if let FleetPolicyRef::Arbitrated(p) = &mut s.policy {
                 let lambda = p.observe_and_predict(&histories[i]);
@@ -314,10 +427,16 @@ impl FleetSimEngine {
                 // Cross-tick cache: exact hit skips the solve, a
                 // same-bin λ̂ wobble warm-starts it; the curve values
                 // are bit-identical to an uncached solve either way.
+                let t0 = sh.telem.enabled.then(Instant::now);
                 let curve = sh.curve_cache.curve(&**p, lambda, &committed[i], cap);
+                if let Some(t0) = t0 {
+                    sh.telem.record_solve_ns(t0.elapsed().as_nanos() as u64);
+                    sh.telem.last_curve_knee = curve_knee(&curve);
+                }
                 sh.pending_curve = Some(curve);
             }
         });
+        clock.lap(STAGE_SOLVE);
         // Arbitrate stage (serial): fan in strictly by service index.
         let entries: Vec<ArbiterEntry> = services
             .iter()
@@ -332,10 +451,17 @@ impl FleetSimEngine {
                 curve: shards[i].pending_curve.take(),
             })
             .collect();
-        arb.partition(&entries).into_iter().map(Some).collect()
+        let grants: Vec<Option<usize>> = arb.partition(&entries).into_iter().map(Some).collect();
+        clock.lap(STAGE_ARBITRATE);
+        grants
     }
 
-    /// One adapter boundary: observe → solve → arbitrate → apply.
+    /// One adapter boundary: observe → solve → arbitrate → apply.  When
+    /// telemetry is on, the stage clock laps each phase and the boundary
+    /// ends with a [`TickTrace`] folded into the flight recorder —
+    /// assembled strictly in service-index order, from values the stages
+    /// already computed.
+    #[allow(clippy::too_many_arguments)]
     fn adapter_boundary(
         &self,
         threads: usize,
@@ -343,8 +469,12 @@ impl FleetSimEngine {
         services: &mut [FleetService],
         shards: &mut [ServiceShard],
         now: f64,
+        telem: &mut Option<FleetTelemetry>,
+        tick: u64,
+        advance_ns: u64,
     ) {
         let n = services.len();
+        let mut clock = StageClock::start(telem.is_some());
         // Observe stage (serial): flush every shard's in-progress partial
         // second and fold the interval's SLO-burn delta.
         for sh in shards.iter_mut() {
@@ -364,7 +494,10 @@ impl FleetSimEngine {
             .iter_mut()
             .map(|s| std::mem::take(&mut s.rate_history))
             .collect();
-        let grants = self.arbitrate(threads, services, shards, &histories, &committed);
+        clock.lap(STAGE_OBSERVE);
+        let grants = self.arbitrate(
+            threads, services, shards, &histories, &committed, &mut clock,
+        );
         let decisions = decide_all(threads, now, services, shards, &histories, &committed, &grants);
         // Apply stage (serial): reconcile the shared cluster against the
         // union target, then install each decision shard by shard.
@@ -378,6 +511,55 @@ impl FleetSimEngine {
         }
         refresh_gates(cluster, services, shards, now);
         record_costs(cluster, shards, now);
+        clock.lap(STAGE_APPLY);
+        if let Some(ft) = telem.as_mut() {
+            let mut stage_ns = clock.ns;
+            stage_ns[STAGE_ADVANCE] = advance_ns;
+            for (stage, &ns) in stage_ns.iter().enumerate() {
+                ft.stages.record(stage, ns);
+            }
+            let rows: Vec<ServiceTick> = services
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let sh = &shards[i];
+                    let offered = match &s.policy {
+                        FleetPolicyRef::Arbitrated(p) => p.last_offered(),
+                        FleetPolicyRef::Plain(_) => 0.0,
+                    };
+                    ServiceTick {
+                        name: s.name.clone(),
+                        lambda_hat: sh.pending_lambda,
+                        offered,
+                        grant: grants[i],
+                        curve_knee: sh.telem.last_curve_knee,
+                        target_cores: decisions[i].target.values().sum(),
+                        supply_rps: sh.path.gate().supply_rps(),
+                        gate_cutoff: sh.path.gate().tier_cutoff(),
+                        burn: sh.burn.burn_rate(),
+                        cache: sh.curve_cache.stats,
+                        solve: sh.curve_cache.solve_stats,
+                    }
+                })
+                .collect();
+            let admitted: u64 = shards.iter().map(|sh| sh.path.gate().admitted).sum();
+            let shed: u64 = shards.iter().map(|sh| sh.path.gate().shed).sum();
+            let max_burn = shards
+                .iter()
+                .map(|sh| sh.burn.burn_rate())
+                .fold(0.0, f64::max);
+            ft.on_tick(
+                TickTrace {
+                    tick,
+                    t_s: now,
+                    stage_ns,
+                    services: rows,
+                },
+                admitted,
+                shed,
+                max_burn,
+            );
+        }
         for (i, d) in decisions.into_iter().enumerate() {
             shards[i].decisions.push((now, d));
         }
@@ -476,6 +658,7 @@ fn decide_all(
     grants: &[Option<usize>],
 ) -> Vec<Decision> {
     parallel_zip(threads, services, shards, |i, s, sh| {
+        let t0 = sh.telem.enabled.then(Instant::now);
         let d = match &mut s.policy {
             FleetPolicyRef::Plain(p) => {
                 let d = p.decide(now, &histories[i], &committed[i]);
@@ -504,6 +687,9 @@ fn decide_all(
                 None => p.decide(now, &histories[i], &committed[i]),
             },
         };
+        if let Some(t0) = t0 {
+            sh.telem.record_decide_ns(t0.elapsed().as_nanos() as u64);
+        }
         sh.pending_decision = Some(d);
     });
     shards

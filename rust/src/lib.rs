@@ -41,6 +41,13 @@
 //!   services burning their SLO error budget, and — with shed pricing on
 //!   — trading cores against tier-weighted shedding within the tick that
 //!   forecasts it.
+//! * [`telemetry`] — the observability plane: a registry of counters /
+//!   gauges / log-bucketed histograms with per-shard lock-free recording
+//!   and deterministic index-order fan-in, a five-stage tick profiler,
+//!   solver/request-path introspection counters, and an
+//!   anomaly-triggered flight recorder (last K `TickTrace`s, dumped to
+//!   JSON on SLO-burn or shed trips).  Zero-overhead when disabled and
+//!   bit-identical on vs off — a pure observer of the decision path.
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 
@@ -58,6 +65,7 @@ pub mod profiler;
 pub mod runtime;
 pub mod serving;
 pub mod solver;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

@@ -45,7 +45,7 @@ COMMANDS:
   fleet    [--services N] [--mode M] [--seconds N] [--base RPS] [--budget B]
            [--admission on|off] [--burn-boost F] [--shed-penalty F]
            [--solver-threads K] [--tiers 0,1,..] [--overload on]
-           [--out PREFIX]
+           [--out PREFIX] [--telemetry PREFIX]
                                      multi-service serving on one shared
                                      cluster (config.fleet when present,
                                      else N synthetic services with
@@ -59,7 +59,12 @@ COMMANDS:
                                      --solver-threads K bounds the
                                      parallel curve-solve stage: 0 = auto,
                                      1 = serial reference — results are
-                                     bit-identical at every K)
+                                     bit-identical at every K;
+                                     --telemetry PREFIX enables the
+                                     telemetry plane and writes
+                                     PREFIX.json / PREFIX.prom /
+                                     PREFIX_flight.json — decisions stay
+                                     bit-identical to a telemetry-off run)
   serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
                                      live serving on the real PJRT engine
 
@@ -187,6 +192,9 @@ fn main() -> Result<()> {
     }
     if args.get("solver-threads").is_some() && command != "fleet" {
         bail!("--solver-threads only applies to the fleet command");
+    }
+    if args.get("telemetry").is_some() && command != "fleet" {
+        bail!("--telemetry only applies to the fleet command");
     }
     config.validate()?;
 
@@ -321,7 +329,7 @@ fn main() -> Result<()> {
             config.fleet.solver_threads =
                 args.get_usize("solver-threads", config.fleet.solver_threads)?;
             let profiles = experiment::load_or_default_profiles(&artifacts);
-            let scenario = if !config.fleet.services.is_empty() {
+            let mut scenario = if !config.fleet.services.is_empty() {
                 anyhow::ensure!(
                     args.get("services").is_none()
                         && args.get("budget").is_none()
@@ -366,6 +374,9 @@ fn main() -> Result<()> {
                 }
                 scenario
             };
+            if args.get("telemetry").is_some() {
+                scenario.telemetry.enabled = true;
+            }
             let mode = match args.get("mode").unwrap_or("arbiter") {
                 "arbiter" => FleetMode::Arbiter,
                 "even" => FleetMode::EvenSplit,
@@ -395,6 +406,19 @@ fn main() -> Result<()> {
                     )?;
                     println!("rows -> {path}");
                 }
+            }
+            if let Some(prefix) = args.get("telemetry") {
+                let ft = out
+                    .telemetry
+                    .as_ref()
+                    .context("telemetry enabled but no snapshot produced")?;
+                let snap = format!("{prefix}.json");
+                std::fs::write(&snap, ft.snapshot_json().to_string_pretty())?;
+                let prom = format!("{prefix}.prom");
+                std::fs::write(&prom, ft.registry().to_prometheus())?;
+                let flight = format!("{prefix}_flight.json");
+                std::fs::write(&flight, ft.flight.dump().to_string_pretty())?;
+                println!("telemetry -> {snap} + {prom} + {flight}");
             }
         }
         "serve" => {

@@ -16,6 +16,7 @@
 //! summaries are bit-identical.
 
 use crate::dispatcher::Tier;
+use crate::telemetry::TelemetrySummary;
 use std::collections::BTreeMap;
 
 /// How one request resolved (see the module docs for semantics).
@@ -192,6 +193,9 @@ pub struct RunSummary {
     pub mean_latency_s: f64,
     /// Per-tier outcome breakdown, lowest tier number first.
     pub tiers: Vec<TierStats>,
+    /// Telemetry-plane scalars (`None` when the plane is disabled, so a
+    /// telemetry-off summary is byte-for-byte the pre-telemetry one).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 /// Aggregate of a multi-service fleet run: the per-service [`RunSummary`]s
@@ -225,6 +229,9 @@ pub struct FleetSummary {
     pub worst_p99_latency_s: f64,
     /// Fleet-wide per-tier breakdown (merged across services).
     pub tiers: Vec<TierStats>,
+    /// Summed per-service telemetry scalars (`None` when no service
+    /// carried any — i.e. the plane was disabled).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl FleetSummary {
@@ -256,6 +263,14 @@ impl FleetSummary {
             / completed.max(1.0);
         let core_seconds: f64 = services.iter().map(|s| s.core_seconds).sum();
         let tiers = merge_tiers(services.iter().map(|s| s.tiers.as_slice()));
+        let telemetry = services
+            .iter()
+            .filter_map(|s| s.telemetry.as_ref())
+            .fold(None, |acc: Option<TelemetrySummary>, t| {
+                let mut sum = acc.unwrap_or_default();
+                sum.absorb(t);
+                Some(sum)
+            });
         Self {
             total_requests,
             dropped,
@@ -270,6 +285,7 @@ impl FleetSummary {
                 .map(|s| s.p99_latency_s)
                 .fold(0.0, f64::max),
             tiers,
+            telemetry,
             services,
         }
     }
@@ -542,6 +558,9 @@ impl MetricsCollector {
                 lats.iter().sum::<f64>() / lats.len() as f64
             },
             tiers,
+            // attached by the fleet layer when the telemetry plane is on;
+            // the collector itself never observes the data plane
+            telemetry: None,
         }
     }
 
@@ -739,6 +758,7 @@ mod tests {
                 p50_latency_s: 0.1,
                 mean_latency_s: 0.1,
                 tiers: Vec::new(),
+                telemetry: None,
             }
         };
         let f = FleetSummary::from_services(
@@ -788,6 +808,7 @@ mod tests {
             p50_latency_s: 0.0,
             mean_latency_s: 0.0,
             tiers,
+            telemetry: None,
         };
         let t = |tier: Tier, total: u64, shed: u64, violations: u64| TierStats {
             tier,

@@ -104,12 +104,17 @@ impl P2Quantile {
             + sign * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
     }
 
-    /// Current estimate; exact while fewer than 5 samples have arrived.
+    /// Current estimate; exact while at most 5 samples have arrived.
+    ///
+    /// The `<= 5` boundary matters: at exactly 5 observations the marker
+    /// heights are still the raw sorted sample, and returning the middle
+    /// marker (as the steady-state path does) would answer the median for
+    /// *any* requested quantile — a p99 over 5 samples must be the max.
     pub fn value(&self) -> Option<f64> {
         if self.count == 0 {
             return None;
         }
-        if self.count < 5 {
+        if self.count <= 5 {
             let mut v = self.heights[..self.count].to_vec();
             v.sort_by(f64::total_cmp);
             let rank = ((self.q * v.len() as f64).ceil() as usize).clamp(1, v.len());
@@ -175,5 +180,20 @@ mod tests {
         est.record(1.0);
         est.record(9.0);
         assert_eq!(est.value(), Some(9.0));
+    }
+
+    #[test]
+    fn fifth_observation_is_still_exact() {
+        // Regression: at exactly 5 samples the estimator used to return the
+        // median marker for every q.  A p99 over {1..5} must be 5, a p10
+        // must be 1.
+        let mut hi = P2Quantile::new(0.99);
+        let mut lo = P2Quantile::new(0.10);
+        for x in [3.0, 1.0, 5.0, 2.0, 4.0] {
+            hi.record(x);
+            lo.record(x);
+        }
+        assert_eq!(hi.value(), Some(5.0));
+        assert_eq!(lo.value(), Some(1.0));
     }
 }

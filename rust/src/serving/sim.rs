@@ -17,11 +17,12 @@
 //! rate-accounting semantics, which are unchanged.
 
 use super::{Decision, Policy};
-use crate::config::AdmissionConfig;
+use crate::config::{AdmissionConfig, TelemetryConfig};
 use crate::fleet::curve_cache::CurveCacheStats;
 use crate::fleet::sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 use crate::metrics::MetricsCollector;
 use crate::profiler::ProfileSet;
+use crate::telemetry::TelemetrySummary;
 use crate::workload::RateSeries;
 
 /// Simulation parameters.
@@ -48,6 +49,10 @@ pub struct SimConfig {
     /// bit-identical to the serial one (pinned) — only wall-clock; the
     /// N = 1 single-service wrapper always runs serial.
     pub solver_threads: usize,
+    /// Telemetry plane (disabled by default: zero overhead, and an
+    /// enabled run is bit-identical anyway — pinned by
+    /// `telemetry_on_is_bit_identical_to_off`).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for SimConfig {
@@ -62,6 +67,7 @@ impl Default for SimConfig {
             batch_max_wait_s: 0.05,
             admission: AdmissionConfig::default(),
             solver_threads: 0,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -81,6 +87,8 @@ pub struct SimResult {
     /// Value-curve cache outcomes (nonzero only for arbitrated fleet
     /// services; the plain single-service path never solves curves).
     pub curve_cache: CurveCacheStats,
+    /// Per-service telemetry scalars (`None` when the plane is disabled).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl SimEngine {

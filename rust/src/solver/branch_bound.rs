@@ -48,7 +48,7 @@
 //! steady-state fleet ticks (λ̂ wobble, same committed cores) the seeded
 //! incumbent is already pointwise optimal and the search collapses.
 
-use super::{score, Allocation, CurveAcc, Problem, Solver, ValueCurve};
+use super::{score, Allocation, CurveAcc, Problem, SolveStats, Solver, ValueCurve};
 
 #[derive(Debug, Default, Clone, Copy)]
 pub struct BranchBoundSolver;
@@ -136,6 +136,15 @@ impl Solver for BranchBoundSolver {
     ) -> ValueCurve {
         self.curve_search(problem, cap, seed).0
     }
+
+    fn solve_curve_stats(
+        &self,
+        problem: &Problem,
+        cap: usize,
+        seed: Option<&ValueCurve>,
+    ) -> (ValueCurve, SolveStats) {
+        self.curve_search(problem, cap, seed)
+    }
 }
 
 impl BranchBoundSolver {
@@ -144,14 +153,14 @@ impl BranchBoundSolver {
         problem: &Problem,
         cap: usize,
         seed: Option<&ValueCurve>,
-    ) -> (ValueCurve, u64) {
+    ) -> (ValueCurve, SolveStats) {
         debug_assert!(
             cap <= problem.budget,
             "curve cap {cap} exceeds the table budget {}",
             problem.budget
         );
         if problem.variants.is_empty() {
-            return (ValueCurve::unsolvable(cap), 0);
+            return (ValueCurve::unsolvable(cap), SolveStats::default());
         }
         let m = problem.variants.len();
         let (order, caps, max_acc, _) = prepare(problem);
@@ -188,6 +197,7 @@ impl BranchBoundSolver {
         }
 
         let mut acc = CurveAcc::new(cap);
+        let mut seed_rescores = 0u64;
         if let Some(prev) = seed {
             for w in prev.winners().iter().flatten() {
                 if w.len() != m {
@@ -199,6 +209,7 @@ impl BranchBoundSolver {
                 }
                 if let Some((objective, _feasible)) = super::score_fast(problem, w) {
                     acc.offer(cost, objective, w);
+                    seed_rescores += 1;
                 }
             }
         }
@@ -212,9 +223,15 @@ impl BranchBoundSolver {
             cap,
             acc,
             visited: 0,
+            prunes: 0,
         };
         dfs_curve(&mut ctx, &mut vec![0usize; m], 0, cap, 0.0, 0.0, 0.0, 0.0);
-        (ctx.acc.finish(), ctx.visited)
+        let stats = SolveStats {
+            nodes_visited: ctx.visited,
+            curve_prunes: ctx.prunes,
+            seed_rescores,
+        };
+        (ctx.acc.finish(), stats)
     }
 
     /// Nodes the plain single-optimum solve visits (deterministic work
@@ -228,7 +245,7 @@ impl BranchBoundSolver {
 
     /// Nodes the single-pass curve search visits, optionally warm-seeded.
     pub fn curve_search_nodes(problem: &Problem, cap: usize, seed: Option<&ValueCurve>) -> u64 {
-        BranchBoundSolver.curve_search(problem, cap, seed).1
+        BranchBoundSolver.curve_search(problem, cap, seed).1.nodes_visited
     }
 }
 
@@ -313,6 +330,8 @@ struct CurveCtx<'a> {
     cap: usize,
     acc: CurveAcc,
     visited: u64,
+    /// Subtrees cut by the curve-aware bound (telemetry counter).
+    prunes: u64,
 }
 
 /// Curve-aware DFS: same tree as [`dfs`], but every leaf is binned by its
@@ -400,6 +419,7 @@ fn dfs_curve(
         }
     }
     if !promising {
+        ctx.prunes += 1;
         return;
     }
     let i = ctx.order[depth];
@@ -581,6 +601,22 @@ mod tests {
             let warm = BranchBoundSolver.solve_curve_seeded(&p, 16, Some(&stale));
             assert_eq!(warm.values(), cold.values());
         }
+    }
+
+    #[test]
+    fn stats_solve_returns_identical_curve_and_counts_work() {
+        // `solve_curve_stats` must be the same algorithm as the plain
+        // seeded solve — the counters observe work, never change it.
+        let p = problem(300.0, 24, 0.05);
+        let plain = BranchBoundSolver.solve_curve(&p, 24);
+        let (curve, stats) = BranchBoundSolver.solve_curve_stats(&p, 24, None);
+        assert_eq!(curve.values(), plain.values());
+        assert!(stats.nodes_visited > 0);
+        assert_eq!(stats.seed_rescores, 0);
+        let (warm, wstats) = BranchBoundSolver.solve_curve_stats(&p, 24, Some(&plain));
+        assert_eq!(warm.values(), curve.values());
+        assert!(wstats.seed_rescores > 0, "seeded solve should re-score winners");
+        assert!(wstats.nodes_visited <= stats.nodes_visited);
     }
 
     #[test]

@@ -571,6 +571,29 @@ impl CurveAcc {
     }
 }
 
+/// Introspection counters from one curve solve — what the telemetry
+/// plane surfaces per tick (B&B nodes visited, curve-aware prunes,
+/// seeded-incumbent rescores).  Pure observation: solvers count work they
+/// already do; the counters never feed back into any decision.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SolveStats {
+    /// Search nodes visited (B&B recursion entries; 0 for heuristics).
+    pub nodes_visited: u64,
+    /// Subtrees cut by the curve-aware bound (`!promising` rejections).
+    pub curve_prunes: u64,
+    /// Warm-start winner vectors re-scored into the incumbent curve.
+    pub seed_rescores: u64,
+}
+
+impl SolveStats {
+    /// Accumulate another solve's counters (deterministic: plain sums).
+    pub fn add(&mut self, other: SolveStats) {
+        self.nodes_visited += other.nodes_visited;
+        self.curve_prunes += other.curve_prunes;
+        self.seed_rescores += other.seed_rescores;
+    }
+}
+
 /// Common solver interface.
 ///
 /// `Send` is a supertrait because boxed solvers ride inside policies that
@@ -643,6 +666,21 @@ pub trait Solver: Send {
     ) -> ValueCurve {
         let _ = seed;
         self.solve_curve(problem, cap)
+    }
+
+    /// [`Self::solve_curve_seeded`] plus its [`SolveStats`] — the
+    /// telemetry plane's entry point.  The returned curve MUST be
+    /// identical to `solve_curve_seeded` on the same inputs (the stats
+    /// are counters of work the solve already does, never a different
+    /// algorithm).  Default: delegate and report zero stats, so
+    /// heuristic solvers need no instrumentation.
+    fn solve_curve_stats(
+        &self,
+        problem: &Problem,
+        cap: usize,
+        seed: Option<&ValueCurve>,
+    ) -> (ValueCurve, SolveStats) {
+        (self.solve_curve_seeded(problem, cap, seed), SolveStats::default())
     }
 }
 

@@ -1,0 +1,962 @@
+//! Fleet telemetry plane: counters, tick-stage profiling, and an
+//! anomaly-triggered flight recorder — a **pure observer** of the fleet
+//! data plane.
+//!
+//! The control loop this repo reproduces *reacts to what it observes*
+//! (λ̂ forecasts, SLO burn, shed pressure), yet until this module the
+//! engine could only report end-of-run summaries — nobody could see *why*
+//! the arbiter moved cores at tick T or where a five-stage tick spends
+//! its time.  The telemetry plane answers that without ever becoming part
+//! of the loop:
+//!
+//! * [`Registry`] — named counters, gauges, and log-bucketed histograms
+//!   ([`LogHistogram`]), exported as Prometheus text exposition
+//!   ([`Registry::to_prometheus`], round-trippable through
+//!   [`parse_exposition`]) and as a JSON snapshot ([`Registry::to_json`]).
+//! * [`ShardTelemetry`] — per-[`ServiceShard`] counters recorded lock-free
+//!   by whichever worker thread runs the shard (each shard's telemetry is
+//!   its own disjoint state, exactly like the rest of the shard), fanned
+//!   in by [`ShardTelemetry::merge`] strictly in service-index order.
+//! * [`StageProfiler`] — wall-clock nanoseconds of each five-stage tick
+//!   phase (observe → solve → arbitrate → apply → advance).
+//! * [`FlightRecorder`] — ring buffer of the last K [`TickTrace`] records
+//!   (λ̂, offered load, grants, curve knees, decisions, gate supply) that
+//!   marks a trip when the SLO-burn meter crosses 1 or the per-tick shed
+//!   fraction exceeds a threshold, and dumps the window to JSON — the
+//!   "why did it do that" artifact and the future record/replay substrate.
+//!
+//! **Determinism invariant.**  Telemetry on vs off is bit-identical in
+//! every decision, event sequence, and summary field: every recorder is
+//! guarded by the enabled flag, counters only *count* work the data plane
+//! already does, and timing is observed but never consulted.  No branch
+//! on the decision path reads a telemetry value.  Pinned by
+//! `telemetry_on_is_bit_identical_to_off` in `tests/regression_pins.rs`
+//! at `solver_threads ∈ {1, 8}`.
+//!
+//! [`ServiceShard`]: crate::fleet::ServiceShard
+
+use crate::config::TelemetryConfig;
+use crate::dispatcher::{NoRoute, Tier};
+use crate::fleet::CurveCacheStats;
+use crate::solver::SolveStats;
+use crate::util::json::Value;
+use std::collections::{BTreeMap, VecDeque};
+
+/// The five tick stages, in protocol order (indices into stage arrays).
+pub const STAGES: [&str; 5] = ["observe", "solve", "arbitrate", "apply", "advance"];
+
+/// Index of a stage name in [`STAGES`].
+pub const STAGE_OBSERVE: usize = 0;
+pub const STAGE_SOLVE: usize = 1;
+pub const STAGE_ARBITRATE: usize = 2;
+pub const STAGE_APPLY: usize = 3;
+pub const STAGE_ADVANCE: usize = 4;
+
+/// Power-of-two-bucketed histogram of `u64` samples (nanoseconds, counts,
+/// …).  Bucket `b` holds values `v` with `2^(b-1) <= v < 2^b` (bucket 0
+/// holds only zero), so 65 buckets cover the whole domain with no
+/// configuration.  Merging is plain bucket-wise addition — deterministic
+/// regardless of record order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = bucket_of(v);
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (b, &c) in other.counts.iter().enumerate() {
+            self.counts[b] += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// `(inclusive upper bound, cumulative count)` per occupied bucket —
+    /// the Prometheus `_bucket{le=...}` series.
+    pub fn cumulative(&self) -> Vec<(u128, u64)> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(b, &c)| {
+                acc += c;
+                ((1u128 << b) - 1, acc)
+            })
+            .collect()
+    }
+}
+
+/// Named counters, gauges, and histograms with deterministic (sorted)
+/// iteration order.  The fleet engine builds one per snapshot from the
+/// merged telemetry state; nothing on the decision path ever reads it.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, LogHistogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn hist_record(&mut self, name: &str, v: u64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Install a pre-accumulated histogram under `name` (merged into any
+    /// existing one).
+    pub fn hist_merge(&mut self, name: &str, h: &LogHistogram) {
+        self.histograms.entry(name.to_string()).or_default().merge(h);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.histograms.get(name)
+    }
+
+    /// Fold another registry in (sums counters, overwrites gauges, merges
+    /// histograms).  Deterministic: BTreeMap order, plain addition.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, &v) in &other.counters {
+            self.counter_add(k, v);
+        }
+        for (k, &v) in &other.gauges {
+            self.gauges.insert(k.clone(), v);
+        }
+        for (k, h) in &other.histograms {
+            self.hist_merge(k, h);
+        }
+    }
+
+    /// Prometheus text exposition (format 0.0.4): `# TYPE` headers, one
+    /// sample per line, histograms as cumulative `_bucket{le=...}` series
+    /// plus `_sum` / `_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("# TYPE {k} counter\n{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {k} gauge\n{k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!("# TYPE {k} histogram\n"));
+            for (le, c) in h.cumulative() {
+                out.push_str(&format!("{k}_bucket{{le=\"{le}\"}} {c}\n"));
+            }
+            out.push_str(&format!("{k}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("{k}_sum {}\n", h.sum()));
+            out.push_str(&format!("{k}_count {}\n", h.count()));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let counters = Value::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Value::Num(v as f64)))
+                .collect(),
+        );
+        let gauges = Value::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), Value::Num(v)))
+                .collect(),
+        );
+        let hists = Value::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Value::obj(vec![
+                            ("count", Value::Num(h.count() as f64)),
+                            ("sum", Value::Num(h.sum() as f64)),
+                            ("max", Value::Num(h.max() as f64)),
+                            ("mean", Value::Num(h.mean())),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+}
+
+/// Parse a Prometheus text exposition back into `sample name -> value`
+/// (labels kept verbatim as part of the name).  Used by the round-trip
+/// test and by the CI smoke job to validate the exported artifact.
+pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, value)) = line.rsplit_once(' ') {
+            if let Ok(v) = value.parse::<f64>() {
+                out.insert(name.to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+/// Index of the smallest grant whose curve value is within 1e-9 of the
+/// curve's maximum — where the marginal value of more cores vanishes.
+/// Diagnostics only (flight-recorder traces); the arbiter never reads it.
+pub fn curve_knee(curve: &[f64]) -> usize {
+    let max = curve.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    curve
+        .iter()
+        .position(|&v| v >= max - 1e-9)
+        .unwrap_or(0)
+}
+
+/// Per-shard telemetry: request-path counters and worker-thread solve /
+/// decide spans.  Owned by each [`crate::fleet::ServiceShard`] exactly
+/// like the rest of its state — parallel stages record lock-free into
+/// their own shard's instance, and the engine fans in with [`Self::merge`]
+/// strictly in service-index order, so worker scheduling cannot reach the
+/// merged values.  Every recorder early-returns when disabled.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardTelemetry {
+    pub enabled: bool,
+    /// Requests past the gate, indexed by tier.
+    pub admit_by_tier: Vec<u64>,
+    /// Requests refused at the gate, indexed by tier.
+    pub shed_by_tier: Vec<u64>,
+    /// Admitted requests the router had no weight table for.
+    pub noroute_unconfigured: u64,
+    /// Admitted requests whose weight table granted no capacity.
+    pub noroute_nocapacity: u64,
+    /// Σ batch-size targets over dispatched batches (capacity offered).
+    pub batch_slots: u64,
+    /// Σ members over dispatched batches (capacity used).
+    pub batch_filled: u64,
+    /// Per-worker wall-clock of this shard's curve solves, ns.
+    pub solve_ns: LogHistogram,
+    /// Per-worker wall-clock of this shard's decide calls, ns.
+    pub decide_ns: LogHistogram,
+    /// Knee of the most recent value curve (flight-trace scratch).
+    pub last_curve_knee: usize,
+}
+
+fn bump_tier(v: &mut Vec<u64>, tier: Tier) {
+    let i = tier as usize;
+    if v.len() <= i {
+        v.resize(i + 1, 0);
+    }
+    v[i] += 1;
+}
+
+impl ShardTelemetry {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            ..Self::default()
+        }
+    }
+
+    #[inline]
+    pub fn record_admit(&mut self, tier: Tier) {
+        if !self.enabled {
+            return;
+        }
+        bump_tier(&mut self.admit_by_tier, tier);
+    }
+
+    #[inline]
+    pub fn record_shed(&mut self, tier: Tier) {
+        if !self.enabled {
+            return;
+        }
+        bump_tier(&mut self.shed_by_tier, tier);
+    }
+
+    #[inline]
+    pub fn record_noroute(&mut self, reason: NoRoute) {
+        if !self.enabled {
+            return;
+        }
+        match reason {
+            NoRoute::Unconfigured => self.noroute_unconfigured += 1,
+            NoRoute::NoCapacity => self.noroute_nocapacity += 1,
+        }
+    }
+
+    #[inline]
+    pub fn record_batch(&mut self, slots: usize, filled: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.batch_slots += slots as u64;
+        self.batch_filled += filled as u64;
+    }
+
+    #[inline]
+    pub fn record_solve_ns(&mut self, ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.solve_ns.record(ns);
+    }
+
+    #[inline]
+    pub fn record_decide_ns(&mut self, ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.decide_ns.record(ns);
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admit_by_tier.iter().sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed_by_tier.iter().sum()
+    }
+
+    /// Mean fraction of dispatched batch slots actually filled (1.0 when
+    /// batching never ran).
+    pub fn batch_fill_ratio(&self) -> f64 {
+        if self.batch_slots == 0 {
+            1.0
+        } else {
+            self.batch_filled as f64 / self.batch_slots as f64
+        }
+    }
+
+    /// Fan-in: fold another shard's counters in (called in service-index
+    /// order; plain sums, so the merge is order-deterministic anyway).
+    pub fn merge(&mut self, other: &ShardTelemetry) {
+        self.enabled |= other.enabled;
+        for (i, &v) in other.admit_by_tier.iter().enumerate() {
+            if self.admit_by_tier.len() <= i {
+                self.admit_by_tier.resize(i + 1, 0);
+            }
+            self.admit_by_tier[i] += v;
+        }
+        for (i, &v) in other.shed_by_tier.iter().enumerate() {
+            if self.shed_by_tier.len() <= i {
+                self.shed_by_tier.resize(i + 1, 0);
+            }
+            self.shed_by_tier[i] += v;
+        }
+        self.noroute_unconfigured += other.noroute_unconfigured;
+        self.noroute_nocapacity += other.noroute_nocapacity;
+        self.batch_slots += other.batch_slots;
+        self.batch_filled += other.batch_filled;
+        self.solve_ns.merge(&other.solve_ns);
+        self.decide_ns.merge(&other.decide_ns);
+    }
+}
+
+/// Wall-clock profile of the five tick stages, accumulated per adapter
+/// tick.  Timing is observed, never consulted — the histograms exist only
+/// for export.
+#[derive(Debug, Clone, Default)]
+pub struct StageProfiler {
+    hists: [LogHistogram; 5],
+    /// The most recent tick's per-stage spans, ns (flight-trace scratch).
+    pub last_ns: [u64; 5],
+}
+
+impl StageProfiler {
+    pub fn record(&mut self, stage: usize, ns: u64) {
+        self.hists[stage].record(ns);
+        self.last_ns[stage] = ns;
+    }
+
+    pub fn hist(&self, stage: usize) -> &LogHistogram {
+        &self.hists[stage]
+    }
+
+    pub fn mean_ns(&self) -> [u64; 5] {
+        let mut out = [0u64; 5];
+        for (o, h) in out.iter_mut().zip(&self.hists) {
+            *o = h.mean().round() as u64;
+        }
+        out
+    }
+}
+
+/// One service's row of a [`TickTrace`]: what it saw, what it asked for,
+/// and what it was granted at one adapter boundary.
+#[derive(Debug, Clone)]
+pub struct ServiceTick {
+    pub name: String,
+    /// Forecast the curve was solved for.
+    pub lambda_hat: f64,
+    /// Raw offered rate the shed pricing was computed against.
+    pub offered: f64,
+    /// Arbiter core grant (`None`: service outside arbitration).
+    pub grant: Option<usize>,
+    /// Knee of the service's value curve (smallest grant at max value).
+    pub curve_knee: usize,
+    /// Σ cores of the decision's target allocation.
+    pub target_cores: usize,
+    /// Admission-gate supply at the boundary, rps.
+    pub supply_rps: f64,
+    /// Gate tier cutoff in force.
+    pub gate_cutoff: Tier,
+    /// Rolling SLO-burn rate (> 1 = burning).
+    pub burn: f64,
+    /// Cumulative curve-cache outcomes for this service.
+    pub cache: CurveCacheStats,
+    /// Cumulative solver introspection for this service.
+    pub solve: SolveStats,
+}
+
+impl ServiceTick {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("lambda_hat", Value::Num(self.lambda_hat)),
+            ("offered", Value::Num(self.offered)),
+            (
+                "grant",
+                match self.grant {
+                    Some(g) => Value::Num(g as f64),
+                    None => Value::Null,
+                },
+            ),
+            ("curve_knee", Value::Num(self.curve_knee as f64)),
+            ("target_cores", Value::Num(self.target_cores as f64)),
+            ("supply_rps", Value::Num(self.supply_rps)),
+            ("gate_cutoff", Value::Num(self.gate_cutoff as f64)),
+            ("burn", Value::Num(self.burn)),
+            ("cache_hits", Value::Num(self.cache.hits as f64)),
+            ("cache_warm", Value::Num(self.cache.warm as f64)),
+            ("cache_cold", Value::Num(self.cache.cold as f64)),
+            ("solver_nodes", Value::Num(self.solve.nodes_visited as f64)),
+            ("curve_prunes", Value::Num(self.solve.curve_prunes as f64)),
+            ("seed_rescores", Value::Num(self.solve.seed_rescores as f64)),
+        ])
+    }
+}
+
+/// One adapter boundary's structured record: per-stage timings plus every
+/// service's [`ServiceTick`] row.
+#[derive(Debug, Clone)]
+pub struct TickTrace {
+    /// 1-based adapter-tick ordinal (the warm start is not traced).
+    pub tick: u64,
+    /// Virtual time of the boundary, seconds.
+    pub t_s: f64,
+    /// Wall-clock of each five-stage phase this tick, ns.
+    pub stage_ns: [u64; 5],
+    pub services: Vec<ServiceTick>,
+}
+
+impl TickTrace {
+    pub fn to_json(&self) -> Value {
+        let stages = Value::Obj(
+            STAGES
+                .iter()
+                .zip(self.stage_ns)
+                .map(|(&s, ns)| (format!("{s}_ns"), Value::Num(ns as f64)))
+                .collect(),
+        );
+        Value::obj(vec![
+            ("tick", Value::Num(self.tick as f64)),
+            ("t_s", Value::Num(self.t_s)),
+            ("stages", stages),
+            (
+                "services",
+                Value::Arr(self.services.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Ring buffer of the last K [`TickTrace`]s with anomaly trips: when the
+/// engine sees an SLO-burn meter cross 1 or a per-tick shed fraction past
+/// the configured threshold, it marks a trip and the window around it can
+/// be dumped to JSON — the "why did it do that" artifact.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    cap: usize,
+    ring: VecDeque<TickTrace>,
+    trips: Vec<(u64, String)>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            ring: VecDeque::new(),
+            trips: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, trace: TickTrace) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(trace);
+    }
+
+    /// Record an anomaly at `tick` (e.g. `"slo_burn"`, `"shed"`).
+    pub fn trip(&mut self, tick: u64, reason: &str) {
+        self.trips.push((tick, reason.to_string()));
+    }
+
+    pub fn tripped(&self) -> bool {
+        !self.trips.is_empty()
+    }
+
+    pub fn trips(&self) -> &[(u64, String)] {
+        &self.trips
+    }
+
+    pub fn ticks(&self) -> impl Iterator<Item = &TickTrace> {
+        self.ring.iter()
+    }
+
+    /// The dump artifact: the retained tick window plus every trip.
+    pub fn dump(&self) -> Value {
+        Value::obj(vec![
+            ("window", Value::Num(self.cap as f64)),
+            (
+                "trips",
+                Value::Arr(
+                    self.trips
+                        .iter()
+                        .map(|(t, r)| {
+                            Value::obj(vec![
+                                ("tick", Value::Num(*t as f64)),
+                                ("reason", Value::Str(r.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "ticks",
+                Value::Arr(self.ring.iter().map(|t| t.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Compact telemetry scalars attached to `RunSummary` / `FleetSummary`
+/// (`None` when telemetry is disabled, so summaries stay bit-identical to
+/// pre-telemetry runs).  Carries only deterministic counters — never
+/// timings — so two telemetry-on runs of the same seed compare equal.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TelemetrySummary {
+    pub admitted: u64,
+    pub shed: u64,
+    pub noroute_unconfigured: u64,
+    pub noroute_nocapacity: u64,
+    pub batch_slots: u64,
+    pub batch_filled: u64,
+    pub solver_nodes: u64,
+    pub curve_prunes: u64,
+    pub seed_rescores: u64,
+    pub cache_hits: u64,
+    pub cache_warm: u64,
+    pub cache_cold: u64,
+    pub arena_allocs: u64,
+    pub arena_reuses: u64,
+}
+
+impl TelemetrySummary {
+    pub fn from_shard(
+        shard: &ShardTelemetry,
+        cache: CurveCacheStats,
+        solve: SolveStats,
+        arena_allocs: u64,
+        arena_reuses: u64,
+    ) -> Self {
+        Self {
+            admitted: shard.admitted(),
+            shed: shard.shed(),
+            noroute_unconfigured: shard.noroute_unconfigured,
+            noroute_nocapacity: shard.noroute_nocapacity,
+            batch_slots: shard.batch_slots,
+            batch_filled: shard.batch_filled,
+            solver_nodes: solve.nodes_visited,
+            curve_prunes: solve.curve_prunes,
+            seed_rescores: solve.seed_rescores,
+            cache_hits: cache.hits,
+            cache_warm: cache.warm,
+            cache_cold: cache.cold,
+            arena_allocs,
+            arena_reuses,
+        }
+    }
+
+    /// Fleet aggregation: plain field-wise sums.
+    pub fn absorb(&mut self, other: &TelemetrySummary) {
+        self.admitted += other.admitted;
+        self.shed += other.shed;
+        self.noroute_unconfigured += other.noroute_unconfigured;
+        self.noroute_nocapacity += other.noroute_nocapacity;
+        self.batch_slots += other.batch_slots;
+        self.batch_filled += other.batch_filled;
+        self.solver_nodes += other.solver_nodes;
+        self.curve_prunes += other.curve_prunes;
+        self.seed_rescores += other.seed_rescores;
+        self.cache_hits += other.cache_hits;
+        self.cache_warm += other.cache_warm;
+        self.cache_cold += other.cache_cold;
+        self.arena_allocs += other.arena_allocs;
+        self.arena_reuses += other.arena_reuses;
+    }
+
+    pub fn batch_fill_ratio(&self) -> f64 {
+        if self.batch_slots == 0 {
+            1.0
+        } else {
+            self.batch_filled as f64 / self.batch_slots as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("admitted", Value::Num(self.admitted as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            (
+                "noroute_unconfigured",
+                Value::Num(self.noroute_unconfigured as f64),
+            ),
+            (
+                "noroute_nocapacity",
+                Value::Num(self.noroute_nocapacity as f64),
+            ),
+            ("batch_fill_ratio", Value::Num(self.batch_fill_ratio())),
+            ("solver_nodes", Value::Num(self.solver_nodes as f64)),
+            ("curve_prunes", Value::Num(self.curve_prunes as f64)),
+            ("seed_rescores", Value::Num(self.seed_rescores as f64)),
+            ("cache_hits", Value::Num(self.cache_hits as f64)),
+            ("cache_warm", Value::Num(self.cache_warm as f64)),
+            ("cache_cold", Value::Num(self.cache_cold as f64)),
+            ("arena_allocs", Value::Num(self.arena_allocs as f64)),
+            ("arena_reuses", Value::Num(self.arena_reuses as f64)),
+        ])
+    }
+}
+
+/// Engine-level telemetry for one fleet run: the stage profiler, the
+/// flight recorder, and the merged shard / solver / cache state.  Built
+/// by `FleetSimEngine::run_with_telemetry` when `SimConfig::telemetry`
+/// enables it.
+#[derive(Debug, Clone)]
+pub struct FleetTelemetry {
+    pub stages: StageProfiler,
+    pub flight: FlightRecorder,
+    /// Adapter boundaries traced (the warm start is not counted).
+    pub ticks: u64,
+    /// All shards' counters, merged in service-index order.
+    pub shard: ShardTelemetry,
+    pub cache: CurveCacheStats,
+    pub solve: SolveStats,
+    pub arena_allocs: u64,
+    pub arena_reuses: u64,
+    shed_trip_fraction: f64,
+    prev_admitted: u64,
+    prev_shed: u64,
+}
+
+impl FleetTelemetry {
+    pub fn new(cfg: &TelemetryConfig) -> Self {
+        Self {
+            stages: StageProfiler::default(),
+            flight: FlightRecorder::new(cfg.flight_ticks),
+            ticks: 0,
+            shard: ShardTelemetry::new(true),
+            cache: CurveCacheStats::default(),
+            solve: SolveStats::default(),
+            arena_allocs: 0,
+            arena_reuses: 0,
+            shed_trip_fraction: cfg.shed_trip_fraction,
+            prev_admitted: 0,
+            prev_shed: 0,
+        }
+    }
+
+    /// Fold one adapter boundary in: record the trace, and trip the flight
+    /// recorder when any service is burning its SLO budget or the tick's
+    /// shed fraction (from the admission gates' counter deltas) exceeds
+    /// the threshold.
+    pub fn on_tick(
+        &mut self,
+        trace: TickTrace,
+        gate_admitted: u64,
+        gate_shed: u64,
+        max_burn: f64,
+    ) {
+        self.ticks += 1;
+        let tick = trace.tick;
+        let d_admit = gate_admitted.saturating_sub(self.prev_admitted);
+        let d_shed = gate_shed.saturating_sub(self.prev_shed);
+        self.prev_admitted = gate_admitted;
+        self.prev_shed = gate_shed;
+        self.flight.push(trace);
+        if max_burn > 1.0 {
+            self.flight.trip(tick, "slo_burn");
+        }
+        let offered = d_admit + d_shed;
+        if offered > 0 && d_shed as f64 / offered as f64 > self.shed_trip_fraction {
+            self.flight.trip(tick, "shed");
+        }
+    }
+
+    /// The exportable registry: every counter, gauge, and histogram the
+    /// run accumulated.
+    pub fn registry(&self) -> Registry {
+        let mut r = Registry::new();
+        r.counter_add("infadapter_ticks_total", self.ticks);
+        r.counter_add("infadapter_admitted_total", self.shard.admitted());
+        r.counter_add("infadapter_shed_total", self.shard.shed());
+        for (i, &v) in self.shard.admit_by_tier.iter().enumerate() {
+            r.counter_add(&format!("infadapter_tier{i}_admitted_total"), v);
+        }
+        for (i, &v) in self.shard.shed_by_tier.iter().enumerate() {
+            r.counter_add(&format!("infadapter_tier{i}_shed_total"), v);
+        }
+        r.counter_add(
+            "infadapter_noroute_unconfigured_total",
+            self.shard.noroute_unconfigured,
+        );
+        r.counter_add(
+            "infadapter_noroute_nocapacity_total",
+            self.shard.noroute_nocapacity,
+        );
+        r.counter_add("infadapter_batch_slots_total", self.shard.batch_slots);
+        r.counter_add("infadapter_batch_filled_total", self.shard.batch_filled);
+        r.gauge_set(
+            "infadapter_batch_fill_ratio",
+            self.shard.batch_fill_ratio(),
+        );
+        r.counter_add("infadapter_solver_nodes_total", self.solve.nodes_visited);
+        r.counter_add(
+            "infadapter_solver_curve_prunes_total",
+            self.solve.curve_prunes,
+        );
+        r.counter_add(
+            "infadapter_solver_seed_rescores_total",
+            self.solve.seed_rescores,
+        );
+        r.counter_add("infadapter_curve_cache_hits_total", self.cache.hits);
+        r.counter_add("infadapter_curve_cache_warm_total", self.cache.warm);
+        r.counter_add("infadapter_curve_cache_cold_total", self.cache.cold);
+        r.counter_add("infadapter_arena_allocs_total", self.arena_allocs);
+        r.counter_add("infadapter_arena_reuses_total", self.arena_reuses);
+        r.counter_add(
+            "infadapter_flight_trips_total",
+            self.flight.trips().len() as u64,
+        );
+        for (i, name) in STAGES.iter().enumerate() {
+            r.hist_merge(&format!("infadapter_stage_{name}_ns"), self.stages.hist(i));
+        }
+        r.hist_merge("infadapter_shard_solve_ns", &self.shard.solve_ns);
+        r.hist_merge("infadapter_shard_decide_ns", &self.shard.decide_ns);
+        r
+    }
+
+    /// The JSON snapshot artifact: registry plus stage means and trips.
+    pub fn snapshot_json(&self) -> Value {
+        let stage_means = Value::Obj(
+            STAGES
+                .iter()
+                .zip(self.stages.mean_ns())
+                .map(|(&s, ns)| (format!("{s}_mean_ns"), Value::Num(ns as f64)))
+                .collect(),
+        );
+        Value::obj(vec![
+            ("registry", self.registry().to_json()),
+            ("stage_means", stage_means),
+            ("ticks", Value::Num(self.ticks as f64)),
+            (
+                "flight_trips",
+                Value::Num(self.flight.trips().len() as f64),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_histogram_buckets_and_merges() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 1, 2, 3, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1007);
+        assert_eq!(h.max(), 1000);
+        let mut other = LogHistogram::new();
+        other.record(7);
+        h.merge(&other);
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 1014);
+        // cumulative counts are monotone and end at the total
+        let cum = h.cumulative();
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(cum.last().unwrap().1, 7);
+    }
+
+    #[test]
+    fn merge_order_does_not_change_merged_state() {
+        let mk = |vals: &[u64]| {
+            let mut t = ShardTelemetry::new(true);
+            for &v in vals {
+                t.record_admit((v % 3) as Tier);
+                t.record_solve_ns(v);
+            }
+            t.record_noroute(NoRoute::NoCapacity);
+            t
+        };
+        let a = mk(&[1, 2, 3]);
+        let b = mk(&[10, 20]);
+        let mut ab = ShardTelemetry::new(true);
+        ab.merge(&a);
+        ab.merge(&b);
+        let mut ba = ShardTelemetry::new(true);
+        ba.merge(&b);
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.admitted(), 5);
+        assert_eq!(ab.noroute_nocapacity, 2);
+    }
+
+    #[test]
+    fn flight_recorder_keeps_only_the_last_k_ticks() {
+        let mut fr = FlightRecorder::new(3);
+        for tick in 1..=5u64 {
+            fr.push(TickTrace {
+                tick,
+                t_s: tick as f64 * 30.0,
+                stage_ns: [0; 5],
+                services: Vec::new(),
+            });
+        }
+        let kept: Vec<u64> = fr.ticks().map(|t| t.tick).collect();
+        assert_eq!(kept, vec![3, 4, 5]);
+        assert!(!fr.tripped());
+        fr.trip(5, "shed");
+        assert!(fr.tripped());
+        let dump = fr.dump();
+        assert_eq!(dump.get("ticks").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(dump.get("trips").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn curve_knee_finds_the_smallest_max_grant() {
+        assert_eq!(curve_knee(&[0.0, 1.0, 2.0, 2.0, 2.0]), 2);
+        assert_eq!(curve_knee(&[5.0, 5.0]), 0);
+        assert_eq!(curve_knee(&[]), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_round_trips() {
+        let mut r = Registry::new();
+        r.counter_add("infadapter_admitted_total", 42);
+        r.gauge_set("infadapter_batch_fill_ratio", 0.75);
+        r.hist_record("infadapter_stage_solve_ns", 1500);
+        r.hist_record("infadapter_stage_solve_ns", 90);
+        let text = r.to_prometheus();
+        let parsed = parse_exposition(&text);
+        assert_eq!(parsed["infadapter_admitted_total"], 42.0);
+        assert_eq!(parsed["infadapter_batch_fill_ratio"], 0.75);
+        assert_eq!(parsed["infadapter_stage_solve_ns_count"], 2.0);
+        assert_eq!(parsed["infadapter_stage_solve_ns_sum"], 1590.0);
+        // the +Inf bucket is present and carries the full count
+        assert_eq!(
+            parsed["infadapter_stage_solve_ns_bucket{le=\"+Inf\"}"],
+            2.0
+        );
+        // every non-comment line parsed into a sample
+        let lines = text
+            .lines()
+            .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+            .count();
+        assert_eq!(lines, parsed.len());
+    }
+
+    #[test]
+    fn disabled_shard_telemetry_records_nothing() {
+        let mut t = ShardTelemetry::new(false);
+        t.record_admit(0);
+        t.record_shed(1);
+        t.record_noroute(NoRoute::Unconfigured);
+        t.record_batch(8, 4);
+        t.record_solve_ns(100);
+        assert_eq!(t, ShardTelemetry::default());
+    }
+}

@@ -790,3 +790,70 @@ fn prop_sim_accuracy_bounded_by_family() {
         assert!(out.summary.avg_accuracy_loss >= -1e-6);
     }
 }
+
+#[test]
+fn prop_p2_quantile_matches_exact_sorted_sample() {
+    // Cross-check the P² streaming estimator against the exact sorted
+    // sample: (a) with at most 5 observations the estimate IS the exact
+    // rank statistic (the marker array still holds the raw sample — this
+    // pins the count == 5 boundary, which used to answer the median for
+    // every q); (b) the estimate always stays inside the observed range;
+    // (c) on a large smooth stream it lands near the exact quantile.
+    use infadapter::monitoring::P2Quantile;
+
+    fn exact(sorted: &[f64], q: f64) -> f64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    let mut rng = Rng::seed_from_u64(109);
+    for _ in 0..200 {
+        let q = rng.f64();
+        let n = 1 + rng.below(5); // 1..=5 observations: exact regime
+        let mut est = P2Quantile::new(q);
+        let mut sample = Vec::new();
+        for _ in 0..n {
+            let x = rng.f64() * 100.0;
+            est.record(x);
+            sample.push(x);
+        }
+        sample.sort_by(f64::total_cmp);
+        assert_eq!(
+            est.value(),
+            Some(exact(&sample, q)),
+            "n={n} q={q}: small-count estimate must be the exact rank statistic"
+        );
+    }
+
+    for case in 0..20 {
+        let q = [0.5, 0.9, 0.95, 0.99][case % 4];
+        // Half the cases stress the converged regime (large n, accuracy
+        // bound); half stress short streams (range bound only — P² makes
+        // no accuracy promise right after the markers detach).
+        let n = if case % 2 == 0 {
+            20_000
+        } else {
+            6 + rng.below(3000)
+        };
+        let mut est = P2Quantile::new(q);
+        let mut sample = Vec::new();
+        for _ in 0..n {
+            let x = rng.exp1();
+            est.record(x);
+            sample.push(x);
+        }
+        sample.sort_by(f64::total_cmp);
+        let v = est.value().unwrap();
+        assert!(
+            (sample[0]..=sample[n - 1]).contains(&v),
+            "n={n} q={q}: estimate {v} escaped the observed range"
+        );
+        if n >= 10_000 {
+            let truth = exact(&sample, q);
+            assert!(
+                (v - truth).abs() / truth.max(1e-9) < 0.15,
+                "n={n} q={q}: approx {v} vs exact {truth}"
+            );
+        }
+    }
+}

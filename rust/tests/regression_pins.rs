@@ -23,6 +23,11 @@
 //! bit-identical to the serial reference path at every thread count
 //! (summaries, per-interval rows, tier breakdowns), and the N=1
 //! single-service wrapper never changes behaviour under the knob.
+//!
+//! PR 7 pins the telemetry plane: **telemetry is a pure observer** — a
+//! run with the registry, stage profiler, and flight recorder enabled
+//! must make bit-identical decisions to a telemetry-off run (summaries,
+//! per-interval rows, tier breakdowns), at every solver thread count.
 
 use infadapter::adapter::InfAdapterPolicy;
 use infadapter::config::{AdmissionConfig, Config, ObjectiveWeights};
@@ -308,6 +313,68 @@ fn parallel_fleet_is_bit_identical_to_serial() {
                 "interval rows diverge at {threads} threads"
             );
         }
+    }
+}
+
+#[test]
+fn telemetry_on_is_bit_identical_to_off() {
+    // The ISSUE 7 invariant: telemetry observes, it never participates.
+    // Counters, the stage profiler, and the flight recorder may read any
+    // decision, but no decision may read them — so an overload run (the
+    // scenario that exercises admission shedding, tiered class mixes,
+    // NoRoute fallbacks, SLO-burn trips, and the solve/decide fan-out)
+    // must be bit-identical with the plane on or off, at both the serial
+    // reference thread count and a parallel one.
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission.enabled = true;
+    let base = FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    let dir = Path::new("/nonexistent");
+    for threads in [1usize, 8] {
+        let run_at = |telemetry: bool| {
+            let mut s = base.clone();
+            s.solver_threads = threads;
+            s.telemetry.enabled = telemetry;
+            s.run(&FleetMode::Arbiter, dir)
+        };
+        let off = run_at(false);
+        let on = run_at(true);
+        assert!(off.summary.shed > 0, "the overload pin must actually shed");
+        assert!(
+            off.telemetry.is_none() && off.summary.telemetry.is_none(),
+            "a telemetry-off run must not carry a telemetry section"
+        );
+        // the on-run must genuinely instrument — an accidentally dead
+        // plane would make this pin vacuous
+        let ft = on.telemetry.as_ref().expect("telemetry plane missing");
+        assert!(ft.ticks > 0);
+        let ts = on.summary.telemetry.expect("summary telemetry missing");
+        assert!(ts.admitted > 0 && ts.shed > 0);
+
+        assert_eq!(off.summary.total_requests, on.summary.total_requests);
+        assert_eq!(off.summary.shed, on.summary.shed);
+        assert_eq!(off.summary.slo_violation_rate, on.summary.slo_violation_rate);
+        assert_eq!(off.summary.core_seconds, on.summary.core_seconds);
+        assert_eq!(off.summary.services.len(), on.summary.services.len());
+        for (x, y) in off.summary.services.iter().zip(&on.summary.services) {
+            assert_summaries_identical(x, y);
+        }
+        assert_eq!(off.summary.tiers.len(), on.summary.tiers.len());
+        for (x, y) in off.summary.tiers.iter().zip(&on.summary.tiers) {
+            assert_eq!(x, y, "tier breakdowns diverge at {threads} threads");
+        }
+        for (a, b) in off.per_service.iter().zip(&on.per_service) {
+            assert_eq!(a.duration_s, b.duration_s);
+            assert_eq!(
+                a.metrics.rows(a.duration_s),
+                b.metrics.rows(b.duration_s),
+                "interval rows diverge at {threads} threads"
+            );
+        }
+        // and the telemetry plane's own books must balance with the run
+        assert_eq!(ts.shed, on.summary.shed, "shed counter disagrees");
     }
 }
 

@@ -1,0 +1,216 @@
+//! Integration tests for the PR 7 telemetry plane.
+//!
+//! The bit-identity invariant itself is pinned in
+//! `tests/regression_pins.rs::telemetry_on_is_bit_identical_to_off`; this
+//! suite covers the *content* side: the NoRoute counter split, the
+//! anomaly-triggered flight-recorder dump, and the Prometheus / JSON
+//! export artifacts of a real overload run.
+
+use infadapter::config::{AdmissionConfig, Config};
+use infadapter::dispatcher::{AdmissionGate, NoRoute, RequestPath, RouteOutcome};
+use infadapter::fleet::{FleetMode, FleetScenario};
+use infadapter::profiler::ProfileSet;
+use infadapter::telemetry::{parse_exposition, ShardTelemetry, STAGES};
+use std::path::Path;
+
+#[test]
+fn reweight_to_zero_counts_nocapacity_not_unconfigured() {
+    // Regression for the NoRoute counter split: a dispatcher whose quota
+    // table was *reweighted to zero* (the adapter granted no capacity)
+    // must count as NoCapacity — only a dispatcher that never saw a
+    // weight table at all is Unconfigured.  Conflating them hides "the
+    // policy zeroed this service out" behind "nothing is wired up yet".
+    let mut telem = ShardTelemetry::new(true);
+    let mut path = RequestPath::new(AdmissionGate::disabled());
+
+    // never configured: Unconfigured
+    let out = path.handle(0.1, 0);
+    assert_eq!(out, RouteOutcome::Denied(NoRoute::Unconfigured));
+    if let RouteOutcome::Denied(r) = out {
+        telem.record_noroute(r);
+    }
+    assert_eq!(telem.noroute_unconfigured, 1);
+    assert_eq!(telem.noroute_nocapacity, 0);
+
+    // configured with real capacity: routable
+    path.set_weights(&[("resnet18".into(), 2.0)]);
+    assert!(matches!(path.handle(0.2, 0), RouteOutcome::Routed(_)));
+
+    // reweighted to zero: NoCapacity, never Unconfigured
+    path.set_weights(&[("resnet18".into(), 0.0)]);
+    let out = path.handle(0.3, 0);
+    assert_eq!(out, RouteOutcome::Denied(NoRoute::NoCapacity));
+    if let RouteOutcome::Denied(r) = out {
+        telem.record_noroute(r);
+    }
+    assert_eq!(telem.noroute_unconfigured, 1, "zero-weight is not unconfigured");
+    assert_eq!(telem.noroute_nocapacity, 1);
+
+    // and an empty table after configuration is still NoCapacity
+    path.set_weights(&[]);
+    if let RouteOutcome::Denied(r) = path.handle(0.4, 0) {
+        telem.record_noroute(r);
+    } else {
+        panic!("an emptied table must deny");
+    }
+    assert_eq!(telem.noroute_unconfigured, 1);
+    assert_eq!(telem.noroute_nocapacity, 2);
+}
+
+#[test]
+fn disabled_shard_telemetry_ignores_noroute() {
+    let mut telem = ShardTelemetry::new(false);
+    telem.record_noroute(NoRoute::Unconfigured);
+    telem.record_noroute(NoRoute::NoCapacity);
+    assert_eq!(telem, ShardTelemetry::new(false));
+}
+
+#[test]
+fn overload_run_trips_the_flight_recorder_and_exports() {
+    // The acceptance artifact: a fleet run that genuinely sheds must trip
+    // the flight recorder, and the dump must carry the last K ticks'
+    // decisions with per-stage timings and solver/cache counters — the
+    // same content `fleet --telemetry` writes to <prefix>_flight.json.
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission = AdmissionConfig {
+        enabled: true,
+        ..AdmissionConfig::default()
+    };
+    let mut scenario =
+        FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    scenario.telemetry.enabled = true;
+    scenario.telemetry.flight_ticks = 4;
+    scenario.telemetry.shed_trip_fraction = 0.05;
+    let out = scenario.run(&FleetMode::Arbiter, Path::new("/nonexistent"));
+    assert!(out.summary.shed > 0, "the overload run must actually shed");
+
+    let ft = out.telemetry.as_ref().expect("telemetry plane missing");
+    assert!(ft.ticks >= 4, "need at least a full flight window");
+    assert!(
+        ft.flight.tripped(),
+        "a shedding overload run must trip the recorder"
+    );
+    for (tick, reason) in ft.flight.trips() {
+        assert!((1..=ft.ticks).contains(tick));
+        assert!(
+            reason == "shed" || reason == "slo_burn",
+            "unknown trip reason {reason}"
+        );
+    }
+
+    // the dump holds exactly the last K=4 ticks, newest last
+    let dump = ft.flight.dump();
+    assert_eq!(dump.get("window").unwrap().as_f64().unwrap(), 4.0);
+    let ticks = dump.get("ticks").unwrap().as_arr().unwrap();
+    assert_eq!(ticks.len(), 4);
+    let trips = dump.get("trips").unwrap().as_arr().unwrap();
+    assert!(!trips.is_empty());
+    for (i, t) in ticks.iter().enumerate() {
+        let ordinal = t.get("tick").unwrap().as_f64().unwrap() as u64;
+        assert_eq!(ordinal, ft.ticks - 3 + i as u64, "ring must be contiguous");
+        let stages = t.get("stages").unwrap();
+        for s in STAGES {
+            // per-stage wall-clock is present for every stage, every tick
+            assert!(stages.get(&format!("{s}_ns")).unwrap().as_f64().unwrap() >= 0.0);
+        }
+        let services = t.get("services").unwrap().as_arr().unwrap();
+        assert_eq!(services.len(), 2);
+        for svc in services {
+            // the decision: what the arbiter granted vs what was asked
+            assert!(svc.get("grant").is_some());
+            assert!(svc.get("lambda_hat").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(svc.get("target_cores").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(svc.get("supply_rps").unwrap().as_f64().unwrap() >= 0.0);
+            // solver / cache introspection rides along on every row
+            let hits = svc.get("cache_hits").unwrap().as_f64().unwrap();
+            let warm = svc.get("cache_warm").unwrap().as_f64().unwrap();
+            let cold = svc.get("cache_cold").unwrap().as_f64().unwrap();
+            assert!(hits + warm + cold >= 1.0, "cache counters missing");
+            assert!(svc.get("solver_nodes").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(svc.get("curve_prunes").is_some());
+            assert!(svc.get("seed_rescores").is_some());
+        }
+    }
+    // the dump is valid JSON end to end
+    let reparsed = infadapter::util::json::parse(&dump.to_string_pretty()).unwrap();
+    assert_eq!(
+        reparsed.get("window").unwrap().as_f64().unwrap(),
+        4.0,
+        "dump must round-trip through the JSON writer"
+    );
+
+    // Prometheus exposition round-trips and agrees with the summary
+    let ts = out.summary.telemetry.expect("summary telemetry missing");
+    let parsed = parse_exposition(&ft.registry().to_prometheus());
+    assert_eq!(parsed["infadapter_ticks_total"], ft.ticks as f64);
+    assert_eq!(parsed["infadapter_admitted_total"], ts.admitted as f64);
+    assert_eq!(parsed["infadapter_shed_total"], ts.shed as f64);
+    assert_eq!(
+        parsed["infadapter_solver_nodes_total"],
+        ts.solver_nodes as f64
+    );
+    assert_eq!(
+        parsed["infadapter_curve_cache_hits_total"]
+            + parsed["infadapter_curve_cache_warm_total"]
+            + parsed["infadapter_curve_cache_cold_total"],
+        (ts.cache_hits + ts.cache_warm + ts.cache_cold) as f64
+    );
+    assert_eq!(
+        parsed["infadapter_flight_trips_total"],
+        ft.flight.trips().len() as f64
+    );
+    assert!(parsed["infadapter_stage_solve_ns_count"] >= ft.ticks as f64);
+
+    // and the JSON snapshot artifact mirrors the same registry
+    let snap = ft.snapshot_json();
+    assert_eq!(
+        snap.get("ticks").unwrap().as_f64().unwrap(),
+        ft.ticks as f64
+    );
+    assert_eq!(
+        snap.get("flight_trips").unwrap().as_f64().unwrap(),
+        ft.flight.trips().len() as f64
+    );
+    let reg = snap.get("registry").unwrap();
+    assert_eq!(
+        reg.get("counters")
+            .unwrap()
+            .get("infadapter_shed_total")
+            .unwrap()
+            .as_f64()
+            .unwrap(),
+        ts.shed as f64
+    );
+}
+
+#[test]
+fn telemetry_summary_books_balance_with_the_run() {
+    // The merged TelemetrySummary must agree with the run's own metrics:
+    // every shed the gate counted is a shed the summary counted, and the
+    // per-tier admit/shed splits cover the totals.
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission.enabled = true;
+    let mut scenario =
+        FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    scenario.telemetry.enabled = true;
+    let out = scenario.run(&FleetMode::Arbiter, Path::new("/nonexistent"));
+    let ts = out.summary.telemetry.expect("summary telemetry missing");
+    assert_eq!(ts.shed, out.summary.shed);
+    let ft = out.telemetry.as_ref().expect("telemetry plane missing");
+    assert_eq!(ft.shard.admitted(), ts.admitted);
+    assert_eq!(ft.shard.shed(), ts.shed);
+    let tier_shed: u64 = out.summary.tiers.iter().map(|t| t.shed).sum();
+    assert_eq!(tier_shed, ts.shed, "per-tier sheds must cover the total");
+    // solver work happened and the cache books are complete
+    assert!(ts.solver_nodes > 0);
+    assert_eq!(
+        ft.cache.total(),
+        ts.cache_hits + ts.cache_warm + ts.cache_cold
+    );
+}
