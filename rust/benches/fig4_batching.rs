@@ -102,6 +102,8 @@ fn main() {
                 batch_max_wait_s: 0.05,
                 admission: Default::default(),
                 solver_threads: 0,
+                telemetry: Default::default(),
+                fault: Default::default(),
             },
         );
         let mut policy = StaticPolicy::with_batch(variant, cores, batch);
@@ -143,6 +145,8 @@ fn main() {
             batch_max_wait_s: 0.05,
             admission: Default::default(),
             solver_threads: 0,
+            telemetry: Default::default(),
+            fault: Default::default(),
         },
     );
     let mut policy = StaticPolicy::with_batch(variant, cores, 8);

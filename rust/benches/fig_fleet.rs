@@ -37,9 +37,17 @@
 //! per-core scaling efficiency.  The two runs are asserted bit-identical
 //! on the way through (the pin in `regression_pins.rs` holds at every N).
 //!
+//! **Part D (crash storm):** the PR 8 robustness probe.  The Part A
+//! scenario rides a seeded fault storm — pod crashes inside a window,
+//! slow-start respawns, stragglers, solver stalls — twice: once with the
+//! failure reactions disarmed (faults injected, serving path unchanged)
+//! and once armed (health-checked routing, SLO-budgeted retries, hedging,
+//! gate refresh on capacity loss, solver-stall fallback).  The headline
+//! is the SLO-violation reduction the reactions buy during the storm.
+//!
 //! `--short` shrinks the traces for CI; `--json <path>` writes the
-//! Part B matrix + headline and the Part C scaling table (uploaded as
-//! the BENCH_fleet.json artifact).
+//! Part B matrix + headline, the Part C scaling table, and the Part D
+//! storm cells (uploaded as the BENCH_fleet.json artifact).
 //! Timeline CSVs land in target/figures/fig_fleet_<mode>_<service>.csv.
 
 use infadapter::config::Config;
@@ -306,6 +314,73 @@ fn main() {
         part_c.last().unwrap().2
     );
 
+    // --- Part D: crash storm — failure reactions off vs on ------------
+    // The PR 8 robustness probe: the Part A scenario rides a seeded crash
+    // storm (pod crashes inside a window, slow-start respawns, stragglers,
+    // solver stalls).  Both cells inject the *same fault process* (same
+    // rates, same strided streams); the only difference is whether the
+    // failure-aware serving path is armed — health-checked routing with
+    // ejection/probe, SLO-budgeted retries, hedging off stragglers,
+    // emergency gate refresh on capacity loss, and last-good-decision
+    // fallback on solver stalls.
+    println!("\n# Part D: crash storm, failure reactions off vs on (B=12)");
+    let storm_start = seconds / 4;
+    let storm_end = seconds / 2;
+    let storm = |reactions: bool| -> FleetRunOutput {
+        let mut c = Config::default();
+        c.adapter.forecaster = "last_max".into();
+        c.admission.enabled = true;
+        c.telemetry.enabled = true;
+        c.fault
+            .apply_spec(&format!(
+                "crash:0.004:{storm_start}:{storm_end},slowstart:2,\
+                 straggler:0.002:20:4,stall:0.05,retries:2,backoff:0.2"
+            ))
+            .expect("valid storm spec");
+        c.fault.reactions = reactions;
+        let s = FleetScenario::synthetic(2, 30.0, seconds, 12, &c, &profiles);
+        s.run(&FleetMode::Arbiter, &dir)
+    };
+    let storm_off = storm(false);
+    let storm_on = storm(true);
+    println!(
+        "{:<13} {:>9} {:>8} {:>8} {:>8} {:>8} {:>10} {:>10}",
+        "reactions", "SLOviol%", "failed", "dropped", "crashes", "retries", "fallbacks", "cost(avg)"
+    );
+    for (label, out) in [("off", &storm_off), ("on", &storm_on)] {
+        let s = &out.summary;
+        let t = s.telemetry.as_ref().expect("telemetry enabled");
+        println!(
+            "{:<13} {:>9.2} {:>8} {:>8} {:>8} {:>8} {:>10} {:>10.2}",
+            label,
+            s.slo_violation_rate * 100.0,
+            s.failed,
+            s.dropped,
+            t.pod_crashes,
+            t.retries,
+            t.fallback_solves,
+            s.avg_cost_cores
+        );
+    }
+    let viol_off = storm_off.summary.slo_violation_rate;
+    let viol_on = storm_on.summary.slo_violation_rate;
+    let storm_red = if viol_off > 0.0 {
+        (1.0 - viol_on / viol_off) * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "# Part D headline: failure reactions cut storm SLO violations by \
+         {:.1}% ({:.2}% -> {:.2}%) and failed requests {} -> {} at cost \
+         delta {:+.2} cores",
+        storm_red,
+        viol_off * 100.0,
+        viol_on * 100.0,
+        storm_off.summary.failed,
+        storm_on.summary.failed,
+        storm_on.summary.avg_cost_cores - storm_off.summary.avg_cost_cores
+    );
+
     if let Some(path) = json_path {
         let cell_json = |label: &str,
                          admission: bool,
@@ -395,6 +470,61 @@ fn main() {
                                 })
                                 .collect(),
                         ),
+                    ),
+                ]),
+            ),
+            (
+                "part_d",
+                Value::obj(vec![
+                    ("crash_rate", Value::Num(0.004)),
+                    ("storm_start_s", Value::Num(storm_start as f64)),
+                    ("storm_end_s", Value::Num(storm_end as f64)),
+                    (
+                        "cells",
+                        Value::Arr(
+                            [("off", &storm_off), ("on", &storm_on)]
+                                .iter()
+                                .map(|(label, out)| {
+                                    let s = &out.summary;
+                                    let t =
+                                        s.telemetry.as_ref().expect("telemetry enabled");
+                                    Value::obj(vec![
+                                        ("reactions", Value::Str(label.to_string())),
+                                        (
+                                            "slo_violation_rate",
+                                            Value::Num(s.slo_violation_rate),
+                                        ),
+                                        ("failed", Value::Num(s.failed as f64)),
+                                        ("dropped", Value::Num(s.dropped as f64)),
+                                        ("pod_crashes", Value::Num(t.pod_crashes as f64)),
+                                        ("retries", Value::Num(t.retries as f64)),
+                                        ("ejections", Value::Num(t.ejections as f64)),
+                                        (
+                                            "hedged_batches",
+                                            Value::Num(t.hedged_batches as f64),
+                                        ),
+                                        (
+                                            "fallback_solves",
+                                            Value::Num(t.fallback_solves as f64),
+                                        ),
+                                        ("avg_cost_cores", Value::Num(s.avg_cost_cores)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "headline",
+                        Value::obj(vec![
+                            ("violation_reduction_pct", Value::Num(storm_red)),
+                            (
+                                "cost_delta_cores",
+                                Value::Num(
+                                    storm_on.summary.avg_cost_cores
+                                        - storm_off.summary.avg_cost_cores,
+                                ),
+                            ),
+                        ]),
                     ),
                 ]),
             ),

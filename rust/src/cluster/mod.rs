@@ -20,6 +20,11 @@ pub enum PodState {
     Ready,
     /// Being removed; kept only until in-flight work drains.
     Draining { since: f64 },
+    /// Crashed (fault injection): serves nothing, leaves the committed
+    /// view at once, and is reaped — without drain grace — by the next
+    /// `tick`.  Its replacement respawns Pending with the (possibly
+    /// slow-start-inflated) loading cost.
+    Failed,
 }
 
 /// One backend container serving a single variant with a core allocation.
@@ -51,9 +56,11 @@ impl Pod {
     /// (Pending + Ready).  Draining pods are excluded: they are already
     /// scheduled for removal, so the adapter must not treat their variant
     /// as "still loaded" when costing a reload (`tc_m`), nor re-target
-    /// them.
+    /// them.  Failed pods are excluded for the same reason — the crash
+    /// lost the loaded model, and the replacement already carries the
+    /// variant's committed claim.
     pub fn is_committed(&self) -> bool {
-        !matches!(self.state, PodState::Draining { .. })
+        !matches!(self.state, PodState::Draining { .. } | PodState::Failed)
     }
 }
 
@@ -121,7 +128,7 @@ impl Cluster {
         // 1. Variants that must shrink to zero: drain directly.
         let targets_of = |v: &str| target.get(v).copied().unwrap_or(0);
         for pod in self.pods.iter_mut() {
-            if matches!(pod.state, PodState::Draining { .. }) {
+            if matches!(pod.state, PodState::Draining { .. } | PodState::Failed) {
                 continue;
             }
             if targets_of(&pod.variant) == 0 {
@@ -137,7 +144,8 @@ impl Cluster {
                 .pods
                 .iter()
                 .filter(|p| {
-                    &p.variant == variant && !matches!(p.state, PodState::Draining { .. })
+                    &p.variant == variant
+                        && !matches!(p.state, PodState::Draining { .. } | PodState::Failed)
                 })
                 .max_by_key(|p| p.id);
             match current {
@@ -199,6 +207,14 @@ impl Cluster {
                 removed.push((p.id, p.variant.clone()));
                 false
             }
+            // crashed pods are reaped without grace — there is nothing
+            // left to drain (the shard already failed their in-flight
+            // work at crash time, so the PodRemoved below is a no-op
+            // there)
+            PodState::Failed => {
+                removed.push((p.id, p.variant.clone()));
+                false
+            }
             _ => true,
         });
         for (pod_id, variant) in removed {
@@ -230,6 +246,42 @@ impl Cluster {
     /// this over time).
     pub fn billed_cores(&self) -> usize {
         self.pods.iter().filter(|p| p.is_billed()).map(|p| p.cores).sum()
+    }
+
+    /// Kill a Ready pod (the fault plane's crash injection): it flips to
+    /// [`PodState::Failed`] — out of the ready and committed views at
+    /// once, reaped by the next `tick` — and a replacement is spawned
+    /// Pending with `respawn_readiness_s` of loading cost (the caller
+    /// applies any slow-start inflation), the VPA-restart dynamic the
+    /// paper measures.  If no node can host the replacement while the
+    /// corpse still holds its reservation, the normal reconcile path
+    /// re-creates the variant once capacity frees.  Returns whether the
+    /// pod existed and was Ready.
+    pub fn fail_pod(&mut self, pod_id: u64, now: f64, respawn_readiness_s: f64) -> bool {
+        let Some(idx) = self.pods.iter().position(|p| p.id == pod_id && p.is_ready()) else {
+            return false;
+        };
+        let variant = self.pods[idx].variant.clone();
+        let cores = self.pods[idx].cores;
+        self.pods[idx].state = PodState::Failed;
+        if let Some(node) = self.place(cores) {
+            let id = self.next_pod_id;
+            self.next_pod_id += 1;
+            self.pods.push(Pod {
+                id,
+                variant,
+                cores,
+                node,
+                state: PodState::Pending {
+                    ready_at: now + respawn_readiness_s,
+                },
+            });
+        } else {
+            eprintln!(
+                "[cluster] no node capacity to respawn {variant} x{cores}; waiting for reconcile"
+            );
+        }
+        true
     }
 
     pub fn pods(&self) -> &[Pod] {
@@ -363,6 +415,39 @@ mod tests {
         assert_eq!(ready["resnet101"], 6);
         assert_eq!(ready["resnet152"], 6);
         assert_eq!(c.billed_cores(), 14);
+    }
+
+    #[test]
+    fn fail_pod_respawns_with_loading_cost() {
+        let mut c = Cluster::new(&[48]);
+        c.apply(&target(&[("resnet50", 6)]), 0.0, |_| 4.0);
+        c.tick(4.0);
+        let dead = c.pods()[0].id;
+        assert!(c.fail_pod(dead, 10.0, 8.0));
+        // the corpse leaves the ready view at once; the replacement
+        // carries the variant's committed claim
+        assert!(c.ready_allocation().is_empty());
+        assert_eq!(c.committed_allocation()["resnet50"], 6);
+        // the corpse is reaped (no drain grace) by the next tick
+        let ev = c.tick(11.0);
+        assert!(ev
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::PodRemoved { pod_id, .. } if *pod_id == dead)));
+        assert!(c.ready_allocation().is_empty());
+        // reconcile sees the pending replacement, not the corpse: no
+        // duplicate pod is created
+        let created = c.apply(&target(&[("resnet50", 6)]), 11.0, |_| 4.0);
+        assert!(created.is_empty(), "replacement already pending");
+        // the respawn becomes Ready only after the inflated loading cost
+        assert!(c.tick(17.9).is_empty());
+        let ev = c.tick(18.0);
+        assert!(ev
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::PodReady { .. })));
+        assert_eq!(c.ready_allocation()["resnet50"], 6);
+        // failing an unknown or non-Ready pod is a no-op
+        assert!(!c.fail_pod(dead, 19.0, 1.0));
+        assert!(!c.fail_pod(9999, 19.0, 1.0));
     }
 
     #[test]

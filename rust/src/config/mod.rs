@@ -143,6 +143,88 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// Fault-injection plane + failure-aware reactions (see [`crate::fault`]).
+///
+/// Everything defaults to **off**: with `enabled = false` (or all rates at
+/// zero) no fault RNG stream is ever drawn and the run is bit-identical to
+/// a fault-free build (pinned in `tests/regression_pins.rs`).  Faults are
+/// drawn from per-service SplitMix64-strided streams — the same discipline
+/// as arrivals — so any fault run replays exactly from its seed, at every
+/// `solver_threads` count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch; off (the default) skips every fault draw.
+    pub enabled: bool,
+    /// Per-Ready-pod, per-second crash probability (Bernoulli at each
+    /// cluster boundary).  A crashed pod fails its in-flight requests and
+    /// respawns as Pending with the variant's loading cost — the
+    /// VPA-restart dynamic the paper measures.
+    pub crash_rate: f64,
+    /// Crash window start, seconds (crashes only inside the window).
+    pub crash_start_s: f64,
+    /// Crash window end, seconds.  Defaults to effectively-forever (1e9,
+    /// exact in f64 so the config round-trips through JSON).
+    pub crash_end_s: f64,
+    /// Readiness multiplier on crash respawns (slow starts): the
+    /// replacement pod's loading time is `readiness × slow_start_factor`.
+    pub slow_start_factor: f64,
+    /// Per-Ready-pod, per-second straggler-onset probability.
+    pub straggler_rate: f64,
+    /// Service-time multiplier a straggling pod applies to every batch it
+    /// serves while the straggle window is open.
+    pub straggler_mult: f64,
+    /// How long a straggle episode lasts, seconds.
+    pub straggler_window_s: f64,
+    /// Per-adapter-tick probability that a service's curve solve stalls;
+    /// with reactions on the tick falls back to the last-good decision
+    /// (`SolveOutcome::Fallback`) instead of re-solving.
+    pub stall_rate: f64,
+    /// Master switch for the failure-aware reactions (health-checked
+    /// routing, retries, hedging, gate refresh on capacity loss, solver
+    /// fallback).  Off = faults are injected but the serving path reacts
+    /// exactly as the pre-fault pipeline did (the reactions-off baseline
+    /// `fig_fleet` Part D measures against).
+    pub reactions: bool,
+    /// Retry budget per request after a pod failure strands it.
+    pub max_retries: u32,
+    /// Base retry backoff, seconds; attempt k waits `backoff × 2^k`,
+    /// charged against the request's remaining SLO budget — a retry that
+    /// cannot make the deadline fails immediately instead of wasting a
+    /// slot.
+    pub retry_backoff_s: f64,
+    /// Consecutive routing failures before the dispatcher ejects a
+    /// backend from the smooth-WRR rotation.
+    pub eject_after: u32,
+    /// Seconds an ejected backend sits out before one half-open probe
+    /// request may readmit it.
+    pub probe_after_s: f64,
+    /// Hedge queued work away from a straggling pod when the straggle is
+    /// detected (in-service batches finish where they are).
+    pub hedge: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            crash_rate: 0.0,
+            crash_start_s: 0.0,
+            crash_end_s: 1e9,
+            slow_start_factor: 1.0,
+            straggler_rate: 0.0,
+            straggler_mult: 1.0,
+            straggler_window_s: 30.0,
+            stall_rate: 0.0,
+            reactions: false,
+            max_retries: 1,
+            retry_backoff_s: 0.05,
+            eject_after: 3,
+            probe_after_s: 5.0,
+            hedge: true,
+        }
+    }
+}
+
 /// Server-side batching parameters (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchingConfig {
@@ -287,6 +369,8 @@ pub struct Config {
     pub admission: AdmissionConfig,
     /// Telemetry plane (disabled by default).
     pub telemetry: TelemetryConfig,
+    /// Fault injection + failure-aware reactions (disabled by default).
+    pub fault: FaultConfig,
     /// Multi-service fleet definition (empty services = disabled).
     pub fleet: FleetConfig,
     /// Variants eligible for selection; empty = all in the manifest.
@@ -398,6 +482,43 @@ impl Config {
             },
             None => d.telemetry,
         };
+        let fault = match v.get("fault") {
+            Some(f) => FaultConfig {
+                enabled: match f.get("enabled") {
+                    Some(x) => x.as_bool()?,
+                    None => d.fault.enabled,
+                },
+                crash_rate: f64_or(f, "crash_rate", d.fault.crash_rate)?,
+                crash_start_s: f64_or(f, "crash_start_s", d.fault.crash_start_s)?,
+                crash_end_s: f64_or(f, "crash_end_s", d.fault.crash_end_s)?,
+                slow_start_factor: f64_or(f, "slow_start_factor", d.fault.slow_start_factor)?,
+                straggler_rate: f64_or(f, "straggler_rate", d.fault.straggler_rate)?,
+                straggler_mult: f64_or(f, "straggler_mult", d.fault.straggler_mult)?,
+                straggler_window_s: f64_or(
+                    f,
+                    "straggler_window_s",
+                    d.fault.straggler_window_s,
+                )?,
+                stall_rate: f64_or(f, "stall_rate", d.fault.stall_rate)?,
+                reactions: match f.get("reactions") {
+                    Some(x) => x.as_bool()?,
+                    None => d.fault.reactions,
+                },
+                max_retries: usize_or(f, "max_retries", d.fault.max_retries as usize)?
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("fault max_retries must fit in u32"))?,
+                retry_backoff_s: f64_or(f, "retry_backoff_s", d.fault.retry_backoff_s)?,
+                eject_after: usize_or(f, "eject_after", d.fault.eject_after as usize)?
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("fault eject_after must fit in u32"))?,
+                probe_after_s: f64_or(f, "probe_after_s", d.fault.probe_after_s)?,
+                hedge: match f.get("hedge") {
+                    Some(x) => x.as_bool()?,
+                    None => d.fault.hedge,
+                },
+            },
+            None => d.fault,
+        };
         let fleet = match v.get("fleet") {
             Some(f) => FleetConfig {
                 global_budget: usize_or(f, "global_budget", 0)?,
@@ -466,6 +587,7 @@ impl Config {
             batching,
             admission,
             telemetry,
+            fault,
             fleet,
             variants,
             seed: v.get("seed").map(|s| s.as_u64()).transpose()?.unwrap_or(0),
@@ -549,6 +671,32 @@ impl Config {
                         "shed_trip_fraction",
                         Value::Num(self.telemetry.shed_trip_fraction),
                     ),
+                ]),
+            ),
+            (
+                "fault",
+                Value::obj(vec![
+                    ("enabled", Value::Bool(self.fault.enabled)),
+                    ("crash_rate", Value::Num(self.fault.crash_rate)),
+                    ("crash_start_s", Value::Num(self.fault.crash_start_s)),
+                    ("crash_end_s", Value::Num(self.fault.crash_end_s)),
+                    (
+                        "slow_start_factor",
+                        Value::Num(self.fault.slow_start_factor),
+                    ),
+                    ("straggler_rate", Value::Num(self.fault.straggler_rate)),
+                    ("straggler_mult", Value::Num(self.fault.straggler_mult)),
+                    (
+                        "straggler_window_s",
+                        Value::Num(self.fault.straggler_window_s),
+                    ),
+                    ("stall_rate", Value::Num(self.fault.stall_rate)),
+                    ("reactions", Value::Bool(self.fault.reactions)),
+                    ("max_retries", Value::Num(self.fault.max_retries as f64)),
+                    ("retry_backoff_s", Value::Num(self.fault.retry_backoff_s)),
+                    ("eject_after", Value::Num(self.fault.eject_after as f64)),
+                    ("probe_after_s", Value::Num(self.fault.probe_after_s)),
+                    ("hedge", Value::Bool(self.fault.hedge)),
                 ]),
             ),
             (
@@ -675,6 +823,55 @@ impl Config {
             self.telemetry.shed_trip_fraction > 0.0 && self.telemetry.shed_trip_fraction <= 1.0,
             "telemetry shed_trip_fraction must be in (0, 1]"
         );
+        let rate_ok = |r: f64| r.is_finite() && (0.0..=1.0).contains(&r);
+        anyhow::ensure!(
+            rate_ok(self.fault.crash_rate),
+            "fault crash_rate must be a probability in [0, 1]"
+        );
+        anyhow::ensure!(
+            rate_ok(self.fault.straggler_rate),
+            "fault straggler_rate must be a probability in [0, 1]"
+        );
+        anyhow::ensure!(
+            rate_ok(self.fault.stall_rate),
+            "fault stall_rate must be a probability in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.fault.crash_start_s.is_finite() && self.fault.crash_start_s >= 0.0,
+            "fault crash_start_s must be finite and non-negative"
+        );
+        anyhow::ensure!(
+            self.fault.crash_end_s.is_finite() && self.fault.crash_end_s >= self.fault.crash_start_s,
+            "fault crash_end_s must be finite and at or after crash_start_s"
+        );
+        anyhow::ensure!(
+            self.fault.slow_start_factor.is_finite() && self.fault.slow_start_factor >= 1.0,
+            "fault slow_start_factor must be >= 1"
+        );
+        anyhow::ensure!(
+            self.fault.straggler_mult.is_finite() && self.fault.straggler_mult >= 1.0,
+            "fault straggler_mult must be >= 1"
+        );
+        anyhow::ensure!(
+            self.fault.straggler_window_s.is_finite() && self.fault.straggler_window_s >= 0.0,
+            "fault straggler_window_s must be finite and non-negative"
+        );
+        anyhow::ensure!(
+            self.fault.max_retries <= 16,
+            "fault max_retries must be at most 16"
+        );
+        anyhow::ensure!(
+            self.fault.retry_backoff_s.is_finite() && self.fault.retry_backoff_s >= 0.0,
+            "fault retry_backoff_s must be finite and non-negative"
+        );
+        anyhow::ensure!(
+            self.fault.eject_after >= 1,
+            "fault eject_after must be at least 1"
+        );
+        anyhow::ensure!(
+            self.fault.probe_after_s.is_finite() && self.fault.probe_after_s > 0.0,
+            "fault probe_after_s must be finite and positive"
+        );
         // validated outside the fleet-services block: the CLI can set it
         // on synthetic fleets whose `services` list is empty
         anyhow::ensure!(
@@ -797,6 +994,23 @@ mod tests {
             flight_ticks: 8,
             shed_trip_fraction: 0.5,
         };
+        c.fault = FaultConfig {
+            enabled: true,
+            crash_rate: 0.004,
+            crash_start_s: 60.0,
+            crash_end_s: 180.0,
+            slow_start_factor: 2.0,
+            straggler_rate: 0.001,
+            straggler_mult: 4.0,
+            straggler_window_s: 45.0,
+            stall_rate: 0.1,
+            reactions: true,
+            max_retries: 2,
+            retry_backoff_s: 0.1,
+            eject_after: 5,
+            probe_after_s: 3.0,
+            hedge: false,
+        };
         c.fleet.services = vec![
             FleetServiceConfig {
                 name: "search".into(),
@@ -905,6 +1119,46 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = Config::default();
         c.telemetry.enabled = true;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_validation_catches_bad_values() {
+        let c = Config::default();
+        assert!(!c.fault.enabled, "faults must default off");
+        assert!(!c.fault.reactions, "reactions must default off");
+        c.validate().unwrap();
+        // probabilities outside [0, 1]
+        for set in [
+            (|c: &mut Config| c.fault.crash_rate = -0.1) as fn(&mut Config),
+            |c| c.fault.crash_rate = 1.5,
+            |c| c.fault.straggler_rate = -1.0,
+            |c| c.fault.stall_rate = f64::NAN,
+            // windows and factors
+            |c| c.fault.crash_start_s = -5.0,
+            |c| c.fault.crash_end_s = -1.0, // before crash_start_s = 0
+            |c| {
+                c.fault.crash_start_s = 100.0;
+                c.fault.crash_end_s = 50.0;
+            },
+            |c| c.fault.slow_start_factor = 0.5,
+            |c| c.fault.straggler_mult = 0.0,
+            |c| c.fault.straggler_window_s = -1.0,
+            // reaction knobs
+            |c| c.fault.max_retries = 17,
+            |c| c.fault.retry_backoff_s = -0.01,
+            |c| c.fault.eject_after = 0,
+            |c| c.fault.probe_after_s = 0.0,
+        ] {
+            let mut c = Config::default();
+            set(&mut c);
+            assert!(c.validate().is_err(), "bad fault value must be rejected");
+        }
+        // a fully-specified valid fault section passes
+        let mut c = Config::default();
+        c.fault.enabled = true;
+        c.fault.crash_rate = 0.01;
+        c.fault.reactions = true;
         c.validate().unwrap();
     }
 

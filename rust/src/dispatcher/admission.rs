@@ -263,12 +263,14 @@ impl RequestPath {
         self.dispatcher.set_weights(weights);
     }
 
-    /// The whole pipeline for one arrival.
+    /// The whole pipeline for one arrival.  The clock reaches the router
+    /// so health-checked routing (when armed) can schedule half-open
+    /// probes; with health unset `try_route_at` is exactly `try_route`.
     pub fn handle(&mut self, now_s: f64, tier: Tier) -> RouteOutcome {
         if !self.gate.admit(now_s, tier) {
             return RouteOutcome::Shed(tier);
         }
-        match self.dispatcher.try_route() {
+        match self.dispatcher.try_route_at(now_s) {
             Ok(v) => RouteOutcome::Routed(v),
             Err(e) => RouteOutcome::Denied(e),
         }

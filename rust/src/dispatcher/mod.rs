@@ -40,11 +40,30 @@ pub enum NoRoute {
     NoCapacity,
 }
 
+/// Per-backend health for failure-aware routing: a backend is ejected
+/// from the WRR rotation after `eject_after` *consecutive* routing
+/// failures and readmitted through a single half-open probe request
+/// once `probe_after_s` seconds of sit-out have elapsed.  `None` (the
+/// default) keeps the dispatcher exactly on the pre-health path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthPolicy {
+    /// Consecutive failures before ejection (≥ 1).
+    pub eject_after: u32,
+    /// Sit-out before one probe request may readmit the backend.
+    pub probe_after_s: f64,
+}
+
 #[derive(Debug, Clone)]
 struct Backend {
     name: Arc<str>,
     weight: f64,
     current: f64,
+    /// Consecutive failures since the last success (health only).
+    fails: u32,
+    /// When the backend was ejected; `None` = healthy.
+    ejected_at: Option<f64>,
+    /// A half-open probe request is in flight.
+    probe_inflight: bool,
 }
 
 #[derive(Debug)]
@@ -52,6 +71,36 @@ struct DispatcherState {
     backends: Vec<Backend>,
     /// Whether `set_weights` has ever been called (empty-vs-zeroed).
     configured: bool,
+    /// Health-checked routing; `None` = pre-health behaviour.
+    health: Option<HealthPolicy>,
+}
+
+impl DispatcherState {
+    /// Smooth WRR restricted to backends passing `eligible`; `None` when
+    /// none do.  Ineligible backends neither earn nor spend credit, so an
+    /// ejected backend's smoothing state is frozen while it sits out.
+    fn pick(&mut self, eligible: impl Fn(&Backend) -> bool) -> Option<Arc<str>> {
+        let total: f64 = self
+            .backends
+            .iter()
+            .filter(|b| eligible(b))
+            .map(|b| b.weight)
+            .sum();
+        for b in self.backends.iter_mut() {
+            if eligible(b) {
+                b.current += b.weight;
+            }
+        }
+        let best = self
+            .backends
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| eligible(b))
+            .max_by(|a, b| a.1.current.total_cmp(&b.1.current))
+            .map(|(i, _)| i)?;
+        self.backends[best].current -= total;
+        Some(self.backends[best].name.clone())
+    }
 }
 
 /// Smooth weighted round-robin router.
@@ -72,6 +121,7 @@ impl Dispatcher {
             inner: Arc::new(Mutex::new(DispatcherState {
                 backends: Vec::new(),
                 configured: false,
+                health: None,
             })),
         }
     }
@@ -104,10 +154,18 @@ impl Dispatcher {
             let interned = existing
                 .map(|b| b.name.clone())
                 .unwrap_or_else(|| Arc::from(name.as_str()));
+            // health state survives the every-tick weight re-apply: an
+            // ejected backend stays ejected across quota updates
+            let (fails, ejected_at, probe_inflight) = existing
+                .map(|b| (b.fails, b.ejected_at, b.probe_inflight))
+                .unwrap_or((0, None, false));
             next.push(Backend {
                 name: interned,
                 weight: *w,
                 current,
+                fails,
+                ejected_at,
+                probe_inflight,
             });
         }
         inner.backends = next;
@@ -116,7 +174,20 @@ impl Dispatcher {
 
     /// Pick the next backend (smooth WRR).  The returned name is interned:
     /// cloning it is a reference-count bump, not a string allocation.
+    ///
+    /// Without a clock no half-open probe can ever come due; with health
+    /// unset this is exactly the pre-health routing path.
     pub fn try_route(&self) -> Result<Arc<str>, NoRoute> {
+        self.try_route_at(f64::NEG_INFINITY)
+    }
+
+    /// [`Self::try_route`] with a clock, enabling health-checked routing:
+    /// a probe-eligible ejected backend (sit-out elapsed, no probe in
+    /// flight) takes the request as its half-open probe; otherwise smooth
+    /// WRR runs over the healthy backends only.  When every backend is
+    /// ejected and no probe is due, the table granted capacity but none
+    /// of it is healthy: [`NoRoute::NoCapacity`], never `Unconfigured`.
+    pub fn try_route_at(&self, now: f64) -> Result<Arc<str>, NoRoute> {
         let mut inner = self.inner.lock().unwrap();
         if inner.backends.is_empty() {
             return Err(if inner.configured {
@@ -125,19 +196,92 @@ impl Dispatcher {
                 NoRoute::Unconfigured
             });
         }
-        let total: f64 = inner.backends.iter().map(|b| b.weight).sum();
-        for b in inner.backends.iter_mut() {
-            b.current += b.weight;
-        }
-        let best = inner
+        let Some(health) = inner.health else {
+            return Ok(inner.pick(|_| true).expect("non-empty"));
+        };
+        // half-open probe: the longest-ejected eligible backend carries
+        // this request (index breaks exact ties deterministically)
+        let probe = inner
             .backends
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.current.total_cmp(&b.1.current))
-            .map(|(i, _)| i)
-            .expect("non-empty");
-        inner.backends[best].current -= total;
-        Ok(inner.backends[best].name.clone())
+            .filter(|(_, b)| {
+                !b.probe_inflight
+                    && matches!(b.ejected_at, Some(t) if now - t >= health.probe_after_s)
+            })
+            .min_by(|a, b| {
+                let (ta, tb) = (a.1.ejected_at.unwrap(), b.1.ejected_at.unwrap());
+                ta.total_cmp(&tb).then(a.0.cmp(&b.0))
+            })
+            .map(|(i, _)| i);
+        if let Some(i) = probe {
+            inner.backends[i].probe_inflight = true;
+            return Ok(inner.backends[i].name.clone());
+        }
+        inner
+            .pick(|b| b.ejected_at.is_none())
+            .ok_or(NoRoute::NoCapacity)
+    }
+
+    /// Arm (or disarm) health-checked routing.  Disarming clears all
+    /// ejection state so routing returns to the plain WRR path.
+    pub fn set_health(&self, health: Option<HealthPolicy>) {
+        let mut inner = self.inner.lock().unwrap();
+        if health.is_none() {
+            for b in inner.backends.iter_mut() {
+                b.fails = 0;
+                b.ejected_at = None;
+                b.probe_inflight = false;
+            }
+        }
+        inner.health = health;
+    }
+
+    /// Record a routing failure against `name`.  Returns `true` iff this
+    /// failure *newly* ejects the backend (for telemetry).  A failure on
+    /// an already-ejected backend — a failed half-open probe — restarts
+    /// its sit-out instead.
+    pub fn record_failure(&self, name: &str, now: f64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(health) = inner.health else {
+            return false;
+        };
+        let Some(b) = inner.backends.iter_mut().find(|b| &*b.name == name) else {
+            return false;
+        };
+        if b.ejected_at.is_some() {
+            b.ejected_at = Some(now);
+            b.probe_inflight = false;
+            return false;
+        }
+        b.fails += 1;
+        if b.fails >= health.eject_after {
+            b.ejected_at = Some(now);
+            b.probe_inflight = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record a success on `name`: resets the consecutive-failure streak
+    /// and — if the backend was ejected (a half-open probe succeeded) —
+    /// readmits it with its smooth-WRR credit reset to zero, so the
+    /// recovered backend is not flooded by credit accumulated while out.
+    pub fn record_success(&self, name: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.health.is_none() {
+            return;
+        }
+        let Some(b) = inner.backends.iter_mut().find(|b| &*b.name == name) else {
+            return;
+        };
+        b.fails = 0;
+        if b.ejected_at.is_some() {
+            b.ejected_at = None;
+            b.probe_inflight = false;
+            b.current = 0.0;
+        }
     }
 
     /// [`Self::try_route`] without the reason (legacy callers that treat
@@ -284,6 +428,121 @@ mod tests {
             (5..=15).contains(&b_count),
             "b should keep ~1% of 1010 picks, got {b_count}"
         );
+    }
+
+    #[test]
+    fn all_ejected_is_no_capacity_not_unconfigured() {
+        let d = Dispatcher::new();
+        d.set_health(Some(HealthPolicy {
+            eject_after: 2,
+            probe_after_s: 5.0,
+        }));
+        d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0)]);
+        assert!(!d.record_failure("a", 0.0), "first failure must not eject");
+        assert!(d.record_failure("a", 0.0), "second consecutive failure ejects");
+        // the survivor takes every pick while `a` sits out
+        for _ in 0..8 {
+            assert_eq!(d.try_route_at(1.0).unwrap().as_ref(), "b");
+        }
+        assert!(!d.record_failure("b", 1.0));
+        assert!(d.record_failure("b", 1.0));
+        // every backend ejected, no probe due: configured-but-unhealthy
+        // must read as NoCapacity, never Unconfigured
+        assert_eq!(d.try_route_at(2.0), Err(NoRoute::NoCapacity));
+        // the weight re-apply the adapter does every tick must not
+        // resurrect the ejected backends
+        d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0)]);
+        assert_eq!(d.try_route_at(2.0), Err(NoRoute::NoCapacity));
+        // a success between failures resets the consecutive streak
+        let d2 = Dispatcher::new();
+        d2.set_health(Some(HealthPolicy {
+            eject_after: 2,
+            probe_after_s: 5.0,
+        }));
+        d2.set_weights(&[("a".into(), 1.0)]);
+        assert!(!d2.record_failure("a", 0.0));
+        d2.record_success("a");
+        assert!(!d2.record_failure("a", 0.0), "success must reset the streak");
+    }
+
+    #[test]
+    fn half_open_probe_readmits_after_the_sitout() {
+        let d = Dispatcher::new();
+        d.set_health(Some(HealthPolicy {
+            eject_after: 1,
+            probe_after_s: 5.0,
+        }));
+        d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0)]);
+        assert!(d.record_failure("a", 10.0));
+        // inside the sit-out everything lands on the healthy backend
+        for _ in 0..4 {
+            assert_eq!(d.try_route_at(12.0).unwrap().as_ref(), "b");
+        }
+        // past the window exactly one probe goes to `a` …
+        assert_eq!(d.try_route_at(15.0).unwrap().as_ref(), "a");
+        // … and while it is in flight the rotation stays healthy-only
+        assert_eq!(d.try_route_at(15.0).unwrap().as_ref(), "b");
+        // a failed probe restarts the sit-out (and is not a new ejection)
+        assert!(!d.record_failure("a", 15.0));
+        assert_eq!(d.try_route_at(16.0).unwrap().as_ref(), "b");
+        assert_eq!(d.try_route_at(21.0).unwrap().as_ref(), "a");
+        d.record_success("a");
+        // readmitted: both serve again
+        let picks: Vec<String> = (0..4)
+            .map(|_| d.try_route_at(22.0).unwrap().to_string())
+            .collect();
+        assert!(picks.iter().any(|p| p == "a"), "{picks:?}");
+        assert!(picks.iter().any(|p| p == "b"), "{picks:?}");
+    }
+
+    #[test]
+    fn readmission_resets_wrr_credit() {
+        // While ejected a backend neither earns nor spends credit, and on
+        // readmission its credit restarts at zero — a recovered backend
+        // must serve its fair share, not a make-up flood.
+        let d = Dispatcher::new();
+        d.set_health(Some(HealthPolicy {
+            eject_after: 1,
+            probe_after_s: 1.0,
+        }));
+        d.set_weights(&[("a".into(), 1.0), ("b".into(), 1.0)]);
+        assert!(d.record_failure("a", 0.0));
+        for _ in 0..100 {
+            assert_eq!(d.try_route_at(0.5).unwrap().as_ref(), "b");
+        }
+        // probe + success readmits `a`
+        assert_eq!(d.try_route_at(2.0).unwrap().as_ref(), "a");
+        d.record_success("a");
+        // equal weights from here on: `a` takes ~half, not a flood
+        let picks: Vec<String> = (0..20)
+            .map(|_| d.try_route_at(3.0).unwrap().to_string())
+            .collect();
+        let a_count = picks.iter().filter(|s| *s == "a").count();
+        assert!(
+            (9..=11).contains(&a_count),
+            "readmitted backend got {a_count}/20: {picks:?}"
+        );
+    }
+
+    #[test]
+    fn health_off_routing_is_unchanged() {
+        // With health unset the clocked route is exactly the plain path,
+        // and failure/success records are inert.
+        let a = Dispatcher::new();
+        let b = Dispatcher::new();
+        for d in [&a, &b] {
+            d.set_weights(&[("x".into(), 3.0), ("y".into(), 1.0)]);
+        }
+        b.record_failure("x", 0.0);
+        b.record_failure("x", 1.0);
+        b.record_success("y");
+        for t in 0..24 {
+            assert_eq!(
+                a.try_route().unwrap(),
+                b.try_route_at(t as f64).unwrap(),
+                "health-off routing diverged at pick {t}"
+            );
+        }
     }
 
     #[test]

@@ -107,6 +107,8 @@ impl Scenario {
                 batch_max_wait_s: self.config.batching.max_wait_s,
                 admission: self.config.admission,
                 solver_threads: self.config.fleet.solver_threads,
+                telemetry: self.config.telemetry,
+                fault: self.config.fault,
             },
         );
         let result: SimResult = sim.run(policy.as_mut(), &self.trace);
@@ -226,6 +228,8 @@ impl SaturationProbe {
                     batch_max_wait_s: 0.05,
                     admission: Default::default(),
                     solver_threads: 0,
+                    telemetry: Default::default(),
+                    fault: Default::default(),
                 },
             );
             let mut policy = StaticPolicy::with_batch(variant, cores, self.batch);

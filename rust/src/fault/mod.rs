@@ -1,0 +1,329 @@
+//! Deterministic fault-injection plane.
+//!
+//! [`FaultPlane`] owns one SplitMix64-strided RNG stream per service —
+//! the same striding discipline the engine uses for arrivals and
+//! service-time noise (`fleet::sim::service_seed`), on its own offset —
+//! so the fault draws never touch any other stream: a faults-off run is
+//! bit-identical to a fault-free build, and any fault run replays
+//! exactly from its seed at every `solver_threads` count (every draw
+//! happens at a serial boundary of the tick protocol, in service-index
+//! order, so thread count cannot reorder them).
+//!
+//! Four fault kinds, all configured via the `fault` config section or
+//! the `fleet --faults SPEC` grammar ([`FaultConfig::apply_spec`]):
+//!
+//! - **Pod crashes** — a Ready pod dies at a cluster boundary; its
+//!   in-flight requests fail (bounded retries with deterministic backoff
+//!   when reactions are on) and the cluster respawns it as Pending with
+//!   the variant's loading cost, the VPA-restart dynamic the paper
+//!   measures against.
+//! - **Slow starts** — crash respawns take `readiness ×
+//!   slow_start_factor` to become Ready.
+//! - **Stragglers** — a pod serves every batch `straggler_mult×` slower
+//!   for a window; with reactions on, queued work hedges away from it.
+//! - **Solver stalls** — a service's curve solve misses the tick
+//!   deadline; with reactions on the adapter falls back to the last-good
+//!   decision ([`SolveOutcome::Fallback`]) instead of blocking the tick.
+
+use crate::config::FaultConfig;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// How an adapter tick obtained its decision for one service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveOutcome {
+    /// The curve solve ran and produced a fresh decision.
+    Fresh,
+    /// The solve stalled past the tick deadline; the last-good decision
+    /// was reused.
+    Fallback,
+}
+
+/// Faults drawn for one service at one cluster boundary.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PodFaults {
+    /// Ready pods that crash at this boundary.
+    pub crashed: Vec<u64>,
+    /// Ready pods that begin a straggle episode at this boundary.
+    pub straggling: Vec<u64>,
+}
+
+/// The seeded fault source: one RNG stream per service, advanced only at
+/// serial boundaries and only when the corresponding rate is non-zero.
+#[derive(Debug)]
+pub struct FaultPlane {
+    cfg: FaultConfig,
+    streams: Vec<Rng>,
+}
+
+impl FaultPlane {
+    /// Build the plane from per-service stream seeds (the engine derives
+    /// them as `service_seed(base, i) + FAULT_STREAM_OFFSET` so the
+    /// stride constant lives in one place).
+    pub fn new(cfg: FaultConfig, seeds: Vec<u64>) -> Self {
+        let streams = seeds.into_iter().map(Rng::seed_from_u64).collect();
+        Self { cfg, streams }
+    }
+
+    pub fn cfg(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Whether the failure-aware reactions are armed.
+    pub fn reactions(&self) -> bool {
+        self.cfg.enabled && self.cfg.reactions
+    }
+
+    /// Whether any pod-level fault can ever fire (crashes or stragglers).
+    pub fn injecting(&self) -> bool {
+        self.cfg.enabled && (self.cfg.crash_rate > 0.0 || self.cfg.straggler_rate > 0.0)
+    }
+
+    /// Draw this boundary's pod faults for service `i`.  `ready_pods`
+    /// must be sorted (the caller passes ascending pod ids) so the draw
+    /// sequence is a pure function of serial simulation state.
+    pub fn draw_pod_faults(&mut self, i: usize, now: f64, ready_pods: &[u64]) -> PodFaults {
+        let mut out = PodFaults::default();
+        if !self.injecting() {
+            return out;
+        }
+        debug_assert!(ready_pods.windows(2).all(|w| w[0] < w[1]));
+        let crash_armed = self.cfg.crash_rate > 0.0
+            && now >= self.cfg.crash_start_s
+            && now < self.cfg.crash_end_s;
+        let rng = &mut self.streams[i];
+        for &pod in ready_pods {
+            if crash_armed && rng.f64() < self.cfg.crash_rate {
+                out.crashed.push(pod);
+                continue; // a dead pod cannot also straggle
+            }
+            if self.cfg.straggler_rate > 0.0 && rng.f64() < self.cfg.straggler_rate {
+                out.straggling.push(pod);
+            }
+        }
+        out
+    }
+
+    /// Draw whether service `i`'s solve stalls this adapter tick.
+    pub fn roll_stall(&mut self, i: usize) -> bool {
+        if !self.cfg.enabled || self.cfg.stall_rate <= 0.0 {
+            return false;
+        }
+        self.streams[i].f64() < self.cfg.stall_rate
+    }
+}
+
+fn parse_bool(kind: &str, s: &str) -> Result<bool> {
+    match s {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        _ => bail!("fault spec `{kind}` takes on|off, got `{s}`"),
+    }
+}
+
+impl FaultConfig {
+    /// Apply a `--faults` CLI spec on top of the config: comma-separated
+    /// clauses, each `kind[:arg[:arg...]]`.  Any clause arms the plane
+    /// (`enabled = true`); validation still runs afterwards, so out-of-
+    /// range values are rejected with the config error messages.
+    ///
+    /// Grammar:
+    /// `crash:RATE[:START_S[:END_S]]` · `slowstart:FACTOR` ·
+    /// `straggler:RATE[:WINDOW_S[:MULT]]` · `stall:RATE` ·
+    /// `reactions:on|off` · `retries:N` · `backoff:S` · `eject:N` ·
+    /// `probe:S` · `hedge:on|off`
+    pub fn apply_spec(&mut self, spec: &str) -> Result<()> {
+        for clause in spec.split(',').filter(|c| !c.is_empty()) {
+            let parts: Vec<&str> = clause.split(':').collect();
+            let kind = parts[0];
+            let args = &parts[1..];
+            let f = |j: usize| -> Result<f64> {
+                args[j]
+                    .parse::<f64>()
+                    .with_context(|| format!("fault spec `{kind}`: bad number `{}`", args[j]))
+            };
+            let need = |lo: usize, hi: usize| -> Result<()> {
+                if args.len() < lo || args.len() > hi {
+                    bail!(
+                        "fault spec `{kind}` takes {lo}..={hi} args, got {} (in `{clause}`)",
+                        args.len()
+                    );
+                }
+                Ok(())
+            };
+            match kind {
+                "crash" => {
+                    need(1, 3)?;
+                    self.crash_rate = f(0)?;
+                    if args.len() >= 2 {
+                        self.crash_start_s = f(1)?;
+                    }
+                    if args.len() >= 3 {
+                        self.crash_end_s = f(2)?;
+                    }
+                }
+                "slowstart" => {
+                    need(1, 1)?;
+                    self.slow_start_factor = f(0)?;
+                }
+                "straggler" => {
+                    need(1, 3)?;
+                    self.straggler_rate = f(0)?;
+                    if args.len() >= 2 {
+                        self.straggler_window_s = f(1)?;
+                    }
+                    if args.len() >= 3 {
+                        self.straggler_mult = f(2)?;
+                    }
+                }
+                "stall" => {
+                    need(1, 1)?;
+                    self.stall_rate = f(0)?;
+                }
+                "reactions" => {
+                    need(1, 1)?;
+                    self.reactions = parse_bool(kind, args[0])?;
+                }
+                "retries" => {
+                    need(1, 1)?;
+                    self.max_retries = args[0]
+                        .parse()
+                        .with_context(|| format!("fault spec `retries`: bad count `{}`", args[0]))?;
+                }
+                "backoff" => {
+                    need(1, 1)?;
+                    self.retry_backoff_s = f(0)?;
+                }
+                "eject" => {
+                    need(1, 1)?;
+                    self.eject_after = args[0]
+                        .parse()
+                        .with_context(|| format!("fault spec `eject`: bad count `{}`", args[0]))?;
+                }
+                "probe" => {
+                    need(1, 1)?;
+                    self.probe_after_s = f(0)?;
+                }
+                "hedge" => {
+                    need(1, 1)?;
+                    self.hedge = parse_bool(kind, args[0])?;
+                }
+                other => bail!(
+                    "unknown fault kind `{other}` (valid: crash, slowstart, straggler, \
+                     stall, reactions, retries, backoff, eject, probe, hedge)"
+                ),
+            }
+            self.enabled = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_parses_every_kind() {
+        let mut c = FaultConfig::default();
+        c.apply_spec(
+            "crash:0.004:60:180,slowstart:2,straggler:0.001:45:4,stall:0.1,\
+             reactions:on,retries:2,backoff:0.1,eject:5,probe:3,hedge:off",
+        )
+        .unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.crash_rate, 0.004);
+        assert_eq!(c.crash_start_s, 60.0);
+        assert_eq!(c.crash_end_s, 180.0);
+        assert_eq!(c.slow_start_factor, 2.0);
+        assert_eq!(c.straggler_rate, 0.001);
+        assert_eq!(c.straggler_window_s, 45.0);
+        assert_eq!(c.straggler_mult, 4.0);
+        assert_eq!(c.stall_rate, 0.1);
+        assert!(c.reactions);
+        assert_eq!(c.max_retries, 2);
+        assert_eq!(c.retry_backoff_s, 0.1);
+        assert_eq!(c.eject_after, 5);
+        assert_eq!(c.probe_after_s, 3.0);
+        assert!(!c.hedge);
+    }
+
+    #[test]
+    fn spec_rejects_unknown_kinds_and_bad_arity() {
+        let mut c = FaultConfig::default();
+        let err = c.apply_spec("crush:0.1").unwrap_err().to_string();
+        assert!(err.contains("unknown fault kind"), "{err}");
+        assert!(err.contains("crash"), "must list the valid kinds: {err}");
+        assert!(c.apply_spec("crash").is_err(), "crash needs a rate");
+        assert!(c.apply_spec("stall:0.1:2").is_err(), "stall takes one arg");
+        assert!(c.apply_spec("reactions:maybe").is_err());
+        assert!(c.apply_spec("crash:lots").is_err(), "rates are numbers");
+        // an unparsed spec leaves defaults untouched except what it set
+        let mut c = FaultConfig::default();
+        c.apply_spec("").unwrap();
+        assert!(!c.enabled, "empty spec must not arm the plane");
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_off_plane_draws_nothing() {
+        let cfg = {
+            let mut c = FaultConfig::default();
+            c.apply_spec("crash:0.5,straggler:0.5").unwrap();
+            c
+        };
+        let pods: Vec<u64> = (1..=64).collect();
+        let mut a = FaultPlane::new(cfg, vec![7, 8]);
+        let mut b = FaultPlane::new(cfg, vec![7, 8]);
+        for boundary in 0..32 {
+            let now = boundary as f64;
+            for svc in 0..2 {
+                assert_eq!(
+                    a.draw_pod_faults(svc, now, &pods),
+                    b.draw_pod_faults(svc, now, &pods),
+                    "same seed must replay the same faults (t={now}, svc {svc})"
+                );
+            }
+        }
+        // at rate 0.5 over 64 pods × 32 boundaries something must fire
+        let mut c = FaultPlane::new(cfg, vec![7]);
+        let drawn: usize = (0..32)
+            .map(|t| {
+                let f = c.draw_pod_faults(0, t as f64, &pods);
+                f.crashed.len() + f.straggling.len()
+            })
+            .sum();
+        assert!(drawn > 0, "an armed plane must actually inject");
+        // a disabled plane never draws, whatever the rates say
+        let mut off = cfg;
+        off.enabled = false;
+        let mut p = FaultPlane::new(off, vec![7]);
+        assert_eq!(p.draw_pod_faults(0, 0.0, &pods), PodFaults::default());
+        assert!(!p.roll_stall(0));
+        assert!(!p.injecting());
+    }
+
+    #[test]
+    fn crash_window_gates_crashes_but_not_stragglers() {
+        let mut cfg = FaultConfig::default();
+        cfg.apply_spec("crash:1.0:10:20,straggler:1.0").unwrap();
+        let mut p = FaultPlane::new(cfg, vec![3]);
+        let before = p.draw_pod_faults(0, 5.0, &[1, 2]);
+        assert!(before.crashed.is_empty(), "before the window: no crashes");
+        assert_eq!(before.straggling, vec![1, 2], "rate-1 stragglers always fire");
+        let inside = p.draw_pod_faults(0, 10.0, &[1, 2]);
+        assert_eq!(inside.crashed, vec![1, 2], "rate-1 crashes fire in-window");
+        let after = p.draw_pod_faults(0, 20.0, &[1, 2]);
+        assert!(after.crashed.is_empty(), "the window end is exclusive");
+    }
+
+    #[test]
+    fn stall_rolls_only_when_armed() {
+        let mut cfg = FaultConfig::default();
+        cfg.apply_spec("stall:1.0").unwrap();
+        let mut p = FaultPlane::new(cfg, vec![11]);
+        assert!(p.roll_stall(0), "rate-1 stall must fire");
+        cfg.stall_rate = 0.0;
+        let mut p = FaultPlane::new(cfg, vec![11]);
+        assert!(!p.roll_stall(0));
+    }
+}

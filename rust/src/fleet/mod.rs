@@ -54,7 +54,9 @@ pub use sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 
 use crate::adapter::InfAdapterPolicy;
 use crate::baselines::VpaPolicy;
-use crate::config::{AdmissionConfig, BatchingConfig, Config, ObjectiveWeights, TelemetryConfig};
+use crate::config::{
+    AdmissionConfig, BatchingConfig, Config, FaultConfig, ObjectiveWeights, TelemetryConfig,
+};
 use crate::dispatcher::Tier;
 use crate::forecaster;
 use crate::metrics::{FleetSummary, RunSummary};
@@ -176,6 +178,8 @@ pub struct FleetScenario {
     pub solver_threads: usize,
     /// Telemetry plane (off by default; bit-identical on vs off).
     pub telemetry: TelemetryConfig,
+    /// Fault plane (off by default; bit-identical on vs off).
+    pub fault: FaultConfig,
 }
 
 impl FleetScenario {
@@ -225,6 +229,7 @@ impl FleetScenario {
             shed_penalty: config.fleet.shed_penalty,
             solver_threads: config.fleet.solver_threads,
             telemetry: config.telemetry,
+            fault: config.fault,
         })
     }
 
@@ -281,6 +286,7 @@ impl FleetScenario {
             shed_penalty: config.fleet.shed_penalty,
             solver_threads: config.fleet.solver_threads,
             telemetry: config.telemetry,
+            fault: config.fault,
         }
     }
 
@@ -337,6 +343,7 @@ impl FleetScenario {
             shed_penalty: config.fleet.shed_penalty,
             solver_threads: config.fleet.solver_threads,
             telemetry: config.telemetry,
+            fault: config.fault,
         }
     }
 
@@ -367,6 +374,7 @@ impl FleetScenario {
                 admission: self.admission,
                 solver_threads: self.solver_threads,
                 telemetry: self.telemetry,
+                fault: self.fault,
             },
             match mode {
                 FleetMode::Arbiter => {
@@ -479,12 +487,12 @@ impl FleetScenario {
 pub fn print_fleet(title: &str, out: &FleetRunOutput) {
     println!("\n== {title} [{}] ==", out.mode);
     println!(
-        "{:<10} {:>9} {:>8} {:>10} {:>10} {:>10} {:>9} {:>9}",
-        "service", "requests", "SLOviol%", "acc.loss", "cost(avg)", "P99(ms)", "dropped", "shed"
+        "{:<10} {:>9} {:>8} {:>10} {:>10} {:>10} {:>9} {:>8} {:>9}",
+        "service", "requests", "SLOviol%", "acc.loss", "cost(avg)", "P99(ms)", "dropped", "failed", "shed"
     );
     for s in &out.summary.services {
         println!(
-            "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9} {:>9}",
+            "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9} {:>8} {:>9}",
             s.policy,
             s.total_requests,
             s.slo_violation_rate * 100.0,
@@ -492,12 +500,13 @@ pub fn print_fleet(title: &str, out: &FleetRunOutput) {
             s.avg_cost_cores,
             s.p99_latency_s * 1000.0,
             s.dropped,
+            s.failed,
             s.shed
         );
     }
     let a = &out.summary;
     println!(
-        "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9} {:>9}",
+        "{:<10} {:>9} {:>8.2} {:>10.3} {:>10.2} {:>10.0} {:>9} {:>8} {:>9}",
         "TOTAL",
         a.total_requests,
         a.slo_violation_rate * 100.0,
@@ -505,6 +514,7 @@ pub fn print_fleet(title: &str, out: &FleetRunOutput) {
         a.avg_cost_cores,
         a.worst_p99_latency_s * 1000.0,
         a.dropped,
+        a.failed,
         a.shed
     );
     // Per-tier breakdown whenever the run was actually tiered or shed.

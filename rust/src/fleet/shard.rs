@@ -41,7 +41,8 @@
 
 use super::curve_cache::CurveCache;
 use crate::cluster::Cluster;
-use crate::dispatcher::{AdmissionGate, RequestPath, RouteOutcome, Tier};
+use crate::config::FaultConfig;
+use crate::dispatcher::{AdmissionGate, HealthPolicy, RequestPath, RouteOutcome, Tier};
 use crate::metrics::{MetricsCollector, RequestRecord};
 use crate::monitoring::SloBurnMeter;
 use crate::profiler::ProfileSet;
@@ -52,7 +53,7 @@ use crate::util::mpmc;
 use crate::util::rng::Rng;
 use crate::workload::ClassMixer;
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet, VecDeque};
 
 use super::sim::{service_seed, FleetService};
 
@@ -73,6 +74,8 @@ enum EventKind {
     Completion { pod_id: u64, batch: u32 },
     /// Formation wait expired for the batch a pod opened at `forming_seq`.
     BatchTimeout { pod_id: u64, forming_seq: u64 },
+    /// A crash-stranded request's scheduled retry attempt firing.
+    Retry { req: u32 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -121,6 +124,13 @@ struct PodSim {
     /// Requests waiting at this pod (forming + members of queued batches);
     /// kept as a counter so routing comparisons stay O(1).
     waiting: usize,
+    /// End of the current straggle episode (0.0 = never straggled).
+    slow_until: f64,
+    /// Service-time multiplier while the straggle episode is open.
+    slow_mult: f64,
+    /// Batch ids currently holding a core (needed at crash time to find
+    /// the in-flight work that dies with the pod).
+    in_service: Vec<u32>,
 }
 
 impl PodSim {
@@ -139,6 +149,8 @@ pub struct RequestSim {
     pub accuracy: f64,
     /// Priority tier the request arrived with (per-tier accounting).
     pub tier: Tier,
+    /// Retry attempts already burned after pod-failure strandings.
+    pub retries: u8,
 }
 
 /// Slab of request state with a free list: a slot is recycled the moment
@@ -309,6 +321,26 @@ pub struct ServiceShard {
     batches: BatchArena,
     queue_timeout_s: f64,
     batch_max_wait_s: f64,
+    /// This service's latency SLO — the retry budget's denominator.
+    slo_s: f64,
+    /// Fault-plane knobs (a copy; `reactions` below gates every hook).
+    fault: FaultConfig,
+    /// `fault.enabled && fault.reactions` — the single gate every
+    /// failure-aware hook checks, so the defaults-off path never pays.
+    reactions: bool,
+    /// Batch ids whose pod crashed mid-service: the stale `Completion`
+    /// event frees the member vector and clears the tombstone (freeing at
+    /// crash time would let the arena alias a recycled id against it).
+    dead_batches: HashSet<u32>,
+    /// Last-good value curve for the solver-stall fallback (only
+    /// maintained when the stall fault is armed).
+    pub(crate) last_curve: Option<Vec<f64>>,
+    /// Last-good decision for the solver-stall fallback (only maintained
+    /// when the stall fault is armed).
+    pub(crate) last_decision: Option<Decision>,
+    /// This adapter tick's solve was rolled as stalled — set serially at
+    /// the boundary by the engine, read by the parallel stages.
+    pub(crate) stalled_tick: bool,
 }
 
 impl ServiceShard {
@@ -338,7 +370,7 @@ impl ServiceShard {
                 mix.iter().copied().max().expect("non-empty"),
             )
         };
-        Self {
+        let shard = Self {
             prefix: if s.name.is_empty() {
                 String::new()
             } else {
@@ -370,7 +402,27 @@ impl ServiceShard {
             batches: BatchArena::new(),
             queue_timeout_s: cfg.queue_timeout_s,
             batch_max_wait_s: cfg.batch_max_wait_s,
+            slo_s: s.slo_s,
+            fault: cfg.fault,
+            reactions: cfg.fault.enabled && cfg.fault.reactions,
+            dead_batches: HashSet::new(),
+            last_curve: None,
+            last_decision: None,
+            stalled_tick: false,
+        };
+        if shard.reactions {
+            shard.path.dispatcher().set_health(Some(HealthPolicy {
+                eject_after: cfg.fault.eject_after,
+                probe_after_s: cfg.fault.probe_after_s,
+            }));
         }
+        shard
+    }
+
+    /// Whether the solver-stall fallback is armed for this shard: the
+    /// engine only pays for last-good snapshots when a stall can draw.
+    pub(crate) fn stall_armed(&self) -> bool {
+        self.fault.enabled && self.fault.stall_rate > 0.0 && self.fault.reactions
     }
 
     /// Load this service's arrival stream into the shard heap (the same
@@ -398,6 +450,9 @@ impl ServiceShard {
                 forming_seq: 0,
                 max_batch,
                 waiting: 0,
+                slow_until: 0.0,
+                slow_mult: 1.0,
+                in_service: Vec::new(),
             },
         );
     }
@@ -467,6 +522,7 @@ impl ServiceShard {
                 EventKind::BatchTimeout { pod_id, forming_seq } => {
                     self.handle_batch_timeout(profiles, now, pod_id, forming_seq)
                 }
+                EventKind::Retry { req } => self.handle_retry(cluster, profiles, now, req),
             }
         }
     }
@@ -497,15 +553,26 @@ impl ServiceShard {
                 None
             }
         };
-        let pod_id = variant.as_deref().and_then(|v| {
-            self.pick_pod(cluster, &namespaced(&self.prefix, v))
-                .or_else(|| self.any_pod(cluster))
-        });
+        let pod_id = match variant.as_deref() {
+            Some(v) => match self.pick_pod(cluster, &namespaced(&self.prefix, v)) {
+                Some(pid) => Some(pid),
+                None => {
+                    // the routed backend had no ready pod — a routing
+                    // failure the health tracker holds against it
+                    if self.reactions && self.path.dispatcher().record_failure(v, now) {
+                        self.telem.record_ejection();
+                    }
+                    self.any_pod(cluster)
+                }
+            },
+            None => None,
+        };
         let Some(pid) = pod_id else {
             let rid = self.arena.alloc(RequestSim {
                 arrival: now,
                 accuracy: 0.0,
                 tier,
+                retries: 0,
             });
             self.arena.free(rid);
             self.metrics
@@ -517,11 +584,19 @@ impl ServiceShard {
             arrival: now,
             accuracy,
             tier,
+            retries: 0,
         });
         self.enqueue_request(profiles, pid, rid, now);
     }
 
     fn handle_completion(&mut self, profiles: &ProfileSet, now: f64, pod_id: u64, batch: u32) {
+        if self.dead_batches.remove(&batch) {
+            // the pod crashed mid-service: the members were failed or
+            // rescheduled at the crash boundary; the stale completion only
+            // returns the member vector to the arena
+            self.batches.free(batch);
+            return;
+        }
         // Terminal records for every member, then recycle their slots and
         // the batch's member vector.
         let members = self.batches.get(batch).len();
@@ -537,10 +612,21 @@ impl ServiceShard {
             self.arena.free(rid);
         }
         self.batches.free(batch);
+        if self.reactions {
+            // a served batch is the health signal that readmits an
+            // ejected backend (and clears its failure streak)
+            if let Some(p) = self.pods.get(&pod_id) {
+                let variant = p.variant.clone();
+                self.path.dispatcher().record_success(&variant);
+            }
+        }
         let Some(pod) = self.pods.get_mut(&pod_id) else {
             return;
         };
         pod.busy = pod.busy.saturating_sub(1);
+        if let Some(pos) = pod.in_service.iter().position(|&b| b == batch) {
+            pod.in_service.swap_remove(pos);
+        }
         // Start the next formed batch, dropping members that queued past
         // the client timeout (in-place compaction: no fresh member vec).
         while let Some(bid) = pod.queue.pop_front() {
@@ -569,7 +655,11 @@ impl ServiceShard {
                 continue;
             }
             pod.busy += 1;
-            let stime = sample_service_batch(profiles, &pod.variant, kept, &mut self.rng);
+            pod.in_service.push(bid);
+            let mut stime = sample_service_batch(profiles, &pod.variant, kept, &mut self.rng);
+            if now < pod.slow_until {
+                stime *= pod.slow_mult;
+            }
             push_event(
                 &mut self.heap,
                 &mut self.seq,
@@ -688,6 +778,173 @@ impl ServiceShard {
         }
     }
 
+    /// A pod crash at a cluster boundary (injected by the fault plane):
+    /// in-flight batches die with the pod — their members fail or, with
+    /// reactions on, schedule bounded retries charged against the SLO
+    /// budget — while waiting work re-routes to surviving pods (reactions
+    /// on) or dies at the door (reactions off, the Part D baseline).
+    pub(super) fn handle_pod_crashed(
+        &mut self,
+        cluster: &Cluster,
+        profiles: &ProfileSet,
+        pod_id: u64,
+        now: f64,
+    ) {
+        let Some(mut dead) = self.pods.remove(&pod_id) else {
+            return;
+        };
+        if self.reactions && self.path.dispatcher().record_failure(&dead.variant, now) {
+            self.telem.record_ejection();
+        }
+        // In-service batches: tombstone the ids so the now-stale
+        // Completion events return the member vectors without recording —
+        // freeing here would let the arena alias a recycled batch id
+        // against the stale event.
+        let mut casualties: Vec<u32> = Vec::new();
+        for &bid in &dead.in_service {
+            casualties.extend_from_slice(self.batches.get(bid));
+            self.dead_batches.insert(bid);
+        }
+        for rid in casualties {
+            self.retry_or_fail(now, rid);
+        }
+        // Waiting work (queued batches + the forming buffer) never
+        // started service, so it re-routes immediately when reactions are
+        // on; with none ready it takes the retry path too.
+        let mut stranded: Vec<u32> = Vec::new();
+        for bid in dead.queue.drain(..) {
+            stranded.extend_from_slice(self.batches.get(bid));
+            self.batches.free(bid);
+        }
+        stranded.append(&mut dead.forming);
+        for rid in stranded {
+            if self.reactions {
+                if !self.reroute(cluster, profiles, rid, now) {
+                    self.retry_or_fail(now, rid);
+                }
+            } else {
+                self.fail_request(rid);
+            }
+        }
+    }
+
+    /// A straggle episode opening on one of this service's pods: every
+    /// batch it serves while the window is open takes `straggler_mult ×`
+    /// the sampled service time.  With reactions + hedging on, queued
+    /// batches and the forming buffer flee to other ready pods
+    /// (in-service batches finish where they are).
+    pub(super) fn handle_straggler(
+        &mut self,
+        cluster: &Cluster,
+        profiles: &ProfileSet,
+        pod_id: u64,
+        now: f64,
+    ) {
+        if !self.pods.contains_key(&pod_id) {
+            return;
+        }
+        let hedge = self.reactions
+            && self.fault.hedge
+            && self.any_pod_except(cluster, pod_id).is_some();
+        let mult = self.fault.straggler_mult;
+        let window = self.fault.straggler_window_s;
+        let pod = self.pods.get_mut(&pod_id).expect("checked above");
+        // overlapping episodes keep the worst multiplier
+        pod.slow_mult = if now < pod.slow_until {
+            pod.slow_mult.max(mult)
+        } else {
+            mult
+        };
+        pod.slow_until = now + window;
+        if !hedge {
+            return;
+        }
+        let mut movers: Vec<u32> = Vec::new();
+        let mut hedged = 0u64;
+        for bid in pod.queue.drain(..) {
+            movers.extend_from_slice(self.batches.get(bid));
+            self.batches.free(bid);
+            hedged += 1;
+        }
+        if !pod.forming.is_empty() {
+            hedged += 1;
+        }
+        movers.append(&mut pod.forming);
+        pod.waiting = 0;
+        for _ in 0..hedged {
+            self.telem.record_hedge();
+        }
+        for rid in movers {
+            let target = self.any_pod_except(cluster, pod_id).unwrap_or(pod_id);
+            let acc = acc_of(profiles, &self.pods[&target].variant);
+            self.arena.get_mut(rid).accuracy = acc;
+            self.enqueue_request(profiles, target, rid, now);
+        }
+    }
+
+    /// A scheduled retry firing: the stranded request re-enters routing;
+    /// with still nowhere to land it burns another attempt (or the last
+    /// of its budget).
+    fn handle_retry(&mut self, cluster: &Cluster, profiles: &ProfileSet, now: f64, rid: u32) {
+        if !self.reroute(cluster, profiles, rid, now) {
+            self.retry_or_fail(now, rid);
+        }
+    }
+
+    /// Land `rid` on any ready pod (dispatcher's health-aware choice
+    /// first, least-loaded fallback).  False when none is ready.
+    fn reroute(&mut self, cluster: &Cluster, profiles: &ProfileSet, rid: u32, now: f64) -> bool {
+        let target = self
+            .path
+            .dispatcher()
+            .try_route_at(now)
+            .ok()
+            .and_then(|v| self.pick_pod(cluster, &namespaced(&self.prefix, &v)))
+            .or_else(|| self.any_pod(cluster));
+        match target {
+            Some(pid) => {
+                self.arena.get_mut(rid).accuracy = acc_of(profiles, &self.pods[&pid].variant);
+                self.enqueue_request(profiles, pid, rid, now);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Bounded, SLO-budget-charged retry: attempt `k` waits
+    /// `backoff × 2^k`; an attempt that cannot fire before the deadline —
+    /// or past the retry budget, or with reactions off — fails instead.
+    fn retry_or_fail(&mut self, now: f64, rid: u32) {
+        let r = *self.arena.get(rid);
+        let attempt = r.retries;
+        let retry_t = now + self.fault.retry_backoff_s * f64::powi(2.0, attempt as i32);
+        if self.reactions
+            && (attempt as u32) < self.fault.max_retries
+            && retry_t < r.arrival + self.slo_s
+        {
+            self.arena.get_mut(rid).retries = attempt + 1;
+            self.telem.record_retry();
+            push_event(
+                &mut self.heap,
+                &mut self.seq,
+                retry_t,
+                EventKind::Retry { req: rid },
+            );
+        } else {
+            self.fail_request(rid);
+        }
+    }
+
+    /// Terminal failure: the `Failed` outcome counts inside the SLO
+    /// violation rate (like a drop) but is tallied separately.
+    fn fail_request(&mut self, rid: u32) {
+        let r = *self.arena.get(rid);
+        self.telem.record_failed();
+        self.metrics
+            .record_request(RequestRecord::failed(r.arrival, r.tier));
+        self.arena.free(rid);
+    }
+
     /// Apply stage: install one decision — dispatcher weights, batch-size
     /// targets (a shrunk target can complete a forming batch), and the
     /// prediction/batch metrics records.  Pods are visited in id order —
@@ -755,6 +1012,18 @@ impl ServiceShard {
             .map(|(id, _)| id)
     }
 
+    /// Least-loaded ready pod of this service other than `except` — the
+    /// hedging target picker.
+    fn any_pod_except(&self, cluster: &Cluster, except: u64) -> Option<u64> {
+        cluster
+            .pods()
+            .iter()
+            .filter(|p| p.is_ready() && p.id != except)
+            .filter_map(|p| self.pods.get(&p.id).map(|ps| (p.id, ps)))
+            .min_by(|a, b| a.1.load().total_cmp(&b.1.load()))
+            .map(|(id, _)| id)
+    }
+
     /// Arena counters for diagnostics: (allocs, reuses, live, high-water).
     pub fn arena_stats(&self) -> (u64, u64, usize, usize) {
         let (a, r) = self.arena.stats();
@@ -804,8 +1073,12 @@ fn dispatch_batch(
     telem.record_batch(pod.max_batch, len);
     if pod.busy < pod.cores {
         pod.busy += 1;
+        pod.in_service.push(bid);
         pod.waiting = pod.waiting.saturating_sub(len);
-        let stime = sample_service_batch(profiles, &pod.variant, len, rng);
+        let mut stime = sample_service_batch(profiles, &pod.variant, len, rng);
+        if now < pod.slow_until {
+            stime *= pod.slow_mult;
+        }
         push_event(heap, seq, now + stime, EventKind::Completion { pod_id, batch: bid });
     } else {
         pod.queue.push_back(bid);
@@ -820,12 +1093,31 @@ fn dispatch_batch(
 /// influence any outcome and the parallel path is bit-identical to the
 /// serial one by construction (pinned by
 /// `parallel_fleet_is_bit_identical_to_serial`).
+///
+/// **Panic discipline.**  A panicking task raises a shared flag (via a
+/// drop guard, so any unwind path sets it) that makes every sibling
+/// worker stop pulling new tasks; the scope then joins the survivors and
+/// re-raises the panic at the caller.  Together with the [`mpmc`]
+/// channel's poison-tolerant locks this turns "one worker died" into a
+/// prompt, clean abort instead of a full-queue drain or a wedged
+/// channel (`worker_panic_aborts_cleanly_without_hanging`).
 pub(crate) fn parallel_zip<A, B, F>(threads: usize, a: &mut [A], b: &mut [B], f: F)
 where
     A: Send,
     B: Send,
     F: Fn(usize, &mut A, &mut B) + Sync,
 {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Set on drop — `mem::forget` on the success path means the flag
+    /// only ever raises when `f` unwound.
+    struct PanicFlag<'a>(&'a AtomicBool);
+    impl Drop for PanicFlag<'_> {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+
     debug_assert_eq!(a.len(), b.len());
     let workers = threads.min(a.len());
     if workers <= 1 {
@@ -839,13 +1131,20 @@ where
         tx.send(item).unwrap_or_else(|_| unreachable!("receiver held open"));
     }
     drop(tx);
+    let panicked = AtomicBool::new(false);
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let rx = rx.clone();
             let f = &f;
+            let panicked = &panicked;
             scope.spawn(move || {
                 while let Some((i, (x, y))) = rx.recv() {
+                    if panicked.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let guard = PanicFlag(panicked);
                     f(i, x, y);
+                    std::mem::forget(guard);
                 }
             });
         }
@@ -859,14 +1158,14 @@ mod tests {
     #[test]
     fn request_arena_reuses_freed_slots() {
         let mut arena = RequestArena::new();
-        let a = arena.alloc(RequestSim { arrival: 1.0, accuracy: 0.5, tier: 0 });
-        let b = arena.alloc(RequestSim { arrival: 2.0, accuracy: 0.6, tier: 1 });
+        let a = arena.alloc(RequestSim { arrival: 1.0, accuracy: 0.5, tier: 0, retries: 0 });
+        let b = arena.alloc(RequestSim { arrival: 2.0, accuracy: 0.6, tier: 1, retries: 0 });
         assert_eq!((a, b), (0, 1));
         assert_eq!(arena.live(), 2);
         arena.free(a);
         assert_eq!(arena.live(), 1);
         // the freed slot is recycled before the slab grows
-        let c = arena.alloc(RequestSim { arrival: 3.0, accuracy: 0.7, tier: 0 });
+        let c = arena.alloc(RequestSim { arrival: 3.0, accuracy: 0.7, tier: 0, retries: 0 });
         assert_eq!(c, a);
         assert_eq!(arena.get(c).arrival, 3.0);
         assert_eq!(arena.high_water(), 2);
@@ -921,5 +1220,32 @@ mod tests {
         });
         assert_eq!(a, vec![2, 2, 2]);
         assert_eq!(b, vec![3, 3, 3]);
+    }
+
+    /// Satellite (a): a panic in one of eight workers must propagate to
+    /// the caller as a panic (clean abort), not wedge the channel or
+    /// strand the scope — and siblings stop pulling new tasks once the
+    /// flag is up, so the queue is not fully drained behind a corpse.
+    #[test]
+    fn worker_panic_aborts_cleanly_without_hanging() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let n = 64;
+        let mut a: Vec<u64> = (0..n as u64).collect();
+        let mut b = vec![0u64; n];
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_zip(8, &mut a, &mut b, |i, _x, y| {
+                if i == 13 {
+                    panic!("worker down");
+                }
+                *y = 1;
+            });
+        }));
+        assert!(result.is_err(), "the worker panic must reach the caller");
+        // the channel survives the poisoned run: a fresh parallel_zip on
+        // the same thread count works
+        let mut c = vec![0u64; 8];
+        let mut d = vec![0u64; 8];
+        parallel_zip(8, &mut c, &mut d, |i, x, _y| *x = i as u64);
+        assert_eq!(c, (0..8).collect::<Vec<u64>>());
     }
 }

@@ -69,6 +69,7 @@ use super::shard::{namespaced, parallel_zip, ServiceShard};
 use crate::adapter::InfAdapterPolicy;
 use crate::cluster::{Cluster, ClusterEvent};
 use crate::dispatcher::Tier;
+use crate::fault::{FaultPlane, SolveOutcome};
 use crate::profiler::ProfileSet;
 use crate::serving::sim::{SimConfig, SimResult};
 use crate::serving::{Decision, Policy};
@@ -93,6 +94,13 @@ use std::time::Instant;
 pub fn service_seed(base: u64, i: usize) -> u64 {
     base.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
+
+/// Offset of service `i`'s fault stream above `service_seed(base, i)`.
+/// The pair +0/+1 belongs to noise/arrivals (see [`service_seed`]) and +2
+/// to the scenario trace generators; the fault plane takes +3 so arming
+/// it never perturbs any other stream — the root of the faults-off
+/// bit-identity pin.
+pub const FAULT_STREAM_OFFSET: u64 = 3;
 
 /// One service of a fleet run: the adaptation policy plus everything it
 /// serves (trace, profiles, SLO) and its arbitration terms.
@@ -242,6 +250,17 @@ impl FleetSimEngine {
 
         let mut cluster = Cluster::new(&cfg.node_cores);
 
+        // The fault plane's per-service RNG streams ride the same
+        // SplitMix64 stride as every other stream, on their own offset;
+        // a defaults-off config never draws from them (pinned by
+        // `faults_off_is_bit_identical`).
+        let mut faults = FaultPlane::new(
+            cfg.fault,
+            (0..n)
+                .map(|i| service_seed(cfg.seed, i).wrapping_add(FAULT_STREAM_OFFSET))
+                .collect(),
+        );
+
         // --- Warm start: every service decides at t = 0 and its pods
         // become ready instantly (as in the paper's experiments).  Same
         // solve → arbitrate → apply stages as a live boundary, minus the
@@ -305,6 +324,9 @@ impl FleetSimEngine {
         // (folded into the next tick's `advance` slot), and the 1-based
         // adapter-tick ordinal (the warm start is not traced).
         let mut pending_advance_ns = 0u64;
+        // Cores lost to crashes since the last adapter tick (telemetry's
+        // capacity-loss signal; drained into `on_tick`).
+        let mut pending_lost_cores = 0u64;
         let mut tick_no = 0u64;
         loop {
             let cluster_due = next_cluster < max_duration;
@@ -328,7 +350,8 @@ impl FleetSimEngine {
                 sh.roll_to(t as u64);
             }
             if cluster_due && next_cluster == t {
-                cluster_boundary(&mut cluster, services, &mut shards, t);
+                pending_lost_cores +=
+                    cluster_boundary(&mut cluster, services, &mut shards, &mut faults, t);
                 next_cluster += 1.0;
             }
             if adapter_due && next_adapter == t {
@@ -338,10 +361,12 @@ impl FleetSimEngine {
                     &mut cluster,
                     services,
                     &mut shards,
+                    &mut faults,
                     t,
                     &mut telem,
                     tick_no,
                     std::mem::take(&mut pending_advance_ns),
+                    std::mem::take(&mut pending_lost_cores),
                 );
                 next_adapter += cfg.adapter_interval_s;
             }
@@ -421,6 +446,14 @@ impl FleetSimEngine {
             if let FleetPolicyRef::Arbitrated(p) = &mut s.policy {
                 let lambda = p.observe_and_predict(&histories[i]);
                 sh.pending_lambda = lambda;
+                if sh.stalled_tick {
+                    // Solver stall (fault plane): the solve missed the
+                    // tick deadline, so the arbiter sees the last-good
+                    // curve instead of blocking the whole boundary.  The
+                    // forecast above still ran — only the solve is lost.
+                    sh.pending_curve = sh.last_curve.clone();
+                    return;
+                }
                 // The most this service could ever be granted: the
                 // whole budget minus everyone else's floors.
                 let cap = global_budget.saturating_sub(floors_sum - s.floor_cores);
@@ -432,6 +465,9 @@ impl FleetSimEngine {
                 if let Some(t0) = t0 {
                     sh.telem.record_solve_ns(t0.elapsed().as_nanos() as u64);
                     sh.telem.last_curve_knee = curve_knee(&curve);
+                }
+                if sh.stall_armed() {
+                    sh.last_curve = Some(curve.clone());
                 }
                 sh.pending_curve = Some(curve);
             }
@@ -468,13 +504,24 @@ impl FleetSimEngine {
         cluster: &mut Cluster,
         services: &mut [FleetService],
         shards: &mut [ServiceShard],
+        faults: &mut FaultPlane,
         now: f64,
         telem: &mut Option<FleetTelemetry>,
         tick: u64,
         advance_ns: u64,
+        lost_cores: u64,
     ) {
         let n = services.len();
         let mut clock = StageClock::start(telem.is_some());
+        // Stall pre-pass (serial, index order): roll every service's
+        // stall draw *unconditionally first*, so the stream position
+        // never depends on reactions or decision history — a reactions-on
+        // and a reactions-off run of the same fault seed see identical
+        // crash/straggler draws.
+        for (i, sh) in shards.iter_mut().enumerate() {
+            let stalled = faults.roll_stall(i);
+            sh.stalled_tick = stalled && faults.reactions() && sh.last_decision.is_some();
+        }
         // Observe stage (serial): flush every shard's in-progress partial
         // second and fold the interval's SLO-burn delta.
         for sh in shards.iter_mut() {
@@ -548,6 +595,12 @@ impl FleetSimEngine {
                 .iter()
                 .map(|sh| sh.burn.burn_rate())
                 .fold(0.0, f64::max);
+            let ready_cores: u64 = cluster
+                .pods()
+                .iter()
+                .filter(|p| p.is_ready())
+                .map(|p| p.cores as u64)
+                .sum();
             ft.on_tick(
                 TickTrace {
                     tick,
@@ -558,6 +611,8 @@ impl FleetSimEngine {
                 admitted,
                 shed,
                 max_burn,
+                lost_cores,
+                ready_cores,
             );
         }
         for (i, d) in decisions.into_iter().enumerate() {
@@ -586,13 +641,17 @@ fn advance_all(
 /// One cluster boundary (every whole second): pods come ready or drain
 /// away, orphaned requests re-route within their shard, and every service
 /// samples its billed cores.  Serial — this is the one place shards touch
-/// the shared cluster's mutations.
+/// the shared cluster's mutations — which is exactly why the fault plane
+/// draws here: the draw sequence is a pure function of serial state
+/// (service-index order, ascending pod ids), so thread count cannot
+/// reorder it.  Returns the cores lost to crashes at this boundary.
 fn cluster_boundary(
     cluster: &mut Cluster,
     services: &[FleetService],
     shards: &mut [ServiceShard],
+    faults: &mut FaultPlane,
     now: f64,
-) {
+) -> u64 {
     for event in cluster.tick(now) {
         match event {
             ClusterEvent::PodReady { pod_id, variant } => {
@@ -611,7 +670,46 @@ fn cluster_boundary(
             }
         }
     }
+    let mut lost_cores = 0u64;
+    if faults.injecting() {
+        for i in 0..shards.len() {
+            let mut ready: Vec<(u64, String, usize)> = cluster
+                .pods()
+                .iter()
+                .filter(|p| p.is_ready() && owner_of(shards, &p.variant) == i)
+                .map(|p| (p.id, p.variant.clone(), p.cores))
+                .collect();
+            ready.sort_unstable_by_key(|&(id, _, _)| id);
+            let ids: Vec<u64> = ready.iter().map(|&(id, _, _)| id).collect();
+            let drawn = faults.draw_pod_faults(i, now, &ids);
+            for &pod in &drawn.crashed {
+                let (_, variant, cores) = &ready[ids.binary_search(&pod).expect("drawn from ids")];
+                // The replacement pays the variant's loading cost,
+                // inflated by the slow-start factor (the VPA-restart
+                // penalty the paper measures against).
+                let respawn =
+                    readiness_of(services, shards, variant) * faults.cfg().slow_start_factor;
+                if cluster.fail_pod(pod, now, respawn) {
+                    shards[i].handle_pod_crashed(cluster, &services[i].profiles, pod, now);
+                    shards[i].telem.record_crash(*cores);
+                    lost_cores += *cores as u64;
+                }
+            }
+            for &pod in &drawn.straggling {
+                shards[i].handle_straggler(cluster, &services[i].profiles, pod, now);
+            }
+        }
+        // Crashed capacity is gone *now*, not at the next adapter tick:
+        // resize the admission gates from what is actually Ready, so the
+        // gate sheds into the hole instead of admitting into it.  (The
+        // Pending replacements keep the committed view unchanged, so the
+        // regular tick-time refresh would see no loss at all.)
+        if lost_cores > 0 && faults.reactions() {
+            refresh_gates_ready(cluster, services, shards, now);
+        }
+    }
     record_costs(cluster, shards, now);
+    lost_cores
 }
 
 /// Re-size every service's admission gate from its *committed* allocation:
@@ -643,6 +741,35 @@ fn refresh_gates(
     }
 }
 
+/// Emergency variant of [`refresh_gates`] for crash boundaries: supply is
+/// computed from the *Ready* allocation only.  A crash leaves the
+/// committed view unchanged (the Failed pod's replacement is already
+/// Pending), so the regular refresh would keep admitting at full rate
+/// into capacity that no longer exists; this one shrinks the token
+/// bucket to the surviving pods until the replacement comes up.
+fn refresh_gates_ready(
+    cluster: &Cluster,
+    services: &[FleetService],
+    shards: &mut [ServiceShard],
+    now: f64,
+) {
+    if !shards.iter().any(|s| s.path.gate().enabled()) {
+        return;
+    }
+    let ready = cluster.ready_allocation();
+    for i in 0..shards.len() {
+        let alloc: BTreeMap<String, usize> = ready
+            .iter()
+            .filter(|(k, _)| owner_of(shards, k) == i)
+            .map(|(k, &c)| (k[shards[i].prefix.len()..].to_string(), c))
+            .collect();
+        let supply = services[i]
+            .profiles
+            .supply_rps(&alloc, &shards[i].current_batches);
+        shards[i].path.set_supply(now, supply);
+    }
+}
+
 /// Decide stage: every service solves inside its grant (arbitrated) or
 /// decides with its own fixed budget (plain / no arbiter).  Parallel —
 /// each decision is a pure function of its own policy and shard state and
@@ -659,6 +786,27 @@ fn decide_all(
 ) -> Vec<Decision> {
     parallel_zip(threads, services, shards, |i, s, sh| {
         let t0 = sh.telem.enabled.then(Instant::now);
+        // Solver-stall fallback: a stalled tick reuses the last-good
+        // decision instead of blocking the boundary on the late solve.
+        // `stalled_tick` is only ever set when reactions are armed and a
+        // last-good decision exists (see the boundary pre-pass).
+        let outcome = if sh.stalled_tick {
+            SolveOutcome::Fallback
+        } else {
+            SolveOutcome::Fresh
+        };
+        if outcome == SolveOutcome::Fallback {
+            sh.telem.record_fallback();
+            let d = sh
+                .last_decision
+                .clone()
+                .expect("stalled_tick implies a last-good decision");
+            if let Some(t0) = t0 {
+                sh.telem.record_decide_ns(t0.elapsed().as_nanos() as u64);
+            }
+            sh.pending_decision = Some(d);
+            return;
+        }
         let d = match &mut s.policy {
             FleetPolicyRef::Plain(p) => {
                 let d = p.decide(now, &histories[i], &committed[i]);
@@ -689,6 +837,9 @@ fn decide_all(
         };
         if let Some(t0) = t0 {
             sh.telem.record_decide_ns(t0.elapsed().as_nanos() as u64);
+        }
+        if sh.stall_armed() {
+            sh.last_decision = Some(d.clone());
         }
         sh.pending_decision = Some(d);
     });

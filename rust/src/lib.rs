@@ -48,6 +48,13 @@
 //!   anomaly-triggered flight recorder (last K `TickTrace`s, dumped to
 //!   JSON on SLO-burn or shed trips).  Zero-overhead when disabled and
 //!   bit-identical on vs off — a pure observer of the decision path.
+//! * [`fault`] — the deterministic fault plane: per-service seeded
+//!   streams inject pod crashes (with slow-start respawns), stragglers,
+//!   and solver stalls; the failure-aware reactions — health-checked
+//!   routing with retries and hedging, immediate gate refresh on
+//!   capacity loss, and last-good-decision solver fallback — keep the
+//!   serving path graceful when capacity disappears mid-flight.  Off by
+//!   default and bit-identical off ↔ absent.
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 
@@ -57,6 +64,7 @@ pub mod cluster;
 pub mod config;
 pub mod dispatcher;
 pub mod experiment;
+pub mod fault;
 pub mod fleet;
 pub mod forecaster;
 pub mod metrics;

@@ -45,7 +45,7 @@ COMMANDS:
   fleet    [--services N] [--mode M] [--seconds N] [--base RPS] [--budget B]
            [--admission on|off] [--burn-boost F] [--shed-penalty F]
            [--solver-threads K] [--tiers 0,1,..] [--overload on]
-           [--out PREFIX] [--telemetry PREFIX]
+           [--faults SPEC] [--out PREFIX] [--telemetry PREFIX]
                                      multi-service serving on one shared
                                      cluster (config.fleet when present,
                                      else N synthetic services with
@@ -64,7 +64,17 @@ COMMANDS:
                                      telemetry plane and writes
                                      PREFIX.json / PREFIX.prom /
                                      PREFIX_flight.json — decisions stay
-                                     bit-identical to a telemetry-off run)
+                                     bit-identical to a telemetry-off run;
+                                     --faults SPEC arms the deterministic
+                                     fault plane: comma-separated clauses
+                                     crash:RATE[:START[:END]] |
+                                     slowstart:F |
+                                     straggler:RATE[:WINDOW[:MULT]] |
+                                     stall:RATE | reactions:on|off |
+                                     retries:N | backoff:S | eject:N |
+                                     probe:S | hedge:on|off — same seed
+                                     replays the same faults at any
+                                     --solver-threads)
   serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
                                      live serving on the real PJRT engine
 
@@ -195,6 +205,12 @@ fn main() -> Result<()> {
     }
     if args.get("telemetry").is_some() && command != "fleet" {
         bail!("--telemetry only applies to the fleet command");
+    }
+    if let Some(spec) = args.get("faults") {
+        if command != "fleet" {
+            bail!("--faults only applies to the fleet command");
+        }
+        config.fault.apply_spec(spec)?;
     }
     config.validate()?;
 

@@ -6,13 +6,17 @@
 //! claims ("reduces SLO violations up to 65%, cost up to 33%").
 //!
 //! With the admission-controlled request path, every request resolves to
-//! one of three [`RequestOutcome`]s: **served** (completed within the
+//! one of four [`RequestOutcome`]s: **served** (completed within the
 //! SLO), **violated** (completed late, or dropped inside the serving
-//! path), or **shed** (refused at the admission gate — an immediate
+//! path), **shed** (refused at the admission gate — an immediate
 //! reject, deliberately *not* an SLO violation: shedding is the system
-//! keeping its promise to the traffic it admitted).  Violation rates are
-//! therefore normalized by *admitted* requests; when nothing is shed this
-//! is exactly the historical total-request denominator, so pre-admission
+//! keeping its promise to the traffic it admitted), or **failed**
+//! (admitted, but every serving attempt died with its pod under the
+//! fault plane — counted inside the violation rate like a drop, and
+//! additionally reported on its own so fault experiments can split
+//! infrastructure deaths from latency misses).  Violation rates are
+//! normalized by *admitted* requests; when nothing is shed this is
+//! exactly the historical total-request denominator, so pre-admission
 //! summaries are bit-identical.
 
 use crate::dispatcher::Tier;
@@ -28,6 +32,10 @@ pub enum RequestOutcome {
     Violated,
     /// Refused at the admission gate; never entered a queue.
     Shed,
+    /// Admitted, but every serving attempt died with its pod and the
+    /// retry budget ran out (fault plane).  Counts inside the violation
+    /// rate — it is admitted traffic the system lost.
+    Failed,
 }
 
 /// One completed request.
@@ -69,6 +77,18 @@ impl RequestRecord {
         }
     }
 
+    /// A request abandoned because every serving attempt died with its
+    /// pod (fault plane) and the retry budget ran out.
+    pub fn failed(arrival_s: f64, tier: Tier) -> Self {
+        Self {
+            arrival_s,
+            latency_s: f64::INFINITY,
+            accuracy: 0.0,
+            tier,
+            outcome: RequestOutcome::Failed,
+        }
+    }
+
     /// No finite latency: dropped in the serving path or shed at the gate.
     pub fn dropped(&self) -> bool {
         !self.latency_s.is_finite()
@@ -85,7 +105,10 @@ pub struct TierStats {
     pub shed: u64,
     /// Admitted but dropped inside the serving path.
     pub dropped: u64,
-    /// Admitted and violated (dropped + completed late).
+    /// Admitted but abandoned after its serving pods died (fault plane);
+    /// a subset of `violations`, disjoint from `dropped`.
+    pub failed: u64,
+    /// Admitted and violated (dropped + failed + completed late).
     pub violations: u64,
     /// Completed within the SLO.
     pub served: u64,
@@ -117,6 +140,7 @@ fn merge_tiers<'a>(breakdowns: impl Iterator<Item = &'a [TierStats]>) -> Vec<Tie
             e.total += s.total;
             e.shed += s.shed;
             e.dropped += s.dropped;
+            e.failed += s.failed;
             e.violations += s.violations;
             e.served += s.served;
         }
@@ -148,6 +172,9 @@ pub struct IntervalRow {
     /// (dropped count; shed do not).
     pub slo_violation_rate: f64,
     pub dropped: u64,
+    /// Admitted requests whose serving pods died (fault plane) in this
+    /// bucket; counted inside `slo_violation_rate`, not in `dropped`.
+    pub failed: u64,
     pub completed: u64,
     /// Refused at the admission gate in this bucket.
     pub shed: u64,
@@ -163,11 +190,15 @@ pub struct RunSummary {
     pub total_requests: u64,
     /// Admitted requests dropped inside the serving path.
     pub dropped: u64,
+    /// Admitted requests abandoned after their serving pods died (fault
+    /// plane); disjoint from `dropped`, inside the violation rate.
+    pub failed: u64,
     /// Requests refused at the admission gate.
     pub shed: u64,
-    /// SLO violation fraction of *admitted* requests (dropped requests
-    /// count as violations; shed requests count in neither side).  With
-    /// admission disabled this is the historical all-requests rate.
+    /// SLO violation fraction of *admitted* requests (dropped and failed
+    /// requests count as violations; shed requests count in neither
+    /// side).  With admission disabled this is the historical
+    /// all-requests rate.
     pub slo_violation_rate: f64,
     /// Requests completed *within* the SLO per second of the run — the
     /// sustained useful throughput the batching experiments compare.
@@ -209,6 +240,8 @@ pub struct FleetSummary {
     pub services: Vec<RunSummary>,
     pub total_requests: u64,
     pub dropped: u64,
+    /// Requests abandoned after their serving pods died, fleet-wide.
+    pub failed: u64,
     /// Requests refused at admission gates across the fleet.
     pub shed: u64,
     /// Admitted-request-weighted SLO-violation fraction across services.
@@ -240,6 +273,7 @@ impl FleetSummary {
     pub fn from_services(services: Vec<RunSummary>, horizon_s: f64) -> Self {
         let total_requests: u64 = services.iter().map(|s| s.total_requests).sum();
         let dropped: u64 = services.iter().map(|s| s.dropped).sum();
+        let failed: u64 = services.iter().map(|s| s.failed).sum();
         let shed: u64 = services.iter().map(|s| s.shed).sum();
         let admitted: u64 = services
             .iter()
@@ -247,7 +281,7 @@ impl FleetSummary {
             .sum();
         let completed: f64 = services
             .iter()
-            .map(|s| (s.total_requests - s.shed - s.dropped) as f64)
+            .map(|s| (s.total_requests - s.shed - s.dropped - s.failed) as f64)
             .sum();
         let slo_violation_rate = services
             .iter()
@@ -257,7 +291,8 @@ impl FleetSummary {
         let avg_accuracy_loss = services
             .iter()
             .map(|s| {
-                s.avg_accuracy_loss * (s.total_requests - s.shed - s.dropped) as f64
+                s.avg_accuracy_loss
+                    * (s.total_requests - s.shed - s.dropped - s.failed) as f64
             })
             .sum::<f64>()
             / completed.max(1.0);
@@ -274,6 +309,7 @@ impl FleetSummary {
         Self {
             total_requests,
             dropped,
+            failed,
             shed,
             slo_violation_rate,
             goodput_rps: services.iter().map(|s| s.goodput_rps).sum(),
@@ -330,7 +366,7 @@ impl MetricsCollector {
     /// against the collector's SLO here, so `outcome` is authoritative on
     /// everything stored.
     pub fn record_request(&mut self, mut r: RequestRecord) {
-        if r.outcome != RequestOutcome::Shed {
+        if !matches!(r.outcome, RequestOutcome::Shed | RequestOutcome::Failed) {
             r.outcome = if r.latency_s.is_finite() && r.latency_s <= self.slo_s {
                 RequestOutcome::Served
             } else {
@@ -339,7 +375,7 @@ impl MetricsCollector {
         }
         match r.outcome {
             RequestOutcome::Served => self.live_admitted += 1,
-            RequestOutcome::Violated => {
+            RequestOutcome::Violated | RequestOutcome::Failed => {
                 self.live_admitted += 1;
                 self.live_violations += 1;
             }
@@ -412,7 +448,11 @@ impl MetricsCollector {
                 }
                 let completed: Vec<&&RequestRecord> =
                     reqs.iter().filter(|r| !r.dropped()).collect();
-                let dropped = reqs.len() as u64 - completed.len() as u64 - shed;
+                let failed = reqs
+                    .iter()
+                    .filter(|r| r.outcome == RequestOutcome::Failed)
+                    .count() as u64;
+                let dropped = reqs.len() as u64 - completed.len() as u64 - shed - failed;
                 let admitted = reqs.len() as u64 - shed;
                 let mut lats: Vec<f64> = completed.iter().map(|r| r.latency_s).collect();
                 lats.sort_by(f64::total_cmp);
@@ -431,7 +471,12 @@ impl MetricsCollector {
                 };
                 let violations = reqs
                     .iter()
-                    .filter(|r| r.outcome == RequestOutcome::Violated)
+                    .filter(|r| {
+                        matches!(
+                            r.outcome,
+                            RequestOutcome::Violated | RequestOutcome::Failed
+                        )
+                    })
                     .count();
                 // time-average cost via sub-sampling the step function
                 let cost = (0..10)
@@ -457,6 +502,7 @@ impl MetricsCollector {
                         violations as f64 / admitted as f64
                     },
                     dropped,
+                    failed,
                     completed: completed.len() as u64,
                     shed,
                     shed_by_tier: shed_by_tier.into_iter().collect(),
@@ -476,7 +522,12 @@ impl MetricsCollector {
         let admitted = total - shed;
         let completed: Vec<&RequestRecord> =
             self.records.iter().filter(|r| !r.dropped()).collect();
-        let dropped = admitted - completed.len() as u64;
+        let failed = self
+            .records
+            .iter()
+            .filter(|r| r.outcome == RequestOutcome::Failed)
+            .count() as u64;
+        let dropped = admitted - completed.len() as u64 - failed;
         let mut lats: Vec<f64> = completed.iter().map(|r| r.latency_s).collect();
         lats.sort_by(f64::total_cmp);
         let q = |p: f64| -> f64 {
@@ -490,7 +541,12 @@ impl MetricsCollector {
         let violations = self
             .records
             .iter()
-            .filter(|r| r.outcome == RequestOutcome::Violated)
+            .filter(|r| {
+                matches!(
+                    r.outcome,
+                    RequestOutcome::Violated | RequestOutcome::Failed
+                )
+            })
             .count();
         let avg_acc = if completed.is_empty() {
             0.0
@@ -526,6 +582,10 @@ impl MetricsCollector {
                         e.dropped += 1;
                     }
                 }
+                RequestOutcome::Failed => {
+                    e.violations += 1;
+                    e.failed += 1;
+                }
             }
         }
         let tiers: Vec<TierStats> = tier_map.into_values().map(TierStats::finish).collect();
@@ -537,6 +597,7 @@ impl MetricsCollector {
             policy: policy.to_string(),
             total_requests: total,
             dropped,
+            failed,
             shed,
             slo_violation_rate: if admitted == 0 {
                 0.0
@@ -573,11 +634,11 @@ impl MetricsCollector {
 pub fn rows_to_csv(rows: &[IntervalRow]) -> String {
     let mut out = String::from(
         "t,observed_rps,predicted_rps,cost_cores,avg_accuracy,accuracy_loss,\
-         p99_latency_s,mean_latency_s,slo_violation_rate,dropped,completed,shed\n",
+         p99_latency_s,mean_latency_s,slo_violation_rate,dropped,failed,completed,shed\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "{:.0},{:.2},{:.2},{:.2},{:.3},{:.3},{:.4},{:.4},{:.4},{},{},{}\n",
+            "{:.0},{:.2},{:.2},{:.2},{:.3},{:.3},{:.4},{:.4},{:.4},{},{},{},{}\n",
             r.t_start,
             r.observed_rps,
             r.predicted_rps,
@@ -588,6 +649,7 @@ pub fn rows_to_csv(rows: &[IntervalRow]) -> String {
             r.mean_latency_s,
             r.slo_violation_rate,
             r.dropped,
+            r.failed,
             r.completed,
             r.shed
         ));
@@ -673,6 +735,36 @@ mod tests {
     }
 
     #[test]
+    fn failed_requests_count_as_violations_but_not_drops() {
+        let mut m = collector();
+        m.record_request(RequestRecord::new(0.0, 0.1, 76.13, 0)); // served
+        m.record_request(RequestRecord::new(0.1, f64::INFINITY, 0.0, 0)); // dropped
+        m.record_request(RequestRecord::failed(0.2, 0));
+        m.record_request(RequestRecord::shed(0.3, 1));
+        let s = m.summary("t", 10.0);
+        assert_eq!(s.total_requests, 4);
+        assert_eq!((s.dropped, s.failed, s.shed), (1, 1, 1));
+        // drop + fail are 2 violations of the 3 admitted requests
+        assert!((s.slo_violation_rate - 2.0 / 3.0).abs() < 1e-9, "{s:?}");
+        assert_eq!(s.tiers[0].violations, 2);
+        assert_eq!(s.tiers[0].dropped, 1);
+        assert_eq!(s.tiers[0].failed, 1);
+        assert_eq!(s.tiers[0].served, 1);
+        // the burn meter sees failures as violations of admitted traffic
+        assert_eq!(m.live_counts(), (2, 3));
+        let rows = m.rows(10.0);
+        assert_eq!(rows[0].failed, 1);
+        assert_eq!(rows[0].dropped, 1);
+        assert_eq!(rows[0].completed, 1);
+        assert_eq!(rows[0].shed, 1);
+        assert!((rows[0].slo_violation_rate - 2.0 / 3.0).abs() < 1e-9);
+        // fleet rollup carries the failed count through
+        let f = FleetSummary::from_services(vec![s], 10.0);
+        assert_eq!(f.failed, 1);
+        assert_eq!(f.dropped, 1);
+    }
+
+    #[test]
     fn live_counts_feed_the_burn_meter() {
         let mut m = collector();
         m.record_request(RequestRecord::new(0.0, 0.1, 76.13, 0)); // served
@@ -745,6 +837,7 @@ mod tests {
                 policy: "svc".into(),
                 total_requests: total,
                 dropped,
+                failed: 0,
                 shed: 0,
                 slo_violation_rate: viol,
                 goodput_rps: 10.0,
@@ -795,6 +888,7 @@ mod tests {
             policy: "svc".into(),
             total_requests: total,
             dropped: 0,
+            failed: 0,
             shed,
             slo_violation_rate: 0.0,
             goodput_rps: 0.0,
@@ -815,6 +909,7 @@ mod tests {
             total,
             shed,
             dropped: 0,
+            failed: 0,
             violations,
             served: total - shed - violations,
             slo_violation_rate: 0.0,

@@ -17,7 +17,7 @@
 //! rate-accounting semantics, which are unchanged.
 
 use super::{Decision, Policy};
-use crate::config::{AdmissionConfig, TelemetryConfig};
+use crate::config::{AdmissionConfig, FaultConfig, TelemetryConfig};
 use crate::fleet::curve_cache::CurveCacheStats;
 use crate::fleet::sim::{FleetPolicyRef, FleetService, FleetSimEngine};
 use crate::metrics::MetricsCollector;
@@ -53,6 +53,10 @@ pub struct SimConfig {
     /// enabled run is bit-identical anyway — pinned by
     /// `telemetry_on_is_bit_identical_to_off`).
     pub telemetry: TelemetryConfig,
+    /// Fault-injection plane + failure-aware reactions (disabled by
+    /// default: no fault stream is drawn and the run is bit-identical to
+    /// a fault-free build — pinned by `faults_off_is_bit_identical`).
+    pub fault: FaultConfig,
 }
 
 impl Default for SimConfig {
@@ -68,6 +72,7 @@ impl Default for SimConfig {
             admission: AdmissionConfig::default(),
             solver_threads: 0,
             telemetry: TelemetryConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }

@@ -308,6 +308,21 @@ pub struct ShardTelemetry {
     pub decide_ns: LogHistogram,
     /// Knee of the most recent value curve (flight-trace scratch).
     pub last_curve_knee: usize,
+    /// Ready pods killed by the fault plane.
+    pub pod_crashes: u64,
+    /// Σ cores of the crashed pods (capacity lost to the fault plane).
+    pub crashed_cores: u64,
+    /// Backends ejected from the smooth-WRR rotation by the health check.
+    pub ejections: u64,
+    /// Retry attempts scheduled for failure-stranded requests.
+    pub retries: u64,
+    /// Queued batches hedged away from a straggling pod.
+    pub hedged_batches: u64,
+    /// Requests that terminally failed (crash casualties past their retry
+    /// or SLO budget).
+    pub failed_requests: u64,
+    /// Adapter ticks that reused the last-good decision on a solver stall.
+    pub fallback_solves: u64,
 }
 
 fn bump_tier(v: &mut Vec<u64>, tier: Tier) {
@@ -378,6 +393,55 @@ impl ShardTelemetry {
         self.decide_ns.record(ns);
     }
 
+    #[inline]
+    pub fn record_crash(&mut self, cores: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.pod_crashes += 1;
+        self.crashed_cores += cores as u64;
+    }
+
+    #[inline]
+    pub fn record_ejection(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.ejections += 1;
+    }
+
+    #[inline]
+    pub fn record_retry(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.retries += 1;
+    }
+
+    #[inline]
+    pub fn record_hedge(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.hedged_batches += 1;
+    }
+
+    #[inline]
+    pub fn record_failed(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.failed_requests += 1;
+    }
+
+    #[inline]
+    pub fn record_fallback(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.fallback_solves += 1;
+    }
+
     pub fn admitted(&self) -> u64 {
         self.admit_by_tier.iter().sum()
     }
@@ -418,6 +482,13 @@ impl ShardTelemetry {
         self.batch_filled += other.batch_filled;
         self.solve_ns.merge(&other.solve_ns);
         self.decide_ns.merge(&other.decide_ns);
+        self.pod_crashes += other.pod_crashes;
+        self.crashed_cores += other.crashed_cores;
+        self.ejections += other.ejections;
+        self.retries += other.retries;
+        self.hedged_batches += other.hedged_batches;
+        self.failed_requests += other.failed_requests;
+        self.fallback_solves += other.fallback_solves;
     }
 }
 
@@ -629,6 +700,12 @@ pub struct TelemetrySummary {
     pub cache_cold: u64,
     pub arena_allocs: u64,
     pub arena_reuses: u64,
+    pub pod_crashes: u64,
+    pub ejections: u64,
+    pub retries: u64,
+    pub hedged_batches: u64,
+    pub failed_requests: u64,
+    pub fallback_solves: u64,
 }
 
 impl TelemetrySummary {
@@ -654,6 +731,12 @@ impl TelemetrySummary {
             cache_cold: cache.cold,
             arena_allocs,
             arena_reuses,
+            pod_crashes: shard.pod_crashes,
+            ejections: shard.ejections,
+            retries: shard.retries,
+            hedged_batches: shard.hedged_batches,
+            failed_requests: shard.failed_requests,
+            fallback_solves: shard.fallback_solves,
         }
     }
 
@@ -673,6 +756,12 @@ impl TelemetrySummary {
         self.cache_cold += other.cache_cold;
         self.arena_allocs += other.arena_allocs;
         self.arena_reuses += other.arena_reuses;
+        self.pod_crashes += other.pod_crashes;
+        self.ejections += other.ejections;
+        self.retries += other.retries;
+        self.hedged_batches += other.hedged_batches;
+        self.failed_requests += other.failed_requests;
+        self.fallback_solves += other.fallback_solves;
     }
 
     pub fn batch_fill_ratio(&self) -> f64 {
@@ -704,6 +793,12 @@ impl TelemetrySummary {
             ("cache_cold", Value::Num(self.cache_cold as f64)),
             ("arena_allocs", Value::Num(self.arena_allocs as f64)),
             ("arena_reuses", Value::Num(self.arena_reuses as f64)),
+            ("pod_crashes", Value::Num(self.pod_crashes as f64)),
+            ("ejections", Value::Num(self.ejections as f64)),
+            ("retries", Value::Num(self.retries as f64)),
+            ("hedged_batches", Value::Num(self.hedged_batches as f64)),
+            ("failed_requests", Value::Num(self.failed_requests as f64)),
+            ("fallback_solves", Value::Num(self.fallback_solves as f64)),
         ])
     }
 }
@@ -724,9 +819,14 @@ pub struct FleetTelemetry {
     pub solve: SolveStats,
     pub arena_allocs: u64,
     pub arena_reuses: u64,
+    /// Recovery-time-to-supply: seconds from a capacity-loss boundary to
+    /// the first boundary where ready cores are back at the pre-loss level.
+    pub recovery_s: LogHistogram,
     shed_trip_fraction: f64,
     prev_admitted: u64,
     prev_shed: u64,
+    /// Open capacity-loss episode: `(t_s of the loss, ready-core target)`.
+    recovering_since: Option<(f64, u64)>,
 }
 
 impl FleetTelemetry {
@@ -740,25 +840,34 @@ impl FleetTelemetry {
             solve: SolveStats::default(),
             arena_allocs: 0,
             arena_reuses: 0,
+            recovery_s: LogHistogram::new(),
             shed_trip_fraction: cfg.shed_trip_fraction,
             prev_admitted: 0,
             prev_shed: 0,
+            recovering_since: None,
         }
     }
 
     /// Fold one adapter boundary in: record the trace, and trip the flight
-    /// recorder when any service is burning its SLO budget or the tick's
+    /// recorder when any service is burning its SLO budget, the tick's
     /// shed fraction (from the admission gates' counter deltas) exceeds
-    /// the threshold.
+    /// the threshold, or the fault plane killed more than 5% of capacity
+    /// since the last boundary.  `lost_cores` is the Σ cores crashed since
+    /// the previous tick; `ready_cores` the cluster's Ready cores now —
+    /// together they drive the capacity-loss trip and the
+    /// recovery-time-to-supply histogram.
     pub fn on_tick(
         &mut self,
         trace: TickTrace,
         gate_admitted: u64,
         gate_shed: u64,
         max_burn: f64,
+        lost_cores: u64,
+        ready_cores: u64,
     ) {
         self.ticks += 1;
         let tick = trace.tick;
+        let t_s = trace.t_s;
         let d_admit = gate_admitted.saturating_sub(self.prev_admitted);
         let d_shed = gate_shed.saturating_sub(self.prev_shed);
         self.prev_admitted = gate_admitted;
@@ -770,6 +879,23 @@ impl FleetTelemetry {
         let offered = d_admit + d_shed;
         if offered > 0 && d_shed as f64 / offered as f64 > self.shed_trip_fraction {
             self.flight.trip(tick, "shed");
+        }
+        if lost_cores > 0 {
+            let pre_loss = ready_cores + lost_cores;
+            if pre_loss > 0 && lost_cores as f64 / pre_loss as f64 > 0.05 {
+                self.flight.trip(tick, "capacity_loss");
+            }
+            // extend an open episode to the (possibly higher) new target
+            let target = match self.recovering_since {
+                Some((t0, old)) => (t0, old.max(pre_loss)),
+                None => (t_s, pre_loss),
+            };
+            self.recovering_since = Some(target);
+        } else if let Some((t0, target)) = self.recovering_since {
+            if ready_cores >= target {
+                self.recovery_s.record((t_s - t0).max(0.0).round() as u64);
+                self.recovering_since = None;
+            }
         }
     }
 
@@ -814,6 +940,20 @@ impl FleetTelemetry {
         r.counter_add("infadapter_curve_cache_cold_total", self.cache.cold);
         r.counter_add("infadapter_arena_allocs_total", self.arena_allocs);
         r.counter_add("infadapter_arena_reuses_total", self.arena_reuses);
+        r.counter_add("infadapter_pod_crashes_total", self.shard.pod_crashes);
+        r.counter_add("infadapter_crashed_cores_total", self.shard.crashed_cores);
+        r.counter_add("infadapter_ejections_total", self.shard.ejections);
+        r.counter_add("infadapter_retries_total", self.shard.retries);
+        r.counter_add("infadapter_hedged_batches_total", self.shard.hedged_batches);
+        r.counter_add(
+            "infadapter_failed_requests_total",
+            self.shard.failed_requests,
+        );
+        r.counter_add(
+            "infadapter_fallback_solves_total",
+            self.shard.fallback_solves,
+        );
+        r.hist_merge("infadapter_recovery_s", &self.recovery_s);
         r.counter_add(
             "infadapter_flight_trips_total",
             self.flight.trips().len() as u64,

@@ -15,13 +15,28 @@
 //! consumer observes a subsequence of a single total order — in
 //! particular, items from any one producer arrive at any one consumer in
 //! the order they were sent (asserted by the stress test below).
+//!
+//! Panic tolerance: every lock acquisition shrugs off mutex poisoning
+//! (`PoisonError::into_inner`).  The queue's invariants hold at every
+//! await point — state mutations are single assignments under the lock —
+//! so a worker that panicked while holding it leaves valid state behind,
+//! and the one real panic should propagate to the caller instead of
+//! cascading into `PoisonError` unwinds on every other worker (see
+//! `fleet::shard::parallel_zip`'s panic discipline).
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 struct Shared<T> {
     queue: Mutex<ChannelState<T>>,
     available: Condvar,
+}
+
+impl<T> Shared<T> {
+    /// Lock the channel state, treating a poisoned mutex as still valid.
+    fn lock(&self) -> MutexGuard<'_, ChannelState<T>> {
+        self.queue.lock().unwrap_or_else(PoisonError::into_inner)
+    }
 }
 
 struct ChannelState<T> {
@@ -66,7 +81,7 @@ pub struct SendError<T>(pub T);
 
 impl<T> Sender<T> {
     pub fn send(&self, item: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         if st.closed {
             return Err(SendError(item));
         }
@@ -78,7 +93,7 @@ impl<T> Sender<T> {
 
     /// Queued item count (backpressure signals).
     pub fn len(&self) -> usize {
-        self.shared.queue.lock().unwrap().items.len()
+        self.shared.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -88,7 +103,7 @@ impl<T> Sender<T> {
 
 impl<T> Clone for Sender<T> {
     fn clone(&self) -> Self {
-        self.shared.queue.lock().unwrap().senders += 1;
+        self.shared.lock().senders += 1;
         Self {
             shared: self.shared.clone(),
         }
@@ -97,7 +112,7 @@ impl<T> Clone for Sender<T> {
 
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         st.senders -= 1;
         if st.senders == 0 {
             st.closed = true;
@@ -110,7 +125,7 @@ impl<T> Drop for Sender<T> {
 impl<T> Receiver<T> {
     /// Block until an item is available or all senders are gone.
     pub fn recv(&self) -> Option<T> {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         loop {
             if let Some(item) = st.items.pop_front() {
                 return Some(item);
@@ -118,19 +133,23 @@ impl<T> Receiver<T> {
             if st.closed {
                 return None;
             }
-            st = self.shared.available.wait(st).unwrap();
+            st = self
+                .shared
+                .available
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<T> {
-        self.shared.queue.lock().unwrap().items.pop_front()
+        self.shared.lock().items.pop_front()
     }
 }
 
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
-        self.shared.queue.lock().unwrap().receivers += 1;
+        self.shared.lock().receivers += 1;
         Self {
             shared: self.shared.clone(),
         }
@@ -139,7 +158,7 @@ impl<T> Clone for Receiver<T> {
 
 impl<T> Drop for Receiver<T> {
     fn drop(&mut self) {
-        let mut st = self.shared.queue.lock().unwrap();
+        let mut st = self.shared.lock();
         st.receivers -= 1;
         if st.receivers == 0 {
             // Nobody can ever pop again: close so senders fail fast

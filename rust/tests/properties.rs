@@ -7,6 +7,7 @@ use infadapter::dispatcher::{AdmissionGate, Dispatcher, Tier};
 use infadapter::experiment::{PolicyKind, Scenario};
 use infadapter::fleet::sim::service_seed;
 use infadapter::fleet::{ArbiterEntry, CoreArbiter, FleetMode, FleetScenario};
+use infadapter::metrics::rows_to_csv;
 use infadapter::profiler::ProfileSet;
 use infadapter::serving::sim::{SimConfig, SimEngine};
 use infadapter::solver::{
@@ -660,24 +661,37 @@ fn prop_sim_conserves_requests() {
 #[test]
 fn prop_shed_conservation() {
     // For every fleet run — admission on/off, shed pricing on/off,
-    // overload or staggered bursts, mixed-tier traffic — arrivals are
-    // conserved end to end: `arrivals == served + violated + shed` for
-    // the whole run, per tier, and per metrics interval (cross-checked
-    // against the raw regenerated arrival stream, not the collector's
-    // own totals), and the Run/Fleet summaries equal the sum of their
-    // interval rows.  Catches any double- or under-count a pricing or
-    // admission change introduces between the gate, the router, and the
-    // metrics pipeline.
-    for case in 0..4u64 {
+    // overload or staggered bursts, mixed-tier traffic, fault storms —
+    // arrivals are conserved end to end: `arrivals == served + violated
+    // + shed` for the whole run, per tier, and per metrics interval
+    // (cross-checked against the raw regenerated arrival stream, not
+    // the collector's own totals), and the Run/Fleet summaries equal
+    // the sum of their interval rows.  `failed` (pod died under an
+    // admitted request, fault plane) lives inside `violations` and the
+    // interval bucket, disjoint from `dropped`.  Catches any double- or
+    // under-count a pricing, admission, or fault change introduces
+    // between the gate, the router, and the metrics pipeline.
+    for case in 0..6u64 {
         let seed = 7_000 + case * 13;
         let mut config = Config::default();
         config.adapter.forecaster = "last_max".into();
         config.seed = seed;
         // matrix: {admission off (case 1) / on}, {shed pricing off/on},
         // {staggered (even cases) / simultaneous overload (odd cases)} —
-        // case 3 is the full stack: overload + admission + pricing
+        // case 3 is the full stack: overload + admission + pricing;
+        // cases 4–5 re-run the stack under an armed fault storm
+        // (reactions off, then on with retries), where crashes strand
+        // admitted requests and conservation must still close the books
         config.admission.enabled = case != 1;
         config.fleet.shed_penalty = if case < 2 { 0.0 } else { 1.0 };
+        if case >= 4 {
+            config
+                .fault
+                .apply_spec("crash:0.004:30:180,slowstart:2,straggler:0.002:20:4,stall:0.05")
+                .unwrap();
+            config.fault.reactions = case == 5;
+            config.fault.max_retries = 2;
+        }
         let profiles = ProfileSet::paper_like();
         let mut scenario = if case % 2 == 1 {
             FleetScenario::synthetic_overload(2, 30.0, 240, 8, true, &config, &profiles)
@@ -691,7 +705,8 @@ fn prop_shed_conservation() {
             .with_class_mix(vec![(0, 3.0), (1, 1.0)]);
         let out = scenario.run(&FleetMode::Arbiter, std::path::Path::new("/nonexistent"));
 
-        let (mut sum_total, mut sum_shed, mut sum_dropped) = (0u64, 0u64, 0u64);
+        let (mut sum_total, mut sum_shed, mut sum_dropped, mut sum_failed) =
+            (0u64, 0u64, 0u64, 0u64);
         for (i, r) in out.per_service.iter().enumerate() {
             let s = &out.summary.services[i];
             // ground truth: regenerate this service's exact arrival stream
@@ -714,6 +729,8 @@ fn prop_shed_conservation() {
                 "case {case} svc {i}: served {served} + violated {violated} + shed {shed}"
             );
             assert_eq!(shed, s.shed, "case {case} svc {i}: tier shed books");
+            let tier_failed: u64 = s.tiers.iter().map(|t| t.failed).sum();
+            assert_eq!(tier_failed, s.failed, "case {case} svc {i}: tier failed books");
             for t in &s.tiers {
                 assert_eq!(
                     t.served + t.violations + t.shed,
@@ -721,7 +738,10 @@ fn prop_shed_conservation() {
                     "case {case} svc {i} tier {}: per-tier conservation",
                     t.tier
                 );
-                assert!(t.dropped <= t.violations, "case {case} svc {i}: drops are violations");
+                assert!(
+                    t.dropped + t.failed <= t.violations,
+                    "case {case} svc {i}: drops and failures are violations"
+                );
             }
             // per-interval conservation vs the raw arrival stream, using
             // the collector's own bucketing formula so FP boundaries agree
@@ -733,7 +753,7 @@ fn prop_shed_conservation() {
                     .filter(|&&t| (t / bucket) as usize == b)
                     .count() as u64;
                 assert_eq!(
-                    row.completed + row.dropped + row.shed,
+                    row.completed + row.dropped + row.failed + row.shed,
                     expect,
                     "case {case} svc {i} bucket {b}: interval conservation"
                 );
@@ -743,25 +763,80 @@ fn prop_shed_conservation() {
             // the summary equals the sum of its interval rows
             assert_eq!(rows.iter().map(|r| r.shed).sum::<u64>(), s.shed);
             assert_eq!(rows.iter().map(|r| r.dropped).sum::<u64>(), s.dropped);
+            assert_eq!(rows.iter().map(|r| r.failed).sum::<u64>(), s.failed);
             assert_eq!(
-                rows.iter().map(|r| r.completed + r.dropped + r.shed).sum::<u64>(),
+                rows.iter()
+                    .map(|r| r.completed + r.dropped + r.failed + r.shed)
+                    .sum::<u64>(),
                 s.total_requests,
                 "case {case} svc {i}: rows must sum to the summary"
             );
             sum_total += s.total_requests;
             sum_shed += s.shed;
             sum_dropped += s.dropped;
+            sum_failed += s.failed;
         }
         // the fleet aggregate equals the sum of its services
         assert_eq!(out.summary.total_requests, sum_total, "case {case}");
         assert_eq!(out.summary.shed, sum_shed, "case {case}");
         assert_eq!(out.summary.dropped, sum_dropped, "case {case}");
+        assert_eq!(out.summary.failed, sum_failed, "case {case}");
         let tier_total: u64 = out.summary.tiers.iter().map(|t| t.total).sum();
         assert_eq!(tier_total, sum_total, "case {case}: merged tier books");
         // and the priced overload cases must actually exercise shedding
         if case == 3 {
             assert!(sum_shed > 0, "case {case}: the overload cell must shed");
         }
+        // without an armed fault plane nothing may ever fail
+        if case < 4 {
+            assert_eq!(sum_failed, 0, "case {case}: failures need a fault plane");
+        }
+    }
+}
+
+#[test]
+fn prop_fault_storm_replays_bit_identically() {
+    // An armed fault storm is as deterministic as a fault-free run: the
+    // same (engine seed → strided fault streams) replay produces the
+    // exact same crashes, retries, fallbacks, and interval rows every
+    // time.  The seed comes from `FAULT_SEED` when set (the CI chaos
+    // matrix sweeps it) so each matrix cell pins a different storm.
+    let seed: u64 = std::env::var("FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(11);
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 9_000 + seed;
+    config.admission.enabled = true;
+    config.telemetry.enabled = true;
+    config
+        .fault
+        .apply_spec(
+            "crash:0.004:40:160,slowstart:2,straggler:0.002:20:4,stall:0.05,\
+             reactions:on,retries:2,backoff:0.2",
+        )
+        .unwrap();
+    let profiles = ProfileSet::paper_like();
+    let run = || {
+        let scenario = FleetScenario::synthetic_overload(2, 30.0, 240, 8, true, &config, &profiles);
+        scenario.run(&FleetMode::Arbiter, std::path::Path::new("/nonexistent"))
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.summary.total_requests, b.summary.total_requests);
+    assert_eq!(a.summary.shed, b.summary.shed);
+    assert_eq!(a.summary.dropped, b.summary.dropped);
+    assert_eq!(a.summary.failed, b.summary.failed);
+    assert_eq!(a.per_service.len(), b.per_service.len());
+    for (i, (ra, rb)) in a.per_service.iter().zip(b.per_service.iter()).enumerate() {
+        // the CSV rows carry every interval counter — string equality is
+        // a bit-identity check on the whole run
+        assert_eq!(
+            rows_to_csv(&ra.metrics.rows(ra.duration_s)),
+            rows_to_csv(&rb.metrics.rows(rb.duration_s)),
+            "svc {i}: fault storm did not replay identically (seed {seed})"
+        );
     }
 }
 

@@ -28,9 +28,17 @@
 //! run with the registry, stage profiler, and flight recorder enabled
 //! must make bit-identical decisions to a telemetry-off run (summaries,
 //! per-interval rows, tier breakdowns), at every solver thread count.
+//!
+//! PR 8 pins the fault plane from both sides: **faults off is an exact
+//! no-op** — a config with the `fault` section present (knobs set, master
+//! switch off) never draws from the fault RNG streams, so every engine
+//! path is bit-identical to the pre-fault pipeline — and **faults on are
+//! deterministic** — a fixed fault seed replays the same crash storm at
+//! every `solver_threads` count (every draw happens at a serial boundary
+//! in service-index order).
 
 use infadapter::adapter::InfAdapterPolicy;
-use infadapter::config::{AdmissionConfig, Config, ObjectiveWeights};
+use infadapter::config::{AdmissionConfig, Config, FaultConfig, ObjectiveWeights};
 use infadapter::fleet::{FleetMode, FleetScenario};
 use infadapter::forecaster::LastMaxForecaster;
 use infadapter::metrics::RunSummary;
@@ -55,6 +63,7 @@ fn inf_policy(budget: usize) -> InfAdapterPolicy {
 fn assert_summaries_identical(a: &RunSummary, b: &RunSummary) {
     assert_eq!(a.total_requests, b.total_requests);
     assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.failed, b.failed);
     assert_eq!(a.shed, b.shed);
     assert_eq!(a.slo_violation_rate, b.slo_violation_rate);
     assert_eq!(a.goodput_rps, b.goodput_rps);
@@ -441,5 +450,168 @@ fn burn_boost_zero_matches_burning_fleet_partitions() {
     let b = loose.run(&FleetMode::Arbiter, dir);
     for (x, y) in a.summary.services.iter().zip(&b.summary.services) {
         assert_summaries_identical(x, y);
+    }
+}
+
+/// A `fault` section with every knob at a non-default value but the
+/// master switch off: nothing may draw, react, eject, or retry.
+fn disarmed_faults() -> FaultConfig {
+    let mut f = FaultConfig::default();
+    f.apply_spec("crash:0.5:1:1e9,slowstart:3,straggler:0.5:10:8,stall:0.5,reactions:on,retries:4,backoff:0.2,eject:1,probe:1,hedge:on")
+        .expect("valid spec");
+    f.enabled = false;
+    f
+}
+
+#[test]
+fn faults_off_is_bit_identical_on_every_engine_path() {
+    // The ISSUE 8 invariant, side one: a disabled fault plane is an exact
+    // no-op — no RNG stream is touched, no health policy armed, no
+    // straggler multiplier applied — on the single-service wrapper, the
+    // arbitrated fleet, and the admission-shedding overload path.
+    let profiles = ProfileSet::paper_like();
+
+    // (1) single-service path
+    let trace = Trace::bursty(40.0, 100.0, 420, 9);
+    let mut p1 = inf_policy(20);
+    let base = SimEngine::new(
+        profiles.clone(),
+        SimConfig {
+            seed: 9,
+            ..Default::default()
+        },
+    )
+    .run(&mut p1, &trace);
+    let mut p2 = inf_policy(20);
+    let disarmed = SimEngine::new(
+        profiles.clone(),
+        SimConfig {
+            seed: 9,
+            fault: disarmed_faults(),
+            ..Default::default()
+        },
+    )
+    .run(&mut p2, &trace);
+    assert_summaries_identical(
+        &base.metrics.summary("default", base.duration_s),
+        &disarmed.metrics.summary("disarmed", disarmed.duration_s),
+    );
+    assert_eq!(
+        base.metrics.rows(base.duration_s),
+        disarmed.metrics.rows(disarmed.duration_s)
+    );
+
+    // (2) arbitrated fleet path
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 17;
+    let base_scenario = FleetScenario::synthetic(2, 30.0, 600, 12, &config, &profiles);
+    let mut disarmed_scenario = base_scenario.clone();
+    disarmed_scenario.fault = disarmed_faults();
+    let dir = Path::new("/nonexistent");
+    let a = base_scenario.run(&FleetMode::Arbiter, dir);
+    let b = disarmed_scenario.run(&FleetMode::Arbiter, dir);
+    for (x, y) in a.summary.services.iter().zip(&b.summary.services) {
+        assert_summaries_identical(x, y);
+    }
+
+    // (3) overload path (admission shedding + tiers), serial and parallel
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission.enabled = true;
+    let base = FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    for threads in [1usize, 8] {
+        let run_at = |fault: FaultConfig| {
+            let mut s = base.clone();
+            s.solver_threads = threads;
+            s.fault = fault;
+            s.run(&FleetMode::Arbiter, dir)
+        };
+        let off = run_at(FaultConfig::default());
+        let disarmed = run_at(disarmed_faults());
+        assert!(off.summary.shed > 0, "the overload pin must actually shed");
+        assert_eq!(off.summary.failed, 0, "no fault plane, no failures");
+        assert_eq!(off.summary.total_requests, disarmed.summary.total_requests);
+        assert_eq!(off.summary.shed, disarmed.summary.shed);
+        assert_eq!(
+            off.summary.slo_violation_rate,
+            disarmed.summary.slo_violation_rate
+        );
+        assert_eq!(off.summary.core_seconds, disarmed.summary.core_seconds);
+        for (x, y) in off.summary.services.iter().zip(&disarmed.summary.services) {
+            assert_summaries_identical(x, y);
+        }
+        for (x, y) in off.summary.tiers.iter().zip(&disarmed.summary.tiers) {
+            assert_eq!(x, y, "tier breakdowns diverge at {threads} threads");
+        }
+        for (a, b) in off.per_service.iter().zip(&disarmed.per_service) {
+            assert_eq!(
+                a.metrics.rows(a.duration_s),
+                b.metrics.rows(b.duration_s),
+                "interval rows diverge at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn fault_seed_replays_identically_at_every_thread_count() {
+    // The ISSUE 8 invariant, side two: an armed fault plane is seeded —
+    // the same crash storm (crashes, stragglers, stalls, retries, and
+    // every downstream reaction) replays bit-identically at solver_threads
+    // 1, 2, and 8, because every fault draw happens at a serial boundary
+    // of the tick protocol in service-index order over sorted pod ids.
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission.enabled = true;
+    config
+        .fault
+        .apply_spec("crash:0.004:60:300,slowstart:2,straggler:0.002:30:4,stall:0.05,reactions:on,retries:2")
+        .expect("valid spec");
+    let base = FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    let dir = Path::new("/nonexistent");
+    let run_at = |threads: usize| {
+        let mut s = base.clone();
+        s.solver_threads = threads;
+        s.telemetry.enabled = true; // counters prove the storm happened
+        s.run(&FleetMode::Arbiter, dir)
+    };
+    let serial = run_at(1);
+    let ts = serial
+        .summary
+        .telemetry
+        .expect("telemetry summary missing");
+    assert!(ts.pod_crashes > 0, "the storm must actually crash pods");
+    for threads in [2usize, 8] {
+        let parallel = run_at(threads);
+        let tp = parallel
+            .summary
+            .telemetry
+            .expect("telemetry summary missing");
+        assert_eq!(ts.pod_crashes, tp.pod_crashes);
+        assert_eq!(ts.retries, tp.retries);
+        assert_eq!(ts.failed_requests, tp.failed_requests);
+        assert_eq!(ts.fallback_solves, tp.fallback_solves);
+        assert_eq!(serial.summary.total_requests, parallel.summary.total_requests);
+        assert_eq!(serial.summary.failed, parallel.summary.failed);
+        assert_eq!(serial.summary.shed, parallel.summary.shed);
+        assert_eq!(
+            serial.summary.slo_violation_rate,
+            parallel.summary.slo_violation_rate
+        );
+        assert_eq!(serial.summary.core_seconds, parallel.summary.core_seconds);
+        for (x, y) in serial.summary.services.iter().zip(&parallel.summary.services) {
+            assert_summaries_identical(x, y);
+        }
+        for (a, b) in serial.per_service.iter().zip(&parallel.per_service) {
+            assert_eq!(
+                a.metrics.rows(a.duration_s),
+                b.metrics.rows(b.duration_s),
+                "interval rows diverge at {threads} threads"
+            );
+        }
     }
 }
