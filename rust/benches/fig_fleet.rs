@@ -45,9 +45,11 @@
 //! gate refresh on capacity loss, solver-stall fallback).  The headline
 //! is the SLO-violation reduction the reactions buy during the storm.
 //!
-//! `--short` shrinks the traces for CI; `--json <path>` writes the
-//! Part B matrix + headline, the Part C scaling table, and the Part D
-//! storm cells (uploaded as the BENCH_fleet.json artifact).
+//! `--short` shrinks the traces for CI; `--part-c-only` skips Parts
+//! A/B/D and runs a reduced Part C sweep (N = 256 only) — the CI
+//! perf-smoke step; `--json <path>` writes the Part B matrix + headline,
+//! the Part C scaling table, and the Part D storm cells (uploaded as the
+//! BENCH_fleet.json artifact).
 //! Timeline CSVs land in target/figures/fig_fleet_<mode>_<service>.csv.
 
 use infadapter::config::Config;
@@ -57,18 +59,124 @@ use infadapter::profiler::ProfileSet;
 use infadapter::runtime::artifacts_dir;
 use infadapter::util::json::Value;
 
+/// One Part C sweep row:
+/// `(services, budget, serial_wall_s, parallel_wall_s, speedup, efficiency)`.
+type PartCRow = (usize, usize, f64, f64, f64, f64);
+
+/// The Part C probe: run each fleet size with `solver_threads = 1` (the
+/// serial reference) then `0` (auto), assert the runs bit-identical on
+/// the way through, and print the throughput table.  Returns the rows
+/// plus the adapter-tick count per run and the core count.
+fn run_part_c(
+    sizes: &[usize],
+    part_c_seconds: usize,
+    profiles: &ProfileSet,
+    dir: &std::path::Path,
+) -> (Vec<PartCRow>, f64, usize) {
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let part_c_ticks = (part_c_seconds as f64 / 30.0).ceil(); // warm start + interior adapter ticks
+    println!(
+        "{:>6} {:>8} {:>13} {:>13} {:>9} {:>11}",
+        "N", "budget", "serial tk/s", "parallel tk/s", "speedup", "efficiency"
+    );
+    let mut part_c = Vec::new();
+    for &n in sizes {
+        let budget = (2 * n).min(256);
+        let mut c = Config::default();
+        c.adapter.forecaster = "last_max".into();
+        // low per-service rate: Part C measures tick protocol overhead
+        // and solve fan-out, not request-path saturation
+        let timed = |threads: usize| {
+            let mut s = FleetScenario::synthetic(n, 2.0, part_c_seconds, budget, &c, profiles);
+            s.solver_threads = threads;
+            let t0 = std::time::Instant::now();
+            let out = s.run(&FleetMode::Arbiter, dir);
+            (t0.elapsed().as_secs_f64(), out.summary.total_requests)
+        };
+        let (serial_s, serial_req) = timed(1);
+        let (parallel_s, parallel_req) = timed(0);
+        assert_eq!(
+            serial_req, parallel_req,
+            "solver_threads changed results at N={n}"
+        );
+        let serial_tps = n as f64 * part_c_ticks / serial_s;
+        let parallel_tps = n as f64 * part_c_ticks / parallel_s;
+        let speedup = serial_s / parallel_s;
+        let efficiency = speedup / cores as f64;
+        println!(
+            "{:>6} {:>8} {:>13.1} {:>13.1} {:>8.2}x {:>10.1}%",
+            n,
+            budget,
+            serial_tps,
+            parallel_tps,
+            speedup,
+            efficiency * 100.0
+        );
+        part_c.push((n, budget, serial_s, parallel_s, speedup, efficiency));
+    }
+    (part_c, part_c_ticks, cores)
+}
+
+/// The Part C JSON object (tagged with the tick-loop engine so the
+/// BENCH_fleet.json trajectory is comparable across the heap/scoped →
+/// wheel/pool change).
+fn part_c_json(rows: &[PartCRow], part_c_seconds: usize, part_c_ticks: f64, cores: usize) -> Value {
+    Value::obj(vec![
+        ("engine", Value::Str("wheel+pool".to_string())),
+        ("seconds", Value::Num(part_c_seconds as f64)),
+        ("ticks", Value::Num(part_c_ticks)),
+        ("cores", Value::Num(cores as f64)),
+        (
+            "rows",
+            Value::Arr(
+                rows.iter()
+                    .map(|(n, budget, serial_s, parallel_s, speedup, eff)| {
+                        Value::obj(vec![
+                            ("services", Value::Num(*n as f64)),
+                            ("budget", Value::Num(*budget as f64)),
+                            ("serial_wall_s", Value::Num(*serial_s)),
+                            ("parallel_wall_s", Value::Num(*parallel_s)),
+                            ("speedup", Value::Num(*speedup)),
+                            ("scaling_efficiency", Value::Num(*eff)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let short = args.iter().any(|a| a == "--short");
+    let part_c_only = args.iter().any(|a| a == "--part-c-only");
     let json_path = args
         .iter()
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
     let seconds = if short { 420 } else { 1200 };
+    let part_c_seconds = if short { 60 } else { 120 };
 
     let dir = artifacts_dir();
     let profiles = ProfileSet::paper_like();
+
+    if part_c_only {
+        println!("# Part C only (perf smoke): tick throughput at N=256");
+        let (rows, ticks, cores) = run_part_c(&[256], part_c_seconds, &profiles, &dir);
+        if let Some(path) = json_path {
+            let json = Value::obj(vec![(
+                "part_c",
+                part_c_json(&rows, part_c_seconds, ticks, cores),
+            )]);
+            std::fs::write(&path, json.to_string_pretty()).expect("write json");
+            println!("matrix -> {path}");
+        }
+        return;
+    }
+
     let mut config = Config::default();
     config.adapter.forecaster = "last_max".into();
     let scenario = FleetScenario::synthetic(2, 30.0, seconds, 12, &config, &profiles);
@@ -253,50 +361,8 @@ fn main() {
 
     // --- Part C: tick throughput vs fleet size, serial vs parallel ----
     println!("\n# Part C: tick throughput vs fleet size (solver_threads 1 vs auto)");
-    let part_c_seconds = if short { 60 } else { 120 };
-    let cores = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1);
-    let part_c_ticks = (part_c_seconds as f64 / 30.0).ceil(); // warm start + interior adapter ticks
-    println!(
-        "{:>6} {:>8} {:>13} {:>13} {:>9} {:>11}",
-        "N", "budget", "serial tk/s", "parallel tk/s", "speedup", "efficiency"
-    );
-    let mut part_c = Vec::new();
-    for n in [8usize, 64, 256, 1024] {
-        let budget = (2 * n).min(256);
-        let mut c = Config::default();
-        c.adapter.forecaster = "last_max".into();
-        // low per-service rate: Part C measures tick protocol overhead
-        // and solve fan-out, not request-path saturation
-        let timed = |threads: usize| {
-            let mut s = FleetScenario::synthetic(n, 2.0, part_c_seconds, budget, &c, &profiles);
-            s.solver_threads = threads;
-            let t0 = std::time::Instant::now();
-            let out = s.run(&FleetMode::Arbiter, &dir);
-            (t0.elapsed().as_secs_f64(), out.summary.total_requests)
-        };
-        let (serial_s, serial_req) = timed(1);
-        let (parallel_s, parallel_req) = timed(0);
-        assert_eq!(
-            serial_req, parallel_req,
-            "solver_threads changed results at N={n}"
-        );
-        let serial_tps = n as f64 * part_c_ticks / serial_s;
-        let parallel_tps = n as f64 * part_c_ticks / parallel_s;
-        let speedup = serial_s / parallel_s;
-        let efficiency = speedup / cores as f64;
-        println!(
-            "{:>6} {:>8} {:>13.1} {:>13.1} {:>8.2}x {:>10.1}%",
-            n,
-            budget,
-            serial_tps,
-            parallel_tps,
-            speedup,
-            efficiency * 100.0
-        );
-        part_c.push((n, budget, serial_s, parallel_s, speedup, efficiency));
-    }
+    let (part_c, part_c_ticks, cores) =
+        run_part_c(&[8, 64, 256, 1024], part_c_seconds, &profiles, &dir);
     // derived scaling-efficiency headline (printed in --short runs too:
     // everything above runs unconditionally)
     let n64 = part_c
@@ -449,29 +515,7 @@ fn main() {
             ),
             (
                 "part_c",
-                Value::obj(vec![
-                    ("seconds", Value::Num(part_c_seconds as f64)),
-                    ("ticks", Value::Num(part_c_ticks)),
-                    ("cores", Value::Num(cores as f64)),
-                    (
-                        "rows",
-                        Value::Arr(
-                            part_c
-                                .iter()
-                                .map(|(n, budget, serial_s, parallel_s, speedup, eff)| {
-                                    Value::obj(vec![
-                                        ("services", Value::Num(*n as f64)),
-                                        ("budget", Value::Num(*budget as f64)),
-                                        ("serial_wall_s", Value::Num(*serial_s)),
-                                        ("parallel_wall_s", Value::Num(*parallel_s)),
-                                        ("speedup", Value::Num(*speedup)),
-                                        ("scaling_efficiency", Value::Num(*eff)),
-                                    ])
-                                })
-                                .collect(),
-                        ),
-                    ),
-                ]),
+                part_c_json(&part_c, part_c_seconds, part_c_ticks, cores),
             ),
             (
                 "part_d",

@@ -4,6 +4,10 @@
 //!                               vs the old owned-String materialization)
 //! * request arena             — per-event request-state cost (free-list
 //!                               slab reuse vs per-event heap boxes)
+//! * event scheduler           — per-event pop+push cost (calendar-queue
+//!                               timer wheel vs binary heap)
+//! * worker pool               — per-stage fan-out cost (persistent
+//!                               parked pool vs fresh scoped spawns)
 //! * P2 quantile record()      — per-sample monitoring cost
 //! * solvers at paper scale    — per-decision cost (30 s cadence)
 //! * value curves              — single-pass solve_curve vs the per-grant
@@ -33,8 +37,35 @@ use infadapter::solver::{
     value_curve_resolve, BranchBoundSolver, BruteForceSolver, GreedySolver, Problem, Solver,
 };
 use infadapter::util::benchkit::BenchReport;
+use infadapter::util::pool::{scoped_dispatch, WorkerPool};
+use infadapter::util::sched::TimerWheel;
 use infadapter::workload::Trace;
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Bench-local mirror of the shard event key: ascending `(t, seq)` via
+/// `total_cmp`, exactly the ordering both schedulers must produce.
+struct Ev(f64, u64);
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
 
 fn main() {
     let mut report = BenchReport::from_args();
@@ -82,6 +113,7 @@ fn main() {
                 arrival: t,
                 accuracy: 76.13,
                 tier: 0,
+                retries: 0,
             }));
             if window.len() == 32 {
                 let done = window.swap_remove(0);
@@ -97,6 +129,7 @@ fn main() {
                 arrival: t,
                 accuracy: 76.13,
                 tier: 0,
+                retries: 0,
             }));
             if live.len() == 32 {
                 let id = live.swap_remove(0);
@@ -113,6 +146,74 @@ fn main() {
             "  -> arena: {allocs} allocs, {reuses} reused ({:.1}% free-list hits), high water {}",
             100.0 * reuses as f64 / allocs.max(1) as f64,
             arena.high_water()
+        );
+    }
+
+    println!("\n== event scheduler: binary heap vs timer wheel ==");
+    // The shard event loop's hot pair: pop the earliest event, schedule
+    // its successor.  Steady state holds ~LIVE events (a loaded shard's
+    // in-flight arrivals + completions) with successors jittered 0.5-1.5
+    // virtual seconds out by an LCG, so the wheel's buckets genuinely
+    // cycle instead of draining one slot forever.
+    {
+        const LIVE: usize = 4096;
+        let mut heap: BinaryHeap<Reverse<Ev>> = (0..LIVE)
+            .map(|i| Reverse(Ev(i as f64 / LIVE as f64, i as u64)))
+            .collect();
+        let mut seq = LIVE as u64;
+        let mut r = 0x9E37_79B9_7F4A_7C15u64;
+        let heap_stats = report.run("sched.heap_pop_push (4096 live)", || {
+            let Reverse(Ev(t, _)) = heap.pop().unwrap();
+            r = r.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let dt = 0.5 + (r >> 40) as f64 / (1u64 << 24) as f64;
+            seq += 1;
+            heap.push(Reverse(Ev(t + dt, seq)));
+        });
+        let mut wheel: TimerWheel<()> = TimerWheel::sized_for(LIVE as f64, 2.0);
+        for i in 0..LIVE {
+            wheel.push(i as f64 / LIVE as f64, i as u64, ());
+        }
+        let mut seq = LIVE as u64;
+        let mut r = 0x9E37_79B9_7F4A_7C15u64;
+        let wheel_stats = report.run("sched.wheel_pop_push (4096 live)", || {
+            let (t, _, ()) = wheel.pop().unwrap();
+            r = r.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let dt = 0.5 + (r >> 40) as f64 / (1u64 << 24) as f64;
+            seq += 1;
+            wheel.push(t + dt, seq, ());
+        });
+        report.derive(
+            "sched.wheel_speedup (4096 live)",
+            heap_stats.mean.as_secs_f64() / wheel_stats.mean.as_secs_f64(),
+        );
+        println!(
+            "  -> wheel: high water {}, {} cascades over {} pushes",
+            wheel.high_water(),
+            wheel.cascades(),
+            wheel.pushes()
+        );
+    }
+
+    println!("\n== worker pool: fresh scoped spawns vs persistent dispatch ==");
+    // The fleet tick's fan-out cost, isolated: each adapter tick runs
+    // three parallel stages, so per-tick thread tax ~ 3 x these entries.
+    // "before" spawns 8 scoped threads + a channel per call (the PR 6
+    // machinery); "after" wakes the engine's parked pool by generation.
+    {
+        let scoped = report.run("pool.scoped_spawn (8 threads, 64 tasks)", || {
+            scoped_dispatch(8, 64, &|i| {
+                std::hint::black_box(i.wrapping_mul(i));
+            });
+        });
+        let pool = WorkerPool::new(8, false);
+        let persistent = report.run("pool.dispatch (8 threads, 64 tasks)", || {
+            pool.dispatch(64, &|i| {
+                std::hint::black_box(i.wrapping_mul(i));
+            });
+        });
+        report.derive(
+            "pool.dispatch_speedup (8 threads)",
+            scoped.mean.as_secs_f64() / persistent.mean.as_secs_f64(),
         );
     }
 

@@ -336,11 +336,12 @@ pub struct FleetConfig {
     /// objective.
     pub shed_penalty: f64,
     /// Worker threads for the fleet engine's parallel stages (advance,
-    /// curve solve, decide).  0 (default) = auto — one worker per
-    /// available core; 1 = the serial reference path.  The count never
-    /// changes results (parallel runs are bit-identical to serial,
-    /// pinned by `parallel_fleet_is_bit_identical_to_serial`), only
-    /// wall-clock.
+    /// curve solve, decide), backed by one persistent worker pool per run
+    /// — workers park between stages, no per-stage spawns.  0 (default) =
+    /// auto — one worker per available core; 1 = the serial reference
+    /// path (no pool).  The count never changes results (parallel runs
+    /// are bit-identical to serial, pinned by
+    /// `parallel_fleet_is_bit_identical_to_serial`), only wall-clock.
     pub solver_threads: usize,
     /// Empty = fleet serving disabled (single-service mode).
     pub services: Vec<FleetServiceConfig>,

@@ -4,7 +4,8 @@
 //! serial loop over one global event heap.  This module carves out
 //! everything that is *per-service* — trace stream, RNG, admission gate,
 //! dispatcher, pods view, metrics, rate accounting, and the discrete-event
-//! heap itself — so the engine shrinks to an orchestrator running the
+//! schedule itself (a [`TimerWheel`] calendar queue with heap-exact pop
+//! order) — so the engine shrinks to an orchestrator running the
 //! five-stage tick protocol (observe → solve → arbitrate → apply →
 //! advance) over a `Vec<ServiceShard>`.
 //!
@@ -49,11 +50,11 @@ use crate::profiler::ProfileSet;
 use crate::serving::sim::SimConfig;
 use crate::serving::Decision;
 use crate::telemetry::ShardTelemetry;
-use crate::util::mpmc;
+use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
+use crate::util::sched::TimerWheel;
 use crate::workload::ClassMixer;
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 use super::sim::{service_seed, FleetService};
 
@@ -78,33 +79,14 @@ enum EventKind {
     Retry { req: u32 },
 }
 
-#[derive(Debug, Clone, Copy)]
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
-    }
-}
-
-fn push_event(heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: f64, kind: EventKind) {
+/// Stamp and schedule one event.  The wheel pops in ascending `(t, seq)` —
+/// exactly the order the old `BinaryHeap<Reverse<Event>>` produced (see
+/// [`TimerWheel`]'s exactness argument), so the monotone per-shard `seq`
+/// keeps resolving equal-time ties the way the global engine's push order
+/// did.
+fn push_event(events: &mut TimerWheel<EventKind>, seq: &mut u64, t: f64, kind: EventKind) {
     *seq += 1;
-    heap.push(Reverse(Event { t, seq: *seq, kind }));
+    events.push(t, *seq, kind);
 }
 
 /// One simulated pod (M/G/n station) owned by the shard's service.
@@ -237,6 +219,12 @@ impl BatchArena {
         Self::default()
     }
 
+    /// Pre-size the slot table (the member vectors themselves still grow
+    /// on first use and then circulate).
+    pub fn reserve(&mut self, additional: usize) {
+        self.slots.reserve(additional);
+    }
+
     /// Move `items`'s contents into a (possibly recycled) slot; `items`
     /// gets the slot's old empty-but-allocated vector back in exchange.
     #[inline]
@@ -312,8 +300,10 @@ pub struct ServiceShard {
     /// decision path (no-ops when telemetry is disabled; see
     /// [`crate::telemetry`] for the bit-identity argument).
     pub(crate) telem: ShardTelemetry,
-    /// This service's slice of the discrete-event heap.
-    heap: BinaryHeap<Reverse<Event>>,
+    /// This service's slice of the discrete-event schedule: a calendar
+    /// queue with heap-exact `(t, seq)` pop order, pre-sized from the
+    /// trace's peak rate.
+    events: TimerWheel<EventKind>,
     seq: u64,
     /// This service's pods (the cluster's authoritative set, projected).
     pods: HashMap<u64, PodSim>,
@@ -370,13 +360,25 @@ impl ServiceShard {
                 mix.iter().copied().max().expect("non-empty"),
             )
         };
+        // Pre-size per-shard state from the trace's peak rate so steady
+        // state never reallocates mid-run: the wheel's coarse window covers
+        // the whole horizon (overflow stays empty), and the request slab
+        // covers the worst-case live set — arrivals stay resident at most
+        // the queue timeout plus a couple of seconds of service.
+        let duration = s.trace.duration_s() as f64;
+        let peak_rate = s.trace.rates.iter().copied().fold(0.0, f64::max);
+        let mut arena = RequestArena::new();
+        let est_live = (peak_rate * (cfg.queue_timeout_s + 2.0)).ceil() as usize;
+        arena.reserve(est_live.clamp(64, 1 << 20));
+        let mut batches = BatchArena::new();
+        batches.reserve(64);
         let shard = Self {
             prefix: if s.name.is_empty() {
                 String::new()
             } else {
                 format!("{}/", s.name)
             },
-            duration: s.trace.duration_s() as f64,
+            duration,
             path: RequestPath::new(AdmissionGate::new(&cfg.admission, min_tier, max_tier)),
             tier_mixer: ClassMixer::new(&s.trace.class_mix, s.tier),
             burn: SloBurnMeter::new(s.error_budget, BURN_WINDOW_INTERVALS),
@@ -395,11 +397,11 @@ impl ServiceShard {
             pending_decision: None,
             curve_cache: CurveCache::new(),
             telem: ShardTelemetry::new(cfg.telemetry.enabled),
-            heap: BinaryHeap::new(),
+            events: TimerWheel::sized_for(peak_rate, duration),
             seq: 0,
             pods: HashMap::new(),
-            arena: RequestArena::new(),
-            batches: BatchArena::new(),
+            arena,
+            batches,
             queue_timeout_s: cfg.queue_timeout_s,
             batch_max_wait_s: cfg.batch_max_wait_s,
             slo_s: s.slo_s,
@@ -425,13 +427,13 @@ impl ServiceShard {
         self.fault.enabled && self.fault.stall_rate > 0.0 && self.fault.reactions
     }
 
-    /// Load this service's arrival stream into the shard heap (the same
-    /// push order the global engine used, so `(t, seq)` ties resolve
-    /// identically within the service).
+    /// Load this service's arrival stream into the shard schedule (the
+    /// same push order the global engine used, so `(t, seq)` ties resolve
+    /// identically within the service).  The arena was already pre-sized
+    /// from the peak rate in [`ServiceShard::new`].
     pub(super) fn seed_arrivals(&mut self, times: &[f64]) {
-        self.arena.reserve(times.len().min(1 << 20));
         for &t in times {
-            push_event(&mut self.heap, &mut self.seq, t, EventKind::Arrival);
+            push_event(&mut self.events, &mut self.seq, t, EventKind::Arrival);
         }
     }
 
@@ -445,14 +447,14 @@ impl ServiceShard {
                 variant: raw,
                 cores,
                 busy: 0,
-                queue: VecDeque::new(),
-                forming: Vec::new(),
+                queue: VecDeque::with_capacity(4),
+                forming: Vec::with_capacity(max_batch.max(1)),
                 forming_seq: 0,
                 max_batch,
                 waiting: 0,
                 slow_until: 0.0,
                 slow_mult: 1.0,
-                in_service: Vec::new(),
+                in_service: Vec::with_capacity(cores.max(1)),
             },
         );
     }
@@ -506,15 +508,15 @@ impl ServiceShard {
     /// `f64::INFINITY` to drain (completions may land past the trace end
     /// and every request must be accounted for — conservation).
     pub(super) fn advance(&mut self, cluster: &Cluster, profiles: &ProfileSet, until: f64) {
-        while let Some(&Reverse(ev)) = self.heap.peek() {
-            let due = ev.t < until || (ev.t == until && ev.kind == EventKind::Arrival);
+        while let Some((t, _, &kind)) = self.events.peek() {
+            let due = t < until || (t == until && kind == EventKind::Arrival);
             if !due {
                 break;
             }
-            self.heap.pop();
-            let now = ev.t;
+            self.events.pop();
+            let now = t;
             self.roll_to(now as u64);
-            match ev.kind {
+            match kind {
                 EventKind::Arrival => self.handle_arrival(cluster, profiles, now),
                 EventKind::Completion { pod_id, batch } => {
                     self.handle_completion(profiles, now, pod_id, batch)
@@ -661,7 +663,7 @@ impl ServiceShard {
                 stime *= pod.slow_mult;
             }
             push_event(
-                &mut self.heap,
+                &mut self.events,
                 &mut self.seq,
                 now + stime,
                 EventKind::Completion { pod_id, batch: bid },
@@ -690,7 +692,7 @@ impl ServiceShard {
                 &mut items,
                 now,
                 &mut self.batches,
-                &mut self.heap,
+                &mut self.events,
                 &mut self.seq,
                 &mut self.rng,
                 &mut self.telem,
@@ -716,7 +718,7 @@ impl ServiceShard {
                 &mut items,
                 now,
                 &mut self.batches,
-                &mut self.heap,
+                &mut self.events,
                 &mut self.seq,
                 &mut self.rng,
                 &mut self.telem,
@@ -724,7 +726,7 @@ impl ServiceShard {
             pod.forming = items;
         } else if pod.forming.len() == 1 {
             push_event(
-                &mut self.heap,
+                &mut self.events,
                 &mut self.seq,
                 now + self.batch_max_wait_s,
                 EventKind::BatchTimeout {
@@ -925,7 +927,7 @@ impl ServiceShard {
             self.arena.get_mut(rid).retries = attempt + 1;
             self.telem.record_retry();
             push_event(
-                &mut self.heap,
+                &mut self.events,
                 &mut self.seq,
                 retry_t,
                 EventKind::Retry { req: rid },
@@ -974,7 +976,7 @@ impl ServiceShard {
                         &mut items,
                         now,
                         &mut self.batches,
-                        &mut self.heap,
+                        &mut self.events,
                         &mut self.seq,
                         &mut self.rng,
                         &mut self.telem,
@@ -1029,6 +1031,12 @@ impl ServiceShard {
         let (a, r) = self.arena.stats();
         (a, r, self.arena.live(), self.arena.high_water())
     }
+
+    /// Event-wheel counters for diagnostics: (peak scheduled events,
+    /// coarse-bucket cascades over the run).
+    pub fn wheel_stats(&self) -> (usize, u64) {
+        (self.events.high_water(), self.events.cascades())
+    }
 }
 
 /// Cluster-facing variant key of a service's variant.
@@ -1063,7 +1071,7 @@ fn dispatch_batch(
     items: &mut Vec<u32>,
     now: f64,
     batches: &mut BatchArena,
-    heap: &mut BinaryHeap<Reverse<Event>>,
+    events: &mut TimerWheel<EventKind>,
     seq: &mut u64,
     rng: &mut Rng,
     telem: &mut ShardTelemetry,
@@ -1079,75 +1087,57 @@ fn dispatch_batch(
         if now < pod.slow_until {
             stime *= pod.slow_mult;
         }
-        push_event(heap, seq, now + stime, EventKind::Completion { pod_id, batch: bid });
+        push_event(events, seq, now + stime, EventKind::Completion { pod_id, batch: bid });
     } else {
         pod.queue.push_back(bid);
     }
 }
 
 /// Run `f(i, &mut a[i], &mut b[i])` for every index — serially in index
-/// order when `threads <= 1`, otherwise fanned out over a scoped worker
-/// pool fed by the [`mpmc`] channel.  Each task owns a disjoint pair of
-/// `&mut` slots, every result lands in the task's own slot, and callers
-/// read the slots back in index order — so thread scheduling cannot
-/// influence any outcome and the parallel path is bit-identical to the
-/// serial one by construction (pinned by
-/// `parallel_fleet_is_bit_identical_to_serial`).
+/// order when no pool is supplied (the thread-free N = 1 wrapper path and
+/// `solver_threads = 1`), otherwise fanned out over the engine's
+/// persistent [`WorkerPool`].  Each task owns a disjoint pair of `&mut`
+/// slots, every result lands in the task's own slot, and callers read the
+/// slots back in index order — so thread scheduling cannot influence any
+/// outcome and the parallel path is bit-identical to the serial one by
+/// construction (pinned by `parallel_fleet_is_bit_identical_to_serial`).
 ///
-/// **Panic discipline.**  A panicking task raises a shared flag (via a
-/// drop guard, so any unwind path sets it) that makes every sibling
-/// worker stop pulling new tasks; the scope then joins the survivors and
-/// re-raises the panic at the caller.  Together with the [`mpmc`]
-/// channel's poison-tolerant locks this turns "one worker died" into a
-/// prompt, clean abort instead of a full-queue drain or a wedged
-/// channel (`worker_panic_aborts_cleanly_without_hanging`).
-pub(crate) fn parallel_zip<A, B, F>(threads: usize, a: &mut [A], b: &mut [B], f: F)
+/// **Safety of the fan-out.**  The pool's closure receives a plain index
+/// and re-derives `(&mut a[i], &mut b[i])` from raw base pointers.  This is
+/// sound because [`WorkerPool::dispatch`] claims every index exactly once
+/// (so no two tasks alias a slot), `A: Send`/`B: Send` make moving the
+/// borrows across threads legal, and `dispatch` blocks until all claimed
+/// tasks completed — the borrows never outlive the call.
+///
+/// **Panic discipline.**  A panicking task flips the pool's abort flag
+/// (siblings stop claiming), the unclaimed remainder is drained, and the
+/// panic re-raises at the caller — the same observable behavior as the old
+/// scoped-spawn path (`worker_panic_aborts_cleanly_without_hanging`).
+pub(crate) fn parallel_zip<A, B, F>(pool: Option<&WorkerPool>, a: &mut [A], b: &mut [B], f: F)
 where
     A: Send,
     B: Send,
     F: Fn(usize, &mut A, &mut B) + Sync,
 {
-    use std::sync::atomic::{AtomicBool, Ordering};
-
-    /// Set on drop — `mem::forget` on the success path means the flag
-    /// only ever raises when `f` unwound.
-    struct PanicFlag<'a>(&'a AtomicBool);
-    impl Drop for PanicFlag<'_> {
-        fn drop(&mut self) {
-            self.0.store(true, Ordering::Relaxed);
-        }
-    }
-
     debug_assert_eq!(a.len(), b.len());
-    let workers = threads.min(a.len());
-    if workers <= 1 {
-        for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
-            f(i, x, y);
+    let n = a.len().min(b.len());
+    let pool = match pool {
+        Some(p) if n > 1 => p,
+        _ => {
+            for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+                f(i, x, y);
+            }
+            return;
         }
-        return;
-    }
-    let (tx, rx) = mpmc::channel();
-    for item in a.iter_mut().zip(b.iter_mut()).enumerate() {
-        tx.send(item).unwrap_or_else(|_| unreachable!("receiver held open"));
-    }
-    drop(tx);
-    let panicked = AtomicBool::new(false);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let rx = rx.clone();
-            let f = &f;
-            let panicked = &panicked;
-            scope.spawn(move || {
-                while let Some((i, (x, y))) = rx.recv() {
-                    if panicked.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let guard = PanicFlag(panicked);
-                    f(i, x, y);
-                    std::mem::forget(guard);
-                }
-            });
-        }
+    };
+    let pa = a.as_mut_ptr() as usize;
+    let pb = b.as_mut_ptr() as usize;
+    pool.dispatch(n, &|i| {
+        // SAFETY: i < n <= len of both slices, and the pool hands out each
+        // index exactly once, so these are disjoint in-bounds `&mut`s that
+        // live only for this call (dispatch blocks until every task ends).
+        let (x, y) = unsafe { (&mut *(pa as *mut A).add(i), &mut *(pb as *mut B).add(i)) };
+        f(i, x, y);
     });
 }
 
@@ -1200,11 +1190,12 @@ mod tests {
         let n = 257;
         let mut a1 = vec![0u64; n];
         let mut b1 = vec![0u64; n];
-        parallel_zip(1, &mut a1, &mut b1, f);
+        parallel_zip(None, &mut a1, &mut b1, f);
         for threads in [2, 4, 8, 64] {
+            let pool = WorkerPool::new(threads, false);
             let mut a = vec![0u64; n];
             let mut b = vec![0u64; n];
-            parallel_zip(threads, &mut a, &mut b, f);
+            parallel_zip(Some(&pool), &mut a, &mut b, f);
             assert_eq!(a, a1, "threads={threads}");
             assert_eq!(b, b1, "threads={threads}");
         }
@@ -1212,9 +1203,10 @@ mod tests {
 
     #[test]
     fn parallel_zip_handles_more_threads_than_items() {
+        let pool = WorkerPool::new(16, false);
         let mut a = vec![1u32; 3];
         let mut b = vec![2u32; 3];
-        parallel_zip(16, &mut a, &mut b, |_, x, y| {
+        parallel_zip(Some(&pool), &mut a, &mut b, |_, x, y| {
             *x += 1;
             *y += 1;
         });
@@ -1223,17 +1215,17 @@ mod tests {
     }
 
     /// Satellite (a): a panic in one of eight workers must propagate to
-    /// the caller as a panic (clean abort), not wedge the channel or
-    /// strand the scope — and siblings stop pulling new tasks once the
-    /// flag is up, so the queue is not fully drained behind a corpse.
+    /// the caller as a panic (clean abort), not hang the dispatcher — and
+    /// the same pool must keep serving fresh dispatches afterwards.
     #[test]
     fn worker_panic_aborts_cleanly_without_hanging() {
         use std::panic::{catch_unwind, AssertUnwindSafe};
+        let pool = WorkerPool::new(8, false);
         let n = 64;
         let mut a: Vec<u64> = (0..n as u64).collect();
         let mut b = vec![0u64; n];
         let result = catch_unwind(AssertUnwindSafe(|| {
-            parallel_zip(8, &mut a, &mut b, |i, _x, y| {
+            parallel_zip(Some(&pool), &mut a, &mut b, |i, _x, y| {
                 if i == 13 {
                     panic!("worker down");
                 }
@@ -1241,11 +1233,11 @@ mod tests {
             });
         }));
         assert!(result.is_err(), "the worker panic must reach the caller");
-        // the channel survives the poisoned run: a fresh parallel_zip on
-        // the same thread count works
+        // the pool survives the aborted generation: a fresh parallel_zip
+        // on the same pool works
         let mut c = vec![0u64; 8];
         let mut d = vec![0u64; 8];
-        parallel_zip(8, &mut c, &mut d, |i, x, _y| *x = i as u64);
+        parallel_zip(Some(&pool), &mut c, &mut d, |i, x, _y| *x = i as u64);
         assert_eq!(c, (0..8).collect::<Vec<u64>>());
     }
 }

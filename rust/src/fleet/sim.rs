@@ -4,18 +4,18 @@
 //! [`crate::serving::sim`], which is a thin single-service wrapper around
 //! this engine) to N independent services sharing one [`Cluster`].  The
 //! data plane is *sharded*: each service's trace stream, RNG, admission
-//! gate, dispatcher, pods view, metrics, and event heap live in its own
+//! gate, dispatcher, pods view, metrics, and event wheel live in its own
 //! [`ServiceShard`] (see [`super::shard`]), and this module is only the
 //! orchestrator driving the five-stage tick protocol at every adaptation
 //! boundary:
 //!
 //! ```text
-//!             │ shards advance own event heaps to the boundary │
+//!             │ shards advance own event wheels to the boundary│
 //!   advance ──┤  (parallel; disjoint per-service state)        │
 //!             ▼
 //!   observe ── flush rate windows + SLO-burn meters  (serial, index order)
 //!             ▼
-//!   solve ──── forecast λ̂ + value-curve solves       (parallel, scoped threads)
+//!   solve ──── forecast λ̂ + value-curve solves       (parallel, worker pool)
 //!             ▼
 //!   arbitrate─ water-fill the global core budget      (serial, index order)
 //!             ▼
@@ -57,7 +57,8 @@
 //! (`parallel_fleet_is_bit_identical_to_serial` in
 //! `tests/regression_pins.rs` pins it).  The old single-heap engine's
 //! global `(t, seq)` event order is reproduced exactly: within a shard by
-//! the shard's own heap, across shards by the boundary admission rule in
+//! the shard's own timer wheel (whose pop order is provably the heap's —
+//! see [`crate::util::sched`]), across shards by the boundary admission rule in
 //! [`ServiceShard::advance`] (arrivals at a boundary run before it,
 //! runtime events after it — matching the global engine's init-time vs
 //! runtime sequence numbers), and boundary times themselves by the same
@@ -75,8 +76,9 @@ use crate::serving::sim::{SimConfig, SimResult};
 use crate::serving::{Decision, Policy};
 use crate::telemetry::{
     curve_knee, FleetTelemetry, ServiceTick, TelemetrySummary, TickTrace, STAGE_ADVANCE,
-    STAGE_APPLY, STAGE_ARBITRATE, STAGE_OBSERVE, STAGE_SOLVE,
+    STAGE_APPLY, STAGE_ARBITRATE, STAGE_DISPATCH, STAGE_OBSERVE, STAGE_SOLVE,
 };
+use crate::util::pool::WorkerPool;
 use crate::workload::{ArrivalProcess, RateSeries};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -174,7 +176,7 @@ fn effective_threads(configured: usize, n: usize) -> usize {
 struct StageClock {
     enabled: bool,
     t: Option<Instant>,
-    ns: [u64; 5],
+    ns: [u64; 6],
 }
 
 impl StageClock {
@@ -182,7 +184,7 @@ impl StageClock {
         Self {
             enabled,
             t: enabled.then(Instant::now),
-            ns: [0; 5],
+            ns: [0; 6],
         }
     }
 
@@ -193,6 +195,24 @@ impl StageClock {
         let now = Instant::now();
         if let Some(prev) = self.t {
             self.ns[stage] += now.duration_since(prev).as_nanos() as u64;
+        }
+        self.t = Some(now);
+    }
+
+    /// Like [`Self::lap`], but carves `dispatch_ns` — worker-pool fan-out
+    /// overhead the pool measured inside this span — out of `stage` and
+    /// charges it to the dispatch lap, so the parallel stages' histograms
+    /// measure solver/simulation work rather than thread machinery.
+    fn lap_split(&mut self, stage: usize, dispatch_ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        if let Some(prev) = self.t {
+            let span = now.duration_since(prev).as_nanos() as u64;
+            let d = dispatch_ns.min(span);
+            self.ns[stage] += span - d;
+            self.ns[STAGE_DISPATCH] += d;
         }
         self.t = Some(now);
     }
@@ -237,6 +257,14 @@ impl FleetSimEngine {
             .max()
             .unwrap_or(0) as f64;
         let threads = effective_threads(cfg.solver_threads, n);
+        // The persistent worker pool for the parallel stages: spawned once
+        // here, parked between dispatches, dropped (joined) when the run
+        // returns.  `threads == 1` is the serial reference path — no pool,
+        // no threads, ever (the N=1 single-adapter wrapper rides it).
+        // Timed only when telemetry is on, so the disabled path never
+        // reads the clock.
+        let pool = (threads > 1).then(|| WorkerPool::new(threads, cfg.telemetry.enabled));
+        let pool = pool.as_ref();
         let mut telem = cfg
             .telemetry
             .enabled
@@ -272,7 +300,7 @@ impl FleetSimEngine {
         let empty_committed: Vec<BTreeMap<String, usize>> = vec![BTreeMap::new(); n];
         let mut warm_clock = StageClock::start(false);
         let grants = self.arbitrate(
-            threads,
+            pool,
             services,
             &mut shards,
             &first_rates,
@@ -280,7 +308,7 @@ impl FleetSimEngine {
             &mut warm_clock,
         );
         let decisions0 = decide_all(
-            threads,
+            pool,
             0.0,
             services,
             &mut shards,
@@ -321,9 +349,11 @@ impl FleetSimEngine {
         let mut next_cluster = 1.0f64;
         let mut next_adapter = cfg.adapter_interval_s;
         // Wall-clock the advance stage spends between adapter boundaries
-        // (folded into the next tick's `advance` slot), and the 1-based
-        // adapter-tick ordinal (the warm start is not traced).
+        // (folded into the next tick's `advance` slot, minus the pool
+        // dispatch overhead which lands in the `dispatch` slot), and the
+        // 1-based adapter-tick ordinal (the warm start is not traced).
         let mut pending_advance_ns = 0u64;
+        let mut pending_dispatch_ns = 0u64;
         // Cores lost to crashes since the last adapter tick (telemetry's
         // capacity-loss signal; drained into `on_tick`).
         let mut pending_lost_cores = 0u64;
@@ -338,9 +368,13 @@ impl FleetSimEngine {
                 (false, false) => break,
             };
             let adv_start = telem.is_some().then(Instant::now);
-            advance_all(threads, services, &mut shards, &cluster, t);
+            let adv_ov0 = pool.map_or(0, |p| p.overhead_ns());
+            advance_all(pool, services, &mut shards, &cluster, t);
             if let Some(s) = adv_start {
-                pending_advance_ns += s.elapsed().as_nanos() as u64;
+                let span = s.elapsed().as_nanos() as u64;
+                let d = (pool.map_or(0, |p| p.overhead_ns()) - adv_ov0).min(span);
+                pending_advance_ns += span - d;
+                pending_dispatch_ns += d;
             }
             // catch every shard's per-second rate accounting up to the
             // boundary (idle shards included — the old engine rolled all
@@ -357,7 +391,7 @@ impl FleetSimEngine {
             if adapter_due && next_adapter == t {
                 tick_no += 1;
                 self.adapter_boundary(
-                    threads,
+                    pool,
                     &mut cluster,
                     services,
                     &mut shards,
@@ -366,6 +400,7 @@ impl FleetSimEngine {
                     &mut telem,
                     tick_no,
                     std::mem::take(&mut pending_advance_ns),
+                    std::mem::take(&mut pending_dispatch_ns),
                     std::mem::take(&mut pending_lost_cores),
                 );
                 next_adapter += cfg.adapter_interval_s;
@@ -373,7 +408,7 @@ impl FleetSimEngine {
         }
         // --- Drain: completions may land past the trace end and every
         // request must be accounted for (conservation).
-        advance_all(threads, services, &mut shards, &cluster, f64::INFINITY);
+        advance_all(pool, services, &mut shards, &cluster, f64::INFINITY);
 
         // Telemetry fan-in, strictly in service-index order (the counters
         // are plain sums, so this is belt and braces on top of the merge
@@ -385,9 +420,17 @@ impl FleetSimEngine {
                 ft.cache.warm += sh.curve_cache.stats.warm;
                 ft.cache.cold += sh.curve_cache.stats.cold;
                 ft.solve.add(sh.curve_cache.solve_stats);
-                let (allocs, reuses, _, _) = sh.arena_stats();
+                let (allocs, reuses, _, arena_high) = sh.arena_stats();
                 ft.arena_allocs += allocs;
                 ft.arena_reuses += reuses;
+                ft.arena_high_water = ft.arena_high_water.max(arena_high as u64);
+                let (wheel_high, cascades) = sh.wheel_stats();
+                ft.wheel_high_water = ft.wheel_high_water.max(wheel_high as u64);
+                ft.wheel_cascades += cascades;
+            }
+            if let Some(p) = pool {
+                ft.pool_dispatches = p.dispatches();
+                ft.pool_dispatch_ns = p.overhead_ns();
             }
         }
         let summarize = cfg.telemetry.enabled;
@@ -395,13 +438,17 @@ impl FleetSimEngine {
             .into_iter()
             .map(|sh| {
                 let telemetry = summarize.then(|| {
-                    let (allocs, reuses, _, _) = sh.arena_stats();
+                    let (allocs, reuses, _, arena_high) = sh.arena_stats();
+                    let (wheel_high, cascades) = sh.wheel_stats();
                     TelemetrySummary::from_shard(
                         &sh.telem,
                         sh.curve_cache.stats,
                         sh.curve_cache.solve_stats,
                         allocs,
                         reuses,
+                        arena_high as u64,
+                        wheel_high as u64,
+                        cascades,
                     )
                 });
                 SimResult {
@@ -416,16 +463,16 @@ impl FleetSimEngine {
         (results, telem)
     }
 
-    /// Solve + arbitrate stages.  The solve fans out over scoped worker
-    /// threads — each arbitrated service forecasts λ̂ and solves its value
-    /// curve into its own shard's `pending_*` slots — then the arbiter
-    /// water-fills the global budget serially over the entries collected
-    /// in service-index order.  Returns `None` per service when the
-    /// engine has no arbiter (every policy keeps its own budget; the
+    /// Solve + arbitrate stages.  The solve fans out over the persistent
+    /// worker pool — each arbitrated service forecasts λ̂ and solves its
+    /// value curve into its own shard's `pending_*` slots — then the
+    /// arbiter water-fills the global budget serially over the entries
+    /// collected in service-index order.  Returns `None` per service when
+    /// the engine has no arbiter (every policy keeps its own budget; the
     /// solve stage is skipped entirely).
     fn arbitrate(
         &self,
-        threads: usize,
+        pool: Option<&WorkerPool>,
         services: &mut [FleetService],
         shards: &mut [ServiceShard],
         histories: &[Vec<f64>],
@@ -442,7 +489,8 @@ impl FleetSimEngine {
         // pair, so thread scheduling cannot affect any value — the
         // telemetry records included (each shard's recorder is its own
         // disjoint state, and timing is observed, never consulted).
-        parallel_zip(threads, services, shards, |i, s, sh| {
+        let ov0 = pool.map_or(0, |p| p.overhead_ns());
+        parallel_zip(pool, services, shards, |i, s, sh| {
             if let FleetPolicyRef::Arbitrated(p) = &mut s.policy {
                 let lambda = p.observe_and_predict(&histories[i]);
                 sh.pending_lambda = lambda;
@@ -472,7 +520,7 @@ impl FleetSimEngine {
                 sh.pending_curve = Some(curve);
             }
         });
-        clock.lap(STAGE_SOLVE);
+        clock.lap_split(STAGE_SOLVE, pool.map_or(0, |p| p.overhead_ns()) - ov0);
         // Arbitrate stage (serial): fan in strictly by service index.
         let entries: Vec<ArbiterEntry> = services
             .iter()
@@ -500,7 +548,7 @@ impl FleetSimEngine {
     #[allow(clippy::too_many_arguments)]
     fn adapter_boundary(
         &self,
-        threads: usize,
+        pool: Option<&WorkerPool>,
         cluster: &mut Cluster,
         services: &mut [FleetService],
         shards: &mut [ServiceShard],
@@ -509,6 +557,7 @@ impl FleetSimEngine {
         telem: &mut Option<FleetTelemetry>,
         tick: u64,
         advance_ns: u64,
+        dispatch_ns: u64,
         lost_cores: u64,
     ) {
         let n = services.len();
@@ -542,10 +591,10 @@ impl FleetSimEngine {
             .map(|s| std::mem::take(&mut s.rate_history))
             .collect();
         clock.lap(STAGE_OBSERVE);
-        let grants = self.arbitrate(
-            threads, services, shards, &histories, &committed, &mut clock,
-        );
-        let decisions = decide_all(threads, now, services, shards, &histories, &committed, &grants);
+        let grants = self.arbitrate(pool, services, shards, &histories, &committed, &mut clock);
+        let ov0 = pool.map_or(0, |p| p.overhead_ns());
+        let decisions = decide_all(pool, now, services, shards, &histories, &committed, &grants);
+        let decide_dispatch_ns = pool.map_or(0, |p| p.overhead_ns()) - ov0;
         // Apply stage (serial): reconcile the shared cluster against the
         // union target, then install each decision shard by shard.
         let merged = merged_target(shards, &decisions);
@@ -558,10 +607,11 @@ impl FleetSimEngine {
         }
         refresh_gates(cluster, services, shards, now);
         record_costs(cluster, shards, now);
-        clock.lap(STAGE_APPLY);
+        clock.lap_split(STAGE_APPLY, decide_dispatch_ns);
         if let Some(ft) = telem.as_mut() {
             let mut stage_ns = clock.ns;
             stage_ns[STAGE_ADVANCE] = advance_ns;
+            stage_ns[STAGE_DISPATCH] += dispatch_ns;
             for (stage, &ns) in stage_ns.iter().enumerate() {
                 ft.stages.record(stage, ns);
             }
@@ -627,13 +677,13 @@ impl FleetSimEngine {
 /// the worker pool; shards share no mutable state and the cluster is
 /// read-only here, so the fan-out is bit-neutral.
 fn advance_all(
-    threads: usize,
+    pool: Option<&WorkerPool>,
     services: &mut [FleetService],
     shards: &mut [ServiceShard],
     cluster: &Cluster,
     until: f64,
 ) {
-    parallel_zip(threads, services, shards, |_, s, sh| {
+    parallel_zip(pool, services, shards, |_, s, sh| {
         sh.advance(cluster, &s.profiles, until);
     });
 }
@@ -776,7 +826,7 @@ fn refresh_gates_ready(
 /// lands in its own shard's `pending_decision` slot; the fan-in collects
 /// strictly by service index.
 fn decide_all(
-    threads: usize,
+    pool: Option<&WorkerPool>,
     now: f64,
     services: &mut [FleetService],
     shards: &mut [ServiceShard],
@@ -784,7 +834,7 @@ fn decide_all(
     committed: &[BTreeMap<String, usize>],
     grants: &[Option<usize>],
 ) -> Vec<Decision> {
-    parallel_zip(threads, services, shards, |i, s, sh| {
+    parallel_zip(pool, services, shards, |i, s, sh| {
         let t0 = sh.telem.enabled.then(Instant::now);
         // Solver-stall fallback: a stalled tick reuses the last-good
         // decision instead of blocking the boundary on the late solve.

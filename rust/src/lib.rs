@@ -28,11 +28,13 @@
 //! * [`serving`] — backend engines: real (PJRT worker pools) and simulated
 //!   (virtual-time M/G/n queues calibrated by real measurements).
 //! * [`adapter`] — the control loop: monitor → forecast → solve → enforce.
-//! * [`fleet`] — multi-service layer, sharded: each service's event loop,
-//!   RNG, gate, dispatcher, pods view, request-state arena, and metrics
-//!   live in a `fleet::shard::ServiceShard`; the orchestrator drives an
-//!   explicit five-stage tick protocol (observe → solve ∥ → arbitrate →
-//!   apply ∥ → advance ∥, parallel stages fanned out over scoped threads,
+//! * [`fleet`] — multi-service layer, sharded: each service's event loop
+//!   (a `util::sched::TimerWheel` calendar queue with heap-exact pop
+//!   order), RNG, gate, dispatcher, pods view, request-state arena, and
+//!   metrics live in a `fleet::shard::ServiceShard`; the orchestrator
+//!   drives an explicit five-stage tick protocol (observe → solve ∥ →
+//!   arbitrate → apply ∥ → advance ∥, parallel stages fanned out over one
+//!   persistent `util::pool::WorkerPool` — zero spawns per tick —
 //!   bit-identical to the serial path at every `solver_threads`).  The
 //!   top-level core arbiter re-partitions the global budget every
 //!   interval by heap water-filling on priority-weighted marginal utility
@@ -43,7 +45,8 @@
 //!   forecasts it.
 //! * [`telemetry`] — the observability plane: a registry of counters /
 //!   gauges / log-bucketed histograms with per-shard lock-free recording
-//!   and deterministic index-order fan-in, a five-stage tick profiler,
+//!   and deterministic index-order fan-in, a tick-stage profiler (the
+//!   five stages plus a pool-dispatch overhead lap),
 //!   solver/request-path introspection counters, and an
 //!   anomaly-triggered flight recorder (last K `TickTrace`s, dumped to
 //!   JSON on SLO-burn or shed trips).  Zero-overhead when disabled and

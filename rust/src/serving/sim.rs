@@ -44,10 +44,13 @@ pub struct SimConfig {
     /// pre-admission engine).
     pub admission: AdmissionConfig,
     /// Worker threads for the fleet engine's parallel stages (advance,
-    /// solve, decide).  `0` = auto (available parallelism), `1` = the
-    /// serial reference path.  Never affects results — a parallel run is
-    /// bit-identical to the serial one (pinned) — only wall-clock; the
-    /// N = 1 single-service wrapper always runs serial.
+    /// solve, decide), served by one persistent
+    /// [`crate::util::pool::WorkerPool`] for the run's lifetime — workers
+    /// park between stages, no per-stage spawns.  `0` = auto (available
+    /// parallelism), `1` = the serial reference path (no pool, no threads).
+    /// Never affects results — a parallel run is bit-identical to the
+    /// serial one (pinned) — only wall-clock; the N = 1 single-service
+    /// wrapper always runs serial and thread-free.
     pub solver_threads: usize,
     /// Telemetry plane (disabled by default: zero overhead, and an
     /// enabled run is bit-identical anyway — pinned by

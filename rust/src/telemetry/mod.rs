@@ -18,7 +18,9 @@
 //!   its own disjoint state, exactly like the rest of the shard), fanned
 //!   in by [`ShardTelemetry::merge`] strictly in service-index order.
 //! * [`StageProfiler`] — wall-clock nanoseconds of each five-stage tick
-//!   phase (observe → solve → arbitrate → apply → advance).
+//!   phase (observe → solve → arbitrate → apply → advance), plus a
+//!   synthetic `dispatch` lap that carves worker-pool fan-out overhead
+//!   out of the parallel stages.
 //! * [`FlightRecorder`] — ring buffer of the last K [`TickTrace`] records
 //!   (λ̂, offered load, grants, curve knees, decisions, gate supply) that
 //!   marks a trip when the SLO-burn meter crosses 1 or the per-tick shed
@@ -42,8 +44,10 @@ use crate::solver::SolveStats;
 use crate::util::json::Value;
 use std::collections::{BTreeMap, VecDeque};
 
-/// The five tick stages, in protocol order (indices into stage arrays).
-pub const STAGES: [&str; 5] = ["observe", "solve", "arbitrate", "apply", "advance"];
+/// The five tick stages in protocol order, plus the synthetic `dispatch`
+/// lap that isolates worker-pool fan-out overhead from the parallel
+/// stages it serves (indices into stage arrays).
+pub const STAGES: [&str; 6] = ["observe", "solve", "arbitrate", "apply", "advance", "dispatch"];
 
 /// Index of a stage name in [`STAGES`].
 pub const STAGE_OBSERVE: usize = 0;
@@ -51,6 +55,10 @@ pub const STAGE_SOLVE: usize = 1;
 pub const STAGE_ARBITRATE: usize = 2;
 pub const STAGE_APPLY: usize = 3;
 pub const STAGE_ADVANCE: usize = 4;
+/// Thread-machinery overhead (pool wake + fan-in wait) carved out of the
+/// parallel stages so `solve`/`apply`/`advance` histograms measure solver
+/// and simulation work, not dispatch cost.
+pub const STAGE_DISPATCH: usize = 5;
 
 /// Power-of-two-bucketed histogram of `u64` samples (nanoseconds, counts,
 /// …).  Bucket `b` holds values `v` with `2^(b-1) <= v < 2^b` (bucket 0
@@ -492,14 +500,14 @@ impl ShardTelemetry {
     }
 }
 
-/// Wall-clock profile of the five tick stages, accumulated per adapter
-/// tick.  Timing is observed, never consulted — the histograms exist only
-/// for export.
+/// Wall-clock profile of the five tick stages plus the dispatch lap,
+/// accumulated per adapter tick.  Timing is observed, never consulted —
+/// the histograms exist only for export.
 #[derive(Debug, Clone, Default)]
 pub struct StageProfiler {
-    hists: [LogHistogram; 5],
+    hists: [LogHistogram; 6],
     /// The most recent tick's per-stage spans, ns (flight-trace scratch).
-    pub last_ns: [u64; 5],
+    pub last_ns: [u64; 6],
 }
 
 impl StageProfiler {
@@ -512,8 +520,8 @@ impl StageProfiler {
         &self.hists[stage]
     }
 
-    pub fn mean_ns(&self) -> [u64; 5] {
-        let mut out = [0u64; 5];
+    pub fn mean_ns(&self) -> [u64; 6] {
+        let mut out = [0u64; 6];
         for (o, h) in out.iter_mut().zip(&self.hists) {
             *o = h.mean().round() as u64;
         }
@@ -584,8 +592,8 @@ pub struct TickTrace {
     pub tick: u64,
     /// Virtual time of the boundary, seconds.
     pub t_s: f64,
-    /// Wall-clock of each five-stage phase this tick, ns.
-    pub stage_ns: [u64; 5],
+    /// Wall-clock of each five-stage phase plus dispatch this tick, ns.
+    pub stage_ns: [u64; 6],
     pub services: Vec<ServiceTick>,
 }
 
@@ -700,6 +708,12 @@ pub struct TelemetrySummary {
     pub cache_cold: u64,
     pub arena_allocs: u64,
     pub arena_reuses: u64,
+    /// Peak live requests in the shard's arena (pre-sizing validation).
+    pub arena_high_water: u64,
+    /// Peak live events in the shard's timer wheel.
+    pub wheel_high_water: u64,
+    /// Coarse-ring cascades the wheel performed (amortization check).
+    pub wheel_cascades: u64,
     pub pod_crashes: u64,
     pub ejections: u64,
     pub retries: u64,
@@ -715,6 +729,9 @@ impl TelemetrySummary {
         solve: SolveStats,
         arena_allocs: u64,
         arena_reuses: u64,
+        arena_high_water: u64,
+        wheel_high_water: u64,
+        wheel_cascades: u64,
     ) -> Self {
         Self {
             admitted: shard.admitted(),
@@ -731,6 +748,9 @@ impl TelemetrySummary {
             cache_cold: cache.cold,
             arena_allocs,
             arena_reuses,
+            arena_high_water,
+            wheel_high_water,
+            wheel_cascades,
             pod_crashes: shard.pod_crashes,
             ejections: shard.ejections,
             retries: shard.retries,
@@ -756,6 +776,11 @@ impl TelemetrySummary {
         self.cache_cold += other.cache_cold;
         self.arena_allocs += other.arena_allocs;
         self.arena_reuses += other.arena_reuses;
+        // High-water marks are per-shard peaks, not flows: the fleet-level
+        // figure is the worst shard, so fold with max rather than sum.
+        self.arena_high_water = self.arena_high_water.max(other.arena_high_water);
+        self.wheel_high_water = self.wheel_high_water.max(other.wheel_high_water);
+        self.wheel_cascades += other.wheel_cascades;
         self.pod_crashes += other.pod_crashes;
         self.ejections += other.ejections;
         self.retries += other.retries;
@@ -793,6 +818,9 @@ impl TelemetrySummary {
             ("cache_cold", Value::Num(self.cache_cold as f64)),
             ("arena_allocs", Value::Num(self.arena_allocs as f64)),
             ("arena_reuses", Value::Num(self.arena_reuses as f64)),
+            ("arena_high_water", Value::Num(self.arena_high_water as f64)),
+            ("wheel_high_water", Value::Num(self.wheel_high_water as f64)),
+            ("wheel_cascades", Value::Num(self.wheel_cascades as f64)),
             ("pod_crashes", Value::Num(self.pod_crashes as f64)),
             ("ejections", Value::Num(self.ejections as f64)),
             ("retries", Value::Num(self.retries as f64)),
@@ -819,6 +847,16 @@ pub struct FleetTelemetry {
     pub solve: SolveStats,
     pub arena_allocs: u64,
     pub arena_reuses: u64,
+    /// Peak live requests across all shards' arenas (max, not sum).
+    pub arena_high_water: u64,
+    /// Peak live events across all shards' timer wheels (max, not sum).
+    pub wheel_high_water: u64,
+    /// Σ coarse-ring cascades across all shards' timer wheels.
+    pub wheel_cascades: u64,
+    /// Worker-pool fan-outs performed by the engine this run.
+    pub pool_dispatches: u64,
+    /// Σ pool overhead (dispatch wall minus busiest worker), ns.
+    pub pool_dispatch_ns: u64,
     /// Recovery-time-to-supply: seconds from a capacity-loss boundary to
     /// the first boundary where ready cores are back at the pre-loss level.
     pub recovery_s: LogHistogram,
@@ -840,6 +878,11 @@ impl FleetTelemetry {
             solve: SolveStats::default(),
             arena_allocs: 0,
             arena_reuses: 0,
+            arena_high_water: 0,
+            wheel_high_water: 0,
+            wheel_cascades: 0,
+            pool_dispatches: 0,
+            pool_dispatch_ns: 0,
             recovery_s: LogHistogram::new(),
             shed_trip_fraction: cfg.shed_trip_fraction,
             prev_admitted: 0,
@@ -940,6 +983,11 @@ impl FleetTelemetry {
         r.counter_add("infadapter_curve_cache_cold_total", self.cache.cold);
         r.counter_add("infadapter_arena_allocs_total", self.arena_allocs);
         r.counter_add("infadapter_arena_reuses_total", self.arena_reuses);
+        r.gauge_set("infadapter_arena_high_water", self.arena_high_water as f64);
+        r.gauge_set("infadapter_wheel_high_water", self.wheel_high_water as f64);
+        r.counter_add("infadapter_wheel_cascades_total", self.wheel_cascades);
+        r.counter_add("infadapter_pool_dispatches_total", self.pool_dispatches);
+        r.counter_add("infadapter_pool_dispatch_ns_total", self.pool_dispatch_ns);
         r.counter_add("infadapter_pod_crashes_total", self.shard.pod_crashes);
         r.counter_add("infadapter_crashed_cores_total", self.shard.crashed_cores);
         r.counter_add("infadapter_ejections_total", self.shard.ejections);
@@ -1042,7 +1090,7 @@ mod tests {
             fr.push(TickTrace {
                 tick,
                 t_s: tick as f64 * 30.0,
-                stage_ns: [0; 5],
+                stage_ns: [0; 6],
                 services: Vec::new(),
             });
         }

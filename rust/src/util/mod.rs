@@ -7,10 +7,16 @@
 //! * [`json`] — minimal, correct JSON value codec (manifest/config/profiles
 //!   interchange with the Python layer).
 //! * [`mpmc`] — multi-producer multi-consumer FIFO channel (worker pools).
+//! * [`pool`] — persistent generation-parked worker pool for the fleet
+//!   engine's parallel stages (zero spawns/allocations per dispatch).
+//! * [`sched`] — hierarchical calendar queue ([`sched::TimerWheel`]) with
+//!   heap-exact `(t, seq)` pop order for shard event scheduling.
 //! * [`benchkit`] — timing harness for the `harness = false` benches.
 
 pub mod benchkit;
 pub mod json;
 pub mod mpmc;
+pub mod pool;
 pub mod rng;
+pub mod sched;
 pub mod testutil;

@@ -1,0 +1,390 @@
+//! Persistent worker pool for the fleet engine's parallel stages.
+//!
+//! [`WorkerPool`] replaces the per-stage `std::thread::scope` + fresh mpmc
+//! channel machinery: workers are spawned once per run and park on a condvar
+//! between stages, waking on a generation counter.  A dispatch publishes one
+//! borrowed closure plus a task count; workers claim indices from a shared
+//! cursor, so the fan-out allocates nothing and spawns nothing in steady
+//! state.
+//!
+//! # Determinism
+//!
+//! The pool preserves the sharded data plane's bit-identity-by-construction
+//! argument unchanged: each claimed index is executed exactly once, callers
+//! hand workers disjoint `&mut` pairs per index, and any fan-in the caller
+//! does afterwards is in index order.  Which worker runs which index — and
+//! in what interleaving — can never influence results.
+//!
+//! # Panic discipline
+//!
+//! A panicking task sets an abort flag (so peers stop claiming), drains the
+//! unclaimed indices (so the dispatcher cannot hang), and the first payload
+//! is re-thrown from [`WorkerPool::dispatch`] on the caller's thread — the
+//! same observable behavior as the old scoped path, which is kept here as
+//! [`scoped_dispatch`] for benchmark comparison.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::util::mpmc;
+
+/// Borrowed task closure, lifetime-erased for the worker threads.  Workers
+/// only dereference it while executing an index claimed from the current
+/// generation, and `dispatch` blocks until every claimed index has finished
+/// — so the referent always outlives every use.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine)
+// and `dispatch` guarantees it outlives the workers' use; the raw pointer
+// itself is plain data.
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct State {
+    /// Bumped once per dispatch; workers wake when it moves past the one
+    /// they last served.
+    generation: u64,
+    job: Option<Job>,
+    /// Task count of the current generation.
+    n: usize,
+    /// Next unclaimed index.
+    next: usize,
+    /// Claimed-but-unfinished plus unclaimed tasks; `dispatch` returns when
+    /// this reaches zero.
+    remaining: usize,
+    /// Set by the first panicking task: peers stop claiming.
+    abort: bool,
+    panicked: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+    dispatches: u64,
+    tasks: u64,
+    /// Cumulative dispatch overhead: wall time of each dispatch minus the
+    /// busiest worker's task time (only tracked when the pool is timed).
+    overhead_ns: u64,
+    /// Busiest worker's task nanoseconds within the current generation.
+    busy_max_ns: u64,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between generations.
+    work: Condvar,
+    /// The dispatcher parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn wait<'a>(cv: &Condvar, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Persistent fan-out pool; see the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    timed: bool,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` parked workers.  `timed` enables per-dispatch
+    /// overhead accounting (one `Instant` read per task) for telemetry;
+    /// leave it off on untimed runs so the hot path stays clock-free.
+    pub fn new(threads: usize, timed: bool) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fleet-pool-{i}"))
+                    .spawn(move || worker_loop(&shared, timed))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            handles,
+            threads,
+            timed,
+        }
+    }
+
+    /// Run `f(0..n)` across the pool and block until every index finished.
+    /// Each index is claimed and executed exactly once; a panicking task
+    /// aborts the remainder and re-throws here.
+    pub fn dispatch(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let t0 = self.timed.then(Instant::now);
+        // SAFETY: erasing the lifetime is sound because this function blocks
+        // below until `remaining == 0`, i.e. until no worker will touch the
+        // pointer again.
+        let job = Job(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        });
+        let mut st = lock(&self.shared.state);
+        st.generation = st.generation.wrapping_add(1);
+        st.job = Some(job);
+        st.n = n;
+        st.next = 0;
+        st.remaining = n;
+        st.abort = false;
+        st.busy_max_ns = 0;
+        st.dispatches += 1;
+        st.tasks += n as u64;
+        self.shared.work.notify_all();
+        while st.remaining > 0 {
+            st = wait(&self.shared.done, st);
+        }
+        st.job = None;
+        let payload = st.panicked.take();
+        if payload.is_none() {
+            if let Some(t0) = t0 {
+                let wall = t0.elapsed().as_nanos() as u64;
+                st.overhead_ns += wall.saturating_sub(st.busy_max_ns);
+            }
+        }
+        drop(st);
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
+    /// Worker thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Dispatches served over the pool's lifetime.
+    pub fn dispatches(&self) -> u64 {
+        lock(&self.shared.state).dispatches
+    }
+
+    /// Tasks executed over the pool's lifetime.
+    pub fn tasks(&self) -> u64 {
+        lock(&self.shared.state).tasks
+    }
+
+    /// Cumulative fan-out overhead (dispatch wall time minus the busiest
+    /// worker's task time).  Zero unless the pool was built with
+    /// `timed = true`.
+    pub fn overhead_ns(&self) -> u64 {
+        lock(&self.shared.state).overhead_ns
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, timed: bool) {
+    let mut seen_gen = 0u64;
+    loop {
+        let mut st = lock(&shared.state);
+        loop {
+            if st.shutdown {
+                return;
+            }
+            if st.generation != seen_gen && st.job.is_some() {
+                break;
+            }
+            st = wait(&shared.work, st);
+        }
+        seen_gen = st.generation;
+        let job = st.job.expect("job published with the generation bump");
+        let n = st.n;
+        let mut busy_ns = 0u64;
+        loop {
+            if st.abort || st.next >= n {
+                break;
+            }
+            let i = st.next;
+            st.next += 1;
+            drop(st);
+            let t0 = timed.then(Instant::now);
+            // SAFETY: index `i` was claimed from the current generation, so
+            // the dispatcher is still blocked on `remaining` and the closure
+            // behind the pointer is alive.
+            let res = catch_unwind(AssertUnwindSafe(|| unsafe { (*job.0)(i) }));
+            if let Some(t0) = t0 {
+                busy_ns += t0.elapsed().as_nanos() as u64;
+            }
+            st = lock(&shared.state);
+            if let Err(payload) = res {
+                st.abort = true;
+                if st.panicked.is_none() {
+                    st.panicked = Some(payload);
+                }
+                // Drain the indices nobody will claim so the dispatcher
+                // cannot hang on `remaining`.
+                st.remaining -= n - st.next;
+                st.next = n;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                if busy_ns > st.busy_max_ns {
+                    st.busy_max_ns = busy_ns;
+                }
+                shared.done.notify_all();
+            }
+        }
+        // Both breaks above leave the lock held; fold this worker's busy
+        // time in before the final release (max is idempotent, so the
+        // finisher's early fold above double-counts nothing).
+        if busy_ns > st.busy_max_ns {
+            st.busy_max_ns = busy_ns;
+        }
+        drop(st);
+    }
+}
+
+/// Sets the shared abort flag on drop — i.e. when a task panics past it.
+struct PanicFlag<'a>(&'a AtomicBool);
+
+impl Drop for PanicFlag<'_> {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+}
+
+/// The pre-pool fan-out machinery, kept as the benchmark reference: a fresh
+/// index channel plus scoped spawns per call, with the same abort-on-panic
+/// discipline the pool inherits.  `micro_hotpaths` measures
+/// `pool.scoped_spawn` against `pool.dispatch` to price the per-stage spawn
+/// tax the persistent pool removes.
+pub fn scoped_dispatch(threads: usize, n: usize, f: &(dyn Fn(usize) + Sync)) {
+    let workers = threads.min(n);
+    if workers <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let panicked = AtomicBool::new(false);
+    let (tx, rx) = mpmc::channel();
+    for i in 0..n {
+        tx.send(i).unwrap_or_else(|_| unreachable!("receiver held open"));
+    }
+    drop(tx);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let panicked = &panicked;
+            scope.spawn(move || {
+                while let Some(i) = rx.recv() {
+                    if panicked.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let flag = PanicFlag(panicked);
+                    f(i);
+                    std::mem::forget(flag);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn counters(n: usize) -> Vec<AtomicU64> {
+        (0..n).map(|_| AtomicU64::new(0)).collect()
+    }
+
+    #[test]
+    fn dispatch_runs_every_index_exactly_once_across_generations() {
+        let pool = WorkerPool::new(4, false);
+        let hits = counters(64);
+        for round in 1..=3u64 {
+            pool.dispatch(64, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), round, "index {i} round {round}");
+            }
+        }
+        assert_eq!(pool.dispatches(), 3);
+        assert_eq!(pool.tasks(), 192);
+    }
+
+    #[test]
+    fn dispatch_handles_fewer_tasks_than_workers() {
+        let pool = WorkerPool::new(16, false);
+        let hits = counters(3);
+        pool.dispatch(3, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        pool.dispatch(0, &|_| unreachable!("n = 0 never runs"));
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn panicking_task_aborts_cleanly_and_pool_survives() {
+        let pool = WorkerPool::new(8, false);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(32, &|i| {
+                if i == 5 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the dispatcher");
+        // the pool is reusable after an aborted generation
+        let hits = counters(32);
+        pool.dispatch(32, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn timed_pool_accounts_overhead_monotonically() {
+        let pool = WorkerPool::new(2, true);
+        pool.dispatch(8, &|_| {});
+        let first = pool.overhead_ns();
+        pool.dispatch(8, &|_| {});
+        assert!(pool.overhead_ns() >= first);
+    }
+
+    #[test]
+    fn scoped_dispatch_matches_serial_and_propagates_panics() {
+        let hits = counters(40);
+        scoped_dispatch(8, 40, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            scoped_dispatch(4, 16, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+    }
+}

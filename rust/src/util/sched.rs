@@ -1,0 +1,416 @@
+//! Hierarchical calendar queue — the shard event scheduler.
+//!
+//! [`TimerWheel`] replaces the per-shard `BinaryHeap<Reverse<Event>>` with a
+//! two-level calendar queue bucketed by virtual time: a *fine* ring of `n0`
+//! buckets of width `w0` seconds covering the current coarse window, a
+//! *coarse* ring of `n1` buckets of width `n0 * w0` seconds, and an unsorted
+//! overflow list for events beyond the coarse horizon.  Push and pop are
+//! O(1) amortized; each fine bucket drains as one small, cache-friendly
+//! sorted batch instead of a pointer-chasing heap sift.
+//!
+//! # Exactness
+//!
+//! Pop order is element-for-element identical to the binary heap this
+//! replaces: ascending `(t, seq)` with `f64::total_cmp` on the timestamp and
+//! the monotone sequence stamp as the tiebreak.  The argument:
+//!
+//! * the fine-bucket index `b0(t) = floor(t / w0)` is monotone in `t`, so an
+//!   event in an earlier bucket never sorts after one in a later bucket;
+//! * the current bucket is kept fully sorted (descending, so the minimum sits
+//!   at the tail and `pop` is a `Vec::pop`) and is completely drained before
+//!   the wheel advances — late pushes that land at or before the current
+//!   bucket are sorted-inserted in place, exactly where the heap would have
+//!   surfaced them;
+//! * within a bucket, ties on `t` (events stamped precisely at an adapter or
+//!   cluster boundary) break on `seq`, exactly as the heap's `Ord` did.
+//!
+//! Geometry (`w0`, `n0`, `n1`) therefore affects performance only, never
+//! order — the property suite in `tests/sched.rs` randomizes it while
+//! asserting heap equivalence.
+
+use std::cmp::Ordering;
+
+/// Ascending `(t, seq)` — the exact `Ord` the shard event heap used.
+#[inline]
+fn cmp_key(ta: f64, sa: u64, tb: f64, sb: u64) -> Ordering {
+    ta.total_cmp(&tb).then(sa.cmp(&sb))
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    t: f64,
+    seq: u64,
+    item: T,
+}
+
+/// Two-level calendar queue keyed by `(t, seq)`; see the module docs for the
+/// heap-equivalence argument.
+#[derive(Debug)]
+pub struct TimerWheel<T> {
+    /// Fine bucket width in virtual seconds.
+    w0: f64,
+    /// Fine slots per coarse bucket.
+    n0: usize,
+    /// Coarse slots (the look-ahead window is `n0 * n1 * w0` seconds).
+    n1: usize,
+    /// Current bucket, sorted **descending** by `(t, seq)`: `pop()` takes
+    /// from the tail, late pushes sorted-insert.  Holds every live entry
+    /// with `b0(t) <= cur_b0`.
+    cur: Vec<Entry<T>>,
+    /// Absolute fine-bucket index `cur` covers (starts at -1: nothing
+    /// drained yet).
+    cur_b0: i64,
+    /// Absolute coarse-bucket index the fine ring covers.
+    b1cur: i64,
+    /// Fine ring: entries with `b1(t) == b1cur` and `b0(t) > cur_b0`,
+    /// slot `b0 % n0`, unsorted until drained.
+    ring0: Vec<Vec<Entry<T>>>,
+    count0: usize,
+    /// Coarse ring: entries with `b1(t) - b1cur ∈ (0, n1]`, slot `b1 % n1`
+    /// (residues are unique within the window, so a slot never mixes
+    /// coarse buckets).
+    ring1: Vec<Vec<Entry<T>>>,
+    count1: usize,
+    /// Entries beyond the coarse window; re-routed whenever the window
+    /// advances.
+    overflow: Vec<Entry<T>>,
+    len: usize,
+    pushes: u64,
+    high_water: usize,
+    cascades: u64,
+}
+
+impl<T> Default for TimerWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimerWheel<T> {
+    /// Default geometry: 31.25 ms fine buckets, 2 s coarse buckets, 512 s
+    /// look-ahead window.
+    pub fn new() -> Self {
+        Self::with_geometry(1.0 / 32.0, 64, 256)
+    }
+
+    /// Explicit geometry.  `w0` is the fine bucket width in seconds, `n0`
+    /// the fine slots per coarse bucket, `n1` the coarse slots.
+    pub fn with_geometry(w0: f64, n0: usize, n1: usize) -> Self {
+        assert!(w0.is_finite() && w0 > 0.0, "fine bucket width must be > 0");
+        assert!(n0 >= 1 && n1 >= 1, "ring sizes must be >= 1");
+        Self {
+            w0,
+            n0,
+            n1,
+            cur: Vec::new(),
+            cur_b0: -1,
+            b1cur: 0,
+            ring0: (0..n0).map(|_| Vec::new()).collect(),
+            count0: 0,
+            ring1: (0..n1).map(|_| Vec::new()).collect(),
+            count1: 0,
+            overflow: Vec::new(),
+            len: 0,
+            pushes: 0,
+            high_water: 0,
+            cascades: 0,
+        }
+    }
+
+    /// Geometry sized from a trace: fine buckets hold ~a handful of events
+    /// at the peak arrival rate, and the coarse window covers the whole
+    /// horizon so steady-state traffic never touches the overflow list.
+    pub fn sized_for(peak_rate: f64, horizon_s: f64) -> Self {
+        let peak = if peak_rate.is_finite() {
+            peak_rate.max(1.0)
+        } else {
+            1.0
+        };
+        let mut w0 = 0.25;
+        while w0 * peak > 4.0 && w0 > 1.0 / 1024.0 {
+            w0 *= 0.5;
+        }
+        let n0 = 64;
+        let coarse = w0 * n0 as f64;
+        let horizon = if horizon_s.is_finite() {
+            horizon_s.max(1.0)
+        } else {
+            1.0
+        };
+        let n1 = ((horizon / coarse).ceil() as usize + 2).clamp(64, 4096);
+        Self::with_geometry(w0, n0, n1)
+    }
+
+    #[inline]
+    fn b0_of(&self, t: f64) -> i64 {
+        // `as` saturates (and maps NaN to 0), so degenerate timestamps
+        // still route somewhere; order within `cur` is by total_cmp anyway.
+        (t / self.w0).floor() as i64
+    }
+
+    /// Route an entry to its level per the invariants above.  Shared by
+    /// `push`, cascades, and overflow rescue.
+    fn route(&mut self, e: Entry<T>) {
+        let b0 = self.b0_of(e.t);
+        if b0 <= self.cur_b0 {
+            // At or before the drain point: sorted-insert into the current
+            // batch so pop order still matches the heap exactly.
+            let idx = self
+                .cur
+                .partition_point(|x| cmp_key(x.t, x.seq, e.t, e.seq) == Ordering::Greater);
+            self.cur.insert(idx, e);
+            return;
+        }
+        let b1 = b0.div_euclid(self.n0 as i64);
+        if b1 == self.b1cur {
+            self.ring0[b0.rem_euclid(self.n0 as i64) as usize].push(e);
+            self.count0 += 1;
+        } else if b1 - self.b1cur <= self.n1 as i64 {
+            self.ring1[b1.rem_euclid(self.n1 as i64) as usize].push(e);
+            self.count1 += 1;
+        } else {
+            self.overflow.push(e);
+        }
+    }
+
+    /// Schedule `item` at virtual time `t` with tiebreak stamp `seq`.
+    pub fn push(&mut self, t: f64, seq: u64, item: T) {
+        self.pushes += 1;
+        self.len += 1;
+        if self.len > self.high_water {
+            self.high_water = self.len;
+        }
+        self.route(Entry { t, seq, item });
+    }
+
+    /// Pull overflow entries that now fit the coarse window back in.
+    fn rescue_overflow(&mut self) {
+        let limit = self.b1cur + self.n1 as i64;
+        let mut i = 0;
+        while i < self.overflow.len() {
+            let b1 = self.b0_of(self.overflow[i].t).div_euclid(self.n0 as i64);
+            if b1 <= limit {
+                let e = self.overflow.swap_remove(i);
+                self.route(e);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Advance the wheel until `cur` holds the next batch (or the wheel is
+    /// empty).  Amortized O(1): each entry is touched at most once per
+    /// level on its way to `cur`.
+    fn ensure_front(&mut self) {
+        while self.cur.is_empty() && self.len > 0 {
+            if self.count0 > 0 {
+                // Drain the next non-empty fine slot of the current coarse
+                // bucket as one sorted batch.
+                let base = self.b1cur * self.n0 as i64;
+                let start = (self.cur_b0 + 1 - base).max(0) as usize;
+                let s = (start..self.n0)
+                    .find(|&s| !self.ring0[s].is_empty())
+                    .expect("count0 > 0 implies a non-empty fine slot ahead");
+                std::mem::swap(&mut self.cur, &mut self.ring0[s]);
+                self.count0 -= self.cur.len();
+                self.cur.sort_unstable_by(|a, b| cmp_key(b.t, b.seq, a.t, a.seq));
+                self.cur_b0 = base + s as i64;
+                continue;
+            }
+            if self.count1 > 0 {
+                // Cascade the next non-empty coarse bucket into the fine
+                // ring; residue uniqueness means the slot holds exactly one
+                // coarse bucket's entries.
+                let d = (1..=self.n1 as i64)
+                    .find(|&d| {
+                        let s = (self.b1cur + d).rem_euclid(self.n1 as i64) as usize;
+                        !self.ring1[s].is_empty()
+                    })
+                    .expect("count1 > 0 implies a non-empty coarse slot in the window");
+                let b1 = self.b1cur + d;
+                let s = b1.rem_euclid(self.n1 as i64) as usize;
+                let entries = std::mem::take(&mut self.ring1[s]);
+                self.count1 -= entries.len();
+                self.b1cur = b1;
+                self.cur_b0 = b1 * self.n0 as i64 - 1;
+                self.cascades += 1;
+                for e in entries {
+                    self.route(e);
+                }
+                // The window advanced: overflow entries may fit now.
+                self.rescue_overflow();
+                continue;
+            }
+            // Only overflow left: restart the window just before the
+            // earliest overflow bucket and re-route; the next iteration
+            // cascades it.
+            let min_b1 = self
+                .overflow
+                .iter()
+                .map(|e| self.b0_of(e.t).div_euclid(self.n0 as i64))
+                .min()
+                .expect("len > 0 with empty rings implies overflow entries");
+            self.b1cur = min_b1 - 1;
+            self.cur_b0 = min_b1 * self.n0 as i64 - 1;
+            self.rescue_overflow();
+        }
+    }
+
+    /// The next `(t, seq, item)` in pop order, without removing it.
+    pub fn peek(&mut self) -> Option<(f64, u64, &T)> {
+        self.ensure_front();
+        self.cur.last().map(|e| (e.t, e.seq, &e.item))
+    }
+
+    /// Remove and return the next entry in ascending `(t, seq)` order.
+    pub fn pop(&mut self) -> Option<(f64, u64, T)> {
+        self.ensure_front();
+        let e = self.cur.pop()?;
+        self.len -= 1;
+        Some((e.t, e.seq, e.item))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total pushes over the wheel's lifetime.
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    /// Peak number of simultaneously scheduled events.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Coarse-bucket cascades performed (each touches one bucket's entries).
+    pub fn cascades(&self) -> u64 {
+        self.cascades
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<T>(w: &mut TimerWheel<T>) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        while let Some((t, s, _)) = w.pop() {
+            out.push((t, s));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_heap_order_with_coincident_timestamps() {
+        let mut w = TimerWheel::with_geometry(0.5, 4, 4);
+        // deliberately shuffled, with exact ties on t broken by seq
+        let evs = [
+            (3.0, 7),
+            (0.1, 2),
+            (3.0, 4),
+            (0.1, 1),
+            (1.0, 3),
+            (0.0, 0),
+            (1.0, 9),
+        ];
+        for &(t, s) in &evs {
+            w.push(t, s, ());
+        }
+        let mut want: Vec<(f64, u64)> = evs.to_vec();
+        want.sort_by(|a, b| cmp_key(a.0, a.1, b.0, b.1));
+        assert_eq!(drain(&mut w), want);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn late_push_into_drained_bucket_pops_in_place() {
+        let mut w = TimerWheel::with_geometry(1.0, 4, 4);
+        w.push(0.2, 0, ());
+        w.push(5.0, 1, ());
+        assert_eq!(w.pop().map(|(t, s, _)| (t, s)), Some((0.2, 0)));
+        // the wheel has advanced past bucket 0; a push behind the drain
+        // point must still surface before the 5.0 event
+        w.push(0.7, 2, ());
+        w.push(0.7, 1, ());
+        assert_eq!(
+            drain(&mut w),
+            vec![(0.7, 1), (0.7, 2), (5.0, 1)],
+            "late pushes sorted-insert into the current batch"
+        );
+    }
+
+    #[test]
+    fn far_future_events_survive_overflow_and_cascades() {
+        let mut w = TimerWheel::with_geometry(0.5, 2, 2);
+        // window is 2 * 2 * 0.5 = 2 s; these span far beyond it
+        let evs = [(1000.0, 5), (0.3, 0), (999.75, 4), (3.0, 1), (40.0, 2)];
+        for &(t, s) in &evs {
+            w.push(t, s, ());
+        }
+        let mut want: Vec<(f64, u64)> = evs.to_vec();
+        want.sort_by(|a, b| cmp_key(a.0, a.1, b.0, b.1));
+        assert_eq!(drain(&mut w), want);
+        assert!(w.cascades() > 0, "tiny geometry must have cascaded");
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_exact() {
+        let mut w = TimerWheel::with_geometry(0.25, 4, 8);
+        let mut seq = 0u64;
+        let mut rng = 0x2545F491u64;
+        let mut next = |hi: f64| {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (rng >> 33) as f64 / (1u64 << 31) as f64 * hi
+        };
+        for _ in 0..64 {
+            w.push(next(10.0), seq, ());
+            seq += 1;
+        }
+        let mut last = (f64::NEG_INFINITY, 0u64);
+        for _ in 0..512 {
+            let (t, s, _) = w.pop().expect("non-empty");
+            assert!(
+                cmp_key(last.0, last.1, t, s) != Ordering::Greater,
+                "pop order regressed: {last:?} then {:?}",
+                (t, s)
+            );
+            last = (t, s);
+            // reschedule ahead of the popped time, like a completion event
+            w.push(t + 0.1 + next(3.0), seq, ());
+            seq += 1;
+        }
+        assert_eq!(w.len(), 64);
+        assert_eq!(w.high_water(), 64);
+    }
+
+    #[test]
+    fn sized_for_clamps_geometry_to_sane_bounds() {
+        let w = TimerWheel::<()>::sized_for(100_000.0, 1e12);
+        assert!(w.w0 >= 1.0 / 1024.0);
+        assert!(w.n1 <= 4096);
+        let w = TimerWheel::<()>::sized_for(0.0, 0.0);
+        assert!(w.n1 >= 64);
+        assert!((w.w0 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_occupancy() {
+        let mut w = TimerWheel::with_geometry(1.0, 4, 4);
+        for i in 0..10u64 {
+            w.push(i as f64, i, ());
+        }
+        for _ in 0..6 {
+            w.pop();
+        }
+        w.push(100.0, 11, ());
+        assert_eq!(w.high_water(), 10);
+        assert_eq!(w.len(), 5);
+        assert_eq!(w.pushes(), 11);
+    }
+}

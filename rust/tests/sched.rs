@@ -1,0 +1,227 @@
+//! Property suite for the tick-loop substrates (ISSUE 9).
+//!
+//! * The calendar-queue [`TimerWheel`] must pop element-for-element in
+//!   the binary heap's ascending `(t, seq)` order on randomized event
+//!   streams — including coincident boundary timestamps (exact float
+//!   ties at whole seconds / adapter intervals, broken by `seq`) and
+//!   far-future events that land in the overflow level — across several
+//!   bucket geometries and with pushes interleaved between pops.  This
+//!   is the wheel's whole contract: the shard event loop is bit-identical
+//!   to the old heap-backed loop *because* the pop sequence is.
+//! * The persistent [`WorkerPool`] must survive panicking tasks without
+//!   hanging or poisoning itself: the panic resurfaces at the dispatch
+//!   call and the same pool keeps serving subsequent generations.
+
+use infadapter::util::pool::WorkerPool;
+use infadapter::util::sched::TimerWheel;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+
+/// Reference mirror of the shard event key: ascending `(t, seq)` via
+/// `total_cmp`, exactly the `Ord` the old `BinaryHeap<Reverse<Event>>`
+/// scheduler used.
+#[derive(Debug, Clone, Copy)]
+struct Ev(f64, u64);
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+/// Deterministic LCG so the property streams replay exactly.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Draw one event timestamp: mostly uniform over the horizon, with a
+/// deliberate bias toward *exact* boundary values (whole seconds and
+/// 30 s adapter intervals — the coincident-timestamp regime the shard's
+/// boundary tie rule depends on) and an occasional far-future outlier
+/// that must route through the wheel's overflow level.
+fn draw_t(rng: &mut Lcg, horizon: f64, reuse: &[f64]) -> f64 {
+    match rng.next() % 10 {
+        // exact whole-second boundary
+        0 | 1 => (rng.f64() * horizon).floor(),
+        // exact adapter-interval boundary
+        2 => ((rng.f64() * horizon / 30.0).floor()) * 30.0,
+        // exact repeat of an already-scheduled timestamp (tie on t,
+        // ordered purely by seq)
+        3 if !reuse.is_empty() => reuse[(rng.next() as usize) % reuse.len()],
+        // far future: beyond every ring, into overflow
+        4 => 1e4 + rng.f64() * 1e6,
+        _ => rng.f64() * horizon,
+    }
+}
+
+/// Run one randomized stream through both schedulers and assert the pop
+/// sequences identical, element for element (bitwise on `t`).
+fn check_equivalence(seed: u64, w0: f64, n0: usize, n1: usize) {
+    let mut rng = Lcg(seed);
+    let mut wheel: TimerWheel<u32> = TimerWheel::with_geometry(w0, n0, n1);
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut scheduled: Vec<f64> = Vec::new();
+    let mut seq = 0u64;
+    let horizon = 600.0;
+    let mut pushes = 0usize;
+    let mut pops = 0usize;
+    // Interleaved phase: pushes and pops mixed, biased toward pushes so
+    // the population grows, then a full drain.
+    while pushes < 4000 {
+        if rng.next() % 3 != 0 || heap.is_empty() {
+            let t = draw_t(&mut rng, horizon, &scheduled);
+            seq += 1;
+            scheduled.push(t);
+            wheel.push(t, seq, pushes as u32);
+            heap.push(Reverse(Ev(t, seq)));
+            pushes += 1;
+        } else {
+            let Reverse(Ev(ht, hs)) = heap.pop().unwrap();
+            let (wt, ws, _) = wheel.pop().expect("wheel has what the heap has");
+            assert_eq!(
+                (wt.to_bits(), ws),
+                (ht.to_bits(), hs),
+                "pop #{pops} diverged (seed {seed}, geometry {w0}/{n0}/{n1})"
+            );
+            pops += 1;
+        }
+    }
+    assert_eq!(wheel.len(), heap.len());
+    while let Some(Reverse(Ev(ht, hs))) = heap.pop() {
+        let (wt, ws, _) = wheel.pop().expect("wheel drains with the heap");
+        assert_eq!(
+            (wt.to_bits(), ws),
+            (ht.to_bits(), hs),
+            "drain pop #{pops} diverged (seed {seed}, geometry {w0}/{n0}/{n1})"
+        );
+        pops += 1;
+    }
+    assert!(wheel.is_empty());
+    assert_eq!(pops, pushes);
+}
+
+#[test]
+fn wheel_pop_sequence_is_heap_identical_on_randomized_streams() {
+    for seed in [1u64, 7, 42, 1234, 0xDEAD_BEEF] {
+        check_equivalence(seed, 1.0 / 32.0, 64, 256);
+    }
+}
+
+#[test]
+fn wheel_pop_sequence_is_heap_identical_across_geometries() {
+    // Tiny rings force constant cascades and overflow rescues; coarse
+    // buckets force long sorted-bucket runs with many ties per slot.
+    for &(w0, n0, n1) in &[(0.5, 2, 2), (1.0 / 8.0, 4, 8), (2.0, 16, 4), (1.0 / 128.0, 8, 16)] {
+        check_equivalence(99, w0, n0, n1);
+        check_equivalence(100, w0, n0, n1);
+    }
+}
+
+#[test]
+fn wheel_sized_for_matches_heap_on_a_trace_shaped_stream() {
+    // The engine's own construction path: geometry derived from a peak
+    // rate and horizon, stream shaped like a shard's (arrivals seeded
+    // up-front, completions pushed as pops happen).
+    let mut wheel: TimerWheel<u32> = TimerWheel::sized_for(250.0, 600.0);
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut rng = Lcg(2024);
+    let mut seq = 0u64;
+    for i in 0..3000 {
+        let t = rng.f64() * 600.0;
+        seq += 1;
+        wheel.push(t, seq, i);
+        heap.push(Reverse(Ev(t, seq)));
+    }
+    let mut popped = 0u32;
+    while let Some(Reverse(Ev(ht, hs))) = heap.pop() {
+        let (wt, ws, _) = wheel.pop().unwrap();
+        assert_eq!((wt.to_bits(), ws), (ht.to_bits(), hs));
+        popped += 1;
+        // every third pop schedules a "completion" shortly after, like
+        // a dispatch pushing its service-time event
+        if popped % 3 == 0 {
+            let t = ht + 0.05 + rng.f64() * 0.4;
+            seq += 1;
+            wheel.push(t, seq, popped);
+            heap.push(Reverse(Ev(t, seq)));
+        }
+    }
+    assert!(wheel.is_empty());
+    assert!(wheel.high_water() > 0);
+}
+
+#[test]
+fn pool_survives_panicking_tasks_and_keeps_serving() {
+    let pool = WorkerPool::new(8, true);
+    let hits = AtomicUsize::new(0);
+    for round in 0..10usize {
+        let bad = round % 64;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(64, &|i| {
+                if i == bad {
+                    panic!("injected failure at task {i}");
+                }
+                hits.fetch_add(1, AtomicOrdering::Relaxed);
+            });
+        }));
+        assert!(result.is_err(), "round {round}: the panic must resurface");
+        // The same pool keeps working: a clean generation right after the
+        // aborted one runs every index exactly once.
+        let count = AtomicUsize::new(0);
+        pool.dispatch(32, &|_| {
+            count.fetch_add(1, AtomicOrdering::Relaxed);
+        });
+        assert_eq!(count.load(AtomicOrdering::Relaxed), 32);
+    }
+    // Abort discipline: the panicking task never counts, and siblings
+    // stop claiming once the abort flag lands (those already running may
+    // still finish, so the bound is an upper one, not exact).
+    assert!(hits.load(AtomicOrdering::Relaxed) <= 10 * 63);
+    assert_eq!(pool.dispatches(), 20);
+}
+
+#[test]
+fn pool_dispatch_runs_disjoint_slots_exactly_once() {
+    // The parallel_zip contract seen from the pool side: every index
+    // claimed exactly once per generation, results landing in disjoint
+    // slots, across many generations on one pool.
+    let pool = WorkerPool::new(4, false);
+    let mut slots = vec![0u64; 257];
+    for gen in 0..50u64 {
+        let base = slots.as_mut_ptr() as usize;
+        pool.dispatch(slots.len(), &|i| {
+            // SAFETY: each index is claimed exactly once per dispatch and
+            // the borrow ends before dispatch returns.
+            unsafe { *(base as *mut u64).add(i) += gen + i as u64 }
+        });
+    }
+    for (i, &v) in slots.iter().enumerate() {
+        let expect: u64 = (0..50u64).map(|g| g + i as u64).sum();
+        assert_eq!(v, expect, "slot {i}");
+    }
+}
