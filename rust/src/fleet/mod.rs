@@ -61,6 +61,7 @@ use crate::dispatcher::Tier;
 use crate::forecaster;
 use crate::metrics::{FleetSummary, RunSummary};
 use crate::profiler::ProfileSet;
+use crate::replay::{Recorder, RunTrace};
 use crate::serving::sim::{SimConfig, SimResult};
 use crate::solver::BranchBoundSolver;
 use crate::telemetry::FleetTelemetry;
@@ -145,6 +146,28 @@ impl FleetMode {
             }
         }
     }
+
+    /// Round-trippable spec string (`arbiter | even | vpa:<variant>`) —
+    /// the CLI's `--mode` grammar, and what a recorded run trace stores.
+    pub fn spec(&self) -> String {
+        match self {
+            FleetMode::Arbiter => "arbiter".into(),
+            FleetMode::EvenSplit => "even".into(),
+            FleetMode::IndependentVpa(v) => format!("vpa:{v}"),
+        }
+    }
+
+    /// Parse [`Self::spec`]'s grammar.
+    pub fn from_spec(spec: &str) -> Result<Self> {
+        match spec {
+            "arbiter" => Ok(FleetMode::Arbiter),
+            "even" => Ok(FleetMode::EvenSplit),
+            s => match s.strip_prefix("vpa:") {
+                Some(v) if !v.is_empty() => Ok(FleetMode::IndependentVpa(v.to_string())),
+                _ => anyhow::bail!("unknown fleet mode {spec:?} (arbiter | even | vpa:<variant>)"),
+            },
+        }
+    }
 }
 
 /// One fleet run's output: per-service streams plus the aggregate.
@@ -198,13 +221,23 @@ impl FleetScenario {
             .map(|(i, s)| -> Result<ServiceSpec> {
                 Ok(ServiceSpec {
                     name: s.name.clone(),
-                    trace: Trace::from_spec(
-                        &s.trace,
-                        s.base_rps,
-                        seconds,
-                        trace_seed(config.seed, i),
-                    )?
-                    .with_class_mix(s.class_mix.clone()),
+                    trace: {
+                        let trace = Trace::from_spec(
+                            &s.trace,
+                            s.base_rps,
+                            seconds,
+                            trace_seed(config.seed, i),
+                        )?;
+                        // A config-level mix overrides; otherwise keep
+                        // whatever the trace itself carries (a CSV tier
+                        // directive, a synthetic generator's mix) instead
+                        // of clobbering it with an empty Vec.
+                        if s.class_mix.is_empty() {
+                            trace
+                        } else {
+                            trace.with_class_mix(s.class_mix.clone())
+                        }
+                    },
                     profiles: profiles.clone(),
                     slo_s: s.slo_latency_ms / 1000.0,
                     weights: config.weights,
@@ -393,6 +426,27 @@ impl FleetScenario {
     /// Run the fleet in one mode; `artifacts` feeds the forecaster builder
     /// (LSTM weights when present, classical fallback otherwise).
     pub fn run(&self, mode: &FleetMode, artifacts: &Path) -> FleetRunOutput {
+        self.run_inner(mode, artifacts, None)
+    }
+
+    /// [`Self::run`] with deterministic recording: every per-tick decision
+    /// record, arrival-stream fingerprint, and fault draw is captured into
+    /// a [`RunTrace`] alongside the normal output.  The recorder is a pure
+    /// observer — the returned output is bit-identical to [`Self::run`]
+    /// (pinned by `recording_is_a_pure_observer`).
+    pub fn run_recorded(&self, mode: &FleetMode, artifacts: &Path) -> (FleetRunOutput, RunTrace) {
+        let mut recorder = Recorder::new(self.services.len());
+        let out = self.run_inner(mode, artifacts, Some(&mut recorder));
+        let trace = RunTrace::capture(self, mode, recorder, &out);
+        (out, trace)
+    }
+
+    fn run_inner(
+        &self,
+        mode: &FleetMode,
+        artifacts: &Path,
+        recorder: Option<&mut Recorder>,
+    ) -> FleetRunOutput {
         let share = self.even_share();
         let engine = self.sim_engine(mode);
         let (results, telemetry) = match mode {
@@ -435,7 +489,7 @@ impl FleetScenario {
                         policy: FleetPolicyRef::Arbitrated(p),
                     })
                     .collect();
-                engine.run_with_telemetry(&mut services)
+                engine.run_traced(&mut services, recorder)
             }
             FleetMode::IndependentVpa(variant) => {
                 let mut policies: Vec<VpaPolicy> = self
@@ -458,7 +512,7 @@ impl FleetScenario {
                         policy: FleetPolicyRef::Plain(p),
                     })
                     .collect();
-                engine.run_with_telemetry(&mut services)
+                engine.run_traced(&mut services, recorder)
             }
         };
         let summaries: Vec<RunSummary> = results

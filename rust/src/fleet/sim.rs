@@ -72,6 +72,7 @@ use crate::cluster::{Cluster, ClusterEvent};
 use crate::dispatcher::Tier;
 use crate::fault::{FaultPlane, SolveOutcome};
 use crate::profiler::ProfileSet;
+use crate::replay::{Recorder, ServiceRecord};
 use crate::serving::sim::{SimConfig, SimResult};
 use crate::serving::{Decision, Policy};
 use crate::telemetry::{
@@ -238,6 +239,22 @@ impl FleetSimEngine {
         &self,
         services: &mut [FleetService],
     ) -> (Vec<SimResult>, Option<FleetTelemetry>) {
+        self.run_traced(services, None)
+    }
+
+    /// [`Self::run_with_telemetry`] with an optional [`Recorder`] sink for
+    /// deterministic record/replay.  The record hooks live only at the
+    /// serial tick boundaries (warm start, cluster boundary's fault draws,
+    /// adapter boundary) and read state the stages already computed — no
+    /// RNG draws, no mutation — so `None` here is bit-identical to the
+    /// pre-replay engine and `Some` is bit-identical to `None` (pinned by
+    /// `recording_is_a_pure_observer`), and a recorded trace is
+    /// independent of `solver_threads`.
+    pub fn run_traced(
+        &self,
+        services: &mut [FleetService],
+        mut recorder: Option<&mut Recorder>,
+    ) -> (Vec<SimResult>, Option<FleetTelemetry>) {
         let cfg = &self.config;
         let n = services.len();
         assert!(n > 0, "a fleet needs at least one service");
@@ -324,11 +341,17 @@ impl FleetSimEngine {
         }
         refresh_gates(&cluster, services, &mut shards, 0.0);
         record_costs(&cluster, &mut shards, 0.0);
+        if let Some(rec) = recorder.as_deref_mut() {
+            rec.record_tick(0, 0.0, decision_records(services, &shards, &grants, &decisions0));
+        }
 
         // --- Seed every shard: its arrival stream and its view of the
         // warm-started pods.
         for (i, s) in services.iter().enumerate() {
             let list = ArrivalProcess::poisson(s.trace, service_seed(cfg.seed, i).wrapping_add(1));
+            if let Some(rec) = recorder.as_deref_mut() {
+                rec.record_arrivals(i, &list);
+            }
             shards[i].seed_arrivals(&list);
         }
         for p in cluster.pods() {
@@ -384,8 +407,14 @@ impl FleetSimEngine {
                 sh.roll_to(t as u64);
             }
             if cluster_due && next_cluster == t {
-                pending_lost_cores +=
-                    cluster_boundary(&mut cluster, services, &mut shards, &mut faults, t);
+                pending_lost_cores += cluster_boundary(
+                    &mut cluster,
+                    services,
+                    &mut shards,
+                    &mut faults,
+                    t,
+                    recorder.as_deref_mut(),
+                );
                 next_cluster += 1.0;
             }
             if adapter_due && next_adapter == t {
@@ -402,6 +431,7 @@ impl FleetSimEngine {
                     std::mem::take(&mut pending_advance_ns),
                     std::mem::take(&mut pending_dispatch_ns),
                     std::mem::take(&mut pending_lost_cores),
+                    recorder.as_deref_mut(),
                 );
                 next_adapter += cfg.adapter_interval_s;
             }
@@ -559,6 +589,7 @@ impl FleetSimEngine {
         advance_ns: u64,
         dispatch_ns: u64,
         lost_cores: u64,
+        recorder: Option<&mut Recorder>,
     ) {
         let n = services.len();
         let mut clock = StageClock::start(telem.is_some());
@@ -665,10 +696,50 @@ impl FleetSimEngine {
                 ready_cores,
             );
         }
+        if let Some(rec) = recorder {
+            rec.record_tick(tick, now, decision_records(services, shards, &grants, &decisions));
+        }
         for (i, d) in decisions.into_iter().enumerate() {
             shards[i].decisions.push((now, d));
         }
     }
+}
+
+/// Assemble one [`crate::replay::ServiceRecord`] per service from values
+/// the boundary's stages already computed — strictly in service-index
+/// order, pure reads (the replay twin of the telemetry `ServiceTick`
+/// assembly above).
+fn decision_records(
+    services: &[FleetService],
+    shards: &[ServiceShard],
+    grants: &[Option<usize>],
+    decisions: &[Decision],
+) -> Vec<ServiceRecord> {
+    services
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let sh = &shards[i];
+            let d = &decisions[i];
+            let offered = match &s.policy {
+                FleetPolicyRef::Arbitrated(p) => p.last_offered(),
+                FleetPolicyRef::Plain(_) => 0.0,
+            };
+            ServiceRecord {
+                lambda_hat: sh.pending_lambda,
+                offered,
+                grant: grants[i],
+                target: d.target.clone(),
+                batches: d.batches.clone(),
+                quotas: d.quotas.clone(),
+                predicted_lambda: d.predicted_lambda,
+                decision_supply_rps: d.supply_rps,
+                gate_supply_rps: sh.path.gate().supply_rps(),
+                gate_cutoff: sh.path.gate().tier_cutoff(),
+                stalled: sh.stalled_tick,
+            }
+        })
+        .collect()
 }
 
 /// Advance stage: every shard processes its own events up to `until`
@@ -701,6 +772,7 @@ fn cluster_boundary(
     shards: &mut [ServiceShard],
     faults: &mut FaultPlane,
     now: f64,
+    mut recorder: Option<&mut Recorder>,
 ) -> u64 {
     for event in cluster.tick(now) {
         match event {
@@ -732,6 +804,9 @@ fn cluster_boundary(
             ready.sort_unstable_by_key(|&(id, _, _)| id);
             let ids: Vec<u64> = ready.iter().map(|&(id, _, _)| id).collect();
             let drawn = faults.draw_pod_faults(i, now, &ids);
+            if let Some(rec) = recorder.as_deref_mut() {
+                rec.record_fault_draw(now, i, &drawn.crashed, &drawn.straggling);
+            }
             for &pod in &drawn.crashed {
                 let (_, variant, cores) = &ready[ids.binary_search(&pod).expect("drawn from ids")];
                 // The replacement pays the variant's loading cost,

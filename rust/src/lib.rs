@@ -58,6 +58,15 @@
 //!   capacity loss, and last-good-decision solver fallback — keep the
 //!   serving path graceful when capacity disappears mid-flight.  Off by
 //!   default and bit-identical off ↔ absent.
+//! * [`replay`] — deterministic record/replay: a `Recorder` captures the
+//!   per-service arrival streams and every per-tick decision record
+//!   (λ̂, offered, grant, allocation/batches/quotas, gate supply, tier
+//!   cutoff, fault draws) into a versioned trace file (JSON or CBOR-style
+//!   binary by extension); a `Replayer` re-drives the fleet engine from
+//!   the embedded scenario and reports the first differing decision field
+//!   per tick.  Recording hooks sit only at the serial tick boundaries,
+//!   so recording is a pure observer and traces replay bit-identically
+//!   across `solver_threads`.
 //! * [`baselines`] — VPA+ and Model-Switching+ comparators.
 //! * [`experiment`] — scenario harness regenerating the paper's figures.
 
@@ -73,6 +82,7 @@ pub mod forecaster;
 pub mod metrics;
 pub mod monitoring;
 pub mod profiler;
+pub mod replay;
 pub mod runtime;
 pub mod serving;
 pub mod solver;

@@ -46,6 +46,7 @@ COMMANDS:
            [--admission on|off] [--burn-boost F] [--shed-penalty F]
            [--solver-threads K] [--tiers 0,1,..] [--overload on]
            [--faults SPEC] [--out PREFIX] [--telemetry PREFIX]
+           [--record FILE] [--replay FILE]
                                      multi-service serving on one shared
                                      cluster (config.fleet when present,
                                      else N synthetic services with
@@ -74,12 +75,29 @@ COMMANDS:
                                      retries:N | backoff:S | eject:N |
                                      probe:S | hedge:on|off — same seed
                                      replays the same faults at any
-                                     --solver-threads)
+                                     --solver-threads;
+                                     --record FILE captures the run —
+                                     arrival streams, every per-tick
+                                     decision record, fault draws — into
+                                     a versioned trace (.json readable,
+                                     any other extension compact binary;
+                                     a bare prefix gets .replay.json);
+                                     --replay FILE re-drives the engine
+                                     from a recorded trace's embedded
+                                     scenario and fails with \"expected
+                                     Decision X at tick T, got Y\" on the
+                                     first differing field — add
+                                     --solver-threads K to check
+                                     cross-thread determinism)
   serve    [--trace T] [--policy P] [--seconds N] [--base RPS] [--interval S]
                                      live serving on the real PJRT engine
 
-  traces:   bursty | non-bursty | twitter | steady:<rps> | csv:<path>
+  traces:   bursty | non-bursty | twitter | steady:<rps>
+            | csv:<path>[:scale=<k>][:loop=<seconds>]
             | burst:<start_s>:<len_s>[:<peak_rps>]
+            (csv reads `t,rps` or one-column files and an optional
+            `# tiers: 0:7,1:3` class-mix directive; Trace::to_csv writes
+            full-precision rates, so export -> csv: round-trips exactly)
   policies: infadapter | ms+ | vpa:<variant> | static:<variant>:<cores>
   fleet modes: arbiter | even | vpa:<variant>
   tiers: 0 is the most important; the arbiter honors tiers before weights
@@ -205,6 +223,11 @@ fn main() -> Result<()> {
     }
     if args.get("telemetry").is_some() && command != "fleet" {
         bail!("--telemetry only applies to the fleet command");
+    }
+    for flag in ["record", "replay"] {
+        if args.get(flag).is_some() && command != "fleet" {
+            bail!("--{flag} only applies to the fleet command");
+        }
     }
     if let Some(spec) = args.get("faults") {
         if command != "fleet" {
@@ -340,6 +363,38 @@ fn main() -> Result<()> {
             }
         }
         "fleet" => {
+            if let Some(path) = args.get("replay") {
+                anyhow::ensure!(
+                    args.get("record").is_none(),
+                    "--record and --replay are mutually exclusive"
+                );
+                let mut replayer = infadapter::replay::Replayer::load(std::path::Path::new(path))?;
+                // The one knob worth overriding on replay: thread count is
+                // required to be result-neutral, so replaying a
+                // single-threaded recording at K threads *is* the
+                // cross-thread determinism check.
+                if let Some(k) = args.get("solver-threads") {
+                    replayer.trace.scenario.solver_threads =
+                        k.parse().with_context(|| format!("--solver-threads {k:?}"))?;
+                }
+                let report = replayer.replay(&artifacts)?;
+                print_fleet(&format!("replay: {path}"), &report.output);
+                if report.divergences.is_empty() {
+                    println!("replay OK: {} ticks, 0 divergences", report.ticks);
+                    return Ok(());
+                }
+                for d in report.divergences.iter().take(5) {
+                    eprintln!("divergence: {d}");
+                }
+                if report.divergences.len() > 5 {
+                    eprintln!("… and {} more", report.divergences.len() - 5);
+                }
+                bail!(
+                    "replay diverged: {} divergence(s) over {} ticks",
+                    report.divergences.len(),
+                    report.ticks
+                );
+            }
             let seconds = args.get_usize("seconds", 1200)?;
             let base = args.get_f64("base", 30.0)?;
             config.fleet.solver_threads =
@@ -393,18 +448,26 @@ fn main() -> Result<()> {
             if args.get("telemetry").is_some() {
                 scenario.telemetry.enabled = true;
             }
-            let mode = match args.get("mode").unwrap_or("arbiter") {
-                "arbiter" => FleetMode::Arbiter,
-                "even" => FleetMode::EvenSplit,
-                other => {
-                    if let Some(v) = other.strip_prefix("vpa:") {
-                        FleetMode::IndependentVpa(v.to_string())
+            let mode = FleetMode::from_spec(args.get("mode").unwrap_or("arbiter"))?;
+            let out = match args.get("record") {
+                Some(spec) => {
+                    let (out, trace) = scenario.run_recorded(&mode, &artifacts);
+                    let path = if spec.ends_with(".json") || spec.ends_with(".bin") {
+                        PathBuf::from(spec)
                     } else {
-                        bail!("unknown fleet mode {other} (arbiter | even | vpa:<variant>)")
-                    }
+                        PathBuf::from(format!("{spec}.replay.json"))
+                    };
+                    trace.save(&path)?;
+                    println!(
+                        "trace -> {} ({} ticks, {} fault draws)",
+                        path.display(),
+                        trace.ticks.len(),
+                        trace.faults.len()
+                    );
+                    out
                 }
+                None => scenario.run(&mode, &artifacts),
             };
-            let out = scenario.run(&mode, &artifacts);
             print_fleet(
                 &format!(
                     "fleet: {} services, budget {}",

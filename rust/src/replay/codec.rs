@@ -1,0 +1,205 @@
+//! Binary trace codec: a CBOR-style tagged encoding of
+//! [`crate::util::json::Value`] for compact `.bin` run traces.
+//!
+//! The JSON form of a recorded run is self-describing but bulky (a 420 s
+//! fleet trace carries ~1k full-precision floats); this codec stores the
+//! *same* value tree in a fraction of the bytes and round-trips every
+//! f64 bit-exactly (numbers travel as raw IEEE-754 little-endian, never
+//! through decimal).  Format:
+//!
+//! ```text
+//! magic "IATRACE1"  then one value, recursively:
+//!   0x00 null | 0x01 false | 0x02 true
+//!   0x03 f64-LE (8 bytes)
+//!   0x04 string  (u32-LE byte length + UTF-8)
+//!   0x05 array   (u32-LE count + values)
+//!   0x06 object  (u32-LE count + (string, value) pairs, key order as-is)
+//! ```
+//!
+//! Objects serialize their `BTreeMap` iteration order (sorted keys), so
+//! encoding is deterministic: equal values produce equal bytes.
+
+use crate::util::json::Value;
+use anyhow::{bail, ensure, Context, Result};
+
+/// File magic for binary run traces (`RunTrace::load` sniffs it).
+pub const MAGIC: &[u8; 8] = b"IATRACE1";
+
+const TAG_NULL: u8 = 0x00;
+const TAG_FALSE: u8 = 0x01;
+const TAG_TRUE: u8 = 0x02;
+const TAG_NUM: u8 = 0x03;
+const TAG_STR: u8 = 0x04;
+const TAG_ARR: u8 = 0x05;
+const TAG_OBJ: u8 = 0x06;
+
+/// Encode a value tree (magic header included).
+pub fn to_binary(v: &Value) -> Vec<u8> {
+    let mut out = Vec::with_capacity(256);
+    out.extend_from_slice(MAGIC);
+    write_value(v, &mut out);
+    out
+}
+
+fn write_str(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn write_value(v: &Value, out: &mut Vec<u8>) {
+    match v {
+        Value::Null => out.push(TAG_NULL),
+        Value::Bool(false) => out.push(TAG_FALSE),
+        Value::Bool(true) => out.push(TAG_TRUE),
+        Value::Num(n) => {
+            out.push(TAG_NUM);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        Value::Str(s) => {
+            out.push(TAG_STR);
+            write_str(s, out);
+        }
+        Value::Arr(a) => {
+            out.push(TAG_ARR);
+            out.extend_from_slice(&(a.len() as u32).to_le_bytes());
+            for x in a {
+                write_value(x, out);
+            }
+        }
+        Value::Obj(m) => {
+            out.push(TAG_OBJ);
+            out.extend_from_slice(&(m.len() as u32).to_le_bytes());
+            for (k, x) in m {
+                write_str(k, out);
+                write_value(x, out);
+            }
+        }
+    }
+}
+
+/// Decode a value tree (magic header required; trailing bytes rejected).
+pub fn from_binary(bytes: &[u8]) -> Result<Value> {
+    ensure!(
+        bytes.starts_with(MAGIC),
+        "not a binary run trace (missing {:?} magic)",
+        std::str::from_utf8(MAGIC).unwrap()
+    );
+    let mut cur = Cursor {
+        bytes,
+        pos: MAGIC.len(),
+    };
+    let v = cur.read_value()?;
+    ensure!(
+        cur.pos == bytes.len(),
+        "trailing bytes after the trace value (at offset {})",
+        cur.pos
+    );
+    Ok(v)
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        ensure!(
+            self.pos + n <= self.bytes.len(),
+            "truncated trace: wanted {n} bytes at offset {}",
+            self.pos
+        );
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn read_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn read_str(&mut self) -> Result<String> {
+        let len = self.read_u32()? as usize;
+        let b = self.take(len)?;
+        String::from_utf8(b.to_vec()).context("invalid UTF-8 in trace string")
+    }
+
+    fn read_value(&mut self) -> Result<Value> {
+        let tag = self.take(1)?[0];
+        Ok(match tag {
+            TAG_NULL => Value::Null,
+            TAG_FALSE => Value::Bool(false),
+            TAG_TRUE => Value::Bool(true),
+            TAG_NUM => {
+                let b = self.take(8)?;
+                Value::Num(f64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ]))
+            }
+            TAG_STR => Value::Str(self.read_str()?),
+            TAG_ARR => {
+                let n = self.read_u32()? as usize;
+                let mut a = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    a.push(self.read_value()?);
+                }
+                Value::Arr(a)
+            }
+            TAG_OBJ => {
+                let n = self.read_u32()? as usize;
+                let mut m = std::collections::BTreeMap::new();
+                for _ in 0..n {
+                    let k = self.read_str()?;
+                    let v = self.read_value()?;
+                    m.insert(k, v);
+                }
+                Value::Obj(m)
+            }
+            other => bail!("unknown trace tag 0x{other:02x} at offset {}", self.pos - 1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn roundtrips_nested_values_bit_exactly() {
+        let v = parse(
+            r#"{"a": [1, 2.5, null, true, false], "b": {"c": "str", "d": []},
+                "e": 0.1, "f": -1e-9}"#,
+        )
+        .unwrap();
+        let bytes = to_binary(&v);
+        assert_eq!(from_binary(&bytes).unwrap(), v);
+        // non-decimal-representable floats survive exactly
+        let x = Value::Num(f64::from_bits(0x3FB9_9999_9999_999A));
+        let back = from_binary(&to_binary(&x)).unwrap();
+        match back {
+            Value::Num(n) => assert_eq!(n.to_bits(), 0x3FB9_9999_9999_999A),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_truncation_and_trailing_bytes() {
+        let v = parse(r#"{"k": [1, 2, 3]}"#).unwrap();
+        let bytes = to_binary(&v);
+        assert!(from_binary(&bytes[1..]).is_err(), "bad magic");
+        for cut in [MAGIC.len(), bytes.len() - 1, bytes.len() - 5] {
+            assert!(from_binary(&bytes[..cut]).is_err(), "truncated at {cut}");
+        }
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(from_binary(&extra).is_err(), "trailing byte");
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let v = parse(r#"{"z": 1, "a": 2, "m": [true, null]}"#).unwrap();
+        assert_eq!(to_binary(&v), to_binary(&v.clone()));
+    }
+}

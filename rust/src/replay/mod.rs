@@ -1,0 +1,1349 @@
+//! Deterministic record/replay for fleet runs.
+//!
+//! The sims are seed-deterministic; this module makes that a product
+//! feature (the way wasm-rr records a wasm run): a [`Recorder`] captures
+//! everything a run *decided* — the per-service arrival streams and every
+//! per-tick decision record (λ̂, offered load, arbiter grant, chosen
+//! allocation/batches/quotas, gate supply, tier cutoff, fault draws) —
+//! into a compact versioned trace file, and a [`Replayer`] re-drives
+//! [`crate::fleet::FleetSimEngine`] from the trace's embedded scenario
+//! and diffs the fresh run against the recording.  On mismatch it reports
+//! `expected Decision <field>=<X> at tick <T>, got <Y>` with the *first
+//! differing field* — a far sharper pin than a field-by-field summary
+//! diff, and the substrate for bisecting any future perf/behavior change.
+//!
+//! * **Recording is a pure observer.**  The engine's record hooks live
+//!   only at the serial tick boundaries (warm start, adapter boundary,
+//!   cluster boundary) and behind `Option<&mut Recorder>`; they read
+//!   state the stages already computed and never draw RNG, so recording
+//!   off is bit-identical to the pre-replay engine and recording on is
+//!   bit-identical to recording off (pinned in
+//!   `tests/regression_pins.rs`).  Because the hooks sit at serial
+//!   boundaries, a trace recorded at `solver_threads = 1` replays with
+//!   zero divergences at any thread count.
+//! * **Traces are self-contained.**  The file embeds the full
+//!   [`FleetScenario`] (rate series bit-exact, class mixes, profiles,
+//!   admission/fault/batching knobs, seed) plus the run mode, so
+//!   `fleet --replay FILE` needs no other inputs.  Two encodings by
+//!   extension: `.json` (readable, full-precision floats via the
+//!   shortest-roundtrip `Display`) and a CBOR-style binary (see
+//!   [`codec`]; floats as raw IEEE-754) — both bit-exact.
+//! * **Golden traces.**  Committed traces for the single-service,
+//!   fleet-overload, and crash-storm scenarios replay with zero
+//!   divergences in `tests/replay.rs` (regenerated automatically when
+//!   missing; see `rust/tests/golden/README.md`).
+
+pub mod codec;
+
+use crate::config::{
+    AdmissionConfig, BatchingConfig, FaultConfig, ObjectiveWeights, TelemetryConfig,
+};
+use crate::dispatcher::Tier;
+use crate::fleet::{FleetMode, FleetRunOutput, FleetScenario, ServiceSpec};
+use crate::metrics::RunSummary;
+use crate::profiler::ProfileSet;
+use crate::util::json::{self, Value};
+use crate::workload::RateSeries;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Trace format version; bumped on any breaking layout change.
+pub const TRACE_VERSION: u64 = 1;
+
+/// `kind` marker inside the file, so a mis-passed JSON (a config, a
+/// telemetry snapshot) fails with a clear error instead of a missing-key
+/// maze.
+const TRACE_KIND: &str = "infadapter.run_trace";
+
+// ---------------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------------
+
+/// Compact fingerprint of one service's arrival stream: the event count
+/// plus an FNV-1a hash over the raw f64 bit patterns of every arrival
+/// timestamp.  Bit-exact — any reordering or perturbation of any single
+/// arrival changes it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ArrivalStat {
+    pub count: u64,
+    pub hash: u64,
+}
+
+/// FNV-1a (64-bit) over the IEEE-754 bit patterns of a float slice.
+pub fn fnv64(times: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for t in times {
+        for b in t.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Everything one service decided (and saw) at one adapter boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceRecord {
+    /// Forecast λ̂ the solve planned for (0 for plain policies).
+    pub lambda_hat: f64,
+    /// Raw offered rate the policy observed (0 for plain policies).
+    pub offered: f64,
+    /// Arbiter core grant; `None` without an arbiter.
+    pub grant: Option<usize>,
+    /// Chosen allocation: variant → cores.
+    pub target: BTreeMap<String, usize>,
+    /// Chosen server-side batch sizes: variant → batch.
+    pub batches: BTreeMap<String, usize>,
+    /// Dispatcher quotas, in decision order.
+    pub quotas: Vec<(String, f64)>,
+    /// λ̂ the decision itself reports.
+    pub predicted_lambda: f64,
+    /// Sustainable throughput of the decided allocation (the decision's
+    /// own supply field).
+    pub decision_supply_rps: f64,
+    /// Admission-gate supply after the boundary's gate refresh.
+    pub gate_supply_rps: f64,
+    /// Admission-gate tier cutoff after the boundary.
+    pub gate_cutoff: Tier,
+    /// Solver-stall fallback tick (fault plane).
+    pub stalled: bool,
+}
+
+/// One adapter boundary: tick 0 is the warm start, live ticks count up
+/// from 1 (matching the telemetry plane's ordinals).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TickRecord {
+    pub tick: u64,
+    pub t_s: f64,
+    pub services: Vec<ServiceRecord>,
+}
+
+/// One non-empty fault draw at a cluster boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRecord {
+    pub t_s: f64,
+    pub service: usize,
+    /// Pod ids crashed by this draw.
+    pub crashed: Vec<u64>,
+    /// Pod ids beginning a straggle episode.
+    pub straggling: Vec<u64>,
+}
+
+/// End-of-run scalars per service: a whole-run checksum over the parts
+/// the decision stream cannot see (served/shed/violation outcomes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SummaryRecord {
+    pub name: String,
+    pub total_requests: u64,
+    pub dropped: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub slo_violation_rate: f64,
+    pub goodput_rps: f64,
+    pub avg_accuracy: f64,
+    pub core_seconds: f64,
+    pub p99_latency_s: f64,
+    pub mean_latency_s: f64,
+}
+
+impl SummaryRecord {
+    fn from_summary(s: &RunSummary) -> Self {
+        Self {
+            name: s.policy.clone(),
+            total_requests: s.total_requests,
+            dropped: s.dropped,
+            failed: s.failed,
+            shed: s.shed,
+            slo_violation_rate: s.slo_violation_rate,
+            goodput_rps: s.goodput_rps,
+            avg_accuracy: s.avg_accuracy,
+            core_seconds: s.core_seconds,
+            p99_latency_s: s.p99_latency_s,
+            mean_latency_s: s.mean_latency_s,
+        }
+    }
+}
+
+/// Capture sink the engine's serial boundaries write into.  Pure data —
+/// no RNG, no clock, no influence on the run.
+#[derive(Debug)]
+pub struct Recorder {
+    pub arrivals: Vec<ArrivalStat>,
+    pub ticks: Vec<TickRecord>,
+    pub faults: Vec<FaultRecord>,
+}
+
+impl Recorder {
+    pub fn new(services: usize) -> Self {
+        Self {
+            arrivals: vec![ArrivalStat::default(); services],
+            ticks: Vec::new(),
+            faults: Vec::new(),
+        }
+    }
+
+    /// Fingerprint one service's seeded arrival stream.
+    pub fn record_arrivals(&mut self, service: usize, times: &[f64]) {
+        let stat = &mut self.arrivals[service];
+        stat.count = times.len() as u64;
+        stat.hash = fnv64(times);
+    }
+
+    /// Append one adapter-boundary record (tick 0 = warm start).
+    pub fn record_tick(&mut self, tick: u64, t_s: f64, services: Vec<ServiceRecord>) {
+        self.ticks.push(TickRecord { tick, t_s, services });
+    }
+
+    /// Append one cluster-boundary fault draw; empty draws are skipped so
+    /// a long quiet run stays compact.
+    pub fn record_fault_draw(
+        &mut self,
+        t_s: f64,
+        service: usize,
+        crashed: &[u64],
+        straggling: &[u64],
+    ) {
+        if crashed.is_empty() && straggling.is_empty() {
+            return;
+        }
+        self.faults.push(FaultRecord {
+            t_s,
+            service,
+            crashed: crashed.to_vec(),
+            straggling: straggling.to_vec(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trace file
+// ---------------------------------------------------------------------------
+
+/// A recorded run: the full scenario (re-drivable), the mode, and every
+/// record the [`Recorder`] captured.  `save`/`load` pick JSON or the
+/// binary [`codec`] by file extension (`.json` vs anything else) and
+/// round-trip every float bit-exactly either way.
+pub struct RunTrace {
+    pub version: u64,
+    /// [`FleetMode`] spec string (`arbiter | even | vpa:<variant>`).
+    pub mode: String,
+    pub scenario: FleetScenario,
+    pub arrivals: Vec<ArrivalStat>,
+    pub ticks: Vec<TickRecord>,
+    pub faults: Vec<FaultRecord>,
+    pub summaries: Vec<SummaryRecord>,
+}
+
+impl RunTrace {
+    /// Assemble the trace of a finished recorded run.
+    pub fn capture(
+        scenario: &FleetScenario,
+        mode: &FleetMode,
+        recorder: Recorder,
+        out: &FleetRunOutput,
+    ) -> Self {
+        Self {
+            version: TRACE_VERSION,
+            mode: mode.spec(),
+            scenario: scenario.clone(),
+            arrivals: recorder.arrivals,
+            ticks: recorder.ticks,
+            faults: recorder.faults,
+            summaries: out
+                .summary
+                .services
+                .iter()
+                .map(SummaryRecord::from_summary)
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("kind", Value::Str(TRACE_KIND.into())),
+            ("version", Value::Num(self.version as f64)),
+            ("mode", Value::Str(self.mode.clone())),
+            ("scenario", scenario_to_json(&self.scenario)),
+            (
+                "arrivals",
+                Value::Arr(
+                    self.arrivals
+                        .iter()
+                        .map(|a| {
+                            Value::obj(vec![
+                                ("count", Value::Num(a.count as f64)),
+                                ("hash", Value::Str(format!("{:016x}", a.hash))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "ticks",
+                Value::Arr(self.ticks.iter().map(tick_to_json).collect()),
+            ),
+            (
+                "faults",
+                Value::Arr(self.faults.iter().map(fault_to_json).collect()),
+            ),
+            (
+                "summaries",
+                Value::Arr(self.summaries.iter().map(summary_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let kind = v.req("kind")?.as_str()?;
+        ensure!(kind == TRACE_KIND, "not a run trace (kind {kind:?})");
+        let version = v.req("version")?.as_u64()?;
+        ensure!(
+            version == TRACE_VERSION,
+            "run trace version {version} (this build reads {TRACE_VERSION})"
+        );
+        let scenario = scenario_from_json(v.req("scenario")?)?;
+        let arrivals = v
+            .req("arrivals")?
+            .as_arr()?
+            .iter()
+            .map(|a| -> Result<ArrivalStat> {
+                Ok(ArrivalStat {
+                    count: a.req("count")?.as_u64()?,
+                    hash: u64::from_str_radix(a.req("hash")?.as_str()?, 16)
+                        .context("bad arrival hash")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ticks = v
+            .req("ticks")?
+            .as_arr()?
+            .iter()
+            .map(tick_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let faults = v
+            .req("faults")?
+            .as_arr()?
+            .iter()
+            .map(fault_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let summaries = v
+            .req("summaries")?
+            .as_arr()?
+            .iter()
+            .map(summary_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(
+            arrivals.len() == scenario.services.len(),
+            "trace has {} arrival stats for {} services",
+            arrivals.len(),
+            scenario.services.len()
+        );
+        Ok(Self {
+            version,
+            mode: v.req("mode")?.as_str()?.to_string(),
+            scenario,
+            arrivals,
+            ticks,
+            faults,
+            summaries,
+        })
+    }
+
+    /// Write the trace; `.json` extension selects JSON, anything else the
+    /// binary codec.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let v = self.to_json();
+        let bytes = if path.extension().is_some_and(|e| e == "json") {
+            self.to_json().to_string_pretty().into_bytes()
+        } else {
+            codec::to_binary(&v)
+        };
+        std::fs::write(path, bytes).with_context(|| format!("writing run trace {path:?}"))
+    }
+
+    /// Read a trace saved by [`Self::save`], sniffing the encoding from
+    /// the file's magic bytes (so a `.bin` renamed to `.dat` still loads).
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading run trace {path:?}"))?;
+        let v = if bytes.starts_with(codec::MAGIC) {
+            codec::from_binary(&bytes)?
+        } else {
+            json::parse(std::str::from_utf8(&bytes).context("trace is neither binary nor UTF-8")?)
+                .with_context(|| format!("parsing run trace {path:?}"))?
+        };
+        Self::from_json(&v).with_context(|| format!("decoding run trace {path:?}"))
+    }
+}
+
+fn tick_to_json(t: &TickRecord) -> Value {
+    Value::obj(vec![
+        ("tick", Value::Num(t.tick as f64)),
+        ("t_s", Value::Num(t.t_s)),
+        (
+            "services",
+            Value::Arr(t.services.iter().map(service_record_to_json).collect()),
+        ),
+    ])
+}
+
+fn tick_from_json(v: &Value) -> Result<TickRecord> {
+    Ok(TickRecord {
+        tick: v.req("tick")?.as_u64()?,
+        t_s: v.req("t_s")?.as_f64()?,
+        services: v
+            .req("services")?
+            .as_arr()?
+            .iter()
+            .map(service_record_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn usize_map_to_json(m: &BTreeMap<String, usize>) -> Value {
+    Value::Obj(
+        m.iter()
+            .map(|(k, &c)| (k.clone(), Value::Num(c as f64)))
+            .collect(),
+    )
+}
+
+fn usize_map_from_json(v: &Value) -> Result<BTreeMap<String, usize>> {
+    v.as_obj()?
+        .iter()
+        .map(|(k, c)| Ok((k.clone(), c.as_usize()?)))
+        .collect()
+}
+
+fn service_record_to_json(s: &ServiceRecord) -> Value {
+    Value::obj(vec![
+        ("lambda_hat", Value::Num(s.lambda_hat)),
+        ("offered", Value::Num(s.offered)),
+        (
+            "grant",
+            match s.grant {
+                Some(g) => Value::Num(g as f64),
+                None => Value::Null,
+            },
+        ),
+        ("target", usize_map_to_json(&s.target)),
+        ("batches", usize_map_to_json(&s.batches)),
+        (
+            "quotas",
+            Value::Arr(
+                s.quotas
+                    .iter()
+                    .map(|(name, q)| {
+                        Value::Arr(vec![Value::Str(name.clone()), Value::Num(*q)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("predicted_lambda", Value::Num(s.predicted_lambda)),
+        ("decision_supply_rps", Value::Num(s.decision_supply_rps)),
+        ("gate_supply_rps", Value::Num(s.gate_supply_rps)),
+        ("gate_cutoff", Value::Num(s.gate_cutoff as f64)),
+        ("stalled", Value::Bool(s.stalled)),
+    ])
+}
+
+fn service_record_from_json(v: &Value) -> Result<ServiceRecord> {
+    Ok(ServiceRecord {
+        lambda_hat: v.req("lambda_hat")?.as_f64()?,
+        offered: v.req("offered")?.as_f64()?,
+        grant: match v.req("grant")? {
+            Value::Null => None,
+            g => Some(g.as_usize()?),
+        },
+        target: usize_map_from_json(v.req("target")?)?,
+        batches: usize_map_from_json(v.req("batches")?)?,
+        quotas: v
+            .req("quotas")?
+            .as_arr()?
+            .iter()
+            .map(|pair| -> Result<(String, f64)> {
+                let p = pair.as_arr()?;
+                ensure!(p.len() == 2, "quota entries are [variant, rate] pairs");
+                Ok((p[0].as_str()?.to_string(), p[1].as_f64()?))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        predicted_lambda: v.req("predicted_lambda")?.as_f64()?,
+        decision_supply_rps: v.req("decision_supply_rps")?.as_f64()?,
+        gate_supply_rps: v.req("gate_supply_rps")?.as_f64()?,
+        gate_cutoff: v.req("gate_cutoff")?.as_usize()? as Tier,
+        stalled: v.req("stalled")?.as_bool()?,
+    })
+}
+
+fn fault_to_json(f: &FaultRecord) -> Value {
+    let ids = |v: &[u64]| Value::Arr(v.iter().map(|&id| Value::Num(id as f64)).collect());
+    Value::obj(vec![
+        ("t_s", Value::Num(f.t_s)),
+        ("service", Value::Num(f.service as f64)),
+        ("crashed", ids(&f.crashed)),
+        ("straggling", ids(&f.straggling)),
+    ])
+}
+
+fn fault_from_json(v: &Value) -> Result<FaultRecord> {
+    let ids = |v: &Value| -> Result<Vec<u64>> {
+        v.as_arr()?.iter().map(|x| x.as_u64()).collect()
+    };
+    Ok(FaultRecord {
+        t_s: v.req("t_s")?.as_f64()?,
+        service: v.req("service")?.as_usize()?,
+        crashed: ids(v.req("crashed")?)?,
+        straggling: ids(v.req("straggling")?)?,
+    })
+}
+
+fn summary_to_json(s: &SummaryRecord) -> Value {
+    Value::obj(vec![
+        ("name", Value::Str(s.name.clone())),
+        ("total_requests", Value::Num(s.total_requests as f64)),
+        ("dropped", Value::Num(s.dropped as f64)),
+        ("failed", Value::Num(s.failed as f64)),
+        ("shed", Value::Num(s.shed as f64)),
+        ("slo_violation_rate", Value::Num(s.slo_violation_rate)),
+        ("goodput_rps", Value::Num(s.goodput_rps)),
+        ("avg_accuracy", Value::Num(s.avg_accuracy)),
+        ("core_seconds", Value::Num(s.core_seconds)),
+        ("p99_latency_s", Value::Num(s.p99_latency_s)),
+        ("mean_latency_s", Value::Num(s.mean_latency_s)),
+    ])
+}
+
+fn summary_from_json(v: &Value) -> Result<SummaryRecord> {
+    Ok(SummaryRecord {
+        name: v.req("name")?.as_str()?.to_string(),
+        total_requests: v.req("total_requests")?.as_u64()?,
+        dropped: v.req("dropped")?.as_u64()?,
+        failed: v.req("failed")?.as_u64()?,
+        shed: v.req("shed")?.as_u64()?,
+        slo_violation_rate: v.req("slo_violation_rate")?.as_f64()?,
+        goodput_rps: v.req("goodput_rps")?.as_f64()?,
+        avg_accuracy: v.req("avg_accuracy")?.as_f64()?,
+        core_seconds: v.req("core_seconds")?.as_f64()?,
+        p99_latency_s: v.req("p99_latency_s")?.as_f64()?,
+        mean_latency_s: v.req("mean_latency_s")?.as_f64()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Scenario serialization (the trace is self-contained)
+// ---------------------------------------------------------------------------
+
+fn weights_to_json(w: &ObjectiveWeights) -> Value {
+    Value::obj(vec![
+        ("alpha", Value::Num(w.alpha)),
+        ("beta", Value::Num(w.beta)),
+        ("gamma", Value::Num(w.gamma)),
+    ])
+}
+
+fn class_mix_to_json(mix: &[(Tier, f64)]) -> Value {
+    Value::Arr(
+        mix.iter()
+            .map(|&(t, w)| Value::Arr(vec![Value::Num(t as f64), Value::Num(w)]))
+            .collect(),
+    )
+}
+
+fn class_mix_from_json(v: &Value) -> Result<Vec<(Tier, f64)>> {
+    v.as_arr()?
+        .iter()
+        .map(|pair| -> Result<(Tier, f64)> {
+            let p = pair.as_arr()?;
+            ensure!(p.len() == 2, "class_mix entries are [tier, weight] pairs");
+            Ok((p[0].as_usize()? as Tier, p[1].as_f64()?))
+        })
+        .collect()
+}
+
+fn service_spec_to_json(s: &ServiceSpec) -> Value {
+    Value::obj(vec![
+        ("name", Value::Str(s.name.clone())),
+        ("rates", Value::from_f64_slice(&s.trace.rates)),
+        ("trace_name", Value::Str(s.trace.name.clone())),
+        ("class_mix", class_mix_to_json(&s.trace.class_mix)),
+        ("profiles", s.profiles.to_json()),
+        ("slo_s", Value::Num(s.slo_s)),
+        ("weights", weights_to_json(&s.weights)),
+        ("priority", Value::Num(s.priority)),
+        ("tier", Value::Num(s.tier as f64)),
+        ("error_budget", Value::Num(s.error_budget)),
+        ("floor_cores", Value::Num(s.floor_cores as f64)),
+        ("forecaster", Value::Str(s.forecaster.clone())),
+        ("headroom", Value::Num(s.headroom)),
+        (
+            "batching",
+            Value::obj(vec![
+                ("max_batch", Value::Num(s.batching.max_batch as f64)),
+                ("max_wait_s", Value::Num(s.batching.max_wait_s)),
+            ]),
+        ),
+    ])
+}
+
+fn service_spec_from_json(v: &Value) -> Result<ServiceSpec> {
+    let w = v.req("weights")?;
+    let b = v.req("batching")?;
+    Ok(ServiceSpec {
+        name: v.req("name")?.as_str()?.to_string(),
+        trace: RateSeries {
+            rates: v
+                .req("rates")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<Vec<_>>>()?,
+            name: v.req("trace_name")?.as_str()?.to_string(),
+            class_mix: class_mix_from_json(v.req("class_mix")?)?,
+        },
+        profiles: ProfileSet::from_json(v.req("profiles")?)?,
+        slo_s: v.req("slo_s")?.as_f64()?,
+        weights: ObjectiveWeights {
+            alpha: w.req("alpha")?.as_f64()?,
+            beta: w.req("beta")?.as_f64()?,
+            gamma: w.req("gamma")?.as_f64()?,
+        },
+        priority: v.req("priority")?.as_f64()?,
+        tier: v.req("tier")?.as_usize()? as Tier,
+        error_budget: v.req("error_budget")?.as_f64()?,
+        floor_cores: v.req("floor_cores")?.as_usize()?,
+        forecaster: v.req("forecaster")?.as_str()?.to_string(),
+        headroom: v.req("headroom")?.as_f64()?,
+        batching: BatchingConfig {
+            max_batch: b.req("max_batch")?.as_usize()?,
+            max_wait_s: b.req("max_wait_s")?.as_f64()?,
+        },
+    })
+}
+
+/// Serialize a scenario into the trace file (every knob the run depends
+/// on; rate series bit-exact).
+pub fn scenario_to_json(s: &FleetScenario) -> Value {
+    Value::obj(vec![
+        (
+            "services",
+            Value::Arr(s.services.iter().map(service_spec_to_json).collect()),
+        ),
+        ("global_budget", Value::Num(s.global_budget as f64)),
+        (
+            "node_cores",
+            Value::Arr(s.node_cores.iter().map(|&c| Value::Num(c as f64)).collect()),
+        ),
+        ("adapter_interval_s", Value::Num(s.adapter_interval_s)),
+        ("seed", Value::Num(s.seed as f64)),
+        (
+            "admission",
+            Value::obj(vec![
+                ("enabled", Value::Bool(s.admission.enabled)),
+                ("burst_s", Value::Num(s.admission.burst_s)),
+                ("slack", Value::Num(s.admission.slack)),
+                ("ctl_window_s", Value::Num(s.admission.ctl_window_s)),
+            ]),
+        ),
+        ("burn_boost", Value::Num(s.burn_boost)),
+        ("shed_penalty", Value::Num(s.shed_penalty)),
+        ("solver_threads", Value::Num(s.solver_threads as f64)),
+        (
+            "telemetry",
+            Value::obj(vec![
+                ("enabled", Value::Bool(s.telemetry.enabled)),
+                ("flight_ticks", Value::Num(s.telemetry.flight_ticks as f64)),
+                (
+                    "shed_trip_fraction",
+                    Value::Num(s.telemetry.shed_trip_fraction),
+                ),
+            ]),
+        ),
+        (
+            "fault",
+            Value::obj(vec![
+                ("enabled", Value::Bool(s.fault.enabled)),
+                ("crash_rate", Value::Num(s.fault.crash_rate)),
+                ("crash_start_s", Value::Num(s.fault.crash_start_s)),
+                ("crash_end_s", Value::Num(s.fault.crash_end_s)),
+                ("slow_start_factor", Value::Num(s.fault.slow_start_factor)),
+                ("straggler_rate", Value::Num(s.fault.straggler_rate)),
+                ("straggler_mult", Value::Num(s.fault.straggler_mult)),
+                ("straggler_window_s", Value::Num(s.fault.straggler_window_s)),
+                ("stall_rate", Value::Num(s.fault.stall_rate)),
+                ("reactions", Value::Bool(s.fault.reactions)),
+                ("max_retries", Value::Num(s.fault.max_retries as f64)),
+                ("retry_backoff_s", Value::Num(s.fault.retry_backoff_s)),
+                ("eject_after", Value::Num(s.fault.eject_after as f64)),
+                ("probe_after_s", Value::Num(s.fault.probe_after_s)),
+                ("hedge", Value::Bool(s.fault.hedge)),
+            ]),
+        ),
+    ])
+}
+
+/// Rebuild a scenario from a trace file.
+pub fn scenario_from_json(v: &Value) -> Result<FleetScenario> {
+    let a = v.req("admission")?;
+    let t = v.req("telemetry")?;
+    let f = v.req("fault")?;
+    Ok(FleetScenario {
+        services: v
+            .req("services")?
+            .as_arr()?
+            .iter()
+            .map(service_spec_from_json)
+            .collect::<Result<Vec<_>>>()?,
+        global_budget: v.req("global_budget")?.as_usize()?,
+        node_cores: v
+            .req("node_cores")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        adapter_interval_s: v.req("adapter_interval_s")?.as_f64()?,
+        seed: v.req("seed")?.as_u64()?,
+        admission: AdmissionConfig {
+            enabled: a.req("enabled")?.as_bool()?,
+            burst_s: a.req("burst_s")?.as_f64()?,
+            slack: a.req("slack")?.as_f64()?,
+            ctl_window_s: a.req("ctl_window_s")?.as_f64()?,
+        },
+        burn_boost: v.req("burn_boost")?.as_f64()?,
+        shed_penalty: v.req("shed_penalty")?.as_f64()?,
+        solver_threads: v.req("solver_threads")?.as_usize()?,
+        telemetry: TelemetryConfig {
+            enabled: t.req("enabled")?.as_bool()?,
+            flight_ticks: t.req("flight_ticks")?.as_usize()?,
+            shed_trip_fraction: t.req("shed_trip_fraction")?.as_f64()?,
+        },
+        fault: FaultConfig {
+            enabled: f.req("enabled")?.as_bool()?,
+            crash_rate: f.req("crash_rate")?.as_f64()?,
+            crash_start_s: f.req("crash_start_s")?.as_f64()?,
+            crash_end_s: f.req("crash_end_s")?.as_f64()?,
+            slow_start_factor: f.req("slow_start_factor")?.as_f64()?,
+            straggler_rate: f.req("straggler_rate")?.as_f64()?,
+            straggler_mult: f.req("straggler_mult")?.as_f64()?,
+            straggler_window_s: f.req("straggler_window_s")?.as_f64()?,
+            stall_rate: f.req("stall_rate")?.as_f64()?,
+            reactions: f.req("reactions")?.as_bool()?,
+            max_retries: f.req("max_retries")?.as_usize()? as u32,
+            retry_backoff_s: f.req("retry_backoff_s")?.as_f64()?,
+            eject_after: f.req("eject_after")?.as_usize()? as u32,
+            probe_after_s: f.req("probe_after_s")?.as_f64()?,
+            hedge: f.req("hedge")?.as_bool()?,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Divergence detection
+// ---------------------------------------------------------------------------
+
+/// One point where a replay differs from its recording: the tick, the
+/// *first* differing field at that (tick, service), and both values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Divergence {
+    pub tick: u64,
+    pub t_s: f64,
+    /// Service name; empty for structural mismatches (tick counts …).
+    pub service: String,
+    pub field: String,
+    pub expected: String,
+    pub got: String,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "expected Decision {}={} at tick {}",
+            self.field, self.expected, self.tick
+        )?;
+        if self.service.is_empty() {
+            write!(f, " (t={} s)", self.t_s)?;
+        } else {
+            write!(f, " (t={} s, service {})", self.t_s, self.service)?;
+        }
+        write!(f, ", got {}", self.got)
+    }
+}
+
+fn ne_f64(a: f64, b: f64) -> bool {
+    a.to_bits() != b.to_bits()
+}
+
+fn fmt_grant(g: Option<usize>) -> String {
+    match g {
+        Some(x) => x.to_string(),
+        None => "none".into(),
+    }
+}
+
+fn map_first_diff(
+    label: &str,
+    e: &BTreeMap<String, usize>,
+    g: &BTreeMap<String, usize>,
+) -> Option<(String, String, String)> {
+    let fmt_entry =
+        |v: Option<&usize>| v.map(|x| x.to_string()).unwrap_or_else(|| "absent".into());
+    let mut keys: Vec<&String> = e.keys().chain(g.keys()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    for k in keys {
+        if e.get(k) != g.get(k) {
+            return Some((
+                format!("{label}[{k}]"),
+                fmt_entry(e.get(k)),
+                fmt_entry(g.get(k)),
+            ));
+        }
+    }
+    None
+}
+
+/// First differing field between two service records, in a fixed,
+/// documented order (scalars, then allocation, batches, quotas, gate).
+fn first_field_diff(e: &ServiceRecord, g: &ServiceRecord) -> Option<(String, String, String)> {
+    if ne_f64(e.lambda_hat, g.lambda_hat) {
+        return Some((
+            "lambda_hat".into(),
+            e.lambda_hat.to_string(),
+            g.lambda_hat.to_string(),
+        ));
+    }
+    if ne_f64(e.offered, g.offered) {
+        return Some(("offered".into(), e.offered.to_string(), g.offered.to_string()));
+    }
+    if e.grant != g.grant {
+        return Some(("grant".into(), fmt_grant(e.grant), fmt_grant(g.grant)));
+    }
+    if ne_f64(e.predicted_lambda, g.predicted_lambda) {
+        return Some((
+            "predicted_lambda".into(),
+            e.predicted_lambda.to_string(),
+            g.predicted_lambda.to_string(),
+        ));
+    }
+    if let Some(d) = map_first_diff("target", &e.target, &g.target) {
+        return Some(d);
+    }
+    if let Some(d) = map_first_diff("batches", &e.batches, &g.batches) {
+        return Some(d);
+    }
+    if e.quotas.len() != g.quotas.len() {
+        return Some((
+            "quotas.len".into(),
+            e.quotas.len().to_string(),
+            g.quotas.len().to_string(),
+        ));
+    }
+    for (i, (a, b)) in e.quotas.iter().zip(&g.quotas).enumerate() {
+        if a.0 != b.0 || ne_f64(a.1, b.1) {
+            return Some((
+                format!("quotas[{i}]"),
+                format!("{}:{}", a.0, a.1),
+                format!("{}:{}", b.0, b.1),
+            ));
+        }
+    }
+    if ne_f64(e.decision_supply_rps, g.decision_supply_rps) {
+        return Some((
+            "decision_supply_rps".into(),
+            e.decision_supply_rps.to_string(),
+            g.decision_supply_rps.to_string(),
+        ));
+    }
+    if ne_f64(e.gate_supply_rps, g.gate_supply_rps) {
+        return Some((
+            "gate_supply_rps".into(),
+            e.gate_supply_rps.to_string(),
+            g.gate_supply_rps.to_string(),
+        ));
+    }
+    if e.gate_cutoff != g.gate_cutoff {
+        return Some((
+            "gate_cutoff".into(),
+            e.gate_cutoff.to_string(),
+            g.gate_cutoff.to_string(),
+        ));
+    }
+    if e.stalled != g.stalled {
+        return Some(("stalled".into(), e.stalled.to_string(), g.stalled.to_string()));
+    }
+    None
+}
+
+/// Diff a recording against a fresh run of the same scenario.  Reports at
+/// most one divergence per (tick, service) — the first differing field —
+/// plus structural mismatches (stream lengths) and end-of-run summary
+/// drift.  Empty result = bit-identical replay.
+pub fn diff(expected: &RunTrace, got: &RunTrace) -> Vec<Divergence> {
+    let mut out = Vec::new();
+    let name_of = |i: usize| -> String {
+        expected
+            .scenario
+            .services
+            .get(i)
+            .map(|s| s.name.clone())
+            .unwrap_or_else(|| format!("#{i}"))
+    };
+    // Arrival streams (seeded before tick 0).
+    if expected.arrivals.len() != got.arrivals.len() {
+        out.push(Divergence {
+            tick: 0,
+            t_s: 0.0,
+            service: String::new(),
+            field: "arrivals.len".into(),
+            expected: expected.arrivals.len().to_string(),
+            got: got.arrivals.len().to_string(),
+        });
+    }
+    for (i, (e, g)) in expected.arrivals.iter().zip(&got.arrivals).enumerate() {
+        if e.count != g.count {
+            out.push(Divergence {
+                tick: 0,
+                t_s: 0.0,
+                service: name_of(i),
+                field: "arrivals.count".into(),
+                expected: e.count.to_string(),
+                got: g.count.to_string(),
+            });
+        } else if e.hash != g.hash {
+            out.push(Divergence {
+                tick: 0,
+                t_s: 0.0,
+                service: name_of(i),
+                field: "arrivals.hash".into(),
+                expected: format!("{:016x}", e.hash),
+                got: format!("{:016x}", g.hash),
+            });
+        }
+    }
+    // Decision stream.
+    if expected.ticks.len() != got.ticks.len() {
+        out.push(Divergence {
+            tick: expected.ticks.len().min(got.ticks.len()) as u64,
+            t_s: 0.0,
+            service: String::new(),
+            field: "ticks.len".into(),
+            expected: expected.ticks.len().to_string(),
+            got: got.ticks.len().to_string(),
+        });
+    }
+    for (e, g) in expected.ticks.iter().zip(&got.ticks) {
+        if e.tick != g.tick || ne_f64(e.t_s, g.t_s) {
+            out.push(Divergence {
+                tick: e.tick,
+                t_s: e.t_s,
+                service: String::new(),
+                field: "tick".into(),
+                expected: format!("{}@{}s", e.tick, e.t_s),
+                got: format!("{}@{}s", g.tick, g.t_s),
+            });
+            continue;
+        }
+        if e.services.len() != g.services.len() {
+            out.push(Divergence {
+                tick: e.tick,
+                t_s: e.t_s,
+                service: String::new(),
+                field: "services.len".into(),
+                expected: e.services.len().to_string(),
+                got: g.services.len().to_string(),
+            });
+            continue;
+        }
+        for (i, (es, gs)) in e.services.iter().zip(&g.services).enumerate() {
+            if let Some((field, exp, gotv)) = first_field_diff(es, gs) {
+                out.push(Divergence {
+                    tick: e.tick,
+                    t_s: e.t_s,
+                    service: name_of(i),
+                    field,
+                    expected: exp,
+                    got: gotv,
+                });
+            }
+        }
+    }
+    // Fault draws (tick = index in the fault stream; t_s is the boundary).
+    if expected.faults.len() != got.faults.len() {
+        out.push(Divergence {
+            tick: expected.faults.len().min(got.faults.len()) as u64,
+            t_s: 0.0,
+            service: String::new(),
+            field: "faults.len".into(),
+            expected: expected.faults.len().to_string(),
+            got: got.faults.len().to_string(),
+        });
+    }
+    for (idx, (e, g)) in expected.faults.iter().zip(&got.faults).enumerate() {
+        let field = if ne_f64(e.t_s, g.t_s) || e.service != g.service {
+            Some((
+                format!("fault[{idx}]"),
+                format!("service {} @ {} s", e.service, e.t_s),
+                format!("service {} @ {} s", g.service, g.t_s),
+            ))
+        } else if e.crashed != g.crashed {
+            Some((
+                format!("fault[{idx}].crashed"),
+                format!("{:?}", e.crashed),
+                format!("{:?}", g.crashed),
+            ))
+        } else if e.straggling != g.straggling {
+            Some((
+                format!("fault[{idx}].straggling"),
+                format!("{:?}", e.straggling),
+                format!("{:?}", g.straggling),
+            ))
+        } else {
+            None
+        };
+        if let Some((field, exp, gotv)) = field {
+            out.push(Divergence {
+                tick: idx as u64,
+                t_s: e.t_s,
+                service: name_of(e.service),
+                field,
+                expected: exp,
+                got: gotv,
+            });
+        }
+    }
+    // End-of-run summaries: a whole-run checksum over the serving outcomes
+    // the decision stream cannot see.
+    let end_tick = expected.ticks.last().map(|t| t.tick).unwrap_or(0);
+    let end_t = expected.ticks.last().map(|t| t.t_s).unwrap_or(0.0);
+    if expected.summaries.len() != got.summaries.len() {
+        out.push(Divergence {
+            tick: end_tick,
+            t_s: end_t,
+            service: String::new(),
+            field: "summaries.len".into(),
+            expected: expected.summaries.len().to_string(),
+            got: got.summaries.len().to_string(),
+        });
+    }
+    for (e, g) in expected.summaries.iter().zip(&got.summaries) {
+        let d = if e.name != g.name {
+            Some(("summary.name".into(), e.name.clone(), g.name.clone()))
+        } else if e.total_requests != g.total_requests {
+            Some((
+                "summary.total_requests".into(),
+                e.total_requests.to_string(),
+                g.total_requests.to_string(),
+            ))
+        } else if e.dropped != g.dropped {
+            Some((
+                "summary.dropped".into(),
+                e.dropped.to_string(),
+                g.dropped.to_string(),
+            ))
+        } else if e.failed != g.failed {
+            Some((
+                "summary.failed".into(),
+                e.failed.to_string(),
+                g.failed.to_string(),
+            ))
+        } else if e.shed != g.shed {
+            Some(("summary.shed".into(), e.shed.to_string(), g.shed.to_string()))
+        } else if ne_f64(e.slo_violation_rate, g.slo_violation_rate) {
+            Some((
+                "summary.slo_violation_rate".into(),
+                e.slo_violation_rate.to_string(),
+                g.slo_violation_rate.to_string(),
+            ))
+        } else if ne_f64(e.goodput_rps, g.goodput_rps) {
+            Some((
+                "summary.goodput_rps".into(),
+                e.goodput_rps.to_string(),
+                g.goodput_rps.to_string(),
+            ))
+        } else if ne_f64(e.avg_accuracy, g.avg_accuracy) {
+            Some((
+                "summary.avg_accuracy".into(),
+                e.avg_accuracy.to_string(),
+                g.avg_accuracy.to_string(),
+            ))
+        } else if ne_f64(e.core_seconds, g.core_seconds) {
+            Some((
+                "summary.core_seconds".into(),
+                e.core_seconds.to_string(),
+                g.core_seconds.to_string(),
+            ))
+        } else if ne_f64(e.p99_latency_s, g.p99_latency_s) {
+            Some((
+                "summary.p99_latency_s".into(),
+                e.p99_latency_s.to_string(),
+                g.p99_latency_s.to_string(),
+            ))
+        } else if ne_f64(e.mean_latency_s, g.mean_latency_s) {
+            Some((
+                "summary.mean_latency_s".into(),
+                e.mean_latency_s.to_string(),
+                g.mean_latency_s.to_string(),
+            ))
+        } else {
+            None
+        };
+        if let Some((field, exp, gotv)) = d {
+            out.push(Divergence {
+                tick: end_tick,
+                t_s: end_t,
+                service: e.name.clone(),
+                field,
+                expected: exp,
+                got: gotv,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Replayer
+// ---------------------------------------------------------------------------
+
+/// Result of replaying a trace: the fresh run's output plus every point
+/// where it diverged from the recording (empty = bit-identical).
+pub struct ReplayReport {
+    pub ticks: u64,
+    pub divergences: Vec<Divergence>,
+    pub output: FleetRunOutput,
+}
+
+/// Re-drives the engine from a recorded trace and diffs the outcome.
+pub struct Replayer {
+    pub trace: RunTrace,
+}
+
+impl Replayer {
+    pub fn load(path: &Path) -> Result<Self> {
+        Ok(Self {
+            trace: RunTrace::load(path)?,
+        })
+    }
+
+    /// Re-run the trace's embedded scenario (recording again) and diff
+    /// the fresh recording against the loaded one.  `artifacts` feeds the
+    /// forecaster builder exactly as in a live run.
+    pub fn replay(&self, artifacts: &Path) -> Result<ReplayReport> {
+        let mode = FleetMode::from_spec(&self.trace.mode)?;
+        let (output, fresh) = self.trace.scenario.run_recorded(&mode, artifacts);
+        let divergences = diff(&self.trace, &fresh);
+        Ok(ReplayReport {
+            ticks: fresh.ticks.len() as u64,
+            divergences,
+            output,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::testutil::TempDir;
+
+    fn tiny_scenario() -> FleetScenario {
+        let mut config = Config::default();
+        config.adapter.forecaster = "last_max".into();
+        config.seed = 7;
+        FleetScenario::synthetic(2, 20.0, 120, 8, &config, &ProfileSet::paper_like())
+    }
+
+    fn sample_trace() -> RunTrace {
+        RunTrace {
+            version: TRACE_VERSION,
+            mode: "arbiter".into(),
+            scenario: tiny_scenario(),
+            arrivals: vec![
+                ArrivalStat {
+                    count: 3,
+                    hash: 0xdead_beef_0123_4567,
+                },
+                ArrivalStat { count: 0, hash: 5 },
+            ],
+            ticks: vec![TickRecord {
+                tick: 0,
+                t_s: 0.0,
+                services: vec![
+                    ServiceRecord {
+                        lambda_hat: 20.5,
+                        offered: 19.25,
+                        grant: Some(4),
+                        target: [("resnet18".to_string(), 4)].into_iter().collect(),
+                        batches: [("resnet18".to_string(), 2)].into_iter().collect(),
+                        quotas: vec![("resnet18".into(), 92.0)],
+                        predicted_lambda: 20.5,
+                        decision_supply_rps: 92.125,
+                        gate_supply_rps: 92.125,
+                        gate_cutoff: 1,
+                        stalled: false,
+                    },
+                    ServiceRecord {
+                        lambda_hat: 0.1,
+                        offered: 0.0,
+                        grant: None,
+                        target: BTreeMap::new(),
+                        batches: BTreeMap::new(),
+                        quotas: Vec::new(),
+                        predicted_lambda: 0.1,
+                        decision_supply_rps: 0.0,
+                        gate_supply_rps: 0.0,
+                        gate_cutoff: 255,
+                        stalled: true,
+                    },
+                ],
+            }],
+            faults: vec![FaultRecord {
+                t_s: 33.0,
+                service: 1,
+                crashed: vec![4, 9],
+                straggling: vec![],
+            }],
+            summaries: vec![SummaryRecord {
+                name: "svc0".into(),
+                total_requests: 2400,
+                dropped: 1,
+                failed: 2,
+                shed: 3,
+                slo_violation_rate: 0.012_345_678_901_234,
+                goodput_rps: 19.75,
+                avg_accuracy: 69.76,
+                core_seconds: 480.5,
+                p99_latency_s: 0.31,
+                mean_latency_s: 0.05,
+            }],
+        }
+    }
+
+    #[test]
+    fn trace_roundtrips_through_json_and_binary() {
+        let dir = TempDir::new();
+        let trace = sample_trace();
+        for name in ["t.json", "t.bin"] {
+            let p = dir.path().join(name);
+            trace.save(&p).unwrap();
+            let back = RunTrace::load(&p).unwrap();
+            assert_eq!(back.to_json(), trace.to_json(), "{name}");
+            assert_eq!(back.ticks, trace.ticks, "{name}");
+            assert_eq!(back.faults, trace.faults, "{name}");
+            assert_eq!(back.arrivals, trace.arrivals, "{name}");
+            assert_eq!(back.summaries, trace.summaries, "{name}");
+            // the embedded scenario is value-exact, rates included
+            assert_eq!(
+                back.scenario.services[0].trace.rates,
+                trace.scenario.services[0].trace.rates,
+                "{name}"
+            );
+            assert_eq!(back.scenario.seed, trace.scenario.seed);
+        }
+    }
+
+    #[test]
+    fn load_rejects_foreign_and_versioned_files() {
+        let dir = TempDir::new();
+        let p = dir.path().join("bogus.json");
+        std::fs::write(&p, "{\"kind\": \"something-else\", \"version\": 1}").unwrap();
+        assert!(RunTrace::load(&p).is_err());
+        let mut v = sample_trace().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("version".into(), Value::Num(99.0));
+        }
+        std::fs::write(&p, v.to_string_pretty()).unwrap();
+        let err = RunTrace::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"), "{err:#}");
+    }
+
+    #[test]
+    fn identical_traces_have_no_divergence() {
+        let a = sample_trace();
+        let b = sample_trace();
+        assert!(diff(&a, &b).is_empty());
+    }
+
+    #[test]
+    fn perturbed_field_reports_tick_and_first_field() {
+        let a = sample_trace();
+        // scalar field
+        let mut b = sample_trace();
+        b.ticks[0].services[0].lambda_hat += 1.0;
+        let d = diff(&a, &b);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].tick, 0);
+        assert_eq!(d[0].field, "lambda_hat");
+        assert_eq!(d[0].service, "svc0");
+        let line = d[0].to_string();
+        assert!(
+            line.contains("expected Decision lambda_hat=20.5 at tick 0"),
+            "{line}"
+        );
+        assert!(line.contains("got 21.5"), "{line}");
+        // map field: the differing key is named
+        let mut b = sample_trace();
+        b.ticks[0].services[0].target.insert("resnet34".into(), 2);
+        let d = diff(&a, &b);
+        assert_eq!(d[0].field, "target[resnet34]");
+        assert_eq!(d[0].expected, "absent");
+        assert_eq!(d[0].got, "2");
+        // only the FIRST differing field per (tick, service) is reported
+        let mut b = sample_trace();
+        b.ticks[0].services[0].offered = 0.0;
+        b.ticks[0].services[0].gate_cutoff = 0;
+        let d = diff(&a, &b);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].field, "offered");
+        // fault draws diverge too
+        let mut b = sample_trace();
+        b.faults[0].crashed = vec![4];
+        let d = diff(&a, &b);
+        assert_eq!(d[0].field, "fault[0].crashed");
+        // and end-of-run summaries
+        let mut b = sample_trace();
+        b.summaries[0].shed = 99;
+        let d = diff(&a, &b);
+        assert_eq!(d[0].field, "summary.shed");
+    }
+
+    #[test]
+    fn arrival_fingerprint_is_order_and_value_sensitive() {
+        let a = fnv64(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, fnv64(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, fnv64(&[2.0, 1.0, 3.0]));
+        assert_ne!(a, fnv64(&[1.0, 2.0, 3.0 + 1e-12]));
+        assert_ne!(a, fnv64(&[1.0, 2.0]));
+        // -0.0 and 0.0 are distinct bit patterns, and that is intentional
+        assert_ne!(fnv64(&[0.0]), fnv64(&[-0.0]));
+    }
+
+    #[test]
+    fn scenario_json_preserves_every_knob() {
+        let mut s = tiny_scenario();
+        s.admission.enabled = true;
+        s.shed_penalty = 1.5;
+        s.solver_threads = 8;
+        s.fault.enabled = true;
+        s.fault.crash_rate = 0.004;
+        s.fault.max_retries = 2;
+        s.services[0].trace.class_mix = vec![(0, 7.0), (1, 3.0)];
+        let back = scenario_from_json(&scenario_to_json(&s)).unwrap();
+        assert_eq!(back.services.len(), s.services.len());
+        assert_eq!(back.services[0].trace.rates, s.services[0].trace.rates);
+        assert_eq!(back.services[0].trace.class_mix, s.services[0].trace.class_mix);
+        assert_eq!(back.services[0].forecaster, s.services[0].forecaster);
+        assert_eq!(back.services[0].batching.max_batch, s.services[0].batching.max_batch);
+        assert_eq!(back.global_budget, s.global_budget);
+        assert_eq!(back.node_cores, s.node_cores);
+        assert_eq!(back.seed, s.seed);
+        assert!(back.admission.enabled);
+        assert_eq!(back.shed_penalty, s.shed_penalty);
+        assert_eq!(back.solver_threads, 8);
+        assert!(back.fault.enabled);
+        assert_eq!(back.fault.crash_rate, 0.004);
+        assert_eq!(back.fault.max_retries, 2);
+    }
+}

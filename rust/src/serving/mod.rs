@@ -17,7 +17,7 @@ pub mod sim;
 use std::collections::BTreeMap;
 
 /// What a policy wants the cluster to look like.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Decision {
     /// variant -> cores; absent or 0 means scale to zero.
     pub target: BTreeMap<String, usize>,

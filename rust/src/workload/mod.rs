@@ -80,6 +80,22 @@ impl RateSeries {
             class_mix: self.class_mix.clone(),
         }
     }
+
+    /// Repeat the series cyclically out to exactly `seconds` seconds (a
+    /// short recorded trace driving a longer scenario).  Truncates when
+    /// the series is already longer; an empty series stays empty.
+    pub fn tiled(&self, seconds: usize) -> Self {
+        let rates = if self.rates.is_empty() {
+            Vec::new()
+        } else {
+            self.rates.iter().cycle().take(seconds).copied().collect()
+        };
+        Self {
+            rates,
+            name: format!("{}%{seconds}", self.name),
+            class_mix: self.class_mix.clone(),
+        }
+    }
 }
 
 /// Deterministic per-request tier assignment from a class mix: smooth

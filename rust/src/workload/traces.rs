@@ -1,9 +1,30 @@
 //! Trace generators (see module docs in `mod.rs`).
 
 use super::RateSeries;
+use crate::dispatcher::Tier;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::path::Path;
+
+/// Parse a `tier:weight[,tier:weight]*` class mix (the CSV `# tiers:`
+/// directive).
+fn parse_tier_mix(s: &str) -> Result<Vec<(Tier, f64)>> {
+    s.split(',')
+        .map(|pair| -> Result<(Tier, f64)> {
+            let (t, w) = pair
+                .trim()
+                .split_once(':')
+                .with_context(|| format!("expected tier:weight, got {pair:?}"))?;
+            let tier: Tier = t.trim().parse().with_context(|| format!("bad tier {t:?}"))?;
+            let weight: f64 = w.trim().parse().with_context(|| format!("bad weight {w:?}"))?;
+            anyhow::ensure!(
+                weight.is_finite() && weight >= 0.0,
+                "weight {weight} must be finite and >= 0"
+            );
+            Ok((tier, weight))
+        })
+        .collect()
+}
 
 /// Namespace for the generators.
 pub struct Trace;
@@ -94,10 +115,14 @@ impl Trace {
     }
 
     /// Parse a trace spec string (the CLI / `FleetConfig` grammar):
-    /// `bursty | non-bursty | twitter | steady:<rps> | csv:<path> |
+    /// `bursty | non-bursty | twitter | steady:<rps> |
+    /// csv:<path>[:scale=<k>][:loop=<seconds>] |
     /// burst:<start_s>:<len_s>[:<peak_rps>]` — `base` scales the
     /// generators the same way the CLI's `--base` flag always has
-    /// (`burst` defaults its peak to `2.5 × base`).
+    /// (`burst` defaults its peak to `2.5 × base`).  The `csv:` options
+    /// adapt a recorded or external trace to a scenario: `scale=` host-
+    /// scales the rates, `loop=` repeats the series cyclically out to the
+    /// scenario horizon; both preserve a `# tiers:` class mix.
     pub fn from_spec(spec: &str, base: f64, seconds: usize, seed: u64) -> Result<RateSeries> {
         Ok(match spec {
             "bursty" => Trace::bursty(base, base * 2.5, seconds, seed),
@@ -106,8 +131,38 @@ impl Trace {
             other => {
                 if let Some(rps) = other.strip_prefix("steady:") {
                     Trace::steady(rps.parse()?, seconds)
-                } else if let Some(path) = other.strip_prefix("csv:") {
-                    Trace::from_csv(Path::new(path))?
+                } else if let Some(rest) = other.strip_prefix("csv:") {
+                    // options pop off the end, so paths containing ':'
+                    // keep working
+                    let mut segs: Vec<&str> = rest.split(':').collect();
+                    let mut scale: Option<f64> = None;
+                    let mut tile: Option<usize> = None;
+                    while segs.len() > 1 {
+                        let last = segs[segs.len() - 1];
+                        if let Some(k) = last.strip_prefix("scale=") {
+                            anyhow::ensure!(scale.is_none(), "duplicate scale= in {other}");
+                            scale = Some(
+                                k.parse().with_context(|| format!("bad scale in {other}"))?,
+                            );
+                        } else if let Some(s) = last.strip_prefix("loop=") {
+                            anyhow::ensure!(tile.is_none(), "duplicate loop= in {other}");
+                            tile = Some(
+                                s.parse().with_context(|| format!("bad loop in {other}"))?,
+                            );
+                        } else {
+                            break;
+                        }
+                        segs.pop();
+                    }
+                    let path = segs.join(":");
+                    let mut t = Trace::from_csv(Path::new(&path))?;
+                    if let Some(k) = scale {
+                        t = t.scaled(k);
+                    }
+                    if let Some(s) = tile {
+                        t = t.tiled(s);
+                    }
+                    t
                 } else if let Some(rest) = other.strip_prefix("burst:") {
                     let parts: Vec<&str> = rest.split(':').collect();
                     anyhow::ensure!(
@@ -198,36 +253,80 @@ impl Trace {
     }
 
     /// Load `t,rps` or single-column CSV (one row per second).
+    ///
+    /// Strict by construction: rows must have 1 or 2 comma-separated
+    /// fields (the rate is the last), anything else is rejected with a
+    /// line-numbered error — a three-column or shifted-column file no
+    /// longer silently parses as the wrong series.  One non-numeric
+    /// header row is allowed before the first data row; blank lines and
+    /// `#` comments are skipped anywhere (CRLF and trailing newlines are
+    /// harmless).  A `# tiers: 0:7,1:3` directive attaches a per-request
+    /// class mix, so tiered scenarios survive the CSV round trip.
     pub fn from_csv(path: &Path) -> Result<RateSeries> {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
         let mut rates = Vec::new();
-        for (i, line) in text.lines().enumerate() {
-            let line = line.trim();
-            if line.is_empty() || line.starts_with('#') || (i == 0 && line.contains("rps")) {
+        let mut class_mix = Vec::new();
+        let mut header_allowed = true;
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = raw.trim();
+            if line.is_empty() {
                 continue;
             }
-            let field = line.split(',').next_back().unwrap_or(line);
-            let v: f64 = field
-                .trim()
-                .parse()
-                .with_context(|| format!("{path:?}:{} bad rate {field:?}", i + 1))?;
-            anyhow::ensure!(v >= 0.0, "{path:?}:{} negative rate", i + 1);
-            rates.push(v);
+            if let Some(comment) = line.strip_prefix('#') {
+                if let Some(mix) = comment.trim().strip_prefix("tiers:") {
+                    class_mix = parse_tier_mix(mix)
+                        .with_context(|| format!("{path:?}:{lineno}: bad tiers directive"))?;
+                }
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(
+                fields.len() <= 2,
+                "{path:?}:{lineno}: expected `rps` or `t,rps`, got {} columns",
+                fields.len()
+            );
+            let field = fields.last().expect("split never yields zero fields").trim();
+            match field.parse::<f64>() {
+                Ok(v) => {
+                    anyhow::ensure!(
+                        v.is_finite() && v >= 0.0,
+                        "{path:?}:{lineno}: rate {v} is not finite and non-negative"
+                    );
+                    rates.push(v);
+                    header_allowed = false;
+                }
+                // the single allowed non-numeric row: a leading header
+                Err(_) if header_allowed => header_allowed = false,
+                Err(_) => anyhow::bail!("{path:?}:{lineno}: bad rate {field:?}"),
+            }
         }
         anyhow::ensure!(!rates.is_empty(), "empty trace file {path:?}");
         Ok(RateSeries {
             rates,
             name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
-            class_mix: Vec::new(),
+            class_mix,
         })
     }
 
-    /// Write a series as CSV (`t,rps` header included).
+    /// Write a series as CSV (`t,rps` header included).  Rates are written
+    /// full-precision (shortest round-tripping decimal), so
+    /// `to_csv → from_csv` is value-exact — a trace exported from a
+    /// recorded run replays bit-identically.  A non-empty class mix is
+    /// written as a `# tiers:` directive [`Self::from_csv`] reads back.
     pub fn to_csv(series: &RateSeries, path: &Path) -> Result<()> {
         let mut out = String::from("t,rps\n");
+        if !series.class_mix.is_empty() {
+            let mix: Vec<String> = series
+                .class_mix
+                .iter()
+                .map(|(t, w)| format!("{t}:{w}"))
+                .collect();
+            out.push_str(&format!("# tiers: {}\n", mix.join(",")));
+        }
         for (t, r) in series.rates.iter().enumerate() {
-            out.push_str(&format!("{t},{r:.4}\n"));
+            out.push_str(&format!("{t},{r}\n"));
         }
         std::fs::write(path, out).with_context(|| format!("writing trace {path:?}"))
     }
@@ -312,6 +411,97 @@ mod tests {
         let back = Trace::from_csv(&p).unwrap();
         assert_eq!(back.rates.len(), 30);
         assert!((back.rates[0] - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_is_value_exact() {
+        // full-precision writing: a noisy generated trace survives
+        // to_csv → from_csv with every f64 bit intact (the old {r:.4}
+        // truncation failed this for any non-trivial rate)
+        let dir = crate::util::testutil::TempDir::new();
+        let p = dir.path().join("twitter.csv");
+        let t = Trace::twitter_like(40.0, 600, 11);
+        Trace::to_csv(&t, &p).unwrap();
+        let back = Trace::from_csv(&p).unwrap();
+        assert_eq!(back.rates, t.rates);
+    }
+
+    #[test]
+    fn csv_roundtrips_the_class_mix() {
+        let dir = crate::util::testutil::TempDir::new();
+        let p = dir.path().join("tiered.csv");
+        let t = Trace::steady(10.0, 20).with_class_mix(vec![(0, 7.0), (1, 3.0), (2, 0.5)]);
+        Trace::to_csv(&t, &p).unwrap();
+        let back = Trace::from_csv(&p).unwrap();
+        assert_eq!(back.class_mix, t.class_mix);
+        assert_eq!(back.rates, t.rates);
+        // a bad directive is a line-numbered error, not a silent drop
+        std::fs::write(&p, "t,rps\n# tiers: 0:oops\n0,1.0\n").unwrap();
+        let err = format!("{:#}", Trace::from_csv(&p).unwrap_err());
+        assert!(err.contains(":2"), "{err}");
+        assert!(err.contains("tiers"), "{err}");
+    }
+
+    #[test]
+    fn csv_rejects_extra_columns_with_line_numbers() {
+        let dir = crate::util::testutil::TempDir::new();
+        let p = dir.path().join("wide.csv");
+        std::fs::write(&p, "0,1.5\n1,2.0,9.9\n").unwrap();
+        let err = format!("{:#}", Trace::from_csv(&p).unwrap_err());
+        assert!(err.contains(":2"), "{err}");
+        assert!(err.contains("3 columns"), "{err}");
+    }
+
+    #[test]
+    fn csv_handles_crlf_headerless_and_trailing_newlines() {
+        let dir = crate::util::testutil::TempDir::new();
+        let p = dir.path().join("t.csv");
+        // CRLF line endings with a header
+        std::fs::write(&p, "t,rps\r\n0,1.5\r\n1,2.5\r\n").unwrap();
+        assert_eq!(Trace::from_csv(&p).unwrap().rates, vec![1.5, 2.5]);
+        // headerless single-column, blank and trailing lines
+        std::fs::write(&p, "3.5\n\n4.5\n\n").unwrap();
+        assert_eq!(Trace::from_csv(&p).unwrap().rates, vec![3.5, 4.5]);
+        // a non-numeric row after data is an error, not a second header
+        std::fs::write(&p, "0,1.0\nt,rps\n").unwrap();
+        let err = format!("{:#}", Trace::from_csv(&p).unwrap_err());
+        assert!(err.contains(":2"), "{err}");
+        assert!(err.contains("bad rate"), "{err}");
+        // non-finite rates are rejected
+        std::fs::write(&p, "0,inf\n").unwrap();
+        assert!(Trace::from_csv(&p).is_err());
+        std::fs::write(&p, "0,-1.0\n").unwrap();
+        assert!(Trace::from_csv(&p).is_err());
+    }
+
+    #[test]
+    fn from_spec_csv_supports_scale_and_loop() {
+        let dir = crate::util::testutil::TempDir::new();
+        let p = dir.path().join("short.csv");
+        let t = Trace::steady(10.0, 30).with_class_mix(vec![(0, 1.0), (1, 1.0)]);
+        Trace::to_csv(&t, &p).unwrap();
+        let spec = format!("csv:{}:scale=0.5:loop=75", p.display());
+        let got = Trace::from_spec(&spec, 0.0, 0, 0).unwrap();
+        assert_eq!(got.duration_s(), 75);
+        assert!((got.mean() - 5.0).abs() < 1e-12);
+        // tiling and scaling both preserve the tier mix
+        assert_eq!(got.class_mix, t.class_mix);
+        let plain = Trace::from_spec(&format!("csv:{}", p.display()), 0.0, 0, 0).unwrap();
+        assert_eq!(plain.rates, t.rates);
+        assert!(Trace::from_spec(&format!("csv:{}:scale=zz", p.display()), 0.0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn tiled_repeats_cyclically() {
+        let t = RateSeries {
+            rates: vec![1.0, 2.0, 3.0],
+            name: "t".into(),
+            class_mix: vec![(1, 1.0)],
+        };
+        let long = t.tiled(7);
+        assert_eq!(long.rates, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 1.0]);
+        assert_eq!(long.class_mix, t.class_mix);
+        assert_eq!(t.tiled(2).rates, vec![1.0, 2.0]);
     }
 
     #[test]

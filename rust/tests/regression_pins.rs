@@ -36,6 +36,11 @@
 //! deterministic** — a fixed fault seed replays the same crash storm at
 //! every `solver_threads` count (every draw happens at a serial boundary
 //! in service-index order).
+//!
+//! PR 10 pins the replay plane: **recording is a pure observer** — a run
+//! with the record hooks armed (arrival fingerprints, per-tick decision
+//! records, fault draws) makes bit-identical decisions to an unrecorded
+//! run, at every solver thread count, with the fault plane on.
 
 use infadapter::adapter::InfAdapterPolicy;
 use infadapter::config::{AdmissionConfig, Config, FaultConfig, ObjectiveWeights};
@@ -607,6 +612,63 @@ fn fault_seed_replays_identically_at_every_thread_count() {
             assert_summaries_identical(x, y);
         }
         for (a, b) in serial.per_service.iter().zip(&parallel.per_service) {
+            assert_eq!(
+                a.metrics.rows(a.duration_s),
+                b.metrics.rows(b.duration_s),
+                "interval rows diverge at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn recording_is_a_pure_observer() {
+    // The ISSUE 10 invariant: the replay Recorder observes, it never
+    // participates.  A recorded run must produce bit-identical summaries,
+    // decision streams, and interval rows to an unrecorded run of the
+    // same scenario — the record hooks read serial-boundary state the
+    // stages already computed and draw no RNG — at both the serial
+    // reference thread count and a parallel one, with the fault plane
+    // armed (so the fault-draw hook is exercised too).
+    let profiles = ProfileSet::paper_like();
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    config.admission.enabled = true;
+    config
+        .fault
+        .apply_spec("crash:0.004:60:300,slowstart:2,straggler:0.002:30:4,stall:0.05,reactions:on,retries:2")
+        .expect("valid spec");
+    let base = FleetScenario::synthetic_overload(2, 30.0, 420, 8, true, &config, &profiles);
+    let dir = Path::new("/nonexistent");
+    for threads in [1usize, 8] {
+        let mut s = base.clone();
+        s.solver_threads = threads;
+        let plain = s.run(&FleetMode::Arbiter, dir);
+        let (recorded, trace) = s.run_recorded(&FleetMode::Arbiter, dir);
+        assert!(plain.summary.shed > 0, "the overload pin must actually shed");
+        assert!(trace.ticks.len() > 1, "the recorder must actually record");
+        assert!(
+            trace.faults.iter().any(|f| !f.crashed.is_empty()),
+            "the armed fault plane must actually draw"
+        );
+        assert_eq!(plain.summary.total_requests, recorded.summary.total_requests);
+        assert_eq!(plain.summary.shed, recorded.summary.shed);
+        assert_eq!(plain.summary.failed, recorded.summary.failed);
+        assert_eq!(
+            plain.summary.slo_violation_rate,
+            recorded.summary.slo_violation_rate
+        );
+        assert_eq!(plain.summary.core_seconds, recorded.summary.core_seconds);
+        for (x, y) in plain.summary.services.iter().zip(&recorded.summary.services) {
+            assert_summaries_identical(x, y);
+        }
+        for (x, y) in plain.summary.tiers.iter().zip(&recorded.summary.tiers) {
+            assert_eq!(x, y, "tier breakdowns diverge at {threads} threads");
+        }
+        for (a, b) in plain.per_service.iter().zip(&recorded.per_service) {
+            assert_eq!(a.duration_s, b.duration_s);
+            assert_eq!(a.decisions, b.decisions, "decision streams diverge");
             assert_eq!(
                 a.metrics.rows(a.duration_s),
                 b.metrics.rows(b.duration_s),

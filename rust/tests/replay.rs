@@ -1,0 +1,226 @@
+//! Integration tests for deterministic record/replay (ISSUE 10).
+//!
+//! * **Record → replay is bit-identical.**  A recorded fleet run, saved
+//!   to disk (JSON and binary), reloaded, and re-driven from its embedded
+//!   scenario produces zero divergences — across seeds, `solver_threads`
+//!   ∈ {1, 8} on either side of the round trip, and with the fault plane
+//!   off or armed (the Part B overload and Part D crash-storm acceptance
+//!   scenarios).
+//! * **Divergences are sharp.**  A single perturbed decision field in a
+//!   saved trace is reported at its exact tick with the first differing
+//!   field named — not as a bare summary diff.
+//! * **Golden traces pin the decision stream.**  Committed traces for the
+//!   single-service, fleet-overload, and crash-storm scenarios replay
+//!   with zero divergences; any change to the decision path shows up as
+//!   a divergence at a specific tick.  Missing goldens are regenerated
+//!   and then verified (see `rust/tests/golden/README.md`).
+//! * **CSV traces carry tiers.**  A tiered fleet driven from
+//!   `csv:` traces (the `# tiers:` directive) sheds lowest-tier-first —
+//!   the class mix survives the file round trip into the scenario.
+
+use infadapter::config::Config;
+use infadapter::fleet::{FleetMode, FleetScenario};
+use infadapter::profiler::ProfileSet;
+use infadapter::replay::Replayer;
+use infadapter::util::testutil::TempDir;
+use infadapter::workload::Trace;
+use std::path::{Path, PathBuf};
+
+/// The Part B overload recipe (PR 4's acceptance scenario): both services
+/// burst at once against an 8-core budget with admission on; `faults`
+/// arms the Part D crash storm on top.
+fn overload_scenario(seed: u64, threads: usize, faults: bool) -> FleetScenario {
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = seed;
+    config.admission.enabled = true;
+    if faults {
+        config
+            .fault
+            .apply_spec(
+                "crash:0.004:60:300,slowstart:2,straggler:0.002:30:4,stall:0.05,reactions:on,retries:2",
+            )
+            .expect("valid fault spec");
+    }
+    let mut s = FleetScenario::synthetic_overload(
+        2,
+        30.0,
+        420,
+        8,
+        true,
+        &config,
+        &ProfileSet::paper_like(),
+    );
+    s.solver_threads = threads;
+    s
+}
+
+#[test]
+fn prop_record_replay_has_zero_divergences() {
+    // Deterministic sweep standing in for randomized property inputs:
+    // (seed, record threads, replay threads, faults, trace format).  The
+    // thread crossings are the acceptance criterion — a trace recorded
+    // serially must replay bit-identically at 8 threads and vice versa,
+    // with and without the crash storm.
+    let dir = TempDir::new();
+    let artifacts = Path::new("/nonexistent");
+    let cases = [
+        (5u64, 1usize, 8usize, false, "b_overload.json"),
+        (5, 8, 1, true, "d_storm.bin"),
+        (29, 1, 1, true, "storm_serial.json"),
+        (101, 8, 8, false, "overload_parallel.bin"),
+    ];
+    for (seed, rec_threads, rep_threads, faults, file) in cases {
+        let scenario = overload_scenario(seed, rec_threads, faults);
+        let (out, trace) = scenario.run_recorded(&FleetMode::Arbiter, artifacts);
+        assert!(out.summary.shed > 0, "the overload recipe must shed");
+        assert!(trace.ticks.len() > 1, "the recorder must record ticks");
+        if faults {
+            assert!(
+                trace.faults.iter().any(|f| !f.crashed.is_empty()),
+                "the armed storm must crash pods"
+            );
+        } else {
+            assert!(trace.faults.is_empty(), "no faults may be drawn unarmed");
+        }
+        let path = dir.path().join(file);
+        trace.save(&path).unwrap();
+        let mut replayer = Replayer::load(&path).unwrap();
+        replayer.trace.scenario.solver_threads = rep_threads;
+        let report = replayer.replay(artifacts).unwrap();
+        assert!(
+            report.divergences.is_empty(),
+            "seed {seed}, threads {rec_threads}->{rep_threads}, faults {faults}: {:?}",
+            report.divergences
+        );
+        assert_eq!(report.ticks, trace.ticks.len() as u64);
+    }
+}
+
+#[test]
+fn perturbed_decision_is_reported_at_its_tick_with_the_field_named() {
+    let dir = TempDir::new();
+    let artifacts = Path::new("/nonexistent");
+    let scenario = overload_scenario(5, 1, true);
+    let (_, mut trace) = scenario.run_recorded(&FleetMode::Arbiter, artifacts);
+    assert!(trace.ticks.len() > 3);
+    // perturb one scalar decision field mid-run ...
+    let k = trace.ticks.len() / 2;
+    let expect_tick = trace.ticks[k].tick;
+    trace.ticks[k].services[0].lambda_hat += 1.0;
+    // ... and push it through a file round trip: detection must survive
+    // serialization bit-exactly (a lossy codec would mask or invent diffs)
+    let p = dir.path().join("perturbed.bin");
+    trace.save(&p).unwrap();
+    let report = Replayer::load(&p).unwrap().replay(artifacts).unwrap();
+    assert_eq!(report.divergences.len(), 1, "{:?}", report.divergences);
+    let d = &report.divergences[0];
+    assert_eq!(d.tick, expect_tick);
+    assert_eq!(d.field, "lambda_hat");
+    assert_eq!(d.service, "svc0");
+    let line = d.to_string();
+    assert!(
+        line.contains(&format!("at tick {expect_tick}")),
+        "divergence line must carry the tick: {line}"
+    );
+    assert!(line.starts_with("expected Decision lambda_hat="), "{line}");
+    assert!(line.contains(", got "), "{line}");
+
+    // a perturbed fault draw is caught the same way
+    let (_, mut trace2) = scenario.run_recorded(&FleetMode::Arbiter, artifacts);
+    let idx = trace2
+        .faults
+        .iter()
+        .position(|f| !f.crashed.is_empty())
+        .expect("the storm must crash");
+    trace2.faults[idx].crashed.push(9999);
+    let p2 = dir.path().join("fault.json");
+    trace2.save(&p2).unwrap();
+    let report = Replayer::load(&p2).unwrap().replay(artifacts).unwrap();
+    assert_eq!(report.divergences.len(), 1, "{:?}", report.divergences);
+    assert_eq!(report.divergences[0].field, format!("fault[{idx}].crashed"));
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(name)
+}
+
+/// Replay a committed golden trace, regenerating it first when absent
+/// (fresh checkout / intentional refresh — see the golden README).  Either
+/// way the trace must replay with zero divergences.
+fn check_golden(name: &str, scenario: &FleetScenario) {
+    let artifacts = Path::new("/nonexistent");
+    let path = golden_path(name);
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().expect("golden dir")).unwrap();
+        let (_, trace) = scenario.run_recorded(&FleetMode::Arbiter, artifacts);
+        trace.save(&path).unwrap();
+    }
+    let report = Replayer::load(&path).unwrap().replay(artifacts).unwrap();
+    assert!(
+        report.divergences.is_empty(),
+        "golden {name} diverged — the decision stream changed; if intentional, \
+         delete {path:?} and re-run the test to regenerate it:\n{}",
+        report
+            .divergences
+            .iter()
+            .take(5)
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.ticks > 1);
+}
+
+#[test]
+fn golden_single_service_replays_clean() {
+    let mut config = Config::default();
+    config.adapter.forecaster = "last_max".into();
+    config.seed = 5;
+    let scenario =
+        FleetScenario::synthetic(1, 30.0, 300, 8, &config, &ProfileSet::paper_like());
+    check_golden("single_service.json", &scenario);
+}
+
+#[test]
+fn golden_fleet_overload_replays_clean() {
+    check_golden("fleet_overload.json", &overload_scenario(5, 1, false));
+}
+
+#[test]
+fn golden_crash_storm_replays_clean() {
+    check_golden("crash_storm.json", &overload_scenario(5, 1, true));
+}
+
+#[test]
+fn csv_trace_with_tier_mix_sheds_lowest_tier_first() {
+    // The satellite-3 regression: `csv:` traces used to drop class_mix,
+    // so a tiered fleet driven from files silently lost per-request tiers
+    // (every request fell back to its service's tier).  Route the overload
+    // scenario's traces through the CSV path with a 50/50 tier mix and
+    // check the admission gate still sheds the low tier first.
+    let dir = TempDir::new();
+    let artifacts = Path::new("/nonexistent");
+    let mut scenario = overload_scenario(17, 1, false);
+    for (i, svc) in scenario.services.iter_mut().enumerate() {
+        let p = dir.path().join(format!("svc{i}.csv"));
+        let tiered = svc.trace.clone().with_class_mix(vec![(0, 1.0), (1, 1.0)]);
+        Trace::to_csv(&tiered, &p).unwrap();
+        let back = Trace::from_spec(&format!("csv:{}", p.display()), 0.0, 0, 0).unwrap();
+        assert_eq!(back.class_mix, tiered.class_mix, "mix must survive csv:");
+        assert_eq!(back.rates, tiered.rates, "rates must survive value-exact");
+        svc.trace = back;
+        // per-request tiers come from the mix now, not the service tier
+        svc.tier = 0;
+    }
+    let out = scenario.run(&FleetMode::Arbiter, artifacts);
+    assert!(out.summary.shed > 0, "overload must shed");
+    let tiers = &out.summary.tiers;
+    assert_eq!(tiers.len(), 2, "both mixed tiers must appear: {tiers:?}");
+    assert!(
+        tiers[1].shed > tiers[0].shed,
+        "shedding must land lowest-tier-first: {tiers:?}"
+    );
+}
